@@ -1,0 +1,270 @@
+"""AOT pipeline: lower every executable for a config to HLO text + manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--config dev tldr_s ...]
+
+Outputs per config (DESIGN.md §7):
+    artifacts/<config>/manifest.json
+    artifacts/<config>/init_policy.npy, init_rm.npy
+    artifacts/<config>/<name>.hlo.txt for every executable
+Plus a top-level artifacts/index.json listing built configs.
+
+`make artifacts` is incremental: a config is skipped when its manifest is
+newer than every file in python/compile/.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, losses, model, optim
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def to_hlo_text(lowered, return_tuple=True) -> str:
+    """Lower to HLO text. `return_tuple=False` emits *untupled* outputs so
+    PJRT hands back one device buffer per output — the generation hot path
+    (prefill/decode) uses this to keep the KV cache device-resident and
+    fetch only the logits (EXPERIMENTS.md §Perf)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+# Artifacts whose outputs are untupled. Empty: the xla crate's PJRT
+# execute never sets untuple_result, so multi-output modules still come
+# back as one tuple buffer — the generation hot path instead fuses the
+# whole sampling loop into the `generate` executable (one call per round).
+UNTUPLED = set()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape),
+            "dtype": "f32" if dtype == F32 else "i32"}
+
+
+# ---------------------------------------------------------------------------
+# Executable definitions
+# ---------------------------------------------------------------------------
+
+METRIC_NAMES = {
+    "sft": ["loss", "ppl", "tokens", "", "", "", "", "grad_norm"],
+    "rm": ["loss", "acc", "margin", "score_chosen", "score_rejected", "",
+           "", "grad_norm"],
+    "dpo": ["loss", "acc", "margin", "lp_pos", "lp_neg", "klp_pos",
+            "klp_neg", "grad_norm"],
+    "ppo": ["loss", "pg_loss", "v_loss", "approx_kl", "clipfrac", "entropy",
+            "mean_ratio", "grad_norm"],
+    "rloo": ["loss", "abs_adv", "lp1", "lp2", "r1", "r2", "", "grad_norm"],
+    "prloo": ["loss", "abs_adv", "ratio1", "ratio2", "clipfrac", "r1", "r2",
+              "grad_norm"],
+    "copg": ["loss", "abs_adv", "lograt1", "lograt2", "r1", "r2", "",
+             "grad_norm"],
+}
+
+
+def executable_defs(cfg: configs.Config):
+    """(name, fn, [(arg_name, shape, dtype)], metric_key|None) per artifact.
+
+    Bg = generation batch (singles), Bp = pairwise train batch.
+    """
+    n = configs.param_count(cfg)
+    S, P, V = cfg.seq_len, cfg.prompt_len, cfg.vocab
+    Bg, Bp = cfg.gen_batch, cfg.train_pairs
+    cache = model.kv_cache_shape(cfg, Bg)
+
+    opt_args = [("params", (n,), F32), ("m", (n,), F32), ("v", (n,), F32),
+                ("step", (), F32), ("lr", (), F32)]
+
+    def seq(name, b=Bg):
+        return [(f"tok{name}", (b, S), I32), (f"mask{name}", (b, S), F32)]
+
+    def rloo_args():
+        return (
+            opt_args
+            + seq("1", Bp) + seq("2", Bp)
+            + [("blp1", (Bp, S), F32), ("blp2", (Bp, S), F32),
+               ("rlp1", (Bp, S), F32), ("rlp2", (Bp, S), F32),
+               ("r1", (Bp,), F32), ("r2", (Bp,), F32)]
+        )
+
+    beta, clip = cfg.beta_kl, cfg.ppo_clip
+
+    defs = [
+        # --- generation / scoring path ---
+        ("prefill",
+         lambda flat, tokens: model.prefill(cfg, flat, tokens),
+         [("params", (n,), F32), ("tokens", (Bg, P), I32)], None),
+        ("decode",
+         lambda flat, kv, tok, pos: model.decode_step(cfg, flat, kv, tok, pos),
+         [("params", (n,), F32), ("kv", cache, F32),
+          ("tok", (Bg,), I32), ("pos", (), I32)], None),
+        ("generate",
+         lambda flat, prompt, seed, temp: model.generate(
+             cfg, flat, prompt, seed, temp),
+         [("params", (n,), F32), ("prompt", (Bg, P), I32),
+          ("seed", (), I32), ("temperature", (), F32)], None),
+        ("forward_full",
+         lambda flat, tokens: (model.logits_fn(cfg, flat, tokens),),
+         [("params", (n,), F32), ("tokens", (Bg, S), I32)], None),
+        ("logprob",
+         lambda flat, tokens, mask: model.seq_logprob(cfg, flat, tokens, mask),
+         [("params", (n,), F32), ("tokens", (Bg, S), I32),
+          ("mask", (Bg, S), F32)], None),
+        ("score_rm",
+         lambda flat, tokens, mask: (model.rm_score(cfg, flat, tokens, mask),),
+         [("params", (n,), F32), ("tokens", (Bg, S), I32),
+          ("mask", (Bg, S), F32)], None),
+        # --- training path (fused loss+grad+Adam) ---
+        ("train_sft", optim.make_train_step(cfg, losses.sft),
+         opt_args + seq("", Bg), "sft"),
+        ("train_rm", optim.make_train_step(cfg, losses.reward_model),
+         opt_args + seq("_c", Bp) + seq("_r", Bp), "rm"),
+        ("train_dpo",
+         optim.make_train_step(cfg, losses.online_dpo,
+                               {"beta": cfg.dpo_beta}),
+         opt_args + seq("_pos", Bp) + seq("_neg", Bp)
+         + [("rlp_pos", (Bp,), F32), ("rlp_neg", (Bp,), F32)], "dpo"),
+        ("train_ppo",
+         optim.make_train_step(cfg, losses.ppo, {
+             "beta": beta, "clip": clip, "gamma": cfg.gae_gamma,
+             "lam": cfg.gae_lambda, "vf_coef": cfg.vf_coef,
+         }),
+         opt_args + seq("", Bg)
+         + [("blp", (Bg, S), F32), ("rlp", (Bg, S), F32),
+            ("rewards", (Bg,), F32)], "ppo"),
+        ("train_rloo",
+         optim.make_train_step(cfg, losses.rloo, {"beta": beta}),
+         rloo_args(), "rloo"),
+        ("train_prloo",
+         optim.make_train_step(cfg, losses.proximal_rloo,
+                               {"beta": beta, "clip": clip}),
+         rloo_args(), "prloo"),
+        ("train_copg",
+         optim.make_train_step(cfg, losses.copg, {"beta": beta}),
+         rloo_args(), "copg"),
+    ]
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+def build_config(cfg: configs.Config, out_dir: str, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = {}
+    t_start = time.time()
+    for name, fn, args, metric_key in executable_defs(cfg):
+        t0 = time.time()
+        in_specs = [_spec(shape, dtype) for _, shape, dtype in args]
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered, return_tuple=name not in UNTUPLED)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *in_specs)
+        outs = [
+            _io_entry(f"out{i}", o.shape, o.dtype)
+            for i, o in enumerate(jax.tree_util.tree_leaves(out_tree))
+        ]
+        artifacts[name] = {
+            "file": fname,
+            "inputs": [_io_entry(n, s, d) for n, s, d in args],
+            "outputs": outs,
+            "metrics": METRIC_NAMES.get(metric_key, []),
+            "untupled": name in UNTUPLED,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        if verbose:
+            print(f"  {cfg.name}/{name}: {len(text) / 1024:.0f} KB "
+                  f"({time.time() - t0:.1f}s)")
+
+    # train_bon (Best-of-N SFT, paper §3.3) reuses the SFT executable.
+    artifacts["train_bon"] = dict(artifacts["train_sft"])
+
+    # Seeded initial parameters. Policy and RM start from the same layout;
+    # distinct seeds so the proxy RM is not the policy.
+    np.save(os.path.join(out_dir, "init_policy.npy"),
+            model.init_params(cfg, seed=1234))
+    np.save(os.path.join(out_dir, "init_rm.npy"),
+            model.init_params(cfg, seed=5678))
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "param_count": configs.param_count(cfg),
+        "param_layout": [
+            {"name": s.name, "shape": list(s.shape), "offset": s.offset}
+            for s in configs.param_layout(cfg)
+        ],
+        "kv_cache_shape": list(model.kv_cache_shape(cfg, cfg.gen_batch)),
+        "artifacts": artifacts,
+        "built_unix": int(time.time()),
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"  {cfg.name}: done in {time.time() - t_start:.1f}s, "
+              f"{configs.param_count(cfg):,} params")
+    return manifest
+
+
+def _sources_mtime() -> float:
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    mt = 0.0
+    for root, _, files in os.walk(src_dir):
+        for f in files:
+            if f.endswith(".py"):
+                mt = max(mt, os.path.getmtime(os.path.join(root, f)))
+    return mt
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", nargs="*", default=sorted(configs.CONFIGS),
+                    help="configs to build (default: all)")
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if up to date")
+    args = ap.parse_args()
+
+    src_mtime = _sources_mtime()
+    built = []
+    for name in args.config:
+        cfg = configs.CONFIGS[name]
+        out_dir = os.path.join(args.out, name)
+        mpath = os.path.join(out_dir, "manifest.json")
+        if (not args.force and os.path.exists(mpath)
+                and os.path.getmtime(mpath) >= src_mtime):
+            print(f"  {name}: up to date")
+            built.append(name)
+            continue
+        print(f"building {name} ...")
+        build_config(cfg, out_dir)
+        built.append(name)
+
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump({"configs": built}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

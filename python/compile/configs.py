@@ -1,0 +1,194 @@
+"""Model/task configurations shared by the AOT pipeline and the Rust runtime.
+
+Each `Config` fully determines the artifact set for one (model size, task)
+pair: transformer dimensions, sequence geometry, batch sizes, and the
+hyperparameters baked into the train-step executables. The manifest written
+by `aot.py` mirrors these fields so the Rust coordinator never guesses.
+
+Scale mapping (paper -> this repo, see DESIGN.md §3): Pythia 410m/1B/2.8B
+become `s`/`m`/`l`; the controlled-TLDR, GSM8k and No-Robots-chat tasks
+become synthetic token tasks with the same reward structure.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+# Shared symbolic vocabulary (see rust/src/tokenizer). Key ids the tasks and
+# gold rewards rely on; the full table lives on the Rust side.
+VOCAB_SIZE = 64
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    """Transformer dimensions. head_dim = d_model // n_heads must be exact."""
+
+    d_model: int
+    n_layers: int
+    n_heads: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+# Paper scales: Pythia 410m / 1B / 2.8B -> s / m / l. head_dim is kept at 32
+# everywhere (an MXU-friendly multiple; see DESIGN.md §4).
+SIZES = {
+    "xs": ModelDims(d_model=32, n_layers=1, n_heads=2),
+    "s": ModelDims(d_model=64, n_layers=2, n_heads=2),
+    "m": ModelDims(d_model=128, n_layers=3, n_heads=4),
+    "l": ModelDims(d_model=192, n_layers=4, n_heads=6),
+}
+
+
+@dataclass(frozen=True)
+class Config:
+    """One artifact bundle: a model size bound to a task's sequence geometry.
+
+    - `prompt_len` is exact (synthetic tasks emit fixed-length prompts, no
+      left-padding; see DESIGN.md §7).
+    - `resp_len` is the maximum generated length; shorter responses are
+      EOS-terminated and PAD-filled with a loss mask.
+    - `gen_batch` is the generation engine's fixed batch (2 completions per
+      prompt for pairwise losses -> gen_batch = 2 * train_pairs).
+    """
+
+    name: str
+    size: str
+    task: str
+    prompt_len: int
+    resp_len: int
+    gen_batch: int
+    train_pairs: int  # pairwise minibatch (DPO/RLOO); PPO uses 2*train_pairs singles
+    # Hyperparameters baked into executables (paper Tables 4, 7, 10).
+    beta_kl: float = 0.05  # KL penalty (PPO/RLOO shaping)
+    dpo_beta: float = 0.1  # DPO beta (paper Table 4: Online DPO beta=0.1)
+    ppo_clip: float = 0.2
+    gae_lambda: float = 0.95
+    gae_gamma: float = 1.0
+    vf_coef: float = 0.1
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    # Learning rate is a runtime scalar input (fig8 halves it), not baked.
+
+    @property
+    def dims(self) -> ModelDims:
+        return SIZES[self.size]
+
+    @property
+    def seq_len(self) -> int:
+        return self.prompt_len + self.resp_len
+
+    @property
+    def vocab(self) -> int:
+        return VOCAB_SIZE
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(
+            d_model=self.dims.d_model,
+            n_layers=self.dims.n_layers,
+            n_heads=self.dims.n_heads,
+            head_dim=self.dims.head_dim,
+            d_ff=self.dims.d_ff,
+            seq_len=self.seq_len,
+            vocab=self.vocab,
+        )
+        return d
+
+
+def _tldr(size: str, **kw) -> Config:
+    return Config(
+        name=f"tldr_{size}", size=size, task="tldr",
+        prompt_len=32, resp_len=16, gen_batch=32, train_pairs=16, **kw,
+    )
+
+
+CONFIGS = {
+    # Controlled TLDR setup (paper §3): three policy scales.
+    "tldr_s": _tldr("s"),
+    "tldr_m": _tldr("m"),
+    "tldr_l": _tldr("l"),
+    # GSM8k analogue (paper §5.2): exact-match arithmetic, generation-heavy.
+    "math_s": Config(
+        name="math_s", size="s", task="math",
+        prompt_len=16, resp_len=12, gen_batch=32, train_pairs=16,
+    ),
+    # No-Robots chatbot analogue (paper §5.1), beta from Table 7.
+    "chat_m": Config(
+        name="chat_m", size="m", task="chat",
+        prompt_len=24, resp_len=20, gen_batch=16, train_pairs=8,
+        beta_kl=0.03, dpo_beta=0.03,
+    ),
+    # Tiny config for tests and CI.
+    "dev": Config(
+        name="dev", size="xs", task="tldr",
+        prompt_len=8, resp_len=8, gen_batch=8, train_pairs=4,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout.
+#
+# All executables operate on a single flat f32 vector; slices are reshaped
+# inside the jitted function. The layout below is the single source of truth
+# (the manifest exports it for Rust-side debugging/checkpointing).
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+    offset: int
+
+    @property
+    def numel(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def param_layout(cfg: Config) -> list:
+    """Ordered list of ParamSpec for a policy/RM model (shared layout).
+
+    The value head doubles as the reward-model scalar head; the LM head is
+    unused by the RM but kept so both share one layout (DESIGN.md §7).
+    """
+    dims = cfg.dims
+    D, F, V, S = dims.d_model, dims.d_ff, cfg.vocab, cfg.seq_len
+    specs, off = [], 0
+
+    def add(name, shape):
+        nonlocal off
+        spec = ParamSpec(name, tuple(shape), off)
+        specs.append(spec)
+        off += spec.numel
+
+    add("tok_emb", (V, D))
+    add("pos_emb", (S, D))
+    for i in range(dims.n_layers):
+        add(f"l{i}.ln1", (D,))
+        add(f"l{i}.wqkv", (D, 3 * D))
+        add(f"l{i}.wo", (D, D))
+        add(f"l{i}.ln2", (D,))
+        add(f"l{i}.wi", (D, F))
+        add(f"l{i}.wo_mlp", (F, D))
+    add("final_ln", (D,))
+    add("lm_head", (D, V))
+    add("value_w", (D,))
+    add("value_b", (1,))
+    return specs
+
+
+def param_count(cfg: Config) -> int:
+    specs = param_layout(cfg)
+    last = specs[-1]
+    return last.offset + last.numel

@@ -1,0 +1,332 @@
+"""Flash-attention-style causal attention as Pallas kernels (L1 hot spot).
+
+TPU-oriented design (DESIGN.md §4 Hardware-Adaptation): the CUDA
+threadblock/shared-memory schedule of FlashAttention becomes an HBM↔VMEM
+schedule expressed with BlockSpecs — the grid walks (batch*heads, q-blocks),
+each grid cell streams K/V block-by-block through VMEM with running-softmax
+(m, l) accumulators, and accumulation is always f32 (MXU-friendly tiles,
+head_dim is a multiple of 32 in every config).
+
+Kernels are lowered with `interpret=True`: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode (which lowers to plain HLO) is the
+execution path; real-TPU efficiency is estimated statically in
+EXPERIMENTS.md §Perf from the VMEM footprint of these BlockSpecs.
+
+The backward pass is implemented as two more Pallas kernels (dq, and dk/dv)
+wired up through `jax.custom_vjp`, recomputing attention probabilities from
+the saved (out, lse) residuals exactly like FlashAttention's backward.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Default block sizes. Sequence lengths here are small (<=64) but the kernel
+# is written for the general tiled case; tests sweep non-multiple shapes.
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 16
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _masked_rows(x, pos, limit):
+    """Zero rows whose absolute position is out of range.
+
+    Interpret-mode Pallas pads out-of-bounds block reads with NaN; any
+    ragged tail must be zeroed *at the load* because even `0 * NaN = NaN`
+    would leak through the matmuls.
+    """
+    return jnp.where((pos < limit)[:, None], x, 0.0)
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, causal,
+                block_k, seq_q, seq_k):
+    """One grid cell: one (batch*head, q-block). K/V streamed in blocks."""
+    block_q = q_ref.shape[1]
+    q_idx = pl.program_id(1)
+    q_pos = q_idx * block_q + jax.lax.iota(jnp.int32, block_q)  # absolute rows
+    q = _masked_rows(q_ref[0].astype(jnp.float32), q_pos, seq_q) * scale
+
+    num_kb = _ceil_div(seq_k, block_k)
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        k = _masked_rows(k.astype(jnp.float32), k_pos, seq_k)
+        v = _masked_rows(v.astype(jnp.float32), k_pos, seq_k)
+        s = q @ k.T  # [block_q, block_k]
+        # Out-of-range K columns (ragged tail) are always masked; causal
+        # masking compares absolute positions.
+        valid = (k_pos < seq_k)[None, :]
+        if causal:
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        # Mask p explicitly: for rows where every key so far is masked,
+        # s - m_new == 0 and exp would wrongly give weight 1.
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+        # alpha rescales the old accumulator; when both m_i and m_new are
+        # still NEG_INF (nothing seen yet) the difference is 0 -> alpha 1,
+        # which is harmless because acc and l are still zero.
+        alpha = jnp.exp(jnp.minimum(m_i - m_new, 0.0))
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    d = q.shape[-1]
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+
+    # Rows with no valid key (can't happen causally when q_pos>=0) keep l=0;
+    # guard the division anyway so padded q-tails stay finite.
+    l_safe = jnp.where(l_i > 0.0, l_i, 1.0)
+    o_ref[0] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = m_i + jnp.log(l_safe)
+
+
+def _flash_fwd(q, k, v, scale, causal, block_q, block_k, interpret):
+    b, h, s_q, d = q.shape
+    s_k = k.shape[2]
+    bh = b * h
+    qr = q.reshape(bh, s_q, d)
+    kr = k.reshape(bh, s_k, d)
+    vr = v.reshape(bh, s_k, d)
+    block_q = min(block_q, s_q)
+    block_k = min(block_k, s_k)
+    grid = (bh, _ceil_div(s_q, block_q))
+    out, lse = pl.pallas_call(
+        functools.partial(
+            _fwd_kernel, scale=scale, causal=causal,
+            block_k=block_k, seq_q=s_q, seq_k=s_k,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s_k, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s_k, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s_q, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s_q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s_q, d), lse.reshape(b, h, s_q)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   *, scale, causal, block_k, seq_q, seq_k):
+    """dq for one (bh, q-block): stream K/V blocks, recompute p from lse."""
+    block_q = q_ref.shape[1]
+    q_idx = pl.program_id(1)
+    q_pos = q_idx * block_q + jax.lax.iota(jnp.int32, block_q)
+    row_ok = q_pos < seq_q
+    q = _masked_rows(q_ref[0].astype(jnp.float32), q_pos, seq_q)
+    do = _masked_rows(do_ref[0].astype(jnp.float32), q_pos, seq_q)
+    lse = jnp.where(row_ok, lse_ref[0], 0.0)
+    delta = jnp.where(row_ok, delta_ref[0], 0.0)
+    num_kb = _ceil_div(seq_k, block_k)
+
+    def body(kb, dq):
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        k = _masked_rows(k.astype(jnp.float32), k_pos, seq_k)
+        v = _masked_rows(v.astype(jnp.float32), k_pos, seq_k)
+        s = (q * scale) @ k.T
+        valid = (k_pos < seq_k)[None, :] & row_ok[:, None]
+        if causal:
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(valid, s, NEG_INF)
+        p = jnp.where(valid, jnp.exp(s - lse[:, None]), 0.0)
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + ds @ k
+
+    dq = jax.lax.fori_loop(
+        0, num_kb, body, jnp.zeros_like(q, dtype=jnp.float32)
+    )
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, scale, causal, block_q, seq_q,
+                    seq_k):
+    """dk/dv for one (bh, k-block): stream q-blocks."""
+    block_k = k_ref.shape[1]
+    k_idx = pl.program_id(1)
+    k_pos = k_idx * block_k + jax.lax.iota(jnp.int32, block_k)
+    k = _masked_rows(k_ref[0].astype(jnp.float32), k_pos, seq_k)
+    v = _masked_rows(v_ref[0].astype(jnp.float32), k_pos, seq_k)
+    num_qb = _ceil_div(seq_q, block_q)
+
+    def body(qb, carry):
+        dk, dv = carry
+        q_pos = qb * block_q + jax.lax.iota(jnp.int32, block_q)
+        row_ok = q_pos < seq_q
+        qs = (0, pl.dslice(qb * block_q, block_q), slice(None))
+        q = _masked_rows(pl.load(q_ref, qs).astype(jnp.float32), q_pos, seq_q)
+        do = _masked_rows(
+            pl.load(do_ref, qs).astype(jnp.float32), q_pos, seq_q
+        )
+        ls = (0, pl.dslice(qb * block_q, block_q))
+        lse = jnp.where(row_ok, pl.load(lse_ref, ls), 0.0)
+        delta = jnp.where(row_ok, pl.load(delta_ref, ls), 0.0)
+        s = (q * scale) @ k.T  # [block_q, block_k]
+        valid = row_ok[:, None] & (k_pos < seq_k)[None, :]
+        if causal:
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(valid, s, NEG_INF)
+        p = jnp.where(valid, jnp.exp(s - lse[:, None]), 0.0)
+        dv = dv + p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None]) * scale
+        dk = dk + ds.T @ q
+        return dk, dv
+
+    dk0 = jnp.zeros_like(k, dtype=jnp.float32)
+    dv0 = jnp.zeros_like(v, dtype=jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, num_qb, body, (dk0, dv0))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _flash_bwd(q, k, v, out, lse, do, scale, causal, block_q, block_k,
+               interpret):
+    b, h, s_q, d = q.shape
+    s_k = k.shape[2]
+    bh = b * h
+    qr, kr, vr = (x.reshape(bh, -1, d) for x in (q, k, v))
+    dor = do.reshape(bh, s_q, d)
+    lser = lse.reshape(bh, s_q)
+    # delta_i = rowsum(dO_i * O_i), the standard flash-bwd residual.
+    delta = jnp.sum(
+        do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1
+    ).reshape(bh, s_q)
+
+    block_q = min(block_q, s_q)
+    block_k = min(block_k, s_k)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _bwd_dq_kernel, scale=scale, causal=causal,
+            block_k=block_k, seq_q=s_q, seq_k=s_k,
+        ),
+        grid=(bh, _ceil_div(s_q, block_q)),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s_k, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s_k, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_q, d), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr, dor, lser, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _bwd_dkv_kernel, scale=scale, causal=causal,
+            block_q=block_q, seq_q=s_q, seq_k=s_k,
+        ),
+        grid=(bh, _ceil_div(s_k, block_k)),
+        in_specs=[
+            pl.BlockSpec((1, s_q, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s_q, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s_q), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, s_q), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s_k, d), k.dtype),
+            jax.ShapeDtypeStruct((bh, s_k, d), v.dtype),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, dor, lser, delta)
+
+    return (
+        dq.reshape(b, h, s_q, d),
+        dk.reshape(b, h, s_k, d),
+        dv.reshape(b, h, s_k, d),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Public API: differentiable flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def flash_attention(q, k, v, causal=True, scale=None,
+                    block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                    interpret=True):
+    """Tiled causal attention. q, k, v: [B, H, S, Dh] -> [B, H, S, Dh].
+
+    `scale` defaults to 1/sqrt(Dh). Differentiable via the flash backward
+    kernels. `interpret=True` is the CPU-PJRT execution path (see module
+    docstring).
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    out, _ = _flash_fwd(q, k, v, scale, causal, block_q, block_k, interpret)
+    return out
+
+
+def _vjp_fwd(q, k, v, causal, scale, block_q, block_k, interpret):
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    out, lse = _flash_fwd(q, k, v, scale, causal, block_q, block_k, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, scale, block_q, block_k, interpret, res, do):
+    q, k, v, out, lse = res
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    dq, dk, dv = _flash_bwd(
+        q, k, v, out, lse, do, scale, causal, block_q, block_k, interpret
+    )
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def attention_lse(q, k, v, causal=True, scale=None,
+                  block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                  interpret=True):
+    """Expose the forward kernel's log-sum-exp residual (for tests)."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    _, lse = _flash_fwd(q, k, v, scale, causal, block_q, block_k, interpret)
+    return lse

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: the Pallas implementations must
+match them (pytest + hypothesis sweep in python/tests/test_kernel.py), and
+model.py can be switched to them via `model.USE_REF_ATTENTION` to isolate
+kernel bugs from model bugs.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, causal=True, scale=None):
+    """Reference scaled-dot-product attention.
+
+    q, k, v: [B, H, S, Dh]. Returns [B, H, S, Dh] in q's dtype; softmax and
+    accumulation are always f32 (matching the kernel's accumulators).
+    """
+    in_dtype = q.dtype
+    q, k, v = (x.astype(jnp.float32) for x in (q, k, v))
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        s_q, s_k = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((s_q, s_k), dtype=bool), k=s_k - s_q)
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return out.astype(in_dtype)
+
+
+def attention_lse(q, k, v, causal=True, scale=None):
+    """Reference log-sum-exp of the attention scores: [B, H, S].
+
+    Matches the `lse` residual saved by the flash forward kernel.
+    """
+    q, k = q.astype(jnp.float32), k.astype(jnp.float32)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        s_q, s_k = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((s_q, s_k), dtype=bool), k=s_k - s_q)
+        scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    return m + jnp.log(jnp.sum(jnp.exp(scores - m[..., None]), axis=-1))

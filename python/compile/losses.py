@@ -1,0 +1,250 @@
+"""L2: the RLHF loss zoo (paper §2.1, §3.3, Appendix B).
+
+Every loss is a function `(cfg, flat_params, *batch) -> (scalar loss,
+metrics [NUM_METRICS])` differentiated and wrapped into a fused
+Adam train-step executable by `optim.make_train_step`.
+
+Conventions shared with the Rust coordinator:
+- `tokens` are full sequences [B, S] = prompt ++ response ++ PAD.
+- `mask` is 1.0 exactly on response positions that should be scored
+  (response tokens up to and including EOS).
+- `blp*` are *behaviour* logprobs — token logprobs under the policy that
+  generated the data (accumulated by the generation engine). On-policy,
+  blp == current logprobs; off-policy they differ, which is exactly the
+  paper's subject of study.
+- `rlp*` are logprobs under the frozen reference/SFT policy (KL anchor).
+- Rewards `r*` are raw task/RM rewards [B]; the KL penalty is applied
+  inside the loss from blp/rlp so every method sees the same objective
+  `r - beta * KL` (paper eq. 1).
+
+Metrics layout is fixed-width so the Rust side reads a uniform f32 vector;
+`metric_names(loss)` in aot.py documents each slot in the manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+NUM_METRICS = 8
+
+
+def _pad_metrics(*ms):
+    v = jnp.stack([jnp.asarray(m, jnp.float32) for m in ms])
+    return jnp.pad(v, (0, NUM_METRICS - v.shape[0]))
+
+
+def _masked_mean(x, mask):
+    return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Supervised fine-tuning (also Best-of-N's update rule, paper §3.3)
+# ---------------------------------------------------------------------------
+
+def sft(cfg, flat, tokens, mask):
+    """Masked next-token cross-entropy over response positions."""
+    lp = model.token_logprobs(cfg, flat, tokens)
+    nll = -_masked_mean(lp, mask)
+    ppl = jnp.exp(nll)
+    return nll, _pad_metrics(nll, ppl, jnp.sum(mask))
+
+
+# ---------------------------------------------------------------------------
+# Reward model: Bradley-Terry pairwise loss (paper §2.1)
+# ---------------------------------------------------------------------------
+
+def reward_model(cfg, flat, tok_c, mask_c, tok_r, mask_r):
+    """-log sigmoid(score(chosen) - score(rejected)).
+
+    Masks here cover the *whole* valid sequence (prompt + response) because
+    the score is read at the last valid token.
+    """
+    s_c = model.rm_score(cfg, flat, tok_c, mask_c)
+    s_r = model.rm_score(cfg, flat, tok_r, mask_r)
+    margin = s_c - s_r
+    loss = -jnp.mean(jax.nn.log_sigmoid(margin))
+    acc = jnp.mean((margin > 0).astype(jnp.float32))
+    return loss, _pad_metrics(loss, acc, jnp.mean(margin),
+                              jnp.mean(s_c), jnp.mean(s_r))
+
+
+# ---------------------------------------------------------------------------
+# Online DPO (Guo et al. 2024; the paper's most off-policy-robust method)
+# ---------------------------------------------------------------------------
+
+def online_dpo(cfg, flat, tok_pos, mask_pos, tok_neg, mask_neg,
+               rlp_pos, rlp_neg, beta):
+    """DPO objective on online pairs ranked by the reward model.
+
+    rlp_pos/rlp_neg: [B] sequence logprobs under the *reference* (SFT init)
+    policy, computed by the Rust side with the logprob executable.
+    """
+    lp_pos, _ = model.seq_logprob(cfg, flat, tok_pos, mask_pos)
+    lp_neg, _ = model.seq_logprob(cfg, flat, tok_neg, mask_neg)
+    margin = beta * ((lp_pos - rlp_pos) - (lp_neg - rlp_neg))
+    loss = -jnp.mean(jax.nn.log_sigmoid(margin))
+    acc = jnp.mean((margin > 0).astype(jnp.float32))
+    return loss, _pad_metrics(
+        loss, acc, jnp.mean(margin),
+        jnp.mean(lp_pos), jnp.mean(lp_neg),
+        jnp.mean(lp_pos - rlp_pos), jnp.mean(lp_neg - rlp_neg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# PPO (Schulman et al. 2017; TRL/N+-implementation-details style)
+# ---------------------------------------------------------------------------
+
+def _gae(rewards, values, mask, gamma, lam):
+    """Masked GAE over the time axis. rewards/values/mask: [B, S]."""
+    s = rewards.shape[1]
+
+    def step(carry, t):
+        gae = carry
+        v_next = jnp.where(t + 1 < s, values[:, (t + 1) % s] * mask[:, (t + 1) % s], 0.0)
+        delta = rewards[:, t] + gamma * v_next - values[:, t]
+        gae = delta + gamma * lam * gae
+        gae = gae * mask[:, t]
+        return gae, gae
+
+    ts = jnp.arange(s - 1, -1, -1)
+    _, adv_rev = jax.lax.scan(step, jnp.zeros(rewards.shape[0]), ts)
+    return adv_rev[::-1].T  # [B, S]
+
+
+def ppo(cfg, flat, tokens, mask, blp, rlp, rewards,
+        beta, clip, gamma, lam, vf_coef):
+    """Clipped-surrogate PPO with a value head and token-level KL penalty.
+
+    tokens/mask/blp/rlp: [B, S]; rewards: [B] applied at the last response
+    token. Per-token reward r_t = -beta * (blp_t - rlp_t) + [t == last] * R,
+    the standard RLHF shaping (Ziegler et al. 2019).
+    """
+    logits, values = model.logits_and_values(cfg, flat, tokens)
+    logp_all = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    lp = jnp.take_along_axis(logp_all, tokens[:, 1:, None], axis=-1)[..., 0]
+    lp = jnp.pad(lp, ((0, 0), (1, 0)))  # [B, S]
+
+    # Token-level shaped rewards on response positions.
+    kl_pen = -beta * (blp - rlp) * mask
+    last = jnp.maximum(jnp.sum(mask, axis=1) - 1.0, 0.0)
+    pos = jnp.arange(tokens.shape[1])[None, :].astype(jnp.float32)
+    # Response positions start after the prompt; `mask` encodes them, and
+    # the terminal reward lands on the last masked position.
+    prompt_offset = jnp.argmax(mask, axis=1).astype(jnp.float32)
+    is_last = (pos == (prompt_offset + last)[:, None]).astype(jnp.float32) * mask
+    tok_rewards = kl_pen + is_last * rewards[:, None]
+
+    adv = _gae(tok_rewards, values * mask, mask, gamma, lam)
+    returns = adv + values * mask
+    # Masked advantage whitening.
+    mean = _masked_mean(adv, mask)
+    var = _masked_mean(jnp.square(adv - mean), mask)
+    adv_w = (adv - mean) * jax.lax.rsqrt(var + 1e-8)
+
+    ratio = jnp.exp(jnp.clip(lp - blp, -20.0, 20.0))
+    pg1 = -adv_w * ratio
+    pg2 = -adv_w * jnp.clip(ratio, 1.0 - clip, 1.0 + clip)
+    pg_loss = _masked_mean(jnp.maximum(pg1, pg2), mask)
+    v_loss = 0.5 * _masked_mean(jnp.square(values - returns), mask)
+    loss = pg_loss + vf_coef * v_loss
+
+    approx_kl = _masked_mean(blp - lp, mask)
+    clipfrac = _masked_mean(
+        (jnp.abs(ratio - 1.0) > clip).astype(jnp.float32), mask
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    ent_tok = -jnp.sum(
+        probs * jax.nn.log_softmax(logits, axis=-1), axis=-1
+    )
+    entropy = _masked_mean(ent_tok, mask)
+    return loss, _pad_metrics(
+        loss, pg_loss, v_loss, approx_kl, clipfrac, entropy,
+        _masked_mean(ratio, mask), jnp.mean(rewards),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RLOO family (Ahmadian et al. 2024; paper Appendix B)
+# ---------------------------------------------------------------------------
+
+def _rloo_adv(r1, r2, blp1, blp2, rlp1, rlp2, beta):
+    """KL-shaped two-sample leave-one-out advantages (antisymmetric)."""
+    sum1 = jnp.sum(blp1, axis=1)
+    sum2 = jnp.sum(blp2, axis=1)
+    ref1 = jnp.sum(rlp1, axis=1)
+    ref2 = jnp.sum(rlp2, axis=1)
+    rt1 = r1 - beta * (sum1 - ref1)
+    rt2 = r2 - beta * (sum2 - ref2)
+    a1 = rt1 - rt2
+    return a1, -a1
+
+
+def rloo(cfg, flat, tok1, mask1, tok2, mask2, blp1, blp2, rlp1, rlp2,
+         r1, r2, beta):
+    """Vanilla RLOO (k=2): REINFORCE with the other sample as baseline."""
+    lp1, _ = model.seq_logprob(cfg, flat, tok1, mask1)
+    lp2, _ = model.seq_logprob(cfg, flat, tok2, mask2)
+    a1, a2 = _rloo_adv(r1, r2, blp1 * mask1, blp2 * mask2,
+                       rlp1 * mask1, rlp2 * mask2, beta)
+    loss = -jnp.mean(lp1 * a1 + lp2 * a2) / 2.0
+    return loss, _pad_metrics(
+        loss, jnp.mean(jnp.abs(a1)), jnp.mean(lp1), jnp.mean(lp2),
+        jnp.mean(r1), jnp.mean(r2),
+    )
+
+
+def proximal_rloo(cfg, flat, tok1, mask1, tok2, mask2, blp1, blp2,
+                  rlp1, rlp2, r1, r2, beta, clip):
+    """Paper Appendix B: RLOO with a clipped sequence-level IS ratio.
+
+    ratio_i = exp(logpi_theta(y_i) - logpi_behaviour(y_i)), clipped to
+    [1-eps, 1+eps] PPO-style; this is what makes RLOO usable off-policy
+    (Fig 13: CoPG collapses at N=16, Proximal RLOO survives).
+    """
+    lp1, _ = model.seq_logprob(cfg, flat, tok1, mask1)
+    lp2, _ = model.seq_logprob(cfg, flat, tok2, mask2)
+    b1 = jnp.sum(blp1 * mask1, axis=1)
+    b2 = jnp.sum(blp2 * mask2, axis=1)
+    a1, a2 = _rloo_adv(r1, r2, blp1 * mask1, blp2 * mask2,
+                       rlp1 * mask1, rlp2 * mask2, beta)
+
+    def clipped_term(lp, blp_sum, adv):
+        ratio = jnp.exp(jnp.clip(lp - blp_sum, -20.0, 20.0))
+        unclipped = ratio * adv
+        clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+        return jnp.minimum(unclipped, clipped), ratio
+
+    t1, ratio1 = clipped_term(lp1, b1, a1)
+    t2, ratio2 = clipped_term(lp2, b2, a2)
+    loss = -jnp.mean(t1 + t2) / 2.0
+    clipfrac = jnp.mean(
+        (jnp.abs(jnp.concatenate([ratio1, ratio2]) - 1.0) > clip)
+        .astype(jnp.float32)
+    )
+    return loss, _pad_metrics(
+        loss, jnp.mean(jnp.abs(a1)), jnp.mean(ratio1), jnp.mean(ratio2),
+        clipfrac, jnp.mean(r1), jnp.mean(r2),
+    )
+
+
+def copg(cfg, flat, tok1, mask1, tok2, mask2, blp1, blp2, rlp1, rlp2,
+         r1, r2, beta):
+    """CoPG-style RLOO (Flet-Berliac et al. 2024), paper Appendix B.
+
+    loss_i = -log(pi_theta(y_i)/pi_old(y_i)) * A_i. Identical *gradient* to
+    vanilla RLOO (the log pi_old term is constant), implemented literally so
+    Fig 13 compares the objectives as published.
+    """
+    lp1, _ = model.seq_logprob(cfg, flat, tok1, mask1)
+    lp2, _ = model.seq_logprob(cfg, flat, tok2, mask2)
+    b1 = jnp.sum(blp1 * mask1, axis=1)
+    b2 = jnp.sum(blp2 * mask2, axis=1)
+    a1, a2 = _rloo_adv(r1, r2, blp1 * mask1, blp2 * mask2,
+                       rlp1 * mask1, rlp2 * mask2, beta)
+    loss = -jnp.mean((lp1 - b1) * a1 + (lp2 - b2) * a2) / 2.0
+    return loss, _pad_metrics(
+        loss, jnp.mean(jnp.abs(a1)), jnp.mean(lp1 - b1), jnp.mean(lp2 - b2),
+        jnp.mean(r1), jnp.mean(r2),
+    )

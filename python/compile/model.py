@@ -1,0 +1,309 @@
+"""L2: the policy/reward-model transformer over a flat parameter vector.
+
+Decoder-only pre-norm transformer (RMSNorm, causal flash attention from the
+L1 Pallas kernel, GELU MLP, learned positional embeddings). Every public
+function takes the *flat* f32 parameter vector as its first tensor argument
+and unpacks slices internally, so the compiled HLO executables present a
+single opaque buffer to the Rust runtime (DESIGN.md §7).
+
+Heads:
+- LM head  -> next-token logits (policy).
+- Value head -> per-token scalar (PPO critic) and, applied at the last
+  valid token, the reward-model score (the two roles share a layout so
+  policy and RM checkpoints are interchangeable buffers).
+
+Generation path: `prefill` builds the KV cache for the fixed-length prompt
+and returns the first sampling distribution; `decode_step` consumes one
+token per call against the cache. Both are exported as separate HLO
+artifacts driven by the Rust generation engines.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import attention as attn_kernel
+from .kernels import ref as attn_ref
+
+# Flip to True to bypass the Pallas kernel (debugging aid; tests compare
+# both paths).
+USE_REF_ATTENTION = False
+
+RMS_EPS = 1e-5
+
+
+def _attention(q, k, v):
+    if USE_REF_ATTENTION:
+        return attn_ref.attention(q, k, v, causal=True)
+    return attn_kernel.flash_attention(q, k, v, True)
+
+
+# ---------------------------------------------------------------------------
+# Parameter handling
+# ---------------------------------------------------------------------------
+
+def unpack(cfg: configs.Config, flat):
+    """Flat f32 vector -> dict of named, shaped arrays (views)."""
+    out = {}
+    for spec in configs.param_layout(cfg):
+        out[spec.name] = jax.lax.dynamic_slice(
+            flat, (spec.offset,), (spec.numel,)
+        ).reshape(spec.shape)
+    return out
+
+
+def init_params(cfg: configs.Config, seed: int):
+    """Seeded initial flat params (written to artifacts as .npy).
+
+    Scaled-normal init: embeddings/attention 0.02, output projections
+    scaled down by sqrt(2*n_layers) (GPT-2 style residual scaling), norms 1.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    n_layers = cfg.dims.n_layers
+    chunks = []
+    for spec in configs.param_layout(cfg):
+        name = spec.name.split(".")[-1]
+        if name in ("ln1", "ln2", "final_ln"):
+            w = np.ones(spec.numel, dtype=np.float32)
+        elif name in ("wo", "wo_mlp"):
+            std = 0.02 / np.sqrt(2.0 * n_layers)
+            w = rng.normal(0.0, std, spec.numel).astype(np.float32)
+        elif name == "value_b":
+            w = np.zeros(spec.numel, dtype=np.float32)
+        else:
+            w = rng.normal(0.0, 0.02, spec.numel).astype(np.float32)
+        chunks.append(w)
+    return np.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+def _rmsnorm(x, scale):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + RMS_EPS) * scale
+
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _block(cfg, p, i, h, return_kv=False):
+    """One pre-norm transformer block over full sequences [B, S, D]."""
+    n_heads = cfg.dims.n_heads
+    a = _rmsnorm(h, p[f"l{i}.ln1"])
+    qkv = a @ p[f"l{i}.wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    qh, kh, vh = (_split_heads(x, n_heads) for x in (q, k, v))
+    ctx = _attention(qh, kh, vh)
+    h = h + _merge_heads(ctx) @ p[f"l{i}.wo"]
+    a = _rmsnorm(h, p[f"l{i}.ln2"])
+    h = h + jax.nn.gelu(a @ p[f"l{i}.wi"]) @ p[f"l{i}.wo_mlp"]
+    if return_kv:
+        return h, (kh, vh)
+    return h
+
+
+def forward_hidden(cfg, flat, tokens, return_kv=False):
+    """tokens [B, S'] (S' <= seq_len) -> hidden [B, S', D]."""
+    p = unpack(cfg, flat)
+    s = tokens.shape[1]
+    h = p["tok_emb"][tokens] + p["pos_emb"][:s][None, :, :]
+    kvs = []
+    for i in range(cfg.dims.n_layers):
+        if return_kv:
+            h, kv = _block(cfg, p, i, h, return_kv=True)
+            kvs.append(kv)
+        else:
+            h = _block(cfg, p, i, h)
+    h = _rmsnorm(h, p["final_ln"])
+    if return_kv:
+        return h, kvs, p
+    return h, p
+
+
+def logits_fn(cfg, flat, tokens):
+    """Full-sequence next-token logits [B, S, V] (naive engine + training)."""
+    h, p = forward_hidden(cfg, flat, tokens)
+    return h @ p["lm_head"]
+
+
+def values_fn(cfg, flat, tokens):
+    """Per-token value estimates [B, S] (PPO critic)."""
+    h, p = forward_hidden(cfg, flat, tokens)
+    return h @ p["value_w"] + p["value_b"]
+
+
+def logits_and_values(cfg, flat, tokens):
+    h, p = forward_hidden(cfg, flat, tokens)
+    return h @ p["lm_head"], h @ p["value_w"] + p["value_b"]
+
+
+def rm_score(cfg, flat, tokens, mask):
+    """Reward-model score [B]: value head at the last valid token.
+
+    mask [B, S] is 1.0 on valid (non-PAD) positions; the score is read at
+    index sum(mask)-1 per row.
+    """
+    h, p = forward_hidden(cfg, flat, tokens)
+    vals = h @ p["value_w"] + p["value_b"]  # [B, S]
+    last = jnp.maximum(jnp.sum(mask, axis=1).astype(jnp.int32) - 1, 0)
+    return jnp.take_along_axis(vals, last[:, None], axis=1)[:, 0]
+
+
+def token_logprobs(cfg, flat, tokens):
+    """log p(tokens[t] | tokens[<t]) for t >= 1; position 0 gets 0.
+
+    Returns [B, S]. Callers apply their own response masks.
+    """
+    logits = logits_fn(cfg, flat, tokens)  # [B, S, V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    lp = jnp.take_along_axis(logp, tokens[:, 1:, None], axis=-1)[..., 0]
+    return jnp.pad(lp, ((0, 0), (1, 0)))
+
+
+def seq_logprob(cfg, flat, tokens, mask):
+    """Masked sequence log-probability [B] plus token logprobs [B, S]."""
+    lp = token_logprobs(cfg, flat, tokens)
+    return jnp.sum(lp * mask, axis=1), lp
+
+
+# ---------------------------------------------------------------------------
+# Generation path: prefill + single-token decode against a KV cache
+# ---------------------------------------------------------------------------
+#
+# Cache layout: [n_layers, 2, B, H, seq_len, head_dim] f32. The Rust engine
+# owns the buffer and threads it through decode_step calls.
+
+def kv_cache_shape(cfg, batch):
+    d = cfg.dims
+    return (d.n_layers, 2, batch, d.n_heads, cfg.seq_len, d.head_dim)
+
+
+def prefill(cfg, flat, tokens):
+    """tokens [B, P] (fixed-length prompts) -> (kv cache, last logits [B,V])."""
+    h, kvs, p = forward_hidden(cfg, flat, tokens, return_kv=True)
+    b = tokens.shape[0]
+    cache = jnp.zeros(kv_cache_shape(cfg, b), jnp.float32)
+    for i, (kh, vh) in enumerate(kvs):
+        # kh, vh: [B, H, P, Dh] -> cache[i, 0/1, :, :, :P]
+        cache = jax.lax.dynamic_update_slice(
+            cache, kh[None, None], (i, 0, 0, 0, 0, 0)
+        )
+        cache = jax.lax.dynamic_update_slice(
+            cache, vh[None, None], (i, 1, 0, 0, 0, 0)
+        )
+    logits = h[:, -1] @ p["lm_head"]
+    return cache, logits
+
+
+def decode_step(cfg, flat, cache, tok, pos):
+    """One incremental decode step.
+
+    cache: [L, 2, B, H, S, Dh]; tok: [B] i32 (token at position `pos`);
+    pos: scalar i32. Returns (logits [B, V] for position pos+1, new cache).
+    """
+    p = unpack(cfg, flat)
+    dims = cfg.dims
+    n_heads, head_dim = dims.n_heads, dims.head_dim
+    b = tok.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+
+    h = p["tok_emb"][tok] + jax.lax.dynamic_slice(
+        p["pos_emb"], (pos, 0), (1, dims.d_model)
+    )  # [B, D]
+    s_axis = cfg.seq_len
+    pos_ids = jax.lax.iota(jnp.int32, s_axis)
+    attn_mask = (pos_ids <= pos)[None, None, :]  # [1, 1, S]
+
+    for i in range(dims.n_layers):
+        a = _rmsnorm(h, p[f"l{i}.ln1"])
+        qkv = a @ p[f"l{i}.wqkv"]  # [B, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        qh = q.reshape(b, n_heads, head_dim)
+        kh = k.reshape(b, n_heads, head_dim)
+        vh = v.reshape(b, n_heads, head_dim)
+        # Write k, v at `pos`: cache[i, 0, :, :, pos, :] = kh
+        cache = jax.lax.dynamic_update_slice(
+            cache, kh[None, None, :, :, None, :], (i, 0, 0, 0, pos, 0)
+        )
+        cache = jax.lax.dynamic_update_slice(
+            cache, vh[None, None, :, :, None, :], (i, 1, 0, 0, pos, 0)
+        )
+        keys = cache[i, 0]  # [B, H, S, Dh]
+        vals = cache[i, 1]
+        scores = jnp.einsum("bhd,bhsd->bhs", qh, keys) * scale
+        scores = jnp.where(attn_mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhs,bhsd->bhd", probs, vals).reshape(b, -1)
+        h = h + ctx @ p[f"l{i}.wo"]
+        a = _rmsnorm(h, p[f"l{i}.ln2"])
+        h = h + jax.nn.gelu(a @ p[f"l{i}.wi"]) @ p[f"l{i}.wo_mlp"]
+
+    h = _rmsnorm(h, p["final_ln"])
+    return h @ p["lm_head"], cache
+
+
+# ---------------------------------------------------------------------------
+# Fused generation: the whole sampling loop in one executable
+# ---------------------------------------------------------------------------
+
+def generate(cfg, flat, prompt, seed, temperature):
+    """Prefill + full sampling loop fused into one HLO (EXPERIMENTS.md §Perf).
+
+    The KV cache lives entirely inside the XLA while-loop — zero host
+    round-trips per token (the step-wise `decode` path moves the cache
+    host<->device every token). One call generates the whole round.
+
+    prompt: [B, P] i32; seed: scalar i32; temperature: scalar f32
+    (temperature <= 0 selects greedy argmax decoding).
+    Returns (tokens [B, S], resp_mask [B, S], blp [B, S]) with the same
+    conventions as the Rust DecodeState: mask covers response tokens incl.
+    EOS; blp is the *untempered* logprob of each sampled token; rows are
+    PAD-frozen after EOS.
+    """
+    from .configs import EOS, PAD
+
+    b, p_len = prompt.shape
+    s = cfg.seq_len
+    cache, logits = prefill(cfg, flat, prompt)
+    tokens0 = jnp.zeros((b, s), jnp.int32).at[:, :p_len].set(prompt)
+    mask0 = jnp.zeros((b, s), jnp.float32)
+    blp0 = jnp.zeros((b, s), jnp.float32)
+    done0 = jnp.zeros((b,), bool)
+    base_key = jax.random.PRNGKey(seed)
+
+    def body(pos, carry):
+        cache, logits, tokens, mask, blp, done = carry
+        logp = jax.nn.log_softmax(logits, axis=-1)  # untempered, for blp
+        key = jax.random.fold_in(base_key, pos)
+        sampled = jax.random.categorical(
+            key, logits / jnp.maximum(temperature, 1e-4), axis=-1
+        )
+        greedy = jnp.argmax(logits, axis=-1)
+        tok = jnp.where(temperature > 0.0, sampled, greedy).astype(jnp.int32)
+        tok = jnp.where(done, PAD, tok)
+        tok_lp = jnp.take_along_axis(logp, tok[:, None], axis=1)[:, 0]
+        live = (~done).astype(jnp.float32)
+        tokens = jax.lax.dynamic_update_slice(tokens, tok[:, None], (0, pos))
+        mask = jax.lax.dynamic_update_slice(mask, live[:, None], (0, pos))
+        blp = jax.lax.dynamic_update_slice(
+            blp, (tok_lp * live)[:, None], (0, pos)
+        )
+        done = done | (tok == EOS)
+        logits, cache = decode_step(cfg, flat, cache, tok, pos)
+        return cache, logits, tokens, mask, blp, done
+
+    _, _, tokens, mask, blp, _ = jax.lax.fori_loop(
+        p_len, s, body, (cache, logits, tokens0, mask0, blp0, done0)
+    )
+    return tokens, mask, blp

@@ -1,0 +1,51 @@
+"""L2: Adam on the flat parameter vector, fused into single train-step HLOs.
+
+`make_train_step(cfg, loss_fn)` returns a function
+
+    (flat, m, v, step, lr, *batch) -> (flat', m', v', metrics)
+
+where `step` (f32 scalar, 1-based) drives bias correction and `lr` is a
+runtime input (fig8 halves it). XLA fuses grad + Adam into one executable,
+so one Rust `execute` call performs a whole optimizer update.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_update(grads, flat, m, v, step, lr, b1, b2, eps, max_grad_norm=1.0):
+    """One Adam step with global-norm gradient clipping on the flat vector."""
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(grads)))
+    scale = jnp.minimum(1.0, max_grad_norm / (gnorm + 1e-12))
+    grads = grads * scale
+    m_new = b1 * m + (1.0 - b1) * grads
+    v_new = b2 * v + (1.0 - b2) * jnp.square(grads)
+    m_hat = m_new / (1.0 - jnp.power(b1, step))
+    v_hat = v_new / (1.0 - jnp.power(b2, step))
+    flat_new = flat - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return flat_new, m_new, v_new, gnorm
+
+
+def make_train_step(cfg, loss_fn, static_kwargs=None):
+    """Build the fused train-step callable for one loss function.
+
+    `loss_fn(cfg, flat, *batch, **static_kwargs) -> (loss, metrics)`.
+    Hyperparameters in `static_kwargs` (beta, clip, ...) are baked into the
+    HLO; `lr` stays a runtime input. The last metrics slot is overwritten
+    with the clipped-gradient norm.
+    """
+    static_kwargs = static_kwargs or {}
+
+    def train_step(flat, m, v, step, lr, *batch):
+        def lf(p):
+            return loss_fn(cfg, p, *batch, **static_kwargs)
+
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(flat)
+        flat_new, m_new, v_new, gnorm = adam_update(
+            grads, flat, m, v, step, lr,
+            cfg.adam_b1, cfg.adam_b2, cfg.adam_eps,
+        )
+        metrics = metrics.at[-1].set(gnorm)
+        return flat_new, m_new, v_new, metrics
+
+    return train_step

@@ -1,0 +1,113 @@
+"""L1 correctness: Pallas flash attention vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including ragged, non-block-multiple sequence
+lengths), dtypes, block sizes and causal/non-causal; every case asserts
+allclose for the forward, the lse residual, and all three input gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _check(B, H, S, D, bq, bk, causal, dtype, tol):
+    keys = jax.random.split(jax.random.PRNGKey(B * 1000 + S * 10 + D), 3)
+    q, k, v = (_rand(kk, (B, H, S, D), dtype) for kk in keys)
+
+    out = A.flash_attention(q, k, v, causal, None, bq, bk)
+    expect = ref.attention(q, k, v, causal)
+    np.testing.assert_allclose(out, expect, atol=tol, rtol=tol)
+
+    lse = A.attention_lse(q, k, v, causal, None, bq, bk)
+    np.testing.assert_allclose(
+        lse, ref.attention_lse(q, k, v, causal), atol=tol, rtol=tol
+    )
+
+    def loss_k(q, k, v):
+        return (A.flash_attention(q, k, v, causal, None, bq, bk)
+                .astype(jnp.float32) ** 2).sum()
+
+    def loss_r(q, k, v):
+        return (ref.attention(q, k, v, causal).astype(jnp.float32) ** 2).sum()
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    scale = max(1.0, float(jnp.max(jnp.abs(jnp.stack([g.astype(jnp.float32).max() for g in gr])))))
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, atol=tol * 10 * scale, rtol=tol * 10)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize(
+    "B,H,S,D,bq,bk",
+    [
+        (2, 2, 16, 32, 16, 16),   # exact block multiple
+        (2, 2, 24, 32, 16, 16),   # ragged q and k tails
+        (1, 1, 7, 8, 4, 4),       # tiny ragged
+        (2, 3, 33, 16, 16, 8),    # asymmetric blocks
+        (1, 2, 5, 4, 16, 16),     # seq smaller than block
+        (4, 2, 48, 32, 16, 16),   # tldr config shape
+    ],
+)
+def test_flash_attention_matches_ref(B, H, S, D, bq, bk, causal):
+    _check(B, H, S, D, bq, bk, causal, jnp.float32, 1e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_bf16(causal):
+    _check(2, 2, 24, 32, 16, 16, causal, jnp.bfloat16, 3e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    s=st.integers(2, 40),
+    d=st.sampled_from([4, 8, 16, 32]),
+    bq=st.sampled_from([4, 8, 16]),
+    bk=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+)
+def test_flash_attention_hypothesis(b, h, s, d, bq, bk, causal):
+    _check(b, h, s, d, bq, bk, causal, jnp.float32, 1e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Property: each output row lies in the convex hull of V rows —
+    softmax weights are >= 0 and sum to 1, so min(V) <= out <= max(V)
+    per feature dimension (over the causal prefix)."""
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, H, S, D = 2, 2, 24, 16
+    q, k, v = (jax.random.normal(kk, (B, H, S, D)) for kk in keys)
+    out = np.asarray(A.flash_attention(q, k, v, True))
+    v = np.asarray(v)
+    for t in range(S):
+        lo = v[:, :, : t + 1].min(axis=2) - 1e-5
+        hi = v[:, :, : t + 1].max(axis=2) + 1e-5
+        assert (out[:, :, t] >= lo).all() and (out[:, :, t] <= hi).all()
+
+
+def test_causal_first_row_is_v0():
+    """Causally, position 0 attends only to itself: out[0] == v[0]."""
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (jax.random.normal(kk, (1, 1, 9, 8)) for kk in keys)
+    out = A.flash_attention(q, k, v, True)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], atol=1e-6)
+
+
+def test_scale_override():
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    q, k, v = (jax.random.normal(kk, (1, 2, 12, 8)) for kk in keys)
+    out = A.flash_attention(q, k, v, True, 0.25)
+    expect = ref.attention(q, k, v, True, 0.25)
+    np.testing.assert_allclose(out, expect, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,250 @@
+"""L2 loss properties: gradient directions, invariances, optimizer behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, losses, model, optim
+
+CFG = configs.CONFIGS["dev"]
+Bp, Bg, S, P = CFG.train_pairs, CFG.gen_batch, CFG.seq_len, CFG.prompt_len
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return jnp.asarray(model.init_params(CFG, 42)) * 5.0
+
+
+def _toks(seed, b):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(1, CFG.vocab, (b, S)), jnp.int32)
+
+
+def _resp_mask(b):
+    m = jnp.zeros((b, S), jnp.float32)
+    return m.at[:, P:].set(1.0)
+
+
+# --- SFT -------------------------------------------------------------------
+
+def test_sft_loss_positive_and_decreases(flat):
+    toks, mask = _toks(0, Bg), _resp_mask(Bg)
+    step = optim.make_train_step(CFG, losses.sft)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    f = flat
+    metrics = []
+    for i in range(8):
+        f, m, v, met = step(f, m, v, jnp.float32(i + 1), jnp.float32(1e-3),
+                            toks, mask)
+        metrics.append(float(met[0]))
+    assert metrics[0] > 0
+    assert metrics[-1] < metrics[0]
+
+
+def test_sft_mask_zero_gives_zero_grad(flat):
+    toks = _toks(1, Bg)
+    mask = jnp.zeros((Bg, S), jnp.float32)
+    g = jax.grad(lambda p: losses.sft(CFG, p, toks, mask)[0])(flat)
+    np.testing.assert_allclose(g, 0.0, atol=1e-8)
+
+
+# --- DPO -------------------------------------------------------------------
+
+def test_dpo_gradient_direction(flat):
+    """A DPO step must raise logprob of chosen relative to rejected."""
+    tp, tn, mask = _toks(2, Bp), _toks(3, Bp), _resp_mask(Bp)
+    rlp_p, _ = model.seq_logprob(CFG, flat, tp, mask)
+    rlp_n, _ = model.seq_logprob(CFG, flat, tn, mask)
+    lp_p0, _ = model.seq_logprob(CFG, flat, tp, mask)
+    lp_n0, _ = model.seq_logprob(CFG, flat, tn, mask)
+    step = optim.make_train_step(CFG, losses.online_dpo, {"beta": 0.1})
+    f, m, v = flat, jnp.zeros_like(flat), jnp.zeros_like(flat)
+    for i in range(3):
+        f, m, v, _ = step(f, m, v, jnp.float32(i + 1), jnp.float32(1e-3),
+                          tp, mask, tn, mask, rlp_p, rlp_n)
+    lp_p1, _ = model.seq_logprob(CFG, f, tp, mask)
+    lp_n1, _ = model.seq_logprob(CFG, f, tn, mask)
+    margin0 = (lp_p0 - lp_n0).mean()
+    margin1 = (lp_p1 - lp_n1).mean()
+    assert margin1 > margin0
+
+
+def test_dpo_loss_at_init_is_log2(flat):
+    """With identical policies (ref == policy), margin = 0 -> loss = ln 2."""
+    tp, tn, mask = _toks(4, Bp), _toks(5, Bp), _resp_mask(Bp)
+    rlp_p, _ = model.seq_logprob(CFG, flat, tp, mask)
+    rlp_n, _ = model.seq_logprob(CFG, flat, tn, mask)
+    loss, metrics = losses.online_dpo(
+        CFG, flat, tp, mask, tn, mask, rlp_p, rlp_n, 0.1
+    )
+    np.testing.assert_allclose(float(loss), np.log(2.0), rtol=1e-5)
+
+
+# --- RLOO family -----------------------------------------------------------
+
+def _rloo_batch(flat, seed):
+    t1, t2, mask = _toks(seed, Bp), _toks(seed + 1, Bp), _resp_mask(Bp)
+    _, blp1 = model.seq_logprob(CFG, flat, t1, mask)
+    _, blp2 = model.seq_logprob(CFG, flat, t2, mask)
+    rng = np.random.default_rng(seed)
+    r1 = jnp.asarray(rng.normal(0, 1, Bp), jnp.float32)
+    r2 = jnp.asarray(rng.normal(0, 1, Bp), jnp.float32)
+    return t1, mask, t2, mask, blp1, blp2, blp1, blp2, r1, r2
+
+
+def test_rloo_advantages_antisymmetric():
+    r1 = jnp.asarray([1.0, 2.0])
+    r2 = jnp.asarray([0.5, 3.0])
+    z = jnp.zeros((2, 4))
+    a1, a2 = losses._rloo_adv(r1, r2, z, z, z, z, 0.05)
+    np.testing.assert_allclose(a1, -a2)
+    np.testing.assert_allclose(a1, r1 - r2)
+
+
+def test_rloo_and_copg_gradients_match(flat):
+    """Paper App. B: CoPG has the *same gradient* as vanilla RLOO
+    (log pi_old is a constant shift)."""
+    batch = _rloo_batch(flat, 10)
+    g1 = jax.grad(lambda p: losses.rloo(CFG, p, *batch, beta=0.05)[0])(flat)
+    g2 = jax.grad(lambda p: losses.copg(CFG, p, *batch, beta=0.05)[0])(flat)
+    np.testing.assert_allclose(g1, g2, atol=1e-5, rtol=1e-4)
+
+
+def test_prloo_equals_rloo_on_policy_grad(flat):
+    """On-policy (behaviour == current), ratio == 1: Proximal RLOO's
+    gradient reduces to ratio * grad(logprob) * A = RLOO's gradient."""
+    batch = _rloo_batch(flat, 20)
+    g_pr = jax.grad(
+        lambda p: losses.proximal_rloo(CFG, p, *batch, beta=0.05, clip=0.2)[0]
+    )(flat)
+    g_rl = jax.grad(lambda p: losses.rloo(CFG, p, *batch, beta=0.05)[0])(flat)
+    np.testing.assert_allclose(g_pr, g_rl, atol=1e-4, rtol=1e-3)
+
+
+def test_prloo_clipping_bounds_offpolicy_update(flat):
+    """Off-policy with huge advantage, the clipped objective's gradient
+    magnitude must not exceed the unclipped one."""
+    t1, mask, t2, _, blp1, blp2, rlp1, rlp2, _, _ = _rloo_batch(flat, 30)
+    # Make the data strongly off-policy: pretend behaviour logprobs were
+    # much higher than the current policy's.
+    blp1_off = blp1 + 0.5 * mask
+    blp2_off = blp2 + 0.5 * mask
+    r1 = jnp.full((Bp,), 5.0)
+    r2 = jnp.zeros((Bp,))
+    args = (t1, mask, t2, mask, blp1_off, blp2_off, rlp1, rlp2, r1, r2)
+    g_clip = jax.grad(
+        lambda p: losses.proximal_rloo(CFG, p, *args, beta=0.0, clip=0.2)[0]
+    )(flat)
+    g_noclip = jax.grad(
+        lambda p: losses.proximal_rloo(CFG, p, *args, beta=0.0, clip=1e9)[0]
+    )(flat)
+    assert jnp.linalg.norm(g_clip) <= jnp.linalg.norm(g_noclip) * 1.001
+
+
+# --- PPO ---------------------------------------------------------------
+
+def _ppo_batch(flat, seed):
+    toks, mask = _toks(seed, Bg), _resp_mask(Bg)
+    _, blp = model.seq_logprob(CFG, flat, toks, mask)
+    rng = np.random.default_rng(seed)
+    rewards = jnp.asarray(rng.normal(0, 1, Bg), jnp.float32)
+    return toks, mask, blp, blp, rewards
+
+
+def test_ppo_runs_and_is_finite(flat):
+    batch = _ppo_batch(flat, 40)
+    loss, metrics = losses.ppo(CFG, flat, *batch, beta=0.05, clip=0.2,
+                               gamma=1.0, lam=0.95, vf_coef=0.1)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(metrics)).all()
+    # on-policy: ratio == 1 and approx_kl == 0
+    np.testing.assert_allclose(float(metrics[6]), 1.0, atol=1e-5)
+    np.testing.assert_allclose(float(metrics[3]), 0.0, atol=1e-5)
+
+
+def test_ppo_improves_reward_on_bandit_like_batch(flat):
+    """Sequences with reward +1 should gain logprob over ones with -1."""
+    toks, mask = _toks(41, Bg), _resp_mask(Bg)
+    _, blp = model.seq_logprob(CFG, flat, toks, mask)
+    rewards = jnp.asarray([1.0, -1.0] * (Bg // 2), jnp.float32)
+    step = optim.make_train_step(
+        CFG, losses.ppo,
+        {"beta": 0.0, "clip": 0.2, "gamma": 1.0, "lam": 0.95, "vf_coef": 0.1},
+    )
+    f, m, v = flat, jnp.zeros_like(flat), jnp.zeros_like(flat)
+    for i in range(4):
+        f, m, v, _ = step(f, m, v, jnp.float32(i + 1), jnp.float32(5e-4),
+                          toks, mask, blp, blp, rewards)
+    lp_new, _ = model.seq_logprob(CFG, f, toks, mask)
+    lp_old, _ = model.seq_logprob(CFG, flat, toks, mask)
+    delta = np.asarray(lp_new - lp_old)
+    assert delta[rewards > 0].mean() > delta[rewards < 0].mean()
+
+
+def test_gae_gamma1_lambda1_is_reward_to_go_minus_value():
+    """With gamma = lam = 1 and full mask, GAE telescopes to
+    sum_{t'>=t} r_{t'} - V_t."""
+    B, T = 2, 6
+    rng = np.random.default_rng(0)
+    rewards = jnp.asarray(rng.normal(0, 1, (B, T)), jnp.float32)
+    values = jnp.asarray(rng.normal(0, 1, (B, T)), jnp.float32)
+    mask = jnp.ones((B, T), jnp.float32)
+    adv = losses._gae(rewards, values, mask, 1.0, 1.0)
+    rtg = jnp.cumsum(rewards[:, ::-1], axis=1)[:, ::-1]
+    np.testing.assert_allclose(adv, rtg - values, atol=1e-5, rtol=1e-4)
+
+
+# --- Reward model ------------------------------------------------------
+
+def test_rm_training_learns_separation(flat):
+    toks_c, toks_r = _toks(50, Bp), _toks(51, Bp)
+    mask = jnp.ones((Bp, S), jnp.float32)
+    step = optim.make_train_step(CFG, losses.reward_model)
+    f, m, v = flat, jnp.zeros_like(flat), jnp.zeros_like(flat)
+    for i in range(10):
+        f, m, v, met = step(f, m, v, jnp.float32(i + 1), jnp.float32(1e-3),
+                            toks_c, mask, toks_r, mask)
+    assert float(met[1]) == 1.0  # accuracy
+    assert float(met[2]) > 0.0  # margin
+
+
+# --- Adam ---------------------------------------------------------------
+
+def test_adam_matches_reference_implementation():
+    rng = np.random.default_rng(0)
+    n = 64
+    flat = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    grads = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    m = jnp.asarray(np.abs(rng.normal(0, 0.1, n)), jnp.float32)
+    v = jnp.asarray(np.abs(rng.normal(0, 0.1, n)), jnp.float32)
+    b1, b2, eps, lr, step = 0.9, 0.95, 1e-8, 3e-4, 7.0
+    f2, m2, v2, gnorm = optim.adam_update(
+        grads, flat, m, v, step, lr, b1, b2, eps, max_grad_norm=1e9
+    )
+    # hand-rolled reference
+    me = b1 * np.asarray(m) + (1 - b1) * np.asarray(grads)
+    ve = b2 * np.asarray(v) + (1 - b2) * np.asarray(grads) ** 2
+    mh = me / (1 - b1 ** step)
+    vh = ve / (1 - b2 ** step)
+    fe = np.asarray(flat) - lr * mh / (np.sqrt(vh) + eps)
+    np.testing.assert_allclose(f2, fe, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(m2, me, rtol=1e-6)
+    np.testing.assert_allclose(v2, ve, rtol=1e-6)
+    np.testing.assert_allclose(
+        float(gnorm), float(np.linalg.norm(np.asarray(grads))), rtol=1e-5
+    )
+
+
+def test_adam_grad_clipping():
+    n = 16
+    grads = jnp.full((n,), 100.0)
+    flat = jnp.zeros(n)
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    _, m2, _, gnorm = optim.adam_update(
+        grads, flat, m, v, 1.0, 1e-3, 0.9, 0.95, 1e-8, max_grad_norm=1.0
+    )
+    clipped = np.asarray(m2) / 0.1  # m = (1-b1) * g_clipped
+    assert np.linalg.norm(clipped) <= 1.01

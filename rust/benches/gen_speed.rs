@@ -1,0 +1,75 @@
+//! Bench: generation-engine speed — paper Fig 14 / Appendix C.1.
+//!
+//! Cached (vLLM analogue) vs naive full-recompute (HF analogue) batch
+//! generation time across model scales; the cached/naive gap should grow
+//! with model size. `cargo bench --bench gen_speed`.
+
+use async_rlhf::data::{Task, TaskGen};
+use async_rlhf::gen::{cached::CachedEngine, fused::FusedEngine, naive::NaiveEngine, Generator, SampleOpts};
+use async_rlhf::runtime::Engine;
+use async_rlhf::util::bench::{artifact_dir_or_skip, bench};
+use async_rlhf::util::rng::Pcg32;
+
+fn main() {
+    println!("== gen_speed (paper Fig 14): cached vs naive engines ==");
+    let mut rows = Vec::new();
+    for model in ["tldr_s", "tldr_m", "tldr_l"] {
+        let Some(dir) = artifact_dir_or_skip(model) else {
+            continue;
+        };
+        let engine = Engine::load(&dir).expect("load engine");
+        let cfg = engine.manifest.config.clone();
+        let params = engine.init_policy().expect("init params");
+        let taskgen = TaskGen::new(
+            Task::from_name(&cfg.task).unwrap(),
+            cfg.prompt_len,
+            cfg.resp_len,
+            42,
+        );
+        let prompts: Vec<Vec<i32>> = taskgen
+            .batch(0, cfg.gen_batch)
+            .iter()
+            .map(|e| e.prompt.clone())
+            .collect();
+        let opts = SampleOpts { temperature: 0.7, greedy: false };
+
+        let run = |gen: &dyn Generator, label: &str| {
+            let mut seed = 0u64;
+            bench(&format!("{model}/{label}"), 1, 5, || {
+                seed += 1;
+                let mut rng = Pcg32::new(seed, 0);
+                gen.generate(&engine, &params, &prompts, opts, &mut rng)
+                    .unwrap();
+            })
+        };
+        let fused = run(&FusedEngine, "fused");
+        let cached = run(&CachedEngine, "cached");
+        let naive = run(&NaiveEngine, "naive");
+        rows.push((
+            model,
+            engine.manifest.param_count,
+            fused.mean(),
+            cached.mean(),
+            naive.mean(),
+        ));
+    }
+    println!(
+        "\nmodel     params      fused_s   cached_s  naive_s   naive/fused"
+    );
+    for (m, p, f, c, n) in &rows {
+        println!(
+            "{m:<9} {p:>10}  {f:>8.4}  {c:>8.4}  {n:>8.4}  {:>6.2}x",
+            n / f
+        );
+    }
+    if rows.len() >= 2 {
+        let first = rows[0].4 / rows[0].2;
+        let last = rows[rows.len() - 1].4 / rows[rows.len() - 1].2;
+        println!(
+            "\npaper-shape check (gap grows with scale): {:.2}x -> {:.2}x  [{}]",
+            first,
+            last,
+            if last > first { "OK" } else { "INVERTED" }
+        );
+    }
+}

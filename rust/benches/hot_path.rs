@@ -1,0 +1,171 @@
+//! Bench: hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf).
+//!
+//! Times each executable class in isolation (prefill, decode step, RM
+//! score, logprob, fused train step) plus the host-side costs (sampling,
+//! batch assembly buffers, param publication clone) so regressions are
+//! attributable to a layer.
+
+use async_rlhf::data::{Task, TaskGen};
+use async_rlhf::gen::sampler;
+use async_rlhf::runtime::{scalar_f32, scalar_i32, Engine, HostTensor};
+use async_rlhf::util::bench::{artifact_dir_or_skip, bench};
+use async_rlhf::util::rng::Pcg32;
+
+fn main() {
+    println!("== hot_path: per-executable and host-side costs ==");
+    let model = std::env::var("ASYNC_RLHF_BENCH_MODEL")
+        .unwrap_or_else(|_| "tldr_s".into());
+    let Some(dir) = artifact_dir_or_skip(&model) else {
+        return;
+    };
+    let engine = Engine::load(&dir).expect("load");
+    engine.warmup().expect("warmup");
+    let cfg = engine.manifest.config.clone();
+    let params = engine.init_policy().expect("params");
+    let n = engine.manifest.param_count;
+    let (b, s, p, v) = (cfg.gen_batch, cfg.seq_len, cfg.prompt_len, cfg.vocab);
+
+    let taskgen = TaskGen::new(
+        Task::from_name(&cfg.task).unwrap(),
+        cfg.prompt_len,
+        cfg.resp_len,
+        1,
+    );
+    let mut prompt_flat = Vec::with_capacity(b * p);
+    for ex in taskgen.batch(0, b) {
+        prompt_flat.extend_from_slice(&ex.prompt);
+    }
+    let toks: Vec<i32> = vec![1; b * s];
+    let mask: Vec<f32> = vec![1.0; b * s];
+
+    // --- executable calls ---
+    bench(&format!("{model}/prefill"), 2, 10, || {
+        engine
+            .call(
+                "prefill",
+                &[
+                    HostTensor::F32(params.clone()),
+                    HostTensor::I32(prompt_flat.clone()),
+                ],
+            )
+            .unwrap();
+    });
+
+    let kv = engine
+        .call(
+            "prefill",
+            &[
+                HostTensor::F32(params.clone()),
+                HostTensor::I32(prompt_flat.clone()),
+            ],
+        )
+        .unwrap()
+        .into_iter()
+        .next()
+        .unwrap();
+    bench(&format!("{model}/decode_step (literal kv)"), 2, 10, || {
+        engine
+            .call(
+                "decode",
+                &[
+                    HostTensor::F32(params.clone()),
+                    kv.clone(),
+                    HostTensor::I32(vec![5; b]),
+                    scalar_i32(p as i32),
+                ],
+            )
+            .unwrap();
+    });
+
+    bench(&format!("{model}/generate (fused round)"), 1, 5, || {
+        engine
+            .call(
+                "generate",
+                &[
+                    HostTensor::F32(params.clone()),
+                    HostTensor::I32(prompt_flat.clone()),
+                    scalar_i32(7),
+                    scalar_f32(0.7),
+                ],
+            )
+            .unwrap();
+    });
+
+    bench(&format!("{model}/score_rm"), 2, 10, || {
+        engine
+            .call(
+                "score_rm",
+                &[
+                    HostTensor::F32(params.clone()),
+                    HostTensor::I32(toks.clone()),
+                    HostTensor::F32(mask.clone()),
+                ],
+            )
+            .unwrap();
+    });
+
+    bench(&format!("{model}/logprob"), 2, 10, || {
+        engine
+            .call(
+                "logprob",
+                &[
+                    HostTensor::F32(params.clone()),
+                    HostTensor::I32(toks.clone()),
+                    HostTensor::F32(mask.clone()),
+                ],
+            )
+            .unwrap();
+    });
+
+    let bp = cfg.train_pairs;
+    let pair_toks: Vec<i32> = vec![1; bp * s];
+    let pair_mask: Vec<f32> = vec![1.0; bp * s];
+    let rlp: Vec<f32> = vec![-1.0; bp];
+    bench(&format!("{model}/train_dpo (fused)"), 2, 10, || {
+        engine
+            .call(
+                "train_dpo",
+                &[
+                    HostTensor::F32(params.clone()),
+                    HostTensor::F32(vec![0.0; n]),
+                    HostTensor::F32(vec![0.0; n]),
+                    scalar_f32(1.0),
+                    scalar_f32(3e-4),
+                    HostTensor::I32(pair_toks.clone()),
+                    HostTensor::F32(pair_mask.clone()),
+                    HostTensor::I32(pair_toks.clone()),
+                    HostTensor::F32(pair_mask.clone()),
+                    HostTensor::F32(rlp.clone()),
+                    HostTensor::F32(rlp.clone()),
+                ],
+            )
+            .unwrap();
+    });
+
+    // --- host-side costs ---
+    let logits: Vec<f32> = (0..b * v).map(|i| (i % 17) as f32 * 0.1).collect();
+    bench("host/sample_batch_row_loop", 10, 50, || {
+        let mut rng = Pcg32::new(7, 7);
+        for i in 0..b {
+            let row = &logits[i * v..(i + 1) * v];
+            let _ = sampler::sample(row, 0.7, false, &mut rng);
+        }
+    });
+
+    bench("host/param_publish_clone", 10, 50, || {
+        let copy = params.clone();
+        std::hint::black_box(&copy);
+    });
+
+    // per-artifact cumulative stats gathered during this bench
+    println!("\ncumulative engine stats:");
+    for (name, st) in engine.stats() {
+        println!(
+            "  {:<22} calls {:>4}  total {:>8.3}s  mean {:>8.4}s",
+            name,
+            st.calls,
+            st.total_secs,
+            st.total_secs / st.calls.max(1) as f64
+        );
+    }
+}

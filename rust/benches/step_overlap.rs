@@ -1,0 +1,68 @@
+//! Bench: sync vs async RLHF step time — the timing half of paper Fig 1.
+//!
+//! Measures mean wall-clock per optimizer step for synchronous
+//! (generate-then-train) vs asynchronous (overlapped) coordination on the
+//! same executables. The async step should approach
+//! max(gen, score+train) while sync pays the sum.
+
+use async_rlhf::config::{Algo, ExpConfig, Mode};
+use async_rlhf::coordinator;
+use async_rlhf::metrics::Phase;
+use async_rlhf::util::bench::artifact_dir_or_skip;
+
+fn main() {
+    println!("== step_overlap (paper Fig 1 timing): sync vs async ==");
+    let model = std::env::var("ASYNC_RLHF_BENCH_MODEL")
+        .unwrap_or_else(|_| "tldr_s".into());
+    let Some(_) = artifact_dir_or_skip(&model) else {
+        return;
+    };
+
+    let mut cfg = ExpConfig {
+        model: model.clone(),
+        algo: Algo::Dpo,
+        steps: 12,
+        sft_steps: 60,
+        rm_steps: 40,
+        run_dir: std::env::temp_dir().join("async_rlhf_bench"),
+        ..ExpConfig::default()
+    };
+    let prep = coordinator::prepare(&cfg, false).expect("prepare");
+
+    let mut results = Vec::new();
+    for mode in [Mode::Sync, Mode::Async] {
+        cfg.mode = mode;
+        let out = coordinator::run(&cfg, &prep, false).expect("run");
+        let totals = out.timeline.totals();
+        let wall = out.timeline.wall();
+        let per_step = wall / cfg.steps as f64;
+        println!(
+            "{:<6} wall {:>7.2}s  per-step {:>6.3}s  gen {:>6.2}s  \
+             score {:>6.2}s  train {:>6.2}s",
+            mode.name(),
+            wall,
+            per_step,
+            totals.get(&Phase::Generate).unwrap_or(&0.0),
+            totals.get(&Phase::Score).unwrap_or(&0.0),
+            totals.get(&Phase::Train).unwrap_or(&0.0),
+        );
+        results.push((mode, wall, totals));
+    }
+
+    if let [(_, sync_wall, st), (_, async_wall, _)] = &results[..] {
+        let speedup = (sync_wall / async_wall - 1.0) * 100.0;
+        println!("\nasync speedup vs sync: {speedup:+.1}%");
+        let gen = st.get(&Phase::Generate).copied().unwrap_or(0.0);
+        let rest = st.get(&Phase::Score).copied().unwrap_or(0.0)
+            + st.get(&Phase::Train).copied().unwrap_or(0.0);
+        let ideal = gen.max(rest);
+        println!(
+            "ideal async wall (max of phases): {ideal:.2}s -> overhead {:+.2}s",
+            async_wall - ideal
+        );
+        println!(
+            "paper-shape check (async faster): [{}]",
+            if speedup > 0.0 { "OK" } else { "SLOWER" }
+        );
+    }
+}

@@ -1,0 +1,277 @@
+//! Experiment configuration: the runtime knobs of the paper's study.
+//!
+//! Model geometry/hyperparameters live in the artifact manifest (baked at
+//! AOT time, python/compile/configs.py — paper Tables 4-7, 10); this module
+//! holds everything the Rust coordinator decides at runtime: algorithm,
+//! sync/async mode, off-policyness N, updates-per-batch T, best-of-K,
+//! learning rate, step counts, seeds. Presets mirror the paper's runs.
+
+use std::fmt;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::util::args::Args;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Online DPO (paper's most off-policy-robust method).
+    Dpo,
+    /// PPO with value head (the classic baseline).
+    Ppo,
+    /// Vanilla RLOO, k=2.
+    Rloo,
+    /// Proximal RLOO (paper Appendix B: clipped IS ratio).
+    Prloo,
+    /// CoPG-style RLOO (Appendix B comparison; collapses off-policy).
+    Copg,
+    /// Best-of-2 SFT baseline (paper §3.3).
+    BestOfN,
+}
+
+impl Algo {
+    pub fn from_name(s: &str) -> Result<Algo> {
+        Ok(match s {
+            "dpo" => Algo::Dpo,
+            "ppo" => Algo::Ppo,
+            "rloo" => Algo::Rloo,
+            "prloo" => Algo::Prloo,
+            "copg" => Algo::Copg,
+            "bon" | "best_of_n" => Algo::BestOfN,
+            _ => bail!("unknown algorithm '{s}' (dpo|ppo|rloo|prloo|copg|bon)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Dpo => "dpo",
+            Algo::Ppo => "ppo",
+            Algo::Rloo => "rloo",
+            Algo::Prloo => "prloo",
+            Algo::Copg => "copg",
+            Algo::BestOfN => "bon",
+        }
+    }
+
+    /// Train-step artifact name in the manifest.
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            Algo::Dpo => "train_dpo",
+            Algo::Ppo => "train_ppo",
+            Algo::Rloo => "train_rloo",
+            Algo::Prloo => "train_prloo",
+            Algo::Copg => "train_copg",
+            Algo::BestOfN => "train_bon",
+        }
+    }
+
+    /// Pairwise algorithms consume 2 completions per prompt.
+    pub fn pairwise(&self) -> bool {
+        !matches!(self, Algo::Ppo)
+    }
+}
+
+impl fmt::Display for Algo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Generate-then-train on the same resources (paper Fig 2 top).
+    Sync,
+    /// Cleanba-style one-step off-policy overlap (paper Fig 2 bottom).
+    Async,
+}
+
+impl Mode {
+    pub fn from_name(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "sync" => Mode::Sync,
+            "async" => Mode::Async,
+            _ => bail!("unknown mode '{s}' (sync|async)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Sync => "sync",
+            Mode::Async => "async",
+        }
+    }
+}
+
+/// Full runtime configuration of one RLHF run.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// Artifact config name, e.g. "tldr_s".
+    pub model: String,
+    pub artifacts_root: PathBuf,
+    pub algo: Algo,
+    pub mode: Mode,
+    /// RLHF optimizer steps (mini-batch updates).
+    pub steps: u64,
+    /// Off-policyness: mini-batches generated per generation round
+    /// (paper §3.2; N=1 is on-policy).
+    pub n_minibatches: usize,
+    /// Updates per mini-batch, "ppo epochs" (paper §4.1; T=1 default).
+    pub updates_per_batch: usize,
+    /// Completions sampled per prompt for pairwise losses (paper §4.2;
+    /// K=2 default, K=4 trains on best/worst).
+    pub k_samples: usize,
+    pub lr: f32,
+    pub temperature: f32,
+    /// Reward for completions without EOS (paper Table 4: -1.0).
+    pub eos_penalty: f32,
+    /// Optimize the learned proxy RM (paper setup) or the gold scorer
+    /// directly (well-trained-RM limit; ablation).
+    pub gold_reward: bool,
+    pub seed: u64,
+    /// SFT warm-start steps before RLHF (0 = load checkpoint if cached).
+    pub sft_steps: u64,
+    /// Proxy-RM training steps.
+    pub rm_steps: u64,
+    /// Evaluate every this many RLHF steps (0 = only final).
+    pub eval_every: u64,
+    /// Number of held-out prompts for final evaluation.
+    pub eval_prompts: usize,
+    /// Directory for logs/checkpoints.
+    pub run_dir: PathBuf,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            model: "tldr_s".into(),
+            artifacts_root: PathBuf::from("artifacts"),
+            algo: Algo::Dpo,
+            mode: Mode::Sync,
+            steps: 96,
+            n_minibatches: 1,
+            updates_per_batch: 1,
+            k_samples: 2,
+            lr: 3e-5,
+            temperature: 0.7,
+            eos_penalty: -1.0,
+            gold_reward: false,
+            seed: 42,
+            sft_steps: 1200,
+            rm_steps: 300,
+            eval_every: 16,
+            eval_prompts: 128,
+            run_dir: PathBuf::from("runs"),
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Parse CLI options on top of the defaults.
+    pub fn from_args(args: &Args) -> Result<ExpConfig> {
+        let mut c = ExpConfig::default();
+        if let Some(m) = args.positional.first() {
+            c.model = m.clone();
+        }
+        if let Some(m) = args.get("model") {
+            c.model = m.to_string();
+        }
+        c.artifacts_root =
+            crate::runtime::artifacts_root(args.get("artifacts"));
+        if let Some(a) = args.get("algo") {
+            c.algo = Algo::from_name(a)?;
+        }
+        if let Some(m) = args.get("mode") {
+            c.mode = Mode::from_name(m)?;
+        }
+        c.steps = args.get_parse("steps", c.steps)?;
+        c.n_minibatches = args.get_parse("n", c.n_minibatches)?;
+        c.updates_per_batch = args.get_parse("t", c.updates_per_batch)?;
+        c.k_samples = args.get_parse("k", c.k_samples)?;
+        c.lr = args.get_parse("lr", c.lr)?;
+        c.temperature = args.get_parse("temperature", c.temperature)?;
+        c.seed = args.get_parse("seed", c.seed)?;
+        c.sft_steps = args.get_parse("sft-steps", c.sft_steps)?;
+        c.rm_steps = args.get_parse("rm-steps", c.rm_steps)?;
+        c.eval_every = args.get_parse("eval-every", c.eval_every)?;
+        c.eval_prompts = args.get_parse("eval-prompts", c.eval_prompts)?;
+        c.run_dir = PathBuf::from(args.get_or("run-dir", "runs"));
+        c.gold_reward = matches!(args.get("reward"), Some("gold"));
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_minibatches == 0 || self.updates_per_batch == 0 {
+            bail!("n and t must be >= 1");
+        }
+        if self.k_samples != 2 && self.k_samples != 4 {
+            bail!("k must be 2 or 4 (gen_batch geometry)");
+        }
+        if self.mode == Mode::Async && self.n_minibatches != 1 {
+            bail!(
+                "async mode is one-step off-policy (N=1); \
+                 use sync mode to sweep N"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn artifact_dir(&self) -> PathBuf {
+        self.artifacts_root.join(&self.model)
+    }
+
+    /// Label used in logs and run directories.
+    pub fn label(&self) -> String {
+        format!(
+            "{}_{}_{}_n{}_t{}_k{}_s{}",
+            self.model,
+            self.algo,
+            self.mode.name(),
+            self.n_minibatches,
+            self.updates_per_batch,
+            self.k_samples,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Result<ExpConfig> {
+        let v: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&v, &[]).unwrap();
+        ExpConfig::from_args(&args)
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = parse(&["train", "tldr_m", "--algo", "ppo", "--n", "4",
+                        "--steps", "10"]).unwrap();
+        assert_eq!(c.model, "tldr_m");
+        assert_eq!(c.algo, Algo::Ppo);
+        assert_eq!(c.n_minibatches, 4);
+        assert_eq!(c.steps, 10);
+        assert_eq!(c.mode, Mode::Sync);
+    }
+
+    #[test]
+    fn async_rejects_n_gt_1() {
+        assert!(parse(&["train", "--mode", "async", "--n", "4"]).is_err());
+        assert!(parse(&["train", "--mode", "async", "--n", "1"]).is_ok());
+    }
+
+    #[test]
+    fn bad_algo_rejected() {
+        assert!(parse(&["train", "--algo", "nope"]).is_err());
+        assert!(parse(&["train", "--k", "3"]).is_err());
+    }
+
+    #[test]
+    fn label_is_unique_per_knob() {
+        let a = parse(&["t", "--n", "1"]).unwrap().label();
+        let b = parse(&["t", "--n", "2"]).unwrap().label();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,231 @@
+//! Asynchronous RLHF (paper Fig 2 bottom, Algorithm 1): Cleanba-style
+//! one-step off-policy training.
+//!
+//! Two OS threads, each owning its own PJRT backend (the `xla` crate's
+//! client is not `Send`, which conveniently mirrors the paper's separate
+//! generation/training processes):
+//!
+//! - **generation worker**: pulls the freshest published policy, generates
+//!   one round, hands it to the trainer over a rendezvous queue. The
+//!   rendezvous is the staleness guarantee: the worker generates round
+//!   i+1 while round i trains, and never runs further ahead, so training
+//!   data is always exactly one policy version behind (θ_{t+1} is updated
+//!   with data from θ_t — paper §3.5, Cleanba).
+//! - **trainer (this thread)**: pops a round, labels it (reward + reference
+//!   logprobs), takes the update(s), publishes the new params.
+//!
+//! Parameter publication is a full `Vec<f32>` snapshot through a channel —
+//! the same "passing policy parameters is a synchronous call" cost the
+//! paper measures in A.2.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::trainer::{
+    assemble, generate_round, label_round, round_metrics, rounds_per_batch,
+    sample_opts, train_on_batch, Round,
+};
+use super::RunOutput;
+use crate::config::ExpConfig;
+use crate::coordinator::pretrain::RLHF_RANGE;
+use crate::data::{Task, TaskGen};
+use crate::gen::fused::FusedEngine;
+use crate::metrics::{Phase, RunLog, Timeline};
+use crate::runtime::{Engine, TrainState};
+use crate::util::rng::Pcg32;
+
+/// Messages from the generation worker.
+struct GenMsg {
+    round: Round,
+}
+
+pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<RunOutput> {
+    let engine: &Engine = &prep.engine;
+    let taskgen: &TaskGen = &prep.taskgen;
+    let sft_params = prep.sft_params.clone();
+    let origin = Instant::now();
+    let mut timeline = Timeline::shared_origin(origin);
+    let mut log = RunLog::new();
+    log.set_meta("label", cfg.label());
+
+    // -- channels ----------------------------------------------------------
+    // Rendezvous round queue (bound 0): the worker's `send` blocks until
+    // the trainer is ready to take the round. This is what enforces
+    // *one-step* off-policy: the worker can generate round i+1 (with the
+    // params published after round i-1's update) WHILE the trainer trains
+    // round i, but can never start round i+2 before round i+1 is handed
+    // over — so training data is at most one policy version stale. A
+    // bound-1 queue would admit staleness 2 (one round queued + one in
+    // flight), which the integration tests reject.
+    let (round_tx, round_rx) = mpsc::sync_channel::<GenMsg>(0);
+    // Param publications; the worker drains to the latest before each round.
+    let (param_tx, param_rx) = mpsc::channel::<(u64, Vec<f32>)>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let published_version = Arc::new(AtomicU64::new(0));
+
+    // -- generation worker ---------------------------------------------------
+    let worker = {
+        let stop = stop.clone();
+        let artifact_dir = cfg.artifact_dir();
+        let init_params = sft_params.clone();
+        let taskgen = TaskGen::new(
+            taskgen.task,
+            taskgen.prompt_len,
+            taskgen.resp_len,
+            cfg.seed,
+        );
+        let opts = sample_opts(cfg);
+        let k = cfg.k_samples;
+        let seed = cfg.seed;
+        std::thread::Builder::new()
+            .name("gen-worker".into())
+            .spawn(move || -> Result<(f64, u64)> {
+                // own engine, own PJRT client (separate "GPU")
+                let engine = Engine::load(&artifact_dir)?;
+                let generator = FusedEngine;
+                let mut rng = Pcg32::new(seed, 0xa57c);
+                let mut params = init_params;
+                let mut version = 0u64;
+                let mut cursor = RLHF_RANGE;
+                let gen_bs = engine.manifest.config.gen_batch as u64;
+                let mut gen_total = 0.0f64;
+                let mut rounds_done = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // pick up the freshest published policy (Algorithm 1:
+                    // "update generation model θ <- θ_i")
+                    while let Ok((v, p)) = param_rx.try_recv() {
+                        if v >= version {
+                            version = v;
+                            params = p;
+                        }
+                    }
+                    let round = generate_round(
+                        &engine, &generator, &params, version, &taskgen,
+                        cursor, k, opts, &mut rng, origin,
+                    )?;
+                    cursor += gen_bs / k as u64;
+                    gen_total += round.gen_secs;
+                    rounds_done += 1;
+                    // rendezvous: blocks until the trainer takes the
+                    // round — the one-step off-policy bound
+                    if round_tx.send(GenMsg { round }).is_err() {
+                        break;
+                    }
+                }
+                Ok((gen_total, rounds_done))
+            })
+            .expect("spawn gen-worker")
+    };
+
+    // -- trainer loop ---------------------------------------------------------
+    let mut state = TrainState::new(sft_params.clone());
+    let rpb = rounds_per_batch(cfg.k_samples);
+    let mut episodes = 0u64;
+    let mut step = 0u64;
+    let mut version = 0u64;
+    let gen_bs = engine.manifest.config.gen_batch as u64;
+    let mut staleness_sum = 0u64;
+    let result = (|| -> Result<()> {
+        while step < cfg.steps {
+            let mut rounds = Vec::with_capacity(rpb);
+            for _ in 0..rpb {
+                let t_wait = origin.elapsed().as_secs_f64();
+                let msg = round_rx
+                    .recv()
+                    .map_err(|_| anyhow!("generation worker died"))?;
+                let t_got = origin.elapsed().as_secs_f64();
+                timeline.push_span(Phase::Idle, t_wait, t_got);
+                timeline.push_span(
+                    Phase::Generate,
+                    msg.round.gen_span.0,
+                    msg.round.gen_span.1,
+                );
+                episodes += gen_bs;
+                let labels = timeline.record(Phase::Score, || {
+                    label_round(
+                        engine,
+                        &msg.round,
+                        &sft_params,
+                        prep.rm_scorer(),
+                        cfg.k_samples,
+                        cfg.eos_penalty,
+                        cfg.gold_reward,
+                    )
+                })?;
+                rounds.push((msg.round, labels));
+            }
+
+            let batch = assemble(engine, cfg.algo, &rounds, cfg.k_samples)?;
+            let all_metrics = timeline.record(Phase::Train, || {
+                train_on_batch(
+                    engine,
+                    &mut state,
+                    &batch,
+                    cfg.lr,
+                    cfg.updates_per_batch,
+                )
+            })?;
+            version += cfg.updates_per_batch as u64;
+            step += 1;
+
+            // publish the new policy to the generation worker
+            timeline.record(Phase::Publish, || {
+                published_version.store(version, Ordering::Relaxed);
+                let _ = param_tx.send((version, state.params.clone()));
+            });
+
+            let data_version = rounds
+                .iter()
+                .map(|(r, _)| r.params_version)
+                .max()
+                .unwrap();
+            let staleness = version.saturating_sub(1) - data_version.min(version.saturating_sub(1));
+            staleness_sum += staleness;
+
+            let (_, labels) = &rounds[0];
+            let mut row = round_metrics(labels);
+            let m = all_metrics.last().unwrap();
+            row.push(("loss", m[0]));
+            row.push(("staleness", staleness as f32));
+            log.push(step, episodes, timeline.wall(), &row);
+            if verbose && step % 8 == 0 {
+                eprintln!(
+                    "[async {}] step {step}/{} episodes {episodes} \
+                     win {:.3} kl-ppl {:.4} staleness {staleness}",
+                    cfg.algo,
+                    cfg.steps,
+                    log.recent_mean("win_rate", 8).unwrap_or(0.0),
+                    log.recent_mean("kl_ppl", 8).unwrap_or(0.0),
+                );
+            }
+        }
+        Ok(())
+    })();
+
+    // shut the worker down
+    stop.store(true, Ordering::Relaxed);
+    drop(round_rx);
+    let worker_out = worker.join().map_err(|_| anyhow!("worker panicked"))?;
+    result?;
+    let (gen_total, gen_rounds) = worker_out?;
+    log.set_meta("gen_total_secs", format!("{gen_total:.3}"));
+    log.set_meta("gen_rounds", gen_rounds);
+    log.set_meta(
+        "mean_staleness",
+        format!("{:.3}", staleness_sum as f64 / cfg.steps.max(1) as f64),
+    );
+
+    // suppress unused warning for math-only runs
+    let _ = Task::from_name(&engine.manifest.config.task);
+
+    Ok(RunOutput {
+        final_params: state.params,
+        log,
+        timeline,
+        episodes,
+    })
+}

@@ -1,0 +1,104 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! - [`sync`]: synchronous generate-then-train (paper Fig 2 top), including
+//!   the N-mini-batch off-policyness ladder of §3.2.
+//! - [`asynchronous`]: Cleanba-style one-step off-policy training with a
+//!   dedicated generation worker thread and bound-1 sample queue
+//!   (paper §3.5, Algorithm 1).
+//! - [`trainer`]: shared round machinery (labelling, batch assembly,
+//!   fused train-step invocation) used by both.
+//! - [`pretrain`]: the SFT + proxy-RM pipeline that precedes RLHF.
+
+pub mod asynchronous;
+pub mod pretrain;
+pub mod sync;
+pub mod trainer;
+
+use anyhow::Result;
+
+use crate::config::{ExpConfig, Mode};
+use crate::data::{Task, TaskGen};
+use crate::metrics::{RunLog, Timeline};
+use crate::runtime::Engine;
+
+/// Result of one RLHF run.
+pub struct RunOutput {
+    pub final_params: Vec<f32>,
+    pub log: RunLog,
+    pub timeline: Timeline,
+    pub episodes: u64,
+}
+
+/// A reward model hosted by a *different* artifact bundle (Fig 5 right:
+/// scaling the RM independently of the policy). Sequences are
+/// token-compatible across tldr_{s,m,l} (same vocab + geometry), so a
+/// larger RM can score a smaller policy's completions.
+pub struct CrossRm {
+    pub engine: Engine,
+    pub params: Vec<f32>,
+}
+
+/// Everything an RLHF run needs besides the config: engine, task stream,
+/// SFT checkpoint (policy init + KL reference) and proxy RM.
+pub struct Prepared {
+    pub engine: Engine,
+    pub taskgen: TaskGen,
+    pub sft_params: Vec<f32>,
+    pub rm_params: Option<Vec<f32>>,
+    /// When set, overrides `rm_params` as the reward scorer.
+    pub cross_rm: Option<CrossRm>,
+}
+
+impl Prepared {
+    /// The (engine, params) pair used for reward scoring.
+    pub fn rm_scorer(&self) -> Option<(&Engine, &[f32])> {
+        if let Some(cr) = &self.cross_rm {
+            Some((&cr.engine, &cr.params))
+        } else {
+            self.rm_params
+                .as_deref()
+                .map(|p| (&self.engine, p))
+        }
+    }
+}
+
+/// Load artifacts and run (or restore) the SFT/RM pipeline.
+pub fn prepare(cfg: &ExpConfig, verbose: bool) -> Result<Prepared> {
+    let engine = Engine::load(&cfg.artifact_dir())?;
+    let mcfg = engine.manifest.config.clone();
+    let task = Task::from_name(&mcfg.task)
+        .ok_or_else(|| anyhow::anyhow!("unknown task {}", mcfg.task))?;
+    let taskgen = TaskGen::new(task, mcfg.prompt_len, mcfg.resp_len, cfg.seed);
+
+    if verbose {
+        eprintln!(
+            "[prepare] {} ({} params, task {})",
+            mcfg.name, engine.manifest.param_count, mcfg.task
+        );
+    }
+    let sft_params = pretrain::sft_checkpoint(
+        &engine, &taskgen, &cfg.run_dir, cfg.sft_steps, None,
+    )?;
+    let rm_params = if task == Task::Math {
+        None // rule reward, no RM (paper §5.2)
+    } else {
+        Some(pretrain::rm_checkpoint(
+            &engine,
+            &taskgen,
+            &sft_params,
+            &cfg.run_dir,
+            cfg.rm_steps,
+            cfg.seed,
+            None,
+        )?)
+    };
+    Ok(Prepared { engine, taskgen, sft_params, rm_params, cross_rm: None })
+}
+
+/// Dispatch an RLHF run by mode.
+pub fn run(cfg: &ExpConfig, prep: &Prepared, verbose: bool) -> Result<RunOutput> {
+    match cfg.mode {
+        Mode::Sync => sync::run(cfg, prep, verbose),
+        Mode::Async => asynchronous::run(cfg, prep, verbose),
+    }
+}

@@ -1,0 +1,144 @@
+//! SFT + proxy-RM pretraining pipeline (paper §3 "Empirical Setup"):
+//! 1. supervised finetuning on (prompt, reference) demonstrations,
+//! 2. proxy reward-model training on gold-labelled preference pairs,
+//! both from the task stream, with checkpoint caching under
+//! `<run_dir>/checkpoints/` so experiment sweeps share the same SFT/RM.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::data::{pack_sequence, TaskGen};
+use crate::metrics::RunLog;
+use crate::runtime::{Engine, HostTensor, TrainState};
+use crate::util::npy;
+
+/// Dataset index ranges: disjoint slices of the deterministic task stream.
+pub const SFT_RANGE: u64 = 0;
+pub const RM_RANGE: u64 = 1_000_000;
+pub const RLHF_RANGE: u64 = 2_000_000;
+pub const EVAL_RANGE: u64 = 10_000_000;
+
+pub const SFT_LR: f32 = 1e-3;
+pub const RM_LR: f32 = 1e-3;
+
+fn ckpt_path(dir: &Path, model: &str, kind: &str) -> PathBuf {
+    dir.join("checkpoints").join(format!("{model}_{kind}.npy"))
+}
+
+/// Train (or load cached) SFT policy. Returns the flat params.
+pub fn sft_checkpoint(
+    engine: &Engine,
+    taskgen: &TaskGen,
+    run_dir: &Path,
+    steps: u64,
+    log: Option<&mut RunLog>,
+) -> Result<Vec<f32>> {
+    let model = engine.config_name().to_string();
+    let path = ckpt_path(run_dir, &model, "sft");
+    if let Ok(arr) = npy::read_f32(&path) {
+        if arr.data.len() == engine.manifest.param_count {
+            return Ok(arr.data);
+        }
+    }
+    let cfg = &engine.manifest.config;
+    let (bg, s) = (cfg.gen_batch, cfg.seq_len);
+    let mut state = TrainState::new(engine.init_policy()?);
+    let mut log_sink = RunLog::new();
+    let logr = log.unwrap_or(&mut log_sink);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let examples = taskgen.batch(SFT_RANGE + step * bg as u64, bg);
+        let mut toks = Vec::with_capacity(bg * s);
+        let mut mask = Vec::with_capacity(bg * s);
+        for ex in &examples {
+            let (t, m) = pack_sequence(&ex.prompt, &ex.reference, s, true);
+            toks.extend(t);
+            mask.extend(m);
+        }
+        let metrics = state.train_step(
+            engine,
+            "train_sft",
+            SFT_LR,
+            vec![HostTensor::I32(toks), HostTensor::F32(mask)],
+        )?;
+        if step % 20 == 0 || step + 1 == steps {
+            logr.push(
+                step,
+                (step + 1) * bg as u64,
+                t0.elapsed().as_secs_f64(),
+                &[("sft_loss", metrics[0]), ("sft_ppl", metrics[1])],
+            );
+        }
+    }
+    std::fs::create_dir_all(run_dir.join("checkpoints"))?;
+    npy::write_f32(&path, &[state.params.len()], &state.params)?;
+    Ok(state.params)
+}
+
+/// Train (or load cached) proxy RM from the SFT checkpoint on gold-labelled
+/// preference pairs (paper: RM is initialized from the SFT model).
+pub fn rm_checkpoint(
+    engine: &Engine,
+    taskgen: &TaskGen,
+    sft_params: &[f32],
+    run_dir: &Path,
+    steps: u64,
+    seed: u64,
+    log: Option<&mut RunLog>,
+) -> Result<Vec<f32>> {
+    let model = engine.config_name().to_string();
+    let path = ckpt_path(run_dir, &model, "rm");
+    if let Ok(arr) = npy::read_f32(&path) {
+        if arr.data.len() == engine.manifest.param_count {
+            return Ok(arr.data);
+        }
+    }
+    let cfg = &engine.manifest.config;
+    let (bp, s) = (cfg.train_pairs, cfg.seq_len);
+    let mut state = TrainState::new(sft_params.to_vec());
+    let mut log_sink = RunLog::new();
+    let logr = log.unwrap_or(&mut log_sink);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let pairs = crate::reward::build_pref_pairs(
+            taskgen,
+            s,
+            RM_RANGE + step * bp as u64,
+            bp,
+            seed ^ 0x524d,
+        );
+        let mut tc = Vec::with_capacity(bp * s);
+        let mut mc = Vec::with_capacity(bp * s);
+        let mut tr = Vec::with_capacity(bp * s);
+        let mut mr = Vec::with_capacity(bp * s);
+        for p in &pairs {
+            tc.extend_from_slice(&p.chosen.0);
+            mc.extend_from_slice(&p.chosen.1);
+            tr.extend_from_slice(&p.rejected.0);
+            mr.extend_from_slice(&p.rejected.1);
+        }
+        let metrics = state.train_step(
+            engine,
+            "train_rm",
+            RM_LR,
+            vec![
+                HostTensor::I32(tc),
+                HostTensor::F32(mc),
+                HostTensor::I32(tr),
+                HostTensor::F32(mr),
+            ],
+        )?;
+        if step % 20 == 0 || step + 1 == steps {
+            logr.push(
+                step,
+                (step + 1) * bp as u64,
+                t0.elapsed().as_secs_f64(),
+                &[("rm_loss", metrics[0]), ("rm_acc", metrics[1])],
+            );
+        }
+    }
+    std::fs::create_dir_all(run_dir.join("checkpoints"))?;
+    npy::write_f32(&path, &[state.params.len()], &state.params)?;
+    Ok(state.params)
+}

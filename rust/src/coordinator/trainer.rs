@@ -1,0 +1,434 @@
+//! Shared RLHF round machinery used by both the synchronous and the
+//! asynchronous coordinators: prompt scheduling, reward labelling (proxy RM
+//! or rule-based), reference-policy logprobs, and algorithm-specific train
+//! batch assembly against the fused train-step executables.
+
+use anyhow::{bail, Result};
+
+use crate::config::{Algo, ExpConfig};
+use crate::data::{Example, Task, TaskGen};
+use crate::gen::{GenBatch, Generator, SampleOpts};
+use crate::reward::{gold, valid_mask};
+use crate::runtime::{Engine, HostTensor, TrainState};
+use crate::tokenizer as tk;
+use crate::util::rng::Pcg32;
+
+/// One generation round: `gen_batch` completions plus provenance.
+pub struct Round {
+    pub gen: GenBatch,
+    pub examples: Vec<Example>,
+    /// Index of the first prompt of this round in the task stream.
+    pub start_index: u64,
+    /// Policy version that generated this round (staleness accounting).
+    pub params_version: u64,
+    /// Wall-clock seconds spent generating (gen thread's measurement).
+    pub gen_secs: f64,
+    /// Span of generation relative to the shared timeline origin.
+    pub gen_span: (f64, f64),
+}
+
+/// Prompts for round starting at `start`: each distinct prompt is repeated
+/// `k` times consecutively (k completions per prompt, paper §4.2).
+pub fn round_prompts(
+    taskgen: &TaskGen,
+    start: u64,
+    gen_batch: usize,
+    k: usize,
+) -> (Vec<Example>, Vec<Vec<i32>>) {
+    assert!(gen_batch % k == 0, "gen_batch must be divisible by k");
+    let n_prompts = gen_batch / k;
+    let examples = taskgen.batch(start, n_prompts);
+    let mut prompts = Vec::with_capacity(gen_batch);
+    for ex in &examples {
+        for _ in 0..k {
+            prompts.push(ex.prompt.clone());
+        }
+    }
+    (examples, prompts)
+}
+
+/// Generate one round (runs on whichever thread owns the generation engine).
+#[allow(clippy::too_many_arguments)]
+pub fn generate_round(
+    engine: &Engine,
+    generator: &dyn Generator,
+    params: &[f32],
+    params_version: u64,
+    taskgen: &TaskGen,
+    start_index: u64,
+    k: usize,
+    opts: SampleOpts,
+    rng: &mut Pcg32,
+    origin: std::time::Instant,
+) -> Result<Round> {
+    let cfg = &engine.manifest.config;
+    let (examples, prompts) = round_prompts(taskgen, start_index, cfg.gen_batch, k);
+    let t0 = origin.elapsed().as_secs_f64();
+    let gen = generator.generate(engine, params, &prompts, opts, rng)?;
+    let t1 = origin.elapsed().as_secs_f64();
+    Ok(Round {
+        gen,
+        examples,
+        start_index,
+        params_version,
+        gen_secs: t1 - t0,
+        gen_span: (t0, t1),
+    })
+}
+
+/// Labels for one round: rewards (what the optimizer sees), gold scores and
+/// wins (what evaluation sees), reference logprobs (KL anchor).
+pub struct Labels {
+    /// Reward per slot: proxy-RM score (+ EOS penalty) for RM tasks, gold
+    /// rule reward for math.
+    pub rewards: Vec<f32>,
+    /// Gold score per slot (ground truth, for metrics only).
+    pub gold_scores: Vec<f32>,
+    /// Gold-judged win value vs the dataset reference (1/0.5/0), per slot.
+    pub wins: Vec<f32>,
+    /// Reference-policy token logprobs, flattened [B*S].
+    pub rlp_tok: Vec<f32>,
+    /// Reference-policy sequence logprobs [B].
+    pub rlp_seq: Vec<f32>,
+    /// exp(-mean ref token logprob) over response tokens: the paper's
+    /// KL-as-perplexity measurement.
+    pub ref_ppl: f32,
+    /// Mean behaviour entropy proxy: -mean blp.
+    pub mean_blp: f32,
+    /// Mean response length (tokens incl. EOS).
+    pub mean_len: f32,
+}
+
+/// Label a round: score with the proxy RM (or the rule reward for math),
+/// judge with gold, compute reference logprobs. Runs on the trainer thread
+/// (paper Algorithm 1 places reward + loss on the learner). `rm` is the
+/// (engine, params) scorer — possibly a different-scale bundle (Fig 5).
+pub fn label_round(
+    engine: &Engine,
+    round: &Round,
+    ref_params: &[f32],
+    rm: Option<(&Engine, &[f32])>,
+    k: usize,
+    eos_penalty: f32,
+    gold_reward: bool,
+) -> Result<Labels> {
+    let cfg = &engine.manifest.config;
+    let (b, s, p) = (cfg.gen_batch, cfg.seq_len, cfg.prompt_len);
+    let gen = &round.gen;
+    let task = Task::from_name(&cfg.task)
+        .ok_or_else(|| anyhow::anyhow!("bad task {}", cfg.task))?;
+
+    // --- gold scoring + win judging (metrics) ---
+    let mut gold_scores = Vec::with_capacity(b);
+    let mut wins = Vec::with_capacity(b);
+    let mut total_len = 0usize;
+    for i in 0..b {
+        let ex = &round.examples[i / k];
+        let resp = gen.response(i, p);
+        total_len += resp.len();
+        let score = gold::score(&ex.meta, resp);
+        gold_scores.push(score);
+        let mut ref_resp = ex.reference.clone();
+        ref_resp.push(tk::EOS);
+        wins.push(gold::win_value(&ex.meta, resp, &ref_resp));
+    }
+
+    // --- optimizer rewards ---
+    let rewards = match task {
+        // math: rule reward, no RM (paper §5.2); gold_reward: ablation in
+        // the well-trained-RM limit
+        Task::Math => gold_scores.clone(),
+        _ if gold_reward => gold_scores.clone(),
+        _ => {
+            let (rm_engine, rm_params) = rm
+                .ok_or_else(|| anyhow::anyhow!("task {task:?} needs an RM"))?;
+            let masks: Vec<Vec<f32>> = gen
+                .resp_mask
+                .iter()
+                .map(|m| valid_mask(p, m))
+                .collect();
+            let mut scores = crate::reward::score_batch(
+                rm_engine, rm_params, &gen.tokens, &masks,
+            )?;
+            for (i, sc) in scores.iter_mut().enumerate() {
+                if !gen.terminated[i] {
+                    *sc += eos_penalty; // paper Table 4: penalty without EOS
+                }
+            }
+            scores
+        }
+    };
+
+    // --- reference logprobs (KL anchor + DPO reference) ---
+    let mut toks_flat = Vec::with_capacity(b * s);
+    let mut mask_flat = Vec::with_capacity(b * s);
+    for i in 0..b {
+        toks_flat.extend_from_slice(&gen.tokens[i]);
+        mask_flat.extend_from_slice(&gen.resp_mask[i]);
+    }
+    let out = engine.call(
+        "logprob",
+        &[
+            HostTensor::F32(ref_params.to_vec()),
+            HostTensor::I32(toks_flat),
+            HostTensor::F32(mask_flat.clone()),
+        ],
+    )?;
+    let mut it = out.into_iter();
+    let rlp_seq = it.next().unwrap().into_f32()?;
+    let rlp_tok = it.next().unwrap().into_f32()?;
+
+    let mask_total: f32 = mask_flat.iter().sum();
+    let rlp_masked: f32 = rlp_tok
+        .iter()
+        .zip(&mask_flat)
+        .map(|(l, m)| l * m)
+        .sum();
+    let ref_ppl = (-rlp_masked / mask_total.max(1.0)).exp();
+    let blp_masked: f32 = gen
+        .blp
+        .iter()
+        .flatten()
+        .zip(&mask_flat)
+        .map(|(l, m)| l * m)
+        .sum();
+
+    Ok(Labels {
+        rewards,
+        gold_scores,
+        wins,
+        rlp_tok,
+        rlp_seq,
+        ref_ppl,
+        mean_blp: blp_masked / mask_total.max(1.0),
+        mean_len: total_len as f32 / b as f32,
+    })
+}
+
+/// A fully-assembled train batch: tensors in the executable's input order
+/// (after params/m/v/step/lr).
+pub struct TrainBatch {
+    pub artifact: &'static str,
+    pub tensors: Vec<HostTensor>,
+    /// Completions consumed by this batch (episode accounting).
+    pub episodes: u64,
+}
+
+/// Assemble the algorithm-specific train batch from a labelled round pair.
+///
+/// - K=2: `rounds` is one round -> one batch (train_pairs pairs, or
+///   gen_batch singles for PPO/SFT-style losses).
+/// - K=4: `rounds` is two rounds -> one batch of best/worst pairs
+///   (paper §4.2: generation takes K/2 times longer, training unchanged).
+pub fn assemble(
+    engine: &Engine,
+    algo: Algo,
+    rounds: &[(Round, Labels)],
+    k: usize,
+) -> Result<TrainBatch> {
+    let cfg = &engine.manifest.config;
+    let (bg, bp, s) = (cfg.gen_batch, cfg.train_pairs, cfg.seq_len);
+    let rounds_needed = rounds_per_batch(k);
+    if rounds.len() != rounds_needed {
+        bail!("algo {algo} with k={k} needs {rounds_needed} rounds");
+    }
+    let episodes = (bg * rounds.len()) as u64;
+
+    if algo == Algo::Ppo {
+        // PPO consumes all slots as singles (k must be 1 slot per prompt
+        // conceptually; duplicated prompts are still valid episodes).
+        let (round, labels) = &rounds[0];
+        let mut toks = Vec::with_capacity(bg * s);
+        let mut mask = Vec::with_capacity(bg * s);
+        let mut blp = Vec::with_capacity(bg * s);
+        for i in 0..bg {
+            toks.extend_from_slice(&round.gen.tokens[i]);
+            mask.extend_from_slice(&round.gen.resp_mask[i]);
+            blp.extend_from_slice(&round.gen.blp[i]);
+        }
+        return Ok(TrainBatch {
+            artifact: algo.artifact(),
+            tensors: vec![
+                HostTensor::I32(toks),
+                HostTensor::F32(mask),
+                HostTensor::F32(blp),
+                HostTensor::F32(labels.rlp_tok.clone()),
+                HostTensor::F32(labels.rewards.clone()),
+            ],
+            episodes,
+        });
+    }
+
+    // Pairwise: pick best/worst of each prompt's k completions by reward.
+    struct Slot<'a> {
+        round: &'a Round,
+        labels: &'a Labels,
+        idx: usize,
+    }
+    let mut pairs: Vec<(Slot, Slot)> = Vec::with_capacity(bp);
+    for (round, labels) in rounds {
+        let n_prompts = bg / k;
+        for pi in 0..n_prompts {
+            let slots = pi * k..(pi + 1) * k;
+            let best = slots
+                .clone()
+                .max_by(|&a, &b| {
+                    labels.rewards[a]
+                        .partial_cmp(&labels.rewards[b])
+                        .unwrap()
+                })
+                .unwrap();
+            let worst = slots
+                .clone()
+                .min_by(|&a, &b| {
+                    labels.rewards[a]
+                        .partial_cmp(&labels.rewards[b])
+                        .unwrap()
+                })
+                .unwrap();
+            pairs.push((
+                Slot { round, labels, idx: best },
+                Slot { round, labels, idx: worst },
+            ));
+        }
+    }
+    if pairs.len() != bp {
+        bail!(
+            "assembled {} pairs but train_pairs is {bp} (k={k})",
+            pairs.len()
+        );
+    }
+
+    let flat_i32 = |f: fn(&Slot) -> Vec<i32>, side: usize| -> Vec<i32> {
+        let mut out = Vec::with_capacity(bp * s);
+        for p in &pairs {
+            out.extend(f(if side == 0 { &p.0 } else { &p.1 }));
+        }
+        out
+    };
+    let flat_f32 = |f: fn(&Slot) -> Vec<f32>, side: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(bp * s);
+        for p in &pairs {
+            out.extend(f(if side == 0 { &p.0 } else { &p.1 }));
+        }
+        out
+    };
+    fn toks(sl: &Slot) -> Vec<i32> {
+        sl.round.gen.tokens[sl.idx].clone()
+    }
+    fn mask(sl: &Slot) -> Vec<f32> {
+        sl.round.gen.resp_mask[sl.idx].clone()
+    }
+    fn blp(sl: &Slot) -> Vec<f32> {
+        sl.round.gen.blp[sl.idx].clone()
+    }
+    fn rlp(sl: &Slot) -> Vec<f32> {
+        let s = sl.round.gen.tokens[sl.idx].len();
+        sl.labels.rlp_tok[sl.idx * s..(sl.idx + 1) * s].to_vec()
+    }
+    let reward = |side: usize| -> Vec<f32> {
+        pairs
+            .iter()
+            .map(|p| {
+                let sl = if side == 0 { &p.0 } else { &p.1 };
+                sl.labels.rewards[sl.idx]
+            })
+            .collect()
+    };
+
+    let tensors = match algo {
+        Algo::Dpo => {
+            let rlp_seq = |side: usize| -> Vec<f32> {
+                pairs
+                    .iter()
+                    .map(|p| {
+                        let sl = if side == 0 { &p.0 } else { &p.1 };
+                        sl.labels.rlp_seq[sl.idx]
+                    })
+                    .collect()
+            };
+            vec![
+                HostTensor::I32(flat_i32(toks, 0)),
+                HostTensor::F32(flat_f32(mask, 0)),
+                HostTensor::I32(flat_i32(toks, 1)),
+                HostTensor::F32(flat_f32(mask, 1)),
+                HostTensor::F32(rlp_seq(0)),
+                HostTensor::F32(rlp_seq(1)),
+            ]
+        }
+        Algo::Rloo | Algo::Prloo | Algo::Copg => vec![
+            HostTensor::I32(flat_i32(toks, 0)),
+            HostTensor::F32(flat_f32(mask, 0)),
+            HostTensor::I32(flat_i32(toks, 1)),
+            HostTensor::F32(flat_f32(mask, 1)),
+            HostTensor::F32(flat_f32(blp, 0)),
+            HostTensor::F32(flat_f32(blp, 1)),
+            HostTensor::F32(flat_f32(rlp, 0)),
+            HostTensor::F32(flat_f32(rlp, 1)),
+            HostTensor::F32(reward(0)),
+            HostTensor::F32(reward(1)),
+        ],
+        Algo::BestOfN => {
+            // SFT on the best completion; duplicate to fill the singles
+            // batch (effective batch = train_pairs distinct rows).
+            let mut toks_out = Vec::with_capacity(bg * s);
+            let mut mask_out = Vec::with_capacity(bg * s);
+            for p in &pairs {
+                for _ in 0..2 {
+                    toks_out.extend(toks(&p.0));
+                    mask_out.extend(mask(&p.0));
+                }
+            }
+            vec![HostTensor::I32(toks_out), HostTensor::F32(mask_out)]
+        }
+        Algo::Ppo => unreachable!(),
+    };
+
+    Ok(TrainBatch { artifact: algo.artifact(), tensors, episodes })
+}
+
+/// How many generation rounds one train batch consumes.
+pub fn rounds_per_batch(k: usize) -> usize {
+    match k {
+        2 => 1,
+        4 => 2,
+        _ => panic!("k must be 2 or 4"),
+    }
+}
+
+/// Run `t` optimizer updates on one assembled batch ("ppo epochs",
+/// paper §4.1). Returns the metrics of each update.
+pub fn train_on_batch(
+    engine: &Engine,
+    state: &mut TrainState,
+    batch: &TrainBatch,
+    lr: f32,
+    t_updates: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut all = Vec::with_capacity(t_updates);
+    for _ in 0..t_updates {
+        let metrics =
+            state.train_step(engine, batch.artifact, lr, batch.tensors.clone())?;
+        all.push(metrics);
+    }
+    Ok(all)
+}
+
+/// Per-round training-curve metrics derived from labels (gold win-rate and
+/// KL-as-ppl measured on the training stream itself, costing nothing —
+/// final eval uses held-out prompts).
+pub fn round_metrics(labels: &Labels) -> Vec<(&'static str, f32)> {
+    vec![
+        ("win_rate", crate::util::mean(&labels.wins)),
+        ("gold_score", crate::util::mean(&labels.gold_scores)),
+        ("rm_reward", crate::util::mean(&labels.rewards)),
+        ("kl_ppl", labels.ref_ppl),
+        ("resp_len", labels.mean_len),
+        ("behaviour_lp", labels.mean_blp),
+    ]
+}
+
+/// ExpConfig-driven sampling options.
+pub fn sample_opts(cfg: &ExpConfig) -> SampleOpts {
+    SampleOpts { temperature: cfg.temperature, greedy: false }
+}

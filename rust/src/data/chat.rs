@@ -1,0 +1,144 @@
+//! No-Robots chatbot analogue (paper §5.1): instruction-following over
+//! token spans. The instruction verb determines the correct transformation
+//! of the span; references carry "human-written" noise so trained policies
+//! can exceed the reference win-rate (paper Tables 1/8: SFT 31.8% ->
+//! RLHF 57.2%).
+
+use super::{Example, TaskMeta};
+use crate::tokenizer as tk;
+use crate::util::rng::Pcg32;
+
+const INSTRUCTIONS: [i32; 5] = [
+    tk::INSTR_COPY,
+    tk::INSTR_REVERSE,
+    tk::INSTR_SORT,
+    tk::INSTR_FIRST,
+    tk::INSTR_LAST,
+];
+
+/// Reference noise rate (the "human variability" floor).
+const REF_NOISE: f64 = 0.15;
+
+/// Apply an instruction to a span.
+pub fn apply(instr: i32, span: &[i32]) -> Vec<i32> {
+    match instr {
+        tk::INSTR_COPY => span.to_vec(),
+        tk::INSTR_REVERSE => span.iter().rev().copied().collect(),
+        tk::INSTR_SORT => {
+            let mut v = span.to_vec();
+            v.sort();
+            v
+        }
+        tk::INSTR_FIRST => span[..3.min(span.len())].to_vec(),
+        tk::INSTR_LAST => span[span.len().saturating_sub(3)..].to_vec(),
+        _ => panic!("not an instruction token: {instr}"),
+    }
+}
+
+pub fn generate(rng: &mut Pcg32, prompt_len: usize, resp_len: usize) -> Example {
+    let instr = INSTRUCTIONS[rng.gen_usize(INSTRUCTIONS.len())];
+    // span fits the prompt (BOS instr SEP span SEP) and the response (+EOS)
+    // spans are kept short (4-8): COPY/REVERSE over long spans is a hard
+    // induction task for from-scratch models, and span length is
+    // orthogonal to the paper's sync-vs-async question
+    let max_span = (prompt_len - 4).min(resp_len - 2).min(8);
+    let min_span = 4.min(max_span);
+    let span_len = min_span + rng.gen_usize(max_span - min_span + 1);
+    let span: Vec<i32> = (0..span_len)
+        .map(|_| tk::content(rng.gen_range(tk::CONTENT_COUNT as u32) as i32))
+        .collect();
+
+    let mut prompt = vec![tk::BOS, instr, tk::SEP];
+    prompt.extend_from_slice(&span);
+    prompt.push(tk::SEP);
+    assert!(prompt.len() <= prompt_len);
+    prompt.resize(prompt_len, tk::PAD);
+
+    let target = apply(instr, &span);
+
+    // noisy human reference
+    let mut reference = Vec::new();
+    for &t in &target {
+        if rng.gen_bool(REF_NOISE) {
+            match rng.gen_usize(2) {
+                0 => {} // drop
+                _ => reference.push(tk::content(
+                    rng.gen_range(tk::CONTENT_COUNT as u32) as i32,
+                )),
+            }
+        } else {
+            reference.push(t);
+        }
+    }
+    if reference.is_empty() {
+        reference.push(target[0]);
+    }
+    reference.truncate(resp_len - 1);
+
+    Example {
+        prompt,
+        reference,
+        meta: TaskMeta::Chat { target },
+    }
+}
+
+/// Extract (instruction, span) from a prompt.
+pub fn parse_prompt(prompt: &[i32]) -> Option<(i32, Vec<i32>)> {
+    if prompt.first() != Some(&tk::BOS) || prompt.get(2) != Some(&tk::SEP) {
+        return None;
+    }
+    let instr = *prompt.get(1)?;
+    if !INSTRUCTIONS.contains(&instr) {
+        return None;
+    }
+    let rest = &prompt[3..];
+    let end = rest.iter().position(|&t| t == tk::SEP)?;
+    Some((instr, rest[..end].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_transformations() {
+        let span = [30, 28, 31, 29];
+        assert_eq!(apply(tk::INSTR_COPY, &span), vec![30, 28, 31, 29]);
+        assert_eq!(apply(tk::INSTR_REVERSE, &span), vec![29, 31, 28, 30]);
+        assert_eq!(apply(tk::INSTR_SORT, &span), vec![28, 29, 30, 31]);
+        assert_eq!(apply(tk::INSTR_FIRST, &span), vec![30, 28, 31]);
+        assert_eq!(apply(tk::INSTR_LAST, &span), vec![28, 31, 29]);
+    }
+
+    #[test]
+    fn target_matches_instruction() {
+        let mut rng = Pcg32::new(21, 0);
+        for _ in 0..50 {
+            let ex = generate(&mut rng, 24, 20);
+            let (instr, span) = parse_prompt(&ex.prompt).expect("parseable");
+            if let TaskMeta::Chat { target } = &ex.meta {
+                assert_eq!(target, &apply(instr, &span));
+            } else {
+                panic!("wrong meta");
+            }
+        }
+    }
+
+    #[test]
+    fn reference_is_noisy_but_related() {
+        let mut rng = Pcg32::new(22, 0);
+        let mut exact = 0;
+        let n = 100;
+        for _ in 0..n {
+            let ex = generate(&mut rng, 24, 20);
+            if let TaskMeta::Chat { target } = &ex.meta {
+                if &ex.reference == target {
+                    exact += 1;
+                }
+            }
+        }
+        // most references are imperfect, but not all
+        assert!(exact > 0, "no exact references at all");
+        assert!(exact < n, "references are never noisy");
+    }
+}

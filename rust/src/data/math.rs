@@ -1,0 +1,120 @@
+//! GSM8k analogue (paper §5.2): arithmetic word problems with binary
+//! exact-match reward — no reward model on the path, exactly the paper's
+//! "efficiency is purely about optimizing LLM generation and training"
+//! regime.
+//!
+//! Problems: `a + b`, `a - b` (a >= b) with a, b < 50, and `a * b` with
+//! a, b <= 9 — a problem family a from-scratch ~100k-param model can
+//! partially master (the paper's SFT floor is 40.3% pass@1; RL then
+//! improves exact-match). The answer is the decimal digit string;
+//! reward 1.0 iff the response is exactly the answer digits + EOS.
+
+use super::{Example, TaskMeta};
+use crate::tokenizer as tk;
+use crate::util::rng::Pcg32;
+
+pub fn generate(rng: &mut Pcg32, prompt_len: usize, resp_len: usize) -> Example {
+    let (a, b, op_tok, result) = match rng.gen_usize(3) {
+        0 => {
+            let a = rng.gen_range(50);
+            let b = rng.gen_range(50);
+            (a, b, tk::OP_PLUS, a + b)
+        }
+        1 => {
+            let a = rng.gen_range(50);
+            let b = rng.gen_range(a + 1);
+            (a, b, tk::OP_MINUS, a - b)
+        }
+        _ => {
+            let a = rng.gen_range(10);
+            let b = rng.gen_range(10);
+            (a, b, tk::OP_TIMES, a * b)
+        }
+    };
+
+    let mut prompt = vec![tk::BOS];
+    prompt.extend(tk::encode_number(a));
+    prompt.push(op_tok);
+    prompt.extend(tk::encode_number(b));
+    prompt.push(tk::OP_EQ);
+    prompt.push(tk::SEP);
+    // fixed-length prompt: right-pad with PAD after SEP
+    assert!(prompt.len() <= prompt_len, "prompt_len too small for math");
+    prompt.resize(prompt_len, tk::PAD);
+
+    let answer = tk::encode_number(result);
+    assert!(answer.len() < resp_len);
+
+    Example {
+        reference: answer.clone(),
+        prompt,
+        meta: TaskMeta::Math { answer },
+    }
+}
+
+/// Parse the (a, op, b) problem back out of a prompt (used by tests and by
+/// the data inspector example).
+pub fn parse_prompt(prompt: &[i32]) -> Option<(u32, i32, u32)> {
+    let mut it = prompt.iter().copied().peekable();
+    if it.next()? != tk::BOS {
+        return None;
+    }
+    let mut a_toks = Vec::new();
+    while it.peek().is_some_and(|&t| tk::is_digit(t)) {
+        a_toks.push(it.next().unwrap());
+    }
+    let op = it.next()?;
+    let mut b_toks = Vec::new();
+    while it.peek().is_some_and(|&t| tk::is_digit(t)) {
+        b_toks.push(it.next().unwrap());
+    }
+    if it.next()? != tk::OP_EQ {
+        return None;
+    }
+    Some((tk::decode_number(&a_toks)?, op, tk::decode_number(&b_toks)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answers_are_correct() {
+        let mut rng = Pcg32::new(9, 0);
+        for _ in 0..100 {
+            let ex = generate(&mut rng, 16, 12);
+            let (a, op, b) = parse_prompt(&ex.prompt).expect("parseable");
+            let expect = match op {
+                tk::OP_PLUS => a + b,
+                tk::OP_MINUS => a - b,
+                tk::OP_TIMES => a * b,
+                _ => panic!("bad op"),
+            };
+            if let TaskMeta::Math { answer } = &ex.meta {
+                assert_eq!(tk::decode_number(answer), Some(expect));
+                assert_eq!(answer, &ex.reference);
+            } else {
+                panic!("wrong meta");
+            }
+        }
+    }
+
+    #[test]
+    fn subtraction_never_negative() {
+        let mut rng = Pcg32::new(10, 0);
+        for _ in 0..200 {
+            let ex = generate(&mut rng, 16, 12);
+            let (a, op, b) = parse_prompt(&ex.prompt).unwrap();
+            if op == tk::OP_MINUS {
+                assert!(a >= b);
+            }
+        }
+    }
+
+    #[test]
+    fn prompt_is_padded_to_length() {
+        let mut rng = Pcg32::new(11, 0);
+        let ex = generate(&mut rng, 16, 12);
+        assert_eq!(ex.prompt.len(), 16);
+    }
+}

@@ -1,0 +1,187 @@
+//! Synthetic task suite (DESIGN.md §3 substitutions).
+//!
+//! Three tasks mirror the paper's three workloads:
+//! - `tldr`: controlled summarization — prompts embed *salient* tokens the
+//!   gold reward wants covered concisely (TLDR, paper §3).
+//! - `math`: multi-digit arithmetic with exact-match binary reward
+//!   (GSM8k, paper §5.2).
+//! - `chat`: instruction-following over token spans with noisy "human"
+//!   references (No Robots, paper §5.1).
+//!
+//! Every prompt is exactly `prompt_len` tokens (the model geometry has no
+//! left-padding; filler is drawn from content noise). References are
+//! *intentionally imperfect* — like human-written summaries/responses —
+//! so RLHF can beat the SFT/reference win-rate floor (paper Table 3).
+
+pub mod chat;
+pub mod math;
+pub mod tldr;
+
+use crate::tokenizer as tk;
+use crate::util::rng::Pcg32;
+
+/// Task-specific ground-truth payload consumed by the gold reward.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskMeta {
+    /// Distinct salient tokens, in order of first appearance.
+    Tldr { salient: Vec<i32> },
+    /// Digit tokens of the correct answer.
+    Math { answer: Vec<i32> },
+    /// Exact target transformation of the span.
+    Chat { target: Vec<i32> },
+}
+
+/// One example: fixed-length prompt, imperfect reference response, and the
+/// hidden ground truth for gold scoring.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub prompt: Vec<i32>,
+    /// Reference response *without* EOS (appended by consumers as needed).
+    pub reference: Vec<i32>,
+    pub meta: TaskMeta,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Tldr,
+    Math,
+    Chat,
+}
+
+impl Task {
+    pub fn from_name(name: &str) -> Option<Task> {
+        match name {
+            "tldr" => Some(Task::Tldr),
+            "math" => Some(Task::Math),
+            "chat" => Some(Task::Chat),
+            _ => None,
+        }
+    }
+}
+
+/// Deterministic example stream: `gen(seed, index)` is pure, so train/eval
+/// splits are disjoint index ranges and every run is reproducible.
+pub struct TaskGen {
+    pub task: Task,
+    pub prompt_len: usize,
+    pub resp_len: usize,
+    seed: u64,
+}
+
+impl TaskGen {
+    pub fn new(task: Task, prompt_len: usize, resp_len: usize, seed: u64) -> TaskGen {
+        TaskGen { task, prompt_len, resp_len, seed }
+    }
+
+    /// The i-th example of the stream (pure in (seed, i)).
+    pub fn example(&self, i: u64) -> Example {
+        let mut rng = Pcg32::new(self.seed ^ 0x5eed, i);
+        let ex = match self.task {
+            Task::Tldr => tldr::generate(&mut rng, self.prompt_len, self.resp_len),
+            Task::Math => math::generate(&mut rng, self.prompt_len, self.resp_len),
+            Task::Chat => chat::generate(&mut rng, self.prompt_len, self.resp_len),
+        };
+        debug_assert_eq!(ex.prompt.len(), self.prompt_len);
+        debug_assert!(ex.reference.len() < self.resp_len); // room for EOS
+        ex
+    }
+
+    pub fn batch(&self, start: u64, n: usize) -> Vec<Example> {
+        (0..n as u64).map(|j| self.example(start + j)).collect()
+    }
+}
+
+/// Fill `len - used` remaining slots with content noise (helper shared by
+/// task generators to reach the fixed prompt length).
+pub(crate) fn noise_fill(rng: &mut Pcg32, out: &mut Vec<i32>, len: usize) {
+    while out.len() < len {
+        out.push(tk::content(rng.gen_range(tk::CONTENT_COUNT as u32) as i32));
+    }
+}
+
+/// Build a full training sequence: prompt ++ response ++ EOS ++ PAD, plus
+/// the response mask (1.0 on response tokens incl. EOS). `resp` must not
+/// contain EOS already.
+pub fn pack_sequence(
+    prompt: &[i32],
+    resp: &[i32],
+    seq_len: usize,
+    with_eos: bool,
+) -> (Vec<i32>, Vec<f32>) {
+    let mut toks = Vec::with_capacity(seq_len);
+    toks.extend_from_slice(prompt);
+    let resp_start = toks.len();
+    toks.extend_from_slice(resp);
+    if with_eos {
+        toks.push(tk::EOS);
+    }
+    let resp_end = toks.len().min(seq_len);
+    toks.truncate(seq_len);
+    toks.resize(seq_len, tk::PAD);
+    let mut mask = vec![0.0f32; seq_len];
+    for m in mask.iter_mut().take(resp_end).skip(resp_start) {
+        *m = 1.0;
+    }
+    (toks, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic() {
+        for task in [Task::Tldr, Task::Math, Task::Chat] {
+            let g1 = TaskGen::new(task, 24, 12, 7);
+            let g2 = TaskGen::new(task, 24, 12, 7);
+            for i in 0..20 {
+                let a = g1.example(i);
+                let b = g2.example(i);
+                assert_eq!(a.prompt, b.prompt);
+                assert_eq!(a.reference, b.reference);
+                assert_eq!(a.meta, b.meta);
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let g1 = TaskGen::new(Task::Tldr, 24, 12, 1);
+        let g2 = TaskGen::new(Task::Tldr, 24, 12, 2);
+        let diff = (0..20)
+            .filter(|&i| g1.example(i).prompt != g2.example(i).prompt)
+            .count();
+        assert!(diff > 15);
+    }
+
+    #[test]
+    fn prompts_have_exact_length() {
+        for task in [Task::Tldr, Task::Math, Task::Chat] {
+            let g = TaskGen::new(task, 28, 14, 3);
+            for i in 0..50 {
+                let ex = g.example(i);
+                assert_eq!(ex.prompt.len(), 28, "{task:?} example {i}");
+                assert!(ex.reference.len() < 14);
+                assert!(!ex.reference.contains(&tk::EOS));
+            }
+        }
+    }
+
+    #[test]
+    fn pack_sequence_shapes() {
+        let prompt = vec![tk::BOS, 30, 31];
+        let resp = vec![40, 41];
+        let (toks, mask) = pack_sequence(&prompt, &resp, 8, true);
+        assert_eq!(toks, vec![tk::BOS, 30, 31, 40, 41, tk::EOS, 0, 0]);
+        assert_eq!(mask, vec![0., 0., 0., 1., 1., 1., 0., 0.]);
+    }
+
+    #[test]
+    fn pack_sequence_truncates() {
+        let prompt = vec![1; 4];
+        let resp = vec![40; 10];
+        let (toks, mask) = pack_sequence(&prompt, &resp, 8, true);
+        assert_eq!(toks.len(), 8);
+        assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), 4);
+    }
+}

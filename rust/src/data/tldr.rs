@@ -1,0 +1,163 @@
+//! Controlled TLDR-summarization analogue (paper §3, Gao et al. 2022 setup).
+//!
+//! A "post" is a fixed-length stream of content tokens in which a few
+//! *salient* tokens recur; a good "summary" lists exactly the distinct
+//! salient tokens, tersely, and terminates. The gold reward (reward::gold)
+//! scores coverage, brevity, non-repetition and termination — enough
+//! structure for reward hacking to exist (padding with extras, repetition),
+//! which is what makes proxy-RM overoptimization measurable.
+
+use super::{noise_fill, Example, TaskMeta};
+use crate::tokenizer as tk;
+use crate::util::rng::Pcg32;
+
+pub const MIN_SALIENT: usize = 3;
+pub const MAX_SALIENT: usize = 6;
+/// Probability per reference-token of an imperfection (drop/extra/dup),
+/// giving the "human-written reference" quality floor of paper Table 3.
+const REF_NOISE: f64 = 0.12;
+/// Salient tokens recur this many times (3-4): frequent enough that a
+/// from-scratch 2-layer model can learn "list the repeated tokens".
+const MIN_REPEATS: usize = 3;
+
+pub fn generate(rng: &mut Pcg32, prompt_len: usize, resp_len: usize) -> Example {
+    let max_salient = MAX_SALIENT.min(resp_len.saturating_sub(2)).max(MIN_SALIENT);
+    let n_salient =
+        MIN_SALIENT + rng.gen_usize(max_salient - MIN_SALIENT + 1);
+
+    // distinct salient content tokens
+    let mut pool: Vec<i32> = (0..tk::CONTENT_COUNT).map(tk::content).collect();
+    rng.shuffle(&mut pool);
+    let salient: Vec<i32> = pool[..n_salient].to_vec();
+
+    // body: each salient token appears 3-4 times, noise elsewhere
+    let mut body = Vec::new();
+    for &s in &salient {
+        for _ in 0..(MIN_REPEATS + rng.gen_usize(2)) {
+            body.push(s);
+        }
+    }
+    let body_budget = prompt_len - 2; // BOS ... SEP
+    while body.len() < body_budget {
+        // noise tokens, avoiding accidental salient repeats
+        let t = pool[n_salient + rng.gen_usize(pool.len() - n_salient)];
+        body.push(t);
+    }
+    body.truncate(body_budget);
+    rng.shuffle(&mut body);
+
+    let mut prompt = Vec::with_capacity(prompt_len);
+    prompt.push(tk::BOS);
+    prompt.extend_from_slice(&body);
+    prompt.push(tk::SEP);
+    debug_assert_eq!(prompt.len(), prompt_len);
+
+    // canonical summary order: ascending token id (a deterministic,
+    // position-free target a small model can learn; the paper's task
+    // difficulty is irrelevant to the async-vs-sync question)
+    let mut ordered = salient.clone();
+    ordered.sort();
+
+    // imperfect human reference
+    let mut reference = Vec::new();
+    for &t in &ordered {
+        if rng.gen_bool(REF_NOISE) {
+            match rng.gen_usize(3) {
+                0 => {}                        // drop
+                1 => {                          // replace with noise
+                    let nz = pool[n_salient + rng.gen_usize(pool.len() - n_salient)];
+                    reference.push(nz);
+                }
+                _ => {                          // duplicate
+                    reference.push(t);
+                    reference.push(t);
+                }
+            }
+        } else {
+            reference.push(t);
+        }
+    }
+    if reference.is_empty() {
+        reference.push(ordered[0]);
+    }
+    reference.truncate(resp_len - 1); // leave room for EOS
+
+    Example {
+        prompt,
+        reference,
+        meta: TaskMeta::Tldr { salient: ordered },
+    }
+}
+
+/// Perturb a response for preference-pair construction (reward::proxy):
+/// higher `noise` -> worse expected gold score.
+pub fn perturb(rng: &mut Pcg32, resp: &[i32], noise: f64, resp_len: usize) -> Vec<i32> {
+    let mut out = Vec::new();
+    for &t in resp {
+        if rng.gen_bool(noise) {
+            match rng.gen_usize(3) {
+                0 => {}
+                1 => out.push(tk::content(
+                    rng.gen_range(tk::CONTENT_COUNT as u32) as i32,
+                )),
+                _ => {
+                    out.push(t);
+                    out.push(t);
+                }
+            }
+        } else {
+            out.push(t);
+        }
+    }
+    if out.is_empty() {
+        noise_fill(rng, &mut out, 1);
+    }
+    out.truncate(resp_len - 1);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn salient_tokens_appear_in_prompt() {
+        let mut rng = Pcg32::new(1, 0);
+        for _ in 0..30 {
+            let ex = generate(&mut rng, 32, 16);
+            if let TaskMeta::Tldr { salient } = &ex.meta {
+                assert!((MIN_SALIENT..=MAX_SALIENT).contains(&salient.len()));
+                for s in salient {
+                    let count =
+                        ex.prompt.iter().filter(|&&t| t == *s).count();
+                    assert!(count >= MIN_REPEATS, "salient token appears {count} times");
+                }
+            } else {
+                panic!("wrong meta");
+            }
+        }
+    }
+
+    #[test]
+    fn prompt_structure() {
+        let mut rng = Pcg32::new(2, 0);
+        let ex = generate(&mut rng, 32, 16);
+        assert_eq!(ex.prompt[0], tk::BOS);
+        assert_eq!(*ex.prompt.last().unwrap(), tk::SEP);
+    }
+
+    #[test]
+    fn perturb_zero_noise_is_identity() {
+        let mut rng = Pcg32::new(3, 0);
+        let resp = vec![30, 31, 32];
+        assert_eq!(perturb(&mut rng, &resp, 0.0, 16), resp);
+    }
+
+    #[test]
+    fn perturb_full_noise_changes() {
+        let mut rng = Pcg32::new(4, 0);
+        let resp = vec![30, 31, 32, 33, 34];
+        let out = perturb(&mut rng, &resp, 1.0, 16);
+        assert_ne!(out, resp);
+    }
+}

@@ -1,0 +1,134 @@
+//! Held-out evaluation harness (paper's metrics):
+//! - gold win-rate vs dataset references (TLDR §3.1, chat Tables 1/8),
+//! - KL measured as reference-model perplexity on policy samples,
+//! - pass@1 by greedy decoding (GSM8k §5.2),
+//! - mean response length (Table 8).
+
+use anyhow::Result;
+
+use crate::coordinator::pretrain::EVAL_RANGE;
+use crate::data::{Task, TaskGen};
+use crate::gen::fused::FusedEngine;
+use crate::gen::{Generator, SampleOpts};
+use crate::reward::gold;
+use crate::runtime::{Engine, HostTensor};
+use crate::tokenizer as tk;
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalResult {
+    pub n: usize,
+    pub win_rate: f32,
+    pub kl_ppl: f32,
+    pub mean_gold: f32,
+    pub mean_len: f32,
+    /// Exact-match rate under greedy decoding (math tasks; 0 otherwise).
+    pub pass1: f32,
+}
+
+/// Evaluate `params` on `n_prompts` held-out prompts (rounded up to whole
+/// generation batches). Math tasks are decoded greedily (pass@1);
+/// everything else samples at `temperature` like training.
+pub fn evaluate(
+    engine: &Engine,
+    params: &[f32],
+    ref_params: &[f32],
+    taskgen: &TaskGen,
+    n_prompts: usize,
+    temperature: f32,
+    seed: u64,
+) -> Result<EvalResult> {
+    let cfg = &engine.manifest.config;
+    let (bg, s, p) = (cfg.gen_batch, cfg.seq_len, cfg.prompt_len);
+    let task = taskgen.task;
+    let greedy = task == Task::Math;
+    let generator = FusedEngine;
+    let mut rng = Pcg32::new(seed, 0xe7a1);
+    let opts = SampleOpts { temperature, greedy };
+
+    let rounds = n_prompts.div_ceil(bg);
+    let mut win_sum = 0.0f32;
+    let mut exact = 0usize;
+    let mut gold_sum = 0.0f64;
+    let mut len_sum = 0usize;
+    let mut lp_sum = 0.0f64;
+    let mut tok_sum = 0.0f64;
+    let mut total = 0usize;
+
+    for r in 0..rounds {
+        let start = EVAL_RANGE + (r * bg) as u64;
+        let examples = taskgen.batch(start, bg);
+        let prompts: Vec<Vec<i32>> =
+            examples.iter().map(|e| e.prompt.clone()).collect();
+        let gen = generator.generate(engine, params, &prompts, opts, &mut rng)?;
+
+        // reference-model logprobs for the KL/ppl measurement
+        let mut toks_flat = Vec::with_capacity(bg * s);
+        let mut mask_flat = Vec::with_capacity(bg * s);
+        for i in 0..bg {
+            toks_flat.extend_from_slice(&gen.tokens[i]);
+            mask_flat.extend_from_slice(&gen.resp_mask[i]);
+        }
+        let out = engine.call(
+            "logprob",
+            &[
+                HostTensor::F32(ref_params.to_vec()),
+                HostTensor::I32(toks_flat),
+                HostTensor::F32(mask_flat.clone()),
+            ],
+        )?;
+        let rlp_tok = out.into_iter().nth(1).unwrap().into_f32()?;
+        lp_sum += rlp_tok
+            .iter()
+            .zip(&mask_flat)
+            .map(|(l, m)| (l * m) as f64)
+            .sum::<f64>();
+        tok_sum += mask_flat.iter().map(|&m| m as f64).sum::<f64>();
+
+        for i in 0..bg {
+            let ex = &examples[i];
+            let resp = gen.response(i, p);
+            len_sum += resp.len();
+            let score = gold::score(&ex.meta, resp);
+            gold_sum += score as f64;
+            let mut ref_resp = ex.reference.clone();
+            ref_resp.push(tk::EOS);
+            win_sum += gold::win_value(&ex.meta, resp, &ref_resp);
+            if task == Task::Math && score >= 1.0 {
+                exact += 1;
+            }
+            total += 1;
+        }
+    }
+
+    Ok(EvalResult {
+        n: total,
+        win_rate: win_sum / total as f32,
+        kl_ppl: (-(lp_sum / tok_sum.max(1.0))).exp() as f32,
+        mean_gold: (gold_sum / total as f64) as f32,
+        mean_len: len_sum as f32 / total as f32,
+        pass1: exact as f32 / total as f32,
+    })
+}
+
+impl EvalResult {
+    pub fn summary(&self, task: Task) -> String {
+        match task {
+            Task::Math => format!(
+                "pass@1 {:.1}% | ppl {:.4} | len {:.1} (n={})",
+                self.pass1 * 100.0,
+                self.kl_ppl,
+                self.mean_len,
+                self.n
+            ),
+            _ => format!(
+                "win-rate {:.1}% | kl-ppl {:.4} | gold {:.3} | len {:.1} (n={})",
+                self.win_rate * 100.0,
+                self.kl_ppl,
+                self.mean_gold,
+                self.mean_len,
+                self.n
+            ),
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Table 1/8 + Fig 9 (chatbot, Online DPO) and Table 9 + Fig 10 (PPO):
+//! the paper's at-scale verification on the instruction-following task.
+//!
+//! Shapes to reproduce: async matches sync win-rate while being ~40%
+//! faster; the SFT row sits far below both; PPO also works async but
+//! scores below Online DPO.
+
+use anyhow::Result;
+
+use super::runner::{base_cfg, print_table, run_variant, save_csv};
+use super::{out_dir, require_model};
+use crate::config::{Algo, Mode};
+use crate::coordinator;
+use crate::eval::evaluate;
+use crate::util::args::Args;
+
+fn chat_table(args: &Args, algo: Algo, title: &str, out_name: &str) -> Result<()> {
+    let model = args.get_or("model", "chat_m").to_string();
+    require_model(args, &model)?;
+    let mut base = base_cfg(args, &model)?;
+    base.algo = algo;
+    let verbose = !args.has_flag("quiet");
+    let prep = coordinator::prepare(&base, verbose)?;
+
+    // SFT baseline row
+    let sft_eval = evaluate(
+        &prep.engine,
+        &prep.sft_params,
+        &prep.sft_params,
+        &prep.taskgen,
+        base.eval_prompts,
+        base.temperature,
+        base.seed,
+    )?;
+    let mut rows = vec![vec![
+        "SFT".to_string(),
+        format!("{:.2}%", sft_eval.win_rate * 100.0),
+        "-".to_string(),
+        format!("{:.1}", sft_eval.mean_len),
+        format!("{:.4}", sft_eval.kl_ppl),
+    ]];
+
+    for mode in [Mode::Sync, Mode::Async] {
+        let mut cfg = base.clone();
+        cfg.mode = mode;
+        eprintln!("[{out_name}] {} {}", algo.name(), mode.name());
+        let r = run_variant(&cfg, &prep, verbose)?;
+        rows.push(vec![
+            format!("{} {}", mode.name(), algo.name()),
+            format!("{:.2}%", r.eval.win_rate * 100.0),
+            format!("{:.1}", r.out.timeline.wall()),
+            format!("{:.1}", r.eval.mean_len),
+            format!("{:.4}", r.eval.kl_ppl),
+        ]);
+    }
+    print_table(
+        title,
+        &["model", "win_rate", "compute_s", "resp_len", "kl_ppl"],
+        &rows,
+    );
+    save_csv(&out_dir(args).join(out_name), "final",
+             &["model", "win_rate", "compute_s", "resp_len", "kl_ppl"],
+             &rows)?;
+    Ok(())
+}
+
+pub fn table1(args: &Args) -> Result<()> {
+    chat_table(
+        args,
+        Algo::Dpo,
+        "Table 1/8: chatbot at scale — sync vs async Online DPO",
+        "table1",
+    )
+}
+
+pub fn table9(args: &Args) -> Result<()> {
+    chat_table(
+        args,
+        Algo::Ppo,
+        "Table 9: chatbot at scale — sync vs async PPO",
+        "table9",
+    )
+}

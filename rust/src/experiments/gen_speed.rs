@@ -1,0 +1,88 @@
+//! Fig 14 / Appendix C.1: generation-engine speed, cached (vLLM analogue)
+//! vs naive full-recompute (HF-transformers analogue), across model scales.
+//!
+//! Shape to reproduce: cached >> naive at every scale, with the gap
+//! growing superlinearly in model size (the paper measures 12-20x for
+//! 7-8B models; asymptotically the naive engine pays O(S) forwards of
+//! O(S) tokens per response vs the cached engine's O(S) single-token
+//! steps).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::runner::{print_table, save_csv};
+use super::{out_dir, require_model};
+use crate::data::{Task, TaskGen};
+use crate::gen::{cached::CachedEngine, naive::NaiveEngine, Generator, SampleOpts};
+use crate::runtime::Engine;
+use crate::util::args::Args;
+
+pub fn fig14(args: &Args) -> Result<()> {
+    let models: Vec<String> = args
+        .get("models")
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| vec!["tldr_s".into(), "tldr_m".into(), "tldr_l".into()]);
+    let reps: usize = args.get_parse("reps", 3)?;
+    let seed: u64 = args.get_parse("seed", 42)?;
+
+    let mut rows = Vec::new();
+    for model in &models {
+        let dir = require_model(args, model)?;
+        let engine = Engine::load(&dir)?;
+        let mcfg = engine.manifest.config.clone();
+        let taskgen = TaskGen::new(
+            Task::from_name(&mcfg.task).unwrap(),
+            mcfg.prompt_len,
+            mcfg.resp_len,
+            seed,
+        );
+        let params = engine.init_policy()?;
+        let examples = taskgen.batch(0, mcfg.gen_batch);
+        let prompts: Vec<Vec<i32>> =
+            examples.iter().map(|e| e.prompt.clone()).collect();
+        let opts = SampleOpts { temperature: 0.7, greedy: false };
+
+        let mut times = Vec::new();
+        for gen in [&CachedEngine as &dyn Generator, &NaiveEngine] {
+            // warmup compiles the executables
+            let mut rng = crate::util::rng::Pcg32::new(seed, 1);
+            gen.generate(&engine, &params, &prompts, opts, &mut rng)?;
+            let t0 = Instant::now();
+            let mut tokens = 0usize;
+            for rep in 0..reps {
+                let mut rng = crate::util::rng::Pcg32::new(seed, 2 + rep as u64);
+                let out = gen.generate(&engine, &params, &prompts, opts, &mut rng)?;
+                tokens += out
+                    .resp_mask
+                    .iter()
+                    .map(|m| m.iter().filter(|&&x| x == 1.0).count())
+                    .sum::<usize>();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            times.push((gen.name(), secs / reps as f64, tokens as f64 / secs));
+        }
+        let speedup = times[1].1 / times[0].1;
+        rows.push(vec![
+            model.clone(),
+            format!("{}", engine.manifest.param_count),
+            format!("{:.3}", times[0].1),
+            format!("{:.3}", times[1].1),
+            format!("{speedup:.1}x"),
+            format!("{:.0}", times[0].2),
+        ]);
+    }
+    print_table(
+        "Fig 14: batch generation time, cached (vLLM-like) vs naive (HF-like)",
+        &["model", "params", "cached_s", "naive_s", "speedup", "tok/s cached"],
+        &rows,
+    );
+    save_csv(&out_dir(args).join("fig14"), "final",
+             &["model", "params", "cached_s", "naive_s", "speedup", "cached_tok_per_s"],
+             &rows)?;
+    println!(
+        "\npaper shape check: speedup should grow with model scale \
+         (vLLM vs transformers grows superlinearly, Fig 14)"
+    );
+    Ok(())
+}

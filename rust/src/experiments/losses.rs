@@ -1,0 +1,78 @@
+//! Fig 4 + Fig 13: robustness of RLHF losses to off-policyness.
+//!
+//! Paper shapes to reproduce:
+//! - Fig 4: Online DPO retains performance across N ∈ {1,2,4,8,16}; PPO
+//!   and RLOO degrade sharply; Best-of-2 SFT also fails to retain.
+//! - Fig 13: CoPG-style RLOO collapses at N=16 while Proximal RLOO
+//!   (clipped IS) survives.
+
+use anyhow::Result;
+
+use super::runner::{base_cfg, print_table, run_variant, save_csv};
+use super::{out_dir, require_model};
+use crate::config::Algo;
+use crate::coordinator;
+use crate::util::args::Args;
+
+fn loss_sweep(
+    args: &Args,
+    algos: &[Algo],
+    ns: &[usize],
+    title: &str,
+    out_name: &str,
+) -> Result<()> {
+    let model = args.get_or("model", "tldr_s").to_string();
+    require_model(args, &model)?;
+    let base = base_cfg(args, &model)?;
+    let verbose = !args.has_flag("quiet");
+    let prep = coordinator::prepare(&base, verbose)?;
+
+    let mut rows = Vec::new();
+    for &algo in algos {
+        for &n in ns {
+            let mut cfg = base.clone();
+            cfg.algo = algo;
+            cfg.n_minibatches = n;
+            eprintln!("[{out_name}] {algo} N={n}");
+            let r = run_variant(&cfg, &prep, verbose)?;
+            rows.push(vec![
+                algo.name().to_string(),
+                n.to_string(),
+                format!("{:.3}", r.eval.win_rate),
+                format!("{:.4}", r.eval.kl_ppl),
+                format!("{:.3}", r.eval.mean_gold),
+            ]);
+        }
+    }
+    print_table(
+        title,
+        &["algo", "N", "win_rate", "kl_ppl", "gold"],
+        &rows,
+    );
+    let dir = out_dir(args).join(out_name);
+    save_csv(&dir, "final", &["algo", "N", "win_rate", "kl_ppl", "gold"], &rows)?;
+    println!("saved: {}", dir.display());
+    Ok(())
+}
+
+pub fn fig4(args: &Args) -> Result<()> {
+    let ns: Vec<usize> = args.get_list("n-sweep", &[1usize, 2, 4, 8, 16])?;
+    loss_sweep(
+        args,
+        &[Algo::Dpo, Algo::Ppo, Algo::Rloo, Algo::BestOfN],
+        &ns,
+        "Fig 4: loss robustness across off-policyness N",
+        "fig4",
+    )
+}
+
+pub fn fig13(args: &Args) -> Result<()> {
+    let ns: Vec<usize> = args.get_list("n-sweep", &[1usize, 4, 16])?;
+    loss_sweep(
+        args,
+        &[Algo::Prloo, Algo::Copg],
+        &ns,
+        "Fig 13: Proximal RLOO vs CoPG under off-policyness",
+        "fig13",
+    )
+}

@@ -1,0 +1,80 @@
+//! Table 2/11 + Fig 11: math & reasoning (GSM8k analogue).
+//!
+//! Rule-based exact-match reward, no reward model. Shapes to reproduce:
+//! sync Online DPO >= RLOO >= (PPO baseline); async Online DPO matches
+//! sync pass@1 while being substantially faster; KL (base-model ppl on
+//! completions) stays comparable.
+
+use anyhow::Result;
+
+use super::runner::{base_cfg, print_table, run_variant, save_csv};
+use super::{out_dir, require_model};
+use crate::config::{Algo, Mode};
+use crate::coordinator;
+use crate::eval::evaluate;
+use crate::util::args::Args;
+
+pub fn table2(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "math_s").to_string();
+    require_model(args, &model)?;
+    let base = base_cfg(args, &model)?;
+    let verbose = !args.has_flag("quiet");
+    let prep = coordinator::prepare(&base, verbose)?;
+
+    // SFT row (pass@1 of the warm-started model)
+    let sft_eval = evaluate(
+        &prep.engine,
+        &prep.sft_params,
+        &prep.sft_params,
+        &prep.taskgen,
+        base.eval_prompts,
+        base.temperature,
+        base.seed,
+    )?;
+    let mut rows = vec![vec![
+        "SFT".to_string(),
+        format!("{:.1}%", sft_eval.pass1 * 100.0),
+        "-".to_string(),
+        "-".to_string(),
+    ]];
+
+    let variants: Vec<(String, Algo, Mode)> = vec![
+        ("Sync PPO".into(), Algo::Ppo, Mode::Sync),
+        ("Sync RLOO".into(), Algo::Rloo, Mode::Sync),
+        ("Sync Online DPO".into(), Algo::Dpo, Mode::Sync),
+        ("Async Online DPO".into(), Algo::Dpo, Mode::Async),
+    ];
+    for (label, algo, mode) in &variants {
+        let mut cfg = base.clone();
+        cfg.algo = *algo;
+        cfg.mode = *mode;
+        eprintln!("[table2] {label}");
+        let r = run_variant(&cfg, &prep, verbose)?;
+        rows.push(vec![
+            label.clone(),
+            format!("{:.1}%", r.eval.pass1 * 100.0),
+            format!("{:.4}", r.eval.kl_ppl),
+            format!("{:.1}", r.out.timeline.wall()),
+        ]);
+    }
+    print_table(
+        "Table 2/11: math exact-match (pass@1), KL (ppl), compute time",
+        &["model", "pass@1", "ppl", "compute_s"],
+        &rows,
+    );
+    save_csv(&out_dir(args).join("table2"), "final",
+             &["model", "pass@1", "ppl", "compute_s"], &rows)?;
+
+    // speedup callout (paper: async 68% faster than sync on GSM8k)
+    if rows.len() >= 2 {
+        let sync_dpo: f32 = rows[rows.len() - 2][3].parse().unwrap_or(0.0);
+        let async_dpo: f32 = rows[rows.len() - 1][3].parse().unwrap_or(1.0);
+        if async_dpo > 0.0 {
+            println!(
+                "async speedup vs sync DPO: {:+.1}%",
+                (sync_dpo / async_dpo - 1.0) * 100.0
+            );
+        }
+    }
+    Ok(())
+}

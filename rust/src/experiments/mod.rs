@@ -1,0 +1,84 @@
+//! Experiment runners: one per paper figure/table (DESIGN.md §6).
+//!
+//! `async-rlhf exp <id>` regenerates the rows/series the paper reports.
+//! Absolute numbers come from this testbed; the acceptance criteria are
+//! the paper-shape checks listed in DESIGN.md §6 and recorded in
+//! EXPERIMENTS.md.
+
+mod chat_scale;
+mod runner;
+mod gen_speed;
+mod losses;
+mod math_scale;
+mod offpolicy;
+mod optimize;
+mod scaling;
+mod speed;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::args::Args;
+
+pub struct Exp {
+    pub id: &'static str,
+    pub paper: &'static str,
+    pub run: fn(&Args) -> Result<()>,
+}
+
+pub fn catalog() -> Vec<Exp> {
+    vec![
+        Exp { id: "fig1", paper: "Fig 1: win-rate vs wall-clock, sync vs async, 3 scales", run: speed::fig1 },
+        Exp { id: "fig2", paper: "Fig 2: sync vs async schedule timelines", run: speed::fig2 },
+        Exp { id: "fig3", paper: "Fig 3: PPO off-policyness (N sweep): win-rate, KL, pareto", run: offpolicy::fig3 },
+        Exp { id: "fig4", paper: "Fig 4: loss robustness to off-policyness (DPO/PPO/RLOO/BoN)", run: losses::fig4 },
+        Exp { id: "fig5", paper: "Fig 5: scaling policy vs reward model under off-policyness", run: scaling::fig5 },
+        Exp { id: "fig6", paper: "Fig 6: training- vs generation-bound idle time", run: optimize::fig6 },
+        Exp { id: "fig7", paper: "Fig 7: generation-bound: T updates per batch", run: optimize::fig7 },
+        Exp { id: "fig8", paper: "Fig 8: training-bound: best/worst-of-K sampling", run: optimize::fig8 },
+        Exp { id: "table1", paper: "Table 1/8 + Fig 9: chatbot at scale, sync vs async DPO", run: chat_scale::table1 },
+        Exp { id: "table9", paper: "Table 9 + Fig 10: async PPO at scale", run: chat_scale::table9 },
+        Exp { id: "table2", paper: "Table 2/11 + Fig 11: GSM8k math, sync vs async", run: math_scale::table2 },
+        Exp { id: "table3", paper: "Table 3: SFT baselines (win-rate, ppl) per scale", run: scaling::table3 },
+        Exp { id: "fig13", paper: "Fig 13: Proximal RLOO vs CoPG off-policy", run: losses::fig13 },
+        Exp { id: "fig14", paper: "Fig 14/C.1: cached vs naive generation speed by scale", run: gen_speed::fig14 },
+        Exp { id: "overhead", paper: "A.2: async overhead decomposition (ideal vs actual)", run: speed::overhead },
+    ]
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("list");
+    if id == "list" {
+        println!("{:<9} {}", "id", "paper artifact");
+        for e in catalog() {
+            println!("{:<9} {}", e.id, e.paper);
+        }
+        return Ok(());
+    }
+    let exp = catalog()
+        .into_iter()
+        .find(|e| e.id == id)
+        .ok_or_else(|| anyhow!("unknown experiment '{id}' (try `exp list`)"))?;
+    eprintln!("[exp {}] {}", exp.id, exp.paper);
+    (exp.run)(args)
+}
+
+/// Shared option: where experiment outputs are written.
+pub(crate) fn out_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.get_or("out", "results"))
+}
+
+/// Fail fast if an artifact config is missing.
+pub(crate) fn require_model(args: &Args, model: &str) -> Result<std::path::PathBuf> {
+    let dir = crate::runtime::artifacts_root(args.get("artifacts")).join(model);
+    if !dir.join("manifest.json").exists() {
+        bail!(
+            "artifacts for '{model}' not found under {} — run `make artifacts`",
+            dir.display()
+        );
+    }
+    Ok(dir)
+}

@@ -1,0 +1,74 @@
+//! Fig 3: PPO under increasing off-policyness (N mini-batches per
+//! generation round). Paper findings to reproduce in shape:
+//! - win-rate degrades monotonically (log-ish) with N; N=1 ≈ N=2,
+//! - all N lie on roughly the same win-rate-vs-KL pareto curve — staleness
+//!   slows progress along the frontier rather than moving it.
+
+use anyhow::Result;
+
+use super::runner::{base_cfg, print_table, run_variant, save_csv};
+use super::{out_dir, require_model};
+use crate::config::Algo;
+use crate::coordinator;
+use crate::util::args::Args;
+
+pub fn fig3(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tldr_s").to_string();
+    require_model(args, &model)?;
+    let ns: Vec<usize> = args.get_list("n-sweep", &[1usize, 2, 4, 8, 16, 32, 64])?;
+    let base = {
+        let mut c = base_cfg(args, &model)?;
+        c.algo = Algo::Ppo;
+        c
+    };
+    let verbose = !args.has_flag("quiet");
+    let prep = coordinator::prepare(&base, verbose)?;
+
+    let mut rows = Vec::new();
+    let mut curves = Vec::new();
+    for &n in &ns {
+        let mut cfg = base.clone();
+        cfg.n_minibatches = n;
+        // keep total updates fixed: steps is already the number of
+        // minibatch updates, so nothing else changes — larger N only
+        // changes how stale the data is.
+        eprintln!("[fig3] PPO N={n}");
+        let r = run_variant(&cfg, &prep, verbose)?;
+        // training curves (win-rate + KL over steps) for the left/middle
+        // panels
+        for (step, win) in r.out.log.series("win_rate") {
+            let kl = r
+                .out
+                .log
+                .rows
+                .iter()
+                .find(|row| row.step == step)
+                .and_then(|row| row.values.get("kl_ppl").copied())
+                .unwrap_or(f32::NAN);
+            curves.push(vec![
+                n.to_string(),
+                step.to_string(),
+                format!("{win:.4}"),
+                format!("{kl:.5}"),
+            ]);
+        }
+        rows.push(vec![
+            format!("N={n}"),
+            format!("{:.3}", r.eval.win_rate),
+            format!("{:.4}", r.eval.kl_ppl),
+            format!("{:.3}", r.eval.mean_gold),
+            format!("{:.1}", r.out.timeline.wall()),
+        ]);
+    }
+
+    print_table(
+        "Fig 3 (right): final win-rate vs KL across off-policyness N (PPO)",
+        &["variant", "win_rate", "kl_ppl", "gold", "wall_s"],
+        &rows,
+    );
+    let dir = out_dir(args).join("fig3");
+    save_csv(&dir, "final", &["variant", "win_rate", "kl_ppl", "gold", "wall_s"], &rows)?;
+    save_csv(&dir, "curves", &["n", "step", "win_rate", "kl_ppl"], &curves)?;
+    println!("saved: {}", dir.display());
+    Ok(())
+}

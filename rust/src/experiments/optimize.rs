@@ -1,0 +1,127 @@
+//! §4 compute-balance optimizations.
+//!
+//! - Fig 6: idle-time analysis for mismatched gen/train speeds (simulated
+//!   over a ratio sweep + measured on this testbed).
+//! - Fig 7 (generation-bound): T ∈ {1,2,3} updates per mini-batch raises
+//!   sample efficiency but drifts KL.
+//! - Fig 8 (training-bound): K=4 best/worst-of-K with lr/2 and steps/2
+//!   reaches the same win-rate in roughly half the compute, at higher KL.
+
+use anyhow::Result;
+
+use super::runner::{base_cfg, print_table, run_variant, save_csv};
+use super::{out_dir, require_model};
+use crate::config::{Algo, Mode};
+use crate::coordinator;
+use crate::sim::{classify, simulate_async, Bound, StepCosts};
+use crate::util::args::Args;
+
+pub fn fig6(args: &Args) -> Result<()> {
+    // simulated idle-time sweep over gen:train ratios
+    let mut rows = Vec::new();
+    for ratio in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        let costs = StepCosts::new(ratio, 0.0, 1.0);
+        let steps = 200;
+        let r = simulate_async(&costs, steps);
+        let bound = match classify(&costs) {
+            Bound::GenerationBound => "generation-bound",
+            Bound::TrainingBound => "training-bound",
+            Bound::Balanced => "balanced",
+        };
+        rows.push(vec![
+            format!("{ratio:.2}"),
+            bound.to_string(),
+            format!("{:.1}%", 100.0 * r.gen_idle / r.wall),
+            format!("{:.1}%", 100.0 * r.train_idle / r.wall),
+        ]);
+    }
+    print_table(
+        "Fig 6: idle fraction vs gen:train ratio (bound-1 async queue)",
+        &["gen/train", "regime", "gen idle", "train idle"],
+        &rows,
+    );
+    save_csv(&out_dir(args).join("fig6"), "sim",
+             &["ratio", "regime", "gen_idle", "train_idle"], &rows)?;
+    Ok(())
+}
+
+pub fn fig7(args: &Args) -> Result<()> {
+    let models: Vec<String> = args
+        .get("models")
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| vec!["tldr_s".into(), "tldr_m".into()]);
+    let ts: Vec<usize> = args.get_list("t-sweep", &[1usize, 2, 3])?;
+    let mut rows = Vec::new();
+    for model in &models {
+        require_model(args, model)?;
+        let mut base = base_cfg(args, model)?;
+        base.mode = Mode::Async;
+        base.algo = Algo::Dpo;
+        let verbose = !args.has_flag("quiet");
+        let prep = coordinator::prepare(&base, verbose)?;
+        for &t in &ts {
+            let mut cfg = base.clone();
+            cfg.updates_per_batch = t;
+            eprintln!("[fig7] {model} T={t}");
+            let r = run_variant(&cfg, &prep, verbose)?;
+            rows.push(vec![
+                model.clone(),
+                t.to_string(),
+                format!("{:.3}", r.eval.win_rate),
+                format!("{:.4}", r.eval.kl_ppl),
+                r.out.episodes.to_string(),
+            ]);
+        }
+    }
+    print_table(
+        "Fig 7: updates-per-batch T (generation-bound optimization)",
+        &["model", "T", "win_rate", "kl_ppl", "episodes"],
+        &rows,
+    );
+    save_csv(&out_dir(args).join("fig7"), "final",
+             &["model", "T", "win_rate", "kl_ppl", "episodes"], &rows)?;
+    Ok(())
+}
+
+pub fn fig8(args: &Args) -> Result<()> {
+    let models: Vec<String> = args
+        .get("models")
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| vec!["tldr_s".into(), "tldr_m".into()]);
+    let mut rows = Vec::new();
+    for model in &models {
+        require_model(args, model)?;
+        let mut base = base_cfg(args, model)?;
+        base.mode = Mode::Async;
+        base.algo = Algo::Dpo;
+        let verbose = !args.has_flag("quiet");
+        let prep = coordinator::prepare(&base, verbose)?;
+
+        // K=2 baseline at full steps; K=4 with lr/2 and steps/2 (paper §4.2)
+        for (k, lr_mult, step_mult) in [(2usize, 1.0f32, 1.0f64), (4, 0.5, 0.5)] {
+            let mut cfg = base.clone();
+            cfg.k_samples = k;
+            cfg.lr = base.lr * lr_mult;
+            cfg.steps = ((base.steps as f64) * step_mult).max(1.0) as u64;
+            eprintln!("[fig8] {model} K={k} lr={} steps={}", cfg.lr, cfg.steps);
+            let r = run_variant(&cfg, &prep, verbose)?;
+            rows.push(vec![
+                model.clone(),
+                format!("K={k}"),
+                format!("{:.3}", r.eval.win_rate),
+                format!("{:.4}", r.eval.kl_ppl),
+                format!("{:.1}", r.out.timeline.wall()),
+                r.out.episodes.to_string(),
+            ]);
+        }
+    }
+    print_table(
+        "Fig 8: best/worst-of-K sampling (training-bound optimization)",
+        &["model", "variant", "win_rate", "kl_ppl", "wall_s", "episodes"],
+        &rows,
+    );
+    save_csv(&out_dir(args).join("fig8"), "final",
+             &["model", "variant", "win_rate", "kl_ppl", "wall_s", "episodes"],
+             &rows)?;
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Shared experiment plumbing: config construction, run+eval, table output.
+
+use anyhow::Result;
+
+use crate::config::ExpConfig;
+use crate::coordinator::{self, Prepared, RunOutput};
+use crate::eval::{evaluate, EvalResult};
+use crate::util::args::Args;
+
+/// Base config for an experiment variant; CLI flags override defaults so
+/// every experiment can be scaled down (`--steps 16`) for smoke runs.
+pub fn base_cfg(args: &Args, model: &str) -> Result<ExpConfig> {
+    let mut cfg = ExpConfig::from_args(args)?;
+    cfg.model = model.to_string();
+    Ok(cfg)
+}
+
+pub struct VariantResult {
+    pub out: RunOutput,
+    pub eval: EvalResult,
+}
+
+/// Run one fully-specified variant and evaluate the final policy.
+pub fn run_variant(
+    cfg: &ExpConfig,
+    prep: &Prepared,
+    verbose: bool,
+) -> Result<VariantResult> {
+    cfg.validate()?;
+    let out = coordinator::run(cfg, prep, verbose)?;
+    let eval = evaluate(
+        &prep.engine,
+        &out.final_params,
+        &prep.sft_params,
+        &prep.taskgen,
+        cfg.eval_prompts,
+        cfg.temperature,
+        cfg.seed,
+    )?;
+    Ok(VariantResult { out, eval })
+}
+
+/// Render a results table; also returns the rows for saving.
+pub fn print_table(
+    title: &str,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Save rows as CSV under the experiment output dir.
+pub fn save_csv(
+    dir: &std::path::Path,
+    name: &str,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut text = headers.join(",");
+    text.push('\n');
+    for row in rows {
+        text.push_str(&row.join(","));
+        text.push('\n');
+    }
+    std::fs::write(dir.join(format!("{name}.csv")), text)?;
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Fig 5 + Table 3: model-scale effects.
+//!
+//! - Table 3: SFT baseline win-rate/perplexity per policy scale (the floor
+//!   RLHF starts from).
+//! - Fig 5 left: scaling the *policy* (s/m/l, RM fixed small) tightens the
+//!   off-policy pareto cluster — bigger policies tolerate staleness.
+//! - Fig 5 right: scaling the *reward model* does not improve off-policy
+//!   robustness (it reduces overoptimization, not staleness sensitivity).
+//!
+//! The RM-scaling arm uses the policy-size config's RM checkpoint trained
+//! at a different scale; since our artifact bundles pair policy and RM
+//! geometry, we emulate "small policy + larger RM" by training the RM
+//! longer/shorter... no — honestly: we train RMs at each scale using that
+//! scale's trunk, and score the small policy's completions with it through
+//! that scale's `score_rm` executable (sequences are token-compatible:
+//! same vocab and sequence geometry across tldr_{s,m,l}).
+
+use anyhow::Result;
+
+use super::runner::{base_cfg, print_table, run_variant, save_csv};
+use super::{out_dir, require_model};
+use crate::config::Algo;
+use crate::coordinator::{self, pretrain};
+use crate::data::{Task, TaskGen};
+use crate::eval::evaluate;
+use crate::runtime::Engine;
+use crate::util::args::Args;
+
+pub fn table3(args: &Args) -> Result<()> {
+    let models: Vec<String> = args
+        .get("models")
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| vec!["tldr_s".into(), "tldr_m".into(), "tldr_l".into()]);
+    let mut rows = Vec::new();
+    for model in &models {
+        require_model(args, model)?;
+        let cfg = base_cfg(args, model)?;
+        let engine = Engine::load(&cfg.artifact_dir())?;
+        let mcfg = engine.manifest.config.clone();
+        let taskgen = TaskGen::new(
+            Task::from_name(&mcfg.task).unwrap(),
+            mcfg.prompt_len,
+            mcfg.resp_len,
+            cfg.seed,
+        );
+        let sft = pretrain::sft_checkpoint(
+            &engine, &taskgen, &cfg.run_dir, cfg.sft_steps, None,
+        )?;
+        let ev = evaluate(
+            &engine, &sft, &sft, &taskgen, cfg.eval_prompts,
+            cfg.temperature, cfg.seed,
+        )?;
+        rows.push(vec![
+            format!("SFT {model}"),
+            format!("{:.2}%", ev.win_rate * 100.0),
+            format!("{:.4}", ev.kl_ppl),
+            format!("{:.3}", ev.mean_gold),
+            format!("{:.1}", ev.mean_len),
+        ]);
+    }
+    print_table(
+        "Table 3: SFT baselines before RLHF",
+        &["model", "win_rate", "ppl", "gold", "len"],
+        &rows,
+    );
+    save_csv(&out_dir(args).join("table3"), "final",
+             &["model", "win_rate", "ppl", "gold", "len"], &rows)?;
+    Ok(())
+}
+
+pub fn fig5(args: &Args) -> Result<()> {
+    let ns: Vec<usize> = args.get_list("n-sweep", &[1usize, 4, 16, 64])?;
+    let models: Vec<String> = args
+        .get("models")
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| vec!["tldr_s".into(), "tldr_m".into(), "tldr_l".into()]);
+
+    // Left panel: policy scaling (each scale trains its own policy+RM pair;
+    // the paper's 410m-RM control is approximated by the fixed RM recipe —
+    // same data, same steps — at each scale).
+    let mut rows = Vec::new();
+    for model in &models {
+        require_model(args, model)?;
+        let base = {
+            let mut c = base_cfg(args, model)?;
+            c.algo = Algo::Dpo;
+            c
+        };
+        let verbose = !args.has_flag("quiet");
+        let prep = coordinator::prepare(&base, verbose)?;
+        for &n in &ns {
+            let mut cfg = base.clone();
+            cfg.n_minibatches = n;
+            eprintln!("[fig5] policy={model} N={n}");
+            let r = run_variant(&cfg, &prep, verbose)?;
+            rows.push(vec![
+                model.clone(),
+                n.to_string(),
+                format!("{:.3}", r.eval.win_rate),
+                format!("{:.4}", r.eval.kl_ppl),
+            ]);
+        }
+    }
+    print_table(
+        "Fig 5 (left): off-policy pareto points vs policy scale (Online DPO)",
+        &["policy", "N", "win_rate", "kl_ppl"],
+        &rows,
+    );
+    let dir = out_dir(args).join("fig5");
+    save_csv(&dir, "policy_scaling", &["policy", "N", "win_rate", "kl_ppl"], &rows)?;
+
+    // Right panel: RM scaling with the small policy. Completions come from
+    // the tldr_s policy; rewards come from RMs trained at s/m/l scales
+    // (cross-scale scoring is legal: same vocab + sequence geometry).
+    let mut rm_rows = Vec::new();
+    let small = models.first().cloned().unwrap_or_else(|| "tldr_s".into());
+    for rm_model in &models {
+        require_model(args, rm_model)?;
+        for &n in &ns {
+            let mut cfg = base_cfg(args, &small)?;
+            cfg.algo = Algo::Dpo;
+            cfg.n_minibatches = n;
+            eprintln!("[fig5] rm={rm_model} N={n}");
+            let r = run_cross_rm(&cfg, rm_model, args)?;
+            rm_rows.push(vec![
+                rm_model.clone(),
+                n.to_string(),
+                format!("{:.3}", r.0),
+                format!("{:.4}", r.1),
+            ]);
+        }
+    }
+    print_table(
+        "Fig 5 (right): off-policy pareto points vs reward-model scale",
+        &["rm", "N", "win_rate", "kl_ppl"],
+        &rm_rows,
+    );
+    save_csv(&dir, "rm_scaling", &["rm", "N", "win_rate", "kl_ppl"], &rm_rows)?;
+    println!("saved: {}", dir.display());
+    Ok(())
+}
+
+/// Train the small policy against an RM from a different-scale bundle.
+/// Returns (win_rate, kl_ppl).
+fn run_cross_rm(
+    cfg: &crate::config::ExpConfig,
+    rm_model: &str,
+    args: &Args,
+) -> Result<(f32, f32)> {
+    use crate::coordinator::CrossRm;
+    let verbose = !args.has_flag("quiet");
+    let mut prep = coordinator::prepare(cfg, verbose)?;
+    if rm_model != cfg.model {
+        // load the other bundle, train/load its RM, and attach it as a
+        // cross-scale scorer
+        let mut rm_cfg = cfg.clone();
+        rm_cfg.model = rm_model.to_string();
+        let rm_prep = coordinator::prepare(&rm_cfg, verbose)?;
+        prep.cross_rm = Some(CrossRm {
+            engine: rm_prep.engine,
+            params: rm_prep.rm_params.expect("rm task"),
+        });
+        prep.rm_params = None;
+    }
+    let r = run_variant(cfg, &prep, verbose)?;
+    Ok((r.eval.win_rate, r.eval.kl_ppl))
+}

@@ -1,0 +1,149 @@
+//! Fig 1 + Fig 2 + A.2 overhead: the headline sync-vs-async comparison.
+//!
+//! Shapes to reproduce (DESIGN.md §6):
+//! - async matches sync final win-rate at every scale,
+//! - async wall-clock < sync wall-clock, gap growing with scale,
+//! - async step time ≈ max(gen, train) + small overhead (A.2).
+
+use anyhow::Result;
+
+use super::runner::{base_cfg, print_table, run_variant, save_csv};
+use super::{out_dir, require_model};
+use crate::config::Mode;
+use crate::coordinator;
+use crate::metrics::Phase;
+use crate::sim::{analyze, StepCosts};
+use crate::util::args::Args;
+
+pub fn fig1(args: &Args) -> Result<()> {
+    let models: Vec<String> = args
+        .get("models")
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| vec!["tldr_s".into(), "tldr_m".into(), "tldr_l".into()]);
+    let mut rows = Vec::new();
+    for model in &models {
+        require_model(args, model)?;
+        let base = base_cfg(args, model)?;
+        let verbose = !args.has_flag("quiet");
+        let prep = coordinator::prepare(&base, verbose)?;
+        for mode in [Mode::Sync, Mode::Async] {
+            let mut cfg = base.clone();
+            cfg.mode = mode;
+            eprintln!("[fig1] {model} {}", mode.name());
+            let r = run_variant(&cfg, &prep, verbose)?;
+            rows.push(vec![
+                model.clone(),
+                mode.name().to_string(),
+                format!("{:.3}", r.eval.win_rate),
+                format!("{:.4}", r.eval.kl_ppl),
+                format!("{:.1}", r.out.timeline.wall()),
+                r.out.episodes.to_string(),
+            ]);
+        }
+        // speedup row
+        if let [.., s, a] = &rows[..] {
+            let sw: f32 = s[4].parse().unwrap_or(1.0);
+            let aw: f32 = a[4].parse().unwrap_or(1.0);
+            eprintln!(
+                "[fig1] {model}: async {:.1}% faster",
+                (sw / aw - 1.0) * 100.0
+            );
+        }
+    }
+    print_table(
+        "Fig 1: final win-rate and wall-clock, sync vs async (Online DPO)",
+        &["model", "mode", "win_rate", "kl_ppl", "wall_s", "episodes"],
+        &rows,
+    );
+    let dir = out_dir(args).join("fig1");
+    save_csv(&dir, "final",
+             &["model", "mode", "win_rate", "kl_ppl", "wall_s", "episodes"],
+             &rows)?;
+    println!("saved: {}", dir.display());
+    Ok(())
+}
+
+pub fn fig2(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tldr_s").to_string();
+    require_model(args, &model)?;
+    let base = base_cfg(args, &model)?;
+    let verbose = !args.has_flag("quiet");
+    let prep = coordinator::prepare(&base, verbose)?;
+    for mode in [Mode::Sync, Mode::Async] {
+        let mut cfg = base.clone();
+        cfg.mode = mode;
+        cfg.steps = cfg.steps.min(12); // a short window renders legibly
+        let r = run_variant(&cfg, &prep, verbose)?;
+        println!("\n== Fig 2 ({}) measured schedule ==", mode.name());
+        println!("{}", r.out.timeline.render_ascii(96));
+        let totals = r.out.timeline.totals();
+        for (phase, secs) in &totals {
+            println!("  {:<9} {secs:>8.2}s", phase.name());
+        }
+    }
+    Ok(())
+}
+
+/// A.2: overhead decomposition. Measures real per-phase times from a short
+/// async run, then compares the measured wall against the ideal schedule
+/// (max of gen/train) and against sync — in this testbed's ratios and in
+/// the paper's (21 s / 33 s).
+pub fn overhead(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tldr_s").to_string();
+    require_model(args, &model)?;
+    let base = base_cfg(args, &model)?;
+    let verbose = !args.has_flag("quiet");
+    let prep = coordinator::prepare(&base, verbose)?;
+
+    let mut rows = Vec::new();
+    let mut measured: Vec<(Mode, f64, std::collections::BTreeMap<Phase, f64>)> =
+        Vec::new();
+    for mode in [Mode::Sync, Mode::Async] {
+        let mut cfg = base.clone();
+        cfg.mode = mode;
+        let r = run_variant(&cfg, &prep, verbose)?;
+        let totals = r.out.timeline.totals();
+        measured.push((mode, r.out.timeline.wall(), totals.clone()));
+        let steps = cfg.steps as f64;
+        rows.push(vec![
+            mode.name().to_string(),
+            format!("{:.2}", totals.get(&Phase::Generate).unwrap_or(&0.0) / steps),
+            format!("{:.2}", totals.get(&Phase::Score).unwrap_or(&0.0) / steps),
+            format!("{:.2}", totals.get(&Phase::Train).unwrap_or(&0.0) / steps),
+            format!("{:.2}", totals.get(&Phase::Publish).unwrap_or(&0.0) / steps),
+            format!("{:.2}", r.out.timeline.wall() / steps),
+        ]);
+    }
+    print_table(
+        "A.2: measured per-step phase seconds",
+        &["mode", "gen", "score", "train", "publish", "step"],
+        &rows,
+    );
+
+    // ideal vs actual (paper A.2 arithmetic) on measured costs
+    if let [(_, _sync_wall, st), (_, async_wall, _)] = &measured[..] {
+        let steps = base.steps;
+        let per = |p: Phase| st.get(&p).copied().unwrap_or(0.0) / steps as f64;
+        let costs = StepCosts::new(per(Phase::Generate), per(Phase::Score), per(Phase::Train));
+        let a = analyze(&costs, steps);
+        println!("\nideal-schedule analysis on measured costs:");
+        println!("  sync  (model) : {:.1}s", a.sync_wall);
+        println!("  ideal async   : {:.1}s ({:+.1}%)", a.ideal_wall, a.ideal_speedup_pct);
+        println!(
+            "  actual async  : {:.1}s (overhead {:.2}s/step)",
+            async_wall,
+            (async_wall - a.ideal_wall).max(0.0) / steps as f64
+        );
+    }
+
+    // the paper's own numbers through the same analyzer
+    let paper = analyze(&StepCosts::new(21.0, 0.0, 33.0), 233);
+    println!("\npaper №Robots costs (21 s gen / 33 s train, 233 steps):");
+    println!(
+        "  sync {:.0} min, ideal async {:.0} min ({:+.0}%)",
+        paper.sync_wall / 60.0,
+        paper.ideal_wall / 60.0,
+        paper.ideal_speedup_pct
+    );
+    Ok(())
+}

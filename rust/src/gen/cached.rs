@@ -1,0 +1,80 @@
+//! KV-cache incremental-decode engine (step-wise).
+//!
+//! One `prefill` call builds the cache for all fixed-length prompts; each
+//! subsequent `decode` call advances every row by one token with the host
+//! sampling in between. Early exit once all rows have terminated.
+//!
+//! This engine is the middle tier of the Fig-14 comparison: linear decode
+//! (vs the naive engine's quadratic recompute) but it pays a host<->device
+//! round-trip of the KV cache per token through the PJRT literal API. The
+//! top tier, [`super::fused::FusedEngine`], moves the whole loop on-device
+//! (EXPERIMENTS.md §Perf).
+
+use anyhow::Result;
+
+use super::{DecodeState, GenBatch, Generator, SampleOpts};
+use crate::runtime::{scalar_i32, Engine, HostTensor};
+use crate::util::rng::Pcg32;
+
+#[derive(Default)]
+pub struct CachedEngine;
+
+impl Generator for CachedEngine {
+    fn name(&self) -> &'static str {
+        "cached"
+    }
+
+    fn generate(
+        &self,
+        engine: &Engine,
+        params: &[f32],
+        prompts: &[Vec<i32>],
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Result<GenBatch> {
+        let cfg = &engine.manifest.config;
+        let (b, p, s, v) = (cfg.gen_batch, cfg.prompt_len, cfg.seq_len, cfg.vocab);
+        assert_eq!(prompts.len(), b, "gen_batch is fixed at {b}");
+
+        let mut st = DecodeState::new(prompts, p, s);
+
+        // prefill: prompt -> kv cache + logits for position p
+        let mut prompt_flat = Vec::with_capacity(b * p);
+        for row in prompts {
+            prompt_flat.extend_from_slice(&row[..p]);
+        }
+        let out = engine.call(
+            "prefill",
+            &[
+                HostTensor::F32(params.to_vec()),
+                HostTensor::I32(prompt_flat),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let mut kv = it.next().unwrap();
+        let mut logits = it.next().unwrap().into_f32()?;
+
+        let mut steps = 0;
+        for pos in p..s {
+            steps += 1;
+            let sampled = st.step(pos, &logits, v, opts, rng);
+            if st.all_done() || pos + 1 == s {
+                break;
+            }
+            // decode: token at `pos` -> logits for pos+1, updated cache
+            let out = engine.call(
+                "decode",
+                &[
+                    HostTensor::F32(params.to_vec()),
+                    kv,
+                    HostTensor::I32(sampled),
+                    scalar_i32(pos as i32),
+                ],
+            )?;
+            let mut it = out.into_iter();
+            logits = it.next().unwrap().into_f32()?;
+            kv = it.next().unwrap();
+        }
+        Ok(st.finish(steps))
+    }
+}

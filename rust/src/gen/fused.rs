@@ -1,0 +1,89 @@
+//! Fused on-device generation engine — the production hot path.
+//!
+//! The entire sampling loop (prefill + per-token decode + categorical
+//! sampling + EOS freezing + behaviour-logprob recording) is compiled into
+//! ONE `generate` executable; the KV cache lives inside the XLA while-loop
+//! and never touches the host. One PJRT call per round, versus resp_len
+//! calls (each round-tripping the multi-MB cache) for the step-wise
+//! [`super::cached::CachedEngine`]. Before/after numbers: EXPERIMENTS.md
+//! §Perf.
+//!
+//! Sampling happens in XLA (threefry), seeded per round from the caller's
+//! PRNG — runs remain deterministic per seed, but token streams differ
+//! from the host-sampled engines (which are mutually identical); the
+//! correctness anchor is the blp-vs-logprob invariant, tested for all
+//! engines.
+
+use anyhow::Result;
+
+use super::{GenBatch, Generator, SampleOpts};
+use crate::runtime::{scalar_f32, scalar_i32, Engine, HostTensor};
+use crate::tokenizer as tk;
+use crate::util::rng::Pcg32;
+
+#[derive(Default)]
+pub struct FusedEngine;
+
+impl Generator for FusedEngine {
+    fn name(&self) -> &'static str {
+        "fused"
+    }
+
+    fn generate(
+        &self,
+        engine: &Engine,
+        params: &[f32],
+        prompts: &[Vec<i32>],
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Result<GenBatch> {
+        let cfg = &engine.manifest.config;
+        let (b, p, s) = (cfg.gen_batch, cfg.prompt_len, cfg.seq_len);
+        assert_eq!(prompts.len(), b, "gen_batch is fixed at {b}");
+        let mut prompt_flat = Vec::with_capacity(b * p);
+        for row in prompts {
+            assert_eq!(row.len(), p, "prompts must be fixed-length");
+            prompt_flat.extend_from_slice(&row[..p]);
+        }
+        // temperature <= 0 selects greedy argmax inside the executable
+        let temp = if opts.greedy { -1.0 } else { opts.temperature };
+        let seed = (rng.next_u32() >> 1) as i32; // non-negative seed
+        let out = engine.call(
+            "generate",
+            &[
+                HostTensor::F32(params.to_vec()),
+                HostTensor::I32(prompt_flat),
+                scalar_i32(seed),
+                scalar_f32(temp),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let toks_flat = it.next().unwrap().into_i32()?;
+        let mask_flat = it.next().unwrap().into_f32()?;
+        let blp_flat = it.next().unwrap().into_f32()?;
+
+        let mut tokens = Vec::with_capacity(b);
+        let mut resp_mask = Vec::with_capacity(b);
+        let mut blp = Vec::with_capacity(b);
+        let mut terminated = Vec::with_capacity(b);
+        for i in 0..b {
+            let t = toks_flat[i * s..(i + 1) * s].to_vec();
+            let m = mask_flat[i * s..(i + 1) * s].to_vec();
+            terminated.push(
+                t.iter()
+                    .zip(&m)
+                    .any(|(&tok, &mm)| tok == tk::EOS && mm == 1.0),
+            );
+            tokens.push(t);
+            resp_mask.push(m);
+            blp.push(blp_flat[i * s..(i + 1) * s].to_vec());
+        }
+        Ok(GenBatch {
+            tokens,
+            resp_mask,
+            blp,
+            terminated,
+            steps: s - p, // fixed-length loop: no early exit on device
+        })
+    }
+}

@@ -1,0 +1,204 @@
+//! Generation engines (paper §2.3 / Fig 14 substitution, DESIGN.md §3).
+//!
+//! Two engines over the *same* compiled model:
+//! - [`cached::CachedEngine`] — the vLLM analogue: one prefill over the
+//!   prompt, then incremental single-token decode against a KV cache,
+//!   with early exit once every row has terminated. Per-token cost is
+//!   O(S) — linear decode.
+//! - [`naive::NaiveEngine`] — the HuggingFace-transformers analogue: the
+//!   full padded sequence is re-forwarded for every new token. Per-token
+//!   cost is O(S^2) — the quadratic recompute that makes training-library
+//!   generation infeasible at scale (paper Fig 14).
+//!
+//! - [`fused::FusedEngine`] — the production hot path: the whole sampling
+//!   loop fused into one `generate` executable, KV cache device-resident,
+//!   one PJRT call per round (EXPERIMENTS.md §Perf).
+//!
+//! The cached and naive engines walk the same host RNG stream, so with
+//! equal seeds they emit *identical* sequences (an integration-tested
+//! invariant); the fused engine samples on-device (threefry) — its
+//! correctness anchor is the blp-vs-logprob invariant shared by all
+//! engines.
+
+pub mod cached;
+pub mod fused;
+pub mod naive;
+pub mod sampler;
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+use crate::tokenizer as tk;
+use crate::util::rng::Pcg32;
+
+/// One generation round over the fixed gen_batch.
+#[derive(Debug, Clone)]
+pub struct GenBatch {
+    /// Full sequences [B][S]: prompt ++ sampled response (incl. EOS) ++ PAD.
+    pub tokens: Vec<Vec<i32>>,
+    /// 1.0 exactly on response positions incl. EOS.
+    pub resp_mask: Vec<Vec<f32>>,
+    /// Behaviour token logprobs under the generating params, aligned with
+    /// `tokens` (0 outside the response).
+    pub blp: Vec<Vec<f32>>,
+    /// Whether each row terminated with EOS within resp_len.
+    pub terminated: Vec<bool>,
+    /// Decode steps actually executed (< resp_len with early exit).
+    pub steps: usize,
+}
+
+impl GenBatch {
+    /// Response tokens of row `i` (everything after the prompt, incl. EOS,
+    /// excl. PAD).
+    pub fn response(&self, i: usize, prompt_len: usize) -> &[i32] {
+        let toks = &self.tokens[i];
+        let end = self.resp_mask[i]
+            .iter()
+            .rposition(|&m| m == 1.0)
+            .map(|p| p + 1)
+            .unwrap_or(prompt_len);
+        &toks[prompt_len..end]
+    }
+}
+
+/// Sampling parameters for one generation round.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleOpts {
+    pub temperature: f32,
+    pub greedy: bool,
+}
+
+impl Default for SampleOpts {
+    fn default() -> Self {
+        SampleOpts { temperature: 0.7, greedy: false }
+    }
+}
+
+pub trait Generator {
+    fn name(&self) -> &'static str;
+
+    /// Generate responses for exactly `gen_batch` prompts using `params`.
+    fn generate(
+        &self,
+        engine: &Engine,
+        params: &[f32],
+        prompts: &[Vec<i32>],
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Result<GenBatch>;
+}
+
+/// Shared decode-loop state machine: token bookkeeping, EOS termination,
+/// mask/blp recording. Engines feed it one logits matrix per step.
+pub(crate) struct DecodeState {
+    pub tokens: Vec<Vec<i32>>,
+    pub resp_mask: Vec<Vec<f32>>,
+    pub blp: Vec<Vec<f32>>,
+    pub done: Vec<bool>,
+}
+
+impl DecodeState {
+    pub fn new(prompts: &[Vec<i32>], prompt_len: usize, seq_len: usize) -> Self {
+        let b = prompts.len();
+        let mut tokens = Vec::with_capacity(b);
+        for p in prompts {
+            assert_eq!(p.len(), prompt_len, "prompts must be fixed-length");
+            let mut row = p.clone();
+            row.resize(seq_len, tk::PAD);
+            tokens.push(row);
+        }
+        DecodeState {
+            tokens,
+            resp_mask: vec![vec![0.0; seq_len]; b],
+            blp: vec![vec![0.0; seq_len]; b],
+            done: vec![false; b],
+        }
+    }
+
+    /// Consume logits for position `pos` (i.e. logits predicting the token
+    /// AT `pos`), sample one token per row, record mask/blp/termination.
+    /// Returns the sampled tokens (PAD for finished rows).
+    pub fn step(
+        &mut self,
+        pos: usize,
+        logits: &[f32],
+        vocab: usize,
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Vec<i32> {
+        let b = self.tokens.len();
+        debug_assert_eq!(logits.len(), b * vocab);
+        let mut sampled = vec![tk::PAD; b];
+        for i in 0..b {
+            // one rng draw per row per step, even when finished, so every
+            // engine walks the stream identically (see module docs)
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let (tok, lp) = sampler::sample(row, opts.temperature, opts.greedy, rng);
+            if self.done[i] {
+                continue;
+            }
+            let tok = tok as i32;
+            self.tokens[i][pos] = tok;
+            self.resp_mask[i][pos] = 1.0;
+            self.blp[i][pos] = lp;
+            sampled[i] = tok;
+            if tok == tk::EOS {
+                self.done[i] = true;
+            }
+        }
+        sampled
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.done.iter().all(|&d| d)
+    }
+
+    pub fn finish(self, steps: usize) -> GenBatch {
+        GenBatch {
+            terminated: self.done.clone(),
+            tokens: self.tokens,
+            resp_mask: self.resp_mask,
+            blp: self.blp,
+            steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_state_records_response() {
+        let prompts = vec![vec![tk::BOS, 30], vec![tk::BOS, 31]];
+        let mut st = DecodeState::new(&prompts, 2, 6);
+        let vocab = 64;
+        let mut rng = Pcg32::new(0, 0);
+        // force tokens: row0 -> 40, row1 -> EOS
+        let mut logits = vec![0.0f32; 2 * vocab];
+        logits[40] = 50.0;
+        logits[vocab + tk::EOS as usize] = 50.0;
+        let toks =
+            st.step(2, &logits, vocab, SampleOpts { temperature: 0.7, greedy: true }, &mut rng);
+        assert_eq!(toks, vec![40, tk::EOS]);
+        assert!(st.done[1] && !st.done[0]);
+        assert_eq!(st.resp_mask[1][2], 1.0);
+        // next step: row1 is finished, stays PAD
+        let toks = st.step(3, &logits, vocab, SampleOpts { temperature: 0.7, greedy: true }, &mut rng);
+        assert_eq!(toks[1], tk::PAD);
+        assert_eq!(st.tokens[1][3], tk::PAD);
+        assert_eq!(st.resp_mask[1][3], 0.0);
+    }
+
+    #[test]
+    fn genbatch_response_slicing() {
+        let gb = GenBatch {
+            tokens: vec![vec![1, 30, 40, 41, tk::EOS, 0]],
+            resp_mask: vec![vec![0., 0., 1., 1., 1., 0.]],
+            blp: vec![vec![0.0; 6]],
+            terminated: vec![true],
+            steps: 3,
+        };
+        assert_eq!(gb.response(0, 2), &[40, 41, tk::EOS]);
+    }
+}

@@ -1,0 +1,67 @@
+//! Full-recompute generation engine — the HF-transformers analogue.
+//!
+//! Every new token re-forwards the entire padded sequence through
+//! `forward_full` and slices the logits at the current position: O(S) work
+//! per token -> O(S^2) per response, versus the cached engine's O(S).
+//! This is the baseline whose gap to the cached engine reproduces paper
+//! Fig 14 / Appendix C.1 (vLLM is 12-20x faster than transformers, and the
+//! gap grows superlinearly with model size).
+
+use anyhow::Result;
+
+use super::{DecodeState, GenBatch, Generator, SampleOpts};
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::Pcg32;
+
+#[derive(Default)]
+pub struct NaiveEngine;
+
+impl Generator for NaiveEngine {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn generate(
+        &self,
+        engine: &Engine,
+        params: &[f32],
+        prompts: &[Vec<i32>],
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Result<GenBatch> {
+        let cfg = &engine.manifest.config;
+        let (b, p, s, v) = (cfg.gen_batch, cfg.prompt_len, cfg.seq_len, cfg.vocab);
+        assert_eq!(prompts.len(), b, "gen_batch is fixed at {b}");
+
+        let mut st = DecodeState::new(prompts, p, s);
+        let mut steps = 0;
+        for pos in p..s {
+            steps += 1;
+            // recompute the whole sequence to get logits at pos-1 (which
+            // predict the token at pos) — the training-library way
+            let mut toks_flat = Vec::with_capacity(b * s);
+            for row in &st.tokens {
+                toks_flat.extend_from_slice(row);
+            }
+            let out = engine.call(
+                "forward_full",
+                &[
+                    HostTensor::F32(params.to_vec()),
+                    HostTensor::I32(toks_flat),
+                ],
+            )?;
+            let logits_all = out.into_iter().next().unwrap().into_f32()?;
+            // slice [B, S, V] at position pos-1
+            let mut logits = Vec::with_capacity(b * v);
+            for i in 0..b {
+                let base = i * s * v + (pos - 1) * v;
+                logits.extend_from_slice(&logits_all[base..base + v]);
+            }
+            st.step(pos, &logits, v, opts, rng);
+            if st.all_done() {
+                break;
+            }
+        }
+        Ok(st.finish(steps))
+    }
+}

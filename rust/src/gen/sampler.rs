@@ -1,0 +1,135 @@
+//! Token sampling from host logits.
+//!
+//! The sampling distribution is temperature-scaled softmax (paper Tables
+//! 4/7: temperature 0.7); the recorded *behaviour logprob* is the
+//! untempered log-softmax at the sampled token — i.e. log pi_theta(y|x) of
+//! the generating parameters, matching what the `logprob` executable
+//! computes, so on-policy IS ratios are exactly 1 (a tested invariant).
+
+use crate::util::rng::Pcg32;
+
+/// Numerically-stable log-softmax value at index `idx`.
+pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&x| (x - m).exp()).sum::<f32>().ln() + m;
+    logits[idx] - lse
+}
+
+/// Sample one token. Returns (token, untempered logprob of that token).
+/// `greedy` ignores temperature and takes the argmax (used by pass@1 eval).
+///
+/// Always consumes exactly one uniform draw from `rng`, so different
+/// engines walking the same rng stream produce identical sequences.
+pub fn sample(
+    logits: &[f32],
+    temperature: f32,
+    greedy: bool,
+    rng: &mut Pcg32,
+) -> (usize, f32) {
+    let u = rng.gen_f64(); // consumed unconditionally (see docstring)
+    let tok = if greedy {
+        argmax(logits)
+    } else {
+        sample_temp(logits, temperature, u)
+    };
+    (tok, log_softmax_at(logits, tok))
+}
+
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn sample_temp(logits: &[f32], temperature: f32, u: f64) -> usize {
+    let t = temperature.max(1e-4);
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f64> = logits
+        .iter()
+        .map(|&x| (((x - m) / t) as f64).exp())
+        .collect();
+    let total: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= total;
+    }
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_takes_argmax() {
+        let mut rng = Pcg32::new(0, 0);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let (tok, lp) = sample(&logits, 0.7, true, &mut rng);
+        assert_eq!(tok, 1);
+        assert!(lp < 0.0);
+    }
+
+    #[test]
+    fn logprob_is_untempered() {
+        let logits = vec![1.0, 2.0, 3.0];
+        let lp = log_softmax_at(&logits, 2);
+        let expect = 3.0
+            - ((1.0f32).exp() + (2.0f32).exp() + (3.0f32).exp()).ln();
+        assert!((lp - expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Pcg32::new(1, 0);
+        let logits = vec![0.0, 1.0, 0.5];
+        let n = 1000;
+        let hits = (0..n)
+            .filter(|_| sample(&logits, 0.05, false, &mut rng).0 == 1)
+            .count();
+        assert!(hits > n * 95 / 100, "hits={hits}");
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let mut rng = Pcg32::new(2, 0);
+        let logits = vec![0.0, 1.0, 0.5];
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[sample(&logits, 10.0, false, &mut rng).0] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 500), "{counts:?}");
+    }
+
+    #[test]
+    fn sampling_frequencies_match_distribution() {
+        let mut rng = Pcg32::new(3, 0);
+        let logits = vec![0.0f32, (2.0f32).ln()]; // probs 1/3, 2/3 at t=1
+        let n = 30_000;
+        let ones = (0..n)
+            .filter(|_| sample(&logits, 1.0, false, &mut rng).0 == 1)
+            .count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 2.0 / 3.0).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn rng_consumption_is_constant() {
+        // greedy and sampled paths consume the same number of draws
+        let mut a = Pcg32::new(9, 0);
+        let mut b = Pcg32::new(9, 0);
+        let logits = vec![0.0, 1.0];
+        sample(&logits, 0.7, true, &mut a);
+        sample(&logits, 0.7, false, &mut b);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,31 @@
+//! # async-rlhf
+//!
+//! A Rust + JAX + Pallas reproduction of *Asynchronous RLHF: Faster and
+//! More Efficient Off-Policy RL for Language Models* (ICLR 2025).
+//!
+//! Three layers (DESIGN.md):
+//! - **L3 (this crate)**: the asynchronous RLHF coordinator — generation
+//!   and training on separate threads/backends, one-step off-policy
+//!   Cleanba-style scheduling, plus the synchronous baseline, the
+//!   off-policyness schedules (N mini-batches, T epochs, best-of-K), task
+//!   data generators, gold/proxy rewards, generation engines, metrics and
+//!   experiment runners.
+//! - **L2 (python/compile)**: the JAX transformer, RLHF loss zoo and Adam,
+//!   AOT-lowered to HLO text executables.
+//! - **L1 (python/compile/kernels)**: Pallas flash-attention kernels.
+//!
+//! Python never runs at training/serving time: `runtime::Engine` executes
+//! the compiled artifacts through PJRT.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod gen;
+pub mod metrics;
+pub mod reward;
+pub mod runtime;
+pub mod sim;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,241 @@
+//! async-rlhf CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//!   info   <model>          — show a config's manifest summary
+//!   train  <model> [...]    — run one RLHF experiment (sync or async)
+//!   exp    <id> [...]       — regenerate a paper figure/table (see DESIGN.md §6)
+//!   sim    [...]            — clock-simulate sync vs async schedules
+//!   config show <model>     — print baked hyperparameters (paper Tables 4-7, 10)
+//!
+//! Examples:
+//!   async-rlhf train tldr_s --algo dpo --mode async --steps 96
+//!   async-rlhf exp fig3 --steps 64
+//!   async-rlhf sim --gen 21 --train 33 --steps 233
+
+use anyhow::{anyhow, bail, Result};
+
+use async_rlhf::config::ExpConfig;
+use async_rlhf::coordinator;
+use async_rlhf::data::Task;
+use async_rlhf::eval::evaluate;
+use async_rlhf::experiments;
+use async_rlhf::runtime::{artifacts_root, Manifest};
+use async_rlhf::sim::{analyze, simulate_async, simulate_sync, StepCosts};
+use async_rlhf::util::args::Args;
+
+const BOOL_FLAGS: &[&str] = &["quiet", "naive", "greedy", "force"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, BOOL_FLAGS).map_err(|e| anyhow!("{e}"))?;
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("pretrain") => cmd_pretrain(&args),
+        Some("exp") => experiments::run(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("config") => cmd_config(&args),
+        Some(other) => bail!("unknown subcommand '{other}'\n{}", usage()),
+        None => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: async-rlhf <info|train|exp|sim|config> [options]\n\
+     run `async-rlhf exp list` for the paper figure/table index"
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: info <model>"))?;
+    let dir = artifacts_root(args.get("artifacts")).join(model);
+    let m = Manifest::load(&dir)?;
+    println!("config   : {}", m.config.name);
+    println!(
+        "model    : d={} layers={} heads={} vocab={} ({} params)",
+        m.config.d_model,
+        m.config.n_layers,
+        m.config.n_heads,
+        m.config.vocab,
+        m.param_count
+    );
+    println!(
+        "task     : {} (prompt {}, resp {}, seq {})",
+        m.config.task, m.config.prompt_len, m.config.resp_len, m.config.seq_len
+    );
+    println!(
+        "batches  : gen {} / pairs {}",
+        m.config.gen_batch, m.config.train_pairs
+    );
+    println!("artifacts:");
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {name:<14} {} in / {} out{}",
+            a.inputs.len(),
+            a.outputs.len(),
+            if a.metrics.is_empty() {
+                String::new()
+            } else {
+                format!("  metrics: {}", a.metrics.join(","))
+            }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = ExpConfig::from_args(args)?;
+    let verbose = !args.has_flag("quiet");
+    let prep = coordinator::prepare(&cfg, verbose)?;
+    let task = prep.taskgen.task;
+
+    eprintln!("[train] {}", cfg.label());
+    let out = coordinator::run(&cfg, &prep, verbose)?;
+
+    let result = evaluate(
+        &prep.engine,
+        &out.final_params,
+        &prep.sft_params,
+        &prep.taskgen,
+        cfg.eval_prompts,
+        cfg.temperature,
+        cfg.seed,
+    )?;
+    println!("final  : {}", result.summary(task));
+    println!(
+        "wall   : {:.1}s for {} episodes ({} steps)",
+        out.timeline.wall(),
+        out.episodes,
+        cfg.steps
+    );
+    let totals = out.timeline.totals();
+    for (phase, secs) in &totals {
+        println!("  {:<9} {secs:>8.2}s", phase.name());
+    }
+
+    // persist logs
+    let run_dir = cfg.run_dir.join(cfg.label());
+    out.log.save(&run_dir, "train")?;
+    println!("logs   : {}", run_dir.display());
+    if task == Task::Math {
+        println!("pass@1 : {:.1}%", result.pass1 * 100.0);
+    }
+    Ok(())
+}
+
+/// Debug view of the SFT/RM pipeline: loss curves + sample generations.
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    use async_rlhf::gen::{cached::CachedEngine, Generator, SampleOpts};
+    use async_rlhf::metrics::RunLog;
+    use async_rlhf::tokenizer::detok;
+    use async_rlhf::util::rng::Pcg32;
+
+    let cfg = ExpConfig::from_args(args)?;
+    let prep_dir = cfg.run_dir.join("checkpoints");
+    if args.has_flag("force") {
+        let _ = std::fs::remove_dir_all(&prep_dir);
+    }
+    let engine = async_rlhf::runtime::Engine::load(&cfg.artifact_dir())?;
+    let mcfg = engine.manifest.config.clone();
+    let task = Task::from_name(&mcfg.task).unwrap();
+    let taskgen = async_rlhf::data::TaskGen::new(
+        task, mcfg.prompt_len, mcfg.resp_len, cfg.seed,
+    );
+    let mut log = RunLog::new();
+    let sft = async_rlhf::coordinator::pretrain::sft_checkpoint(
+        &engine, &taskgen, &cfg.run_dir, cfg.sft_steps, Some(&mut log),
+    )?;
+    println!("sft loss curve (every 20 steps):");
+    for (step, loss) in log.series("sft_loss") {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    // sample generations vs references
+    let examples = taskgen.batch(10_000_000, mcfg.gen_batch);
+    let prompts: Vec<Vec<i32>> =
+        examples.iter().map(|e| e.prompt.clone()).collect();
+    let mut rng = Pcg32::new(0, 0);
+    let gen = CachedEngine.generate(
+        &engine, &sft, &prompts, SampleOpts::default(), &mut rng,
+    )?;
+    for i in 0..6.min(prompts.len()) {
+        println!("prompt: {}", detok(&examples[i].prompt));
+        println!("  ref : {}", detok(&examples[i].reference));
+        println!("  gen : {}", detok(gen.response(i, mcfg.prompt_len)));
+    }
+    let ev = evaluate(&engine, &sft, &sft, &taskgen, cfg.eval_prompts,
+                      cfg.temperature, cfg.seed)?;
+    println!("eval: {}", ev.summary(task));
+
+    if task != Task::Math && cfg.rm_steps > 0 {
+        let mut rm_log = RunLog::new();
+        let _rm = async_rlhf::coordinator::pretrain::rm_checkpoint(
+            &engine, &taskgen, &sft, &cfg.run_dir, cfg.rm_steps, cfg.seed,
+            Some(&mut rm_log),
+        )?;
+        println!("rm loss/acc curve:");
+        for row in &rm_log.rows {
+            println!(
+                "  step {:>5}  loss {:.4}  acc {:.3}",
+                row.step,
+                row.values.get("rm_loss").unwrap_or(&f32::NAN),
+                row.values.get("rm_acc").unwrap_or(&f32::NAN)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let gen: f64 = args.get_parse("gen", 21.0)?;
+    let score: f64 = args.get_parse("score", 0.0)?;
+    let train: f64 = args.get_parse("train", 33.0)?;
+    let publish: f64 = args.get_parse("publish", 0.0)?;
+    let steps: u64 = args.get_parse("steps", 233)?;
+    let costs = StepCosts::new(gen, score, train).with_publish(publish);
+
+    let s = simulate_sync(&costs, steps);
+    let a = simulate_async(&costs, steps);
+    let an = analyze(&costs, steps);
+    println!(
+        "costs          : gen {gen}s score {score}s train {train}s publish {publish}s x{steps} steps"
+    );
+    println!("sync wall      : {:>10.1}s", s.wall);
+    println!(
+        "async wall     : {:>10.1}s  ({:+.1}% speedup)",
+        a.wall, an.speedup_pct
+    );
+    println!(
+        "ideal async    : {:>10.1}s  ({:+.1}% speedup, overhead {:.2}s/step)",
+        an.ideal_wall, an.ideal_speedup_pct, an.overhead_per_step
+    );
+    println!("\nsync schedule (first steps):");
+    println!("{}", s.timeline.render_ascii(72));
+    println!("async schedule:");
+    println!("{}", a.timeline.render_ascii(72));
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let model = args
+        .positional
+        .iter()
+        .find(|p| p.as_str() != "show")
+        .ok_or_else(|| anyhow!("usage: config show <model>"))?;
+    let dir = artifacts_root(args.get("artifacts")).join(model);
+    let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let j = async_rlhf::util::json::Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    println!("{}", j.req("config").map_err(|e| anyhow!("{e}"))?);
+    Ok(())
+}

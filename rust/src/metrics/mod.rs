@@ -1,0 +1,323 @@
+//! Metrics: per-step run logs, win-rate/KL accounting, and wall-clock
+//! timelines (the paper's evaluation axes: gold win-rate, KL-as-perplexity,
+//! episodes, compute time).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One logged training step.
+#[derive(Debug, Clone)]
+pub struct StepRow {
+    pub step: u64,
+    pub episodes: u64,
+    pub wall_secs: f64,
+    pub values: BTreeMap<String, f32>,
+}
+
+/// Append-only run log with CSV/JSON export.
+#[derive(Debug, Default)]
+pub struct RunLog {
+    pub rows: Vec<StepRow>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl RunLog {
+    pub fn new() -> RunLog {
+        RunLog::default()
+    }
+
+    pub fn set_meta(&mut self, key: &str, value: impl ToString) {
+        self.meta.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn push(
+        &mut self,
+        step: u64,
+        episodes: u64,
+        wall_secs: f64,
+        values: &[(&str, f32)],
+    ) {
+        self.rows.push(StepRow {
+            step,
+            episodes,
+            wall_secs,
+            values: values
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect(),
+        });
+    }
+
+    /// Latest value of a metric, if any step recorded it.
+    pub fn last(&self, key: &str) -> Option<f32> {
+        self.rows
+            .iter()
+            .rev()
+            .find_map(|r| r.values.get(key).copied())
+    }
+
+    /// Mean of a metric over the last `n` steps that recorded it.
+    pub fn recent_mean(&self, key: &str, n: usize) -> Option<f32> {
+        let vals: Vec<f32> = self
+            .rows
+            .iter()
+            .rev()
+            .filter_map(|r| r.values.get(key).copied())
+            .take(n)
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f32>() / vals.len() as f32)
+        }
+    }
+
+    /// All (step, value) points of one metric (for curves).
+    pub fn series(&self, key: &str) -> Vec<(u64, f32)> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.values.get(key).map(|v| (r.step, *v)))
+            .collect()
+    }
+
+    fn columns(&self) -> Vec<String> {
+        let mut cols: Vec<String> = Vec::new();
+        for r in &self.rows {
+            for k in r.values.keys() {
+                if !cols.contains(k) {
+                    cols.push(k.clone());
+                }
+            }
+        }
+        cols
+    }
+
+    pub fn to_csv(&self) -> String {
+        let cols = self.columns();
+        let mut out = String::from("step,episodes,wall_secs");
+        for c in &cols {
+            let _ = write!(out, ",{c}");
+        }
+        out.push('\n');
+        for r in &self.rows {
+            let _ = write!(out, "{},{},{:.3}", r.step, r.episodes, r.wall_secs);
+            for c in &cols {
+                match r.values.get(c) {
+                    Some(v) => {
+                        let _ = write!(out, ",{v}");
+                    }
+                    None => out.push(','),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut obj = vec![
+                    ("step", Json::num(r.step as f64)),
+                    ("episodes", Json::num(r.episodes as f64)),
+                    ("wall_secs", Json::num(r.wall_secs)),
+                ];
+                for (k, v) in &r.values {
+                    obj.push((k.as_str(), Json::num(*v as f64)));
+                }
+                Json::Obj(
+                    obj.into_iter()
+                        .map(|(k, v)| (k.to_string(), v))
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "meta",
+                Json::Obj(
+                    self.meta
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    pub fn save(&self, dir: &Path, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{name}.csv")))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let mut f = std::fs::File::create(dir.join(format!("{name}.json")))?;
+        f.write_all(self.to_json().to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Phase timeline for overhead analysis (paper A.2) and Fig 2/6 rendering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Generate,
+    Score,
+    Train,
+    Publish,
+    Eval,
+    Idle,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Generate => "generate",
+            Phase::Score => "score",
+            Phase::Train => "train",
+            Phase::Publish => "publish",
+            Phase::Eval => "eval",
+            Phase::Idle => "idle",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub phase: Phase,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Records (phase, start, end) spans against a common origin.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    origin: Instant,
+    pub spans: Vec<Span>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline { origin: Instant::now(), spans: Vec::new() }
+    }
+
+    pub fn shared_origin(origin: Instant) -> Timeline {
+        Timeline { origin, spans: Vec::new() }
+    }
+
+    pub fn origin(&self) -> Instant {
+        self.origin
+    }
+
+    pub fn record<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let start = self.origin.elapsed().as_secs_f64();
+        let out = f();
+        let end = self.origin.elapsed().as_secs_f64();
+        self.spans.push(Span { phase, start, end });
+        out
+    }
+
+    pub fn push_span(&mut self, phase: Phase, start: f64, end: f64) {
+        self.spans.push(Span { phase, start, end });
+    }
+
+    /// Total seconds spent per phase.
+    pub fn totals(&self) -> BTreeMap<Phase, f64> {
+        let mut m = BTreeMap::new();
+        for s in &self.spans {
+            *m.entry(s.phase).or_insert(0.0) += s.end - s.start;
+        }
+        m
+    }
+
+    pub fn wall(&self) -> f64 {
+        self.spans
+            .iter()
+            .map(|s| s.end)
+            .fold(0.0, f64::max)
+    }
+
+    /// ASCII rendering of the first `width`-seconds window, one lane per
+    /// phase (Fig 2-style visualization in the terminal).
+    pub fn render_ascii(&self, width: usize) -> String {
+        let wall = self.wall().max(1e-9);
+        let mut out = String::new();
+        for phase in [Phase::Generate, Phase::Score, Phase::Train,
+                      Phase::Publish, Phase::Eval] {
+            let mut lane = vec![b'.'; width];
+            for s in self.spans.iter().filter(|s| s.phase == phase) {
+                let a = ((s.start / wall) * width as f64) as usize;
+                let b = (((s.end / wall) * width as f64).ceil() as usize)
+                    .min(width);
+                for c in lane.iter_mut().take(b).skip(a.min(width)) {
+                    *c = b'#';
+                }
+            }
+            let _ = writeln!(
+                out,
+                "{:>9} |{}|",
+                phase.name(),
+                String::from_utf8(lane).unwrap()
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runlog_roundtrip() {
+        let mut log = RunLog::new();
+        log.push(1, 32, 0.5, &[("loss", 1.5), ("win", 0.25)]);
+        log.push(2, 64, 1.0, &[("loss", 1.2)]);
+        assert_eq!(log.last("win"), Some(0.25));
+        assert_eq!(log.last("loss"), Some(1.2));
+        assert_eq!(log.recent_mean("loss", 2), Some(1.35));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,episodes,wall_secs,loss,win"));
+        assert_eq!(csv.lines().count(), 3);
+        // json parses back
+        let j = Json::parse(&log.to_json().to_string()).unwrap();
+        assert_eq!(j.req("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn series_extracts_curve() {
+        let mut log = RunLog::new();
+        for i in 0..5 {
+            log.push(i, 0, 0.0, &[("x", i as f32)]);
+        }
+        let s = log.series("x");
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[3], (3, 3.0));
+    }
+
+    #[test]
+    fn timeline_totals() {
+        let mut t = Timeline::new();
+        t.push_span(Phase::Generate, 0.0, 1.0);
+        t.push_span(Phase::Train, 1.0, 3.0);
+        t.push_span(Phase::Generate, 3.0, 3.5);
+        let totals = t.totals();
+        assert!((totals[&Phase::Generate] - 1.5).abs() < 1e-9);
+        assert!((totals[&Phase::Train] - 2.0).abs() < 1e-9);
+        assert!((t.wall() - 3.5).abs() < 1e-9);
+        let art = t.render_ascii(40);
+        assert!(art.contains("generate"));
+        assert!(art.contains('#'));
+    }
+}

@@ -1,0 +1,176 @@
+//! Programmatic gold reward functions — the ground-truth labeller.
+//!
+//! Substitution for the paper's 6.7B "gold" reward model (DESIGN.md §3):
+//! a fixed, hidden scorer used to (a) label preference pairs for proxy-RM
+//! training, (b) compute gold win-rates at evaluation. The proxy RM only
+//! ever sees finite samples of gold judgements, so proxy/gold divergence
+//! (overoptimization, Gao et al. 2022) arises exactly as in the paper.
+
+use crate::data::TaskMeta;
+use crate::tokenizer as tk;
+
+/// Score a raw response (resp_len tokens as generated, possibly containing
+/// EOS) against the ground truth. Higher is better. Scores are roughly in
+/// [-2, 2] for tldr/chat and {0, 1} for math.
+pub fn score(meta: &TaskMeta, resp: &[i32]) -> f32 {
+    match meta {
+        TaskMeta::Tldr { salient } => score_tldr(salient, resp),
+        TaskMeta::Math { answer } => score_math(answer, resp),
+        TaskMeta::Chat { target } => score_chat(target, resp),
+    }
+}
+
+/// TLDR: coverage of salient tokens, brevity, non-repetition, termination.
+///
+/// Designed so that the optimum is "exactly the distinct salient tokens,
+/// then EOS", while leaving hackable slack (e.g. the proxy RM may not
+/// notice repetition) to reproduce overoptimization dynamics.
+fn score_tldr(salient: &[i32], resp: &[i32]) -> f32 {
+    let (body, has_eos) = tk::trim_at_eos(resp);
+    let n = salient.len().max(1) as f32;
+
+    let mut covered = 0usize;
+    let mut seen: Vec<i32> = Vec::new();
+    let mut duplicates = 0usize;
+    let mut extras = 0usize;
+    for &t in body {
+        if seen.contains(&t) {
+            duplicates += 1;
+        } else {
+            seen.push(t);
+            if salient.contains(&t) {
+                covered += 1;
+            } else {
+                extras += 1;
+            }
+        }
+    }
+    let coverage = covered as f32 / n;
+    let brevity = (body.len() as f32 - n).max(0.0) / n;
+    let mut s = 2.0 * coverage
+        - 0.6 * extras as f32 / n
+        - 0.5 * duplicates as f32 / n
+        - 0.3 * brevity;
+    if has_eos {
+        s += 0.4;
+    } else {
+        s -= 0.5;
+    }
+    s
+}
+
+/// Math: exact-match of the answer digit string, properly terminated.
+fn score_math(answer: &[i32], resp: &[i32]) -> f32 {
+    let (body, has_eos) = tk::trim_at_eos(resp);
+    if has_eos && body == answer {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Chat: per-position accuracy against the target transformation, with a
+/// length-mismatch penalty and a termination bonus.
+fn score_chat(target: &[i32], resp: &[i32]) -> f32 {
+    let (body, has_eos) = tk::trim_at_eos(resp);
+    let tl = target.len().max(1) as f32;
+    let matches = target
+        .iter()
+        .zip(body.iter())
+        .filter(|(a, b)| a == b)
+        .count() as f32;
+    let len_gap = (body.len() as f32 - target.len() as f32).abs() / tl;
+    let mut s = 2.0 * matches / tl - 0.5 * len_gap;
+    if has_eos {
+        s += 0.4;
+    } else {
+        s -= 0.5;
+    }
+    s
+}
+
+/// Gold judge for win-rate: does `ours` beat `reference`? Ties go to the
+/// reference (conservative, like a judge preferring the incumbent).
+pub fn wins(meta: &TaskMeta, ours: &[i32], reference_with_eos: &[i32]) -> bool {
+    score(meta, ours) > score(meta, reference_with_eos)
+}
+
+/// Fractional win value: 1.0 win / 0.5 tie / 0.0 loss. The gold scorer is
+/// discrete, so exact ties are common (unlike the paper's continuous 6.7B
+/// gold RM); the standard judging convention credits ties at 1/2.
+pub fn win_value(meta: &TaskMeta, ours: &[i32], reference_with_eos: &[i32]) -> f32 {
+    let a = score(meta, ours);
+    let b = score(meta, reference_with_eos);
+    if a > b + 1e-6 {
+        1.0
+    } else if a > b - 1e-6 {
+        0.5
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tldr_meta() -> TaskMeta {
+        TaskMeta::Tldr { salient: vec![30, 31, 32] }
+    }
+
+    #[test]
+    fn tldr_perfect_beats_partial() {
+        let m = tldr_meta();
+        let perfect = [30, 31, 32, tk::EOS];
+        let partial = [30, 31, tk::EOS];
+        assert!(score(&m, &perfect) > score(&m, &partial));
+    }
+
+    #[test]
+    fn tldr_penalizes_repetition_and_extras() {
+        let m = tldr_meta();
+        let clean = [30, 31, 32, tk::EOS];
+        let dup = [30, 30, 31, 32, tk::EOS];
+        let extra = [30, 31, 32, 40, tk::EOS];
+        assert!(score(&m, &clean) > score(&m, &dup));
+        assert!(score(&m, &clean) > score(&m, &extra));
+    }
+
+    #[test]
+    fn tldr_penalizes_missing_eos() {
+        let m = tldr_meta();
+        assert!(
+            score(&m, &[30, 31, 32, tk::EOS]) > score(&m, &[30, 31, 32])
+        );
+    }
+
+    #[test]
+    fn math_exact_match_only() {
+        let m = TaskMeta::Math { answer: vec![tk::digit(4), tk::digit(2)] };
+        assert_eq!(score(&m, &[tk::digit(4), tk::digit(2), tk::EOS]), 1.0);
+        assert_eq!(score(&m, &[tk::digit(4), tk::digit(2)]), 0.0); // no EOS
+        assert_eq!(score(&m, &[tk::digit(4), tk::digit(3), tk::EOS]), 0.0);
+        assert_eq!(
+            score(&m, &[tk::digit(4), tk::digit(2), tk::digit(0), tk::EOS]),
+            0.0
+        );
+    }
+
+    #[test]
+    fn chat_partial_credit_monotone() {
+        let m = TaskMeta::Chat { target: vec![30, 31, 32, 33] };
+        let full = [30, 31, 32, 33, tk::EOS];
+        let three = [30, 31, 32, 29, tk::EOS];
+        let two = [30, 31, 28, 29, tk::EOS];
+        assert!(score(&m, &full) > score(&m, &three));
+        assert!(score(&m, &three) > score(&m, &two));
+    }
+
+    #[test]
+    fn wins_is_strict() {
+        let m = TaskMeta::Math { answer: vec![tk::digit(7)] };
+        let good = [tk::digit(7), tk::EOS];
+        assert!(!wins(&m, &good, &good)); // tie -> reference holds
+        assert!(wins(&m, &good, &[tk::digit(8), tk::EOS]));
+    }
+}

@@ -1,0 +1,11 @@
+//! Reward stack: programmatic gold scorer (ground truth) + learned proxy RM.
+//!
+//! Gold labels preference data and judges evaluation win-rates; the proxy
+//! RM (trained on gold-labelled pairs, scored via the `score_rm`
+//! executable) is what the RLHF loop optimizes — reproducing the
+//! controlled-overoptimization setup of Gao et al. 2022 / paper §3.
+
+pub mod gold;
+pub mod proxy;
+
+pub use proxy::{build_pref_pairs, score_batch, valid_mask, PrefPair};

@@ -1,0 +1,177 @@
+//! Proxy reward model: scoring through the compiled `score_rm` executable
+//! and preference-pair construction for RM training.
+//!
+//! Mirrors the paper's §3 setup: the feedback dataset is (re)labelled by
+//! the gold scorer; the proxy RM is trained on those pairs from the SFT
+//! checkpoint and is the only reward the RLHF loop sees. Gold is reserved
+//! for evaluation (win-rate) — exactly Gao et al.'s controlled setup.
+
+use anyhow::Result;
+
+use super::gold;
+use crate::data::{pack_sequence, Example, TaskGen};
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::Pcg32;
+
+/// Score full sequences (prompt ++ response ++ EOS ++ PAD) with the proxy
+/// RM. `seqs`/`masks` must be gen_batch rows (the executable's fixed batch);
+/// masks cover the whole valid sequence (prompt + response) because the
+/// score reads the last valid token.
+pub fn score_batch(
+    engine: &Engine,
+    rm_params: &[f32],
+    seqs: &[Vec<i32>],
+    valid_masks: &[Vec<f32>],
+) -> Result<Vec<f32>> {
+    let b = engine.manifest.config.gen_batch;
+    let s = engine.manifest.config.seq_len;
+    assert_eq!(seqs.len(), b, "score_rm has fixed batch {b}");
+    let mut toks = Vec::with_capacity(b * s);
+    let mut mask = Vec::with_capacity(b * s);
+    for (row, m) in seqs.iter().zip(valid_masks) {
+        assert_eq!(row.len(), s);
+        toks.extend_from_slice(row);
+        mask.extend_from_slice(m);
+    }
+    let out = engine.call(
+        "score_rm",
+        &[
+            HostTensor::F32(rm_params.to_vec()),
+            HostTensor::I32(toks),
+            HostTensor::F32(mask),
+        ],
+    )?;
+    out.into_iter().next().unwrap().into_f32()
+}
+
+/// Whole-sequence validity mask (prompt + response incl. EOS), for RM
+/// scoring: 1.0 until the last response token, 0 on trailing PAD.
+pub fn valid_mask(prompt_len: usize, resp_mask: &[f32]) -> Vec<f32> {
+    let mut m = vec![0.0f32; resp_mask.len()];
+    let last_resp = resp_mask
+        .iter()
+        .rposition(|&x| x == 1.0)
+        .unwrap_or(prompt_len.saturating_sub(1));
+    for x in m.iter_mut().take(last_resp + 1) {
+        *x = 1.0;
+    }
+    m
+}
+
+/// One preference pair: packed sequences + masks, gold-labelled.
+pub struct PrefPair {
+    pub chosen: (Vec<i32>, Vec<f32>),
+    pub rejected: (Vec<i32>, Vec<f32>),
+}
+
+/// Build a gold-labelled preference dataset from the task stream: two
+/// candidate responses per prompt at different corruption levels, ranked by
+/// the gold scorer. (The paper samples from the SFT model and relabels with
+/// the gold RM; corrupting references spans the same quality range without
+/// needing the policy, and the *labels* still come from gold.)
+pub fn build_pref_pairs(
+    gen: &TaskGen,
+    seq_len: usize,
+    start: u64,
+    n: usize,
+    seed: u64,
+) -> Vec<PrefPair> {
+    let mut rng = Pcg32::new(seed, 0x9e);
+    let mut out = Vec::with_capacity(n);
+    let mut i = start;
+    while out.len() < n {
+        let ex = gen.example(i);
+        i += 1;
+        let (a, b) = candidate_pair(&ex, gen.resp_len, &mut rng);
+        let sa = gold_score_resp(&ex, &a);
+        let sb = gold_score_resp(&ex, &b);
+        if (sa - sb).abs() < 0.3 {
+            // skip low-margin pairs: like human labelling, near-ties are
+            // noise; the RM learns discrimination from clear preferences
+            continue;
+        }
+        let (chosen, rejected) = if sa > sb { (a, b) } else { (b, a) };
+        out.push(PrefPair {
+            chosen: pack_valid(&ex.prompt, &chosen, seq_len),
+            rejected: pack_valid(&ex.prompt, &rejected, seq_len),
+        });
+    }
+    out
+}
+
+fn candidate_pair(
+    ex: &Example,
+    resp_len: usize,
+    rng: &mut Pcg32,
+) -> (Vec<i32>, Vec<i32>) {
+    use crate::data::tldr::perturb;
+    // wide quality spread: near-clean vs heavily corrupted. The proxy RM
+    // must learn *what quality is*, not split hairs between near-ties.
+    let lo = rng.gen_f64() * 0.12;
+    let hi = 0.35 + rng.gen_f64() * 0.5;
+    (
+        perturb(rng, &ex.reference, lo, resp_len),
+        perturb(rng, &ex.reference, hi, resp_len),
+    )
+}
+
+fn gold_score_resp(ex: &Example, resp: &[i32]) -> f32 {
+    let mut with_eos = resp.to_vec();
+    with_eos.push(crate::tokenizer::EOS);
+    gold::score(&ex.meta, &with_eos)
+}
+
+fn pack_valid(prompt: &[i32], resp: &[i32], seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    let (toks, resp_mask) = pack_sequence(prompt, resp, seq_len, true);
+    let vm = valid_mask(prompt.len(), &resp_mask);
+    (toks, vm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Task;
+
+    #[test]
+    fn valid_mask_covers_prompt_and_response() {
+        let resp_mask = vec![0., 0., 0., 1., 1., 1., 0., 0.];
+        let vm = valid_mask(3, &resp_mask);
+        assert_eq!(vm, vec![1., 1., 1., 1., 1., 1., 0., 0.]);
+    }
+
+    #[test]
+    fn valid_mask_empty_response_covers_prompt() {
+        let resp_mask = vec![0., 0., 0., 0.];
+        let vm = valid_mask(3, &resp_mask);
+        assert_eq!(vm, vec![1., 1., 1., 0.]);
+    }
+
+    #[test]
+    fn pref_pairs_are_gold_consistent() {
+        let gen = TaskGen::new(Task::Tldr, 32, 16, 5);
+        let pairs = build_pref_pairs(&gen, 48, 0, 32, 7);
+        assert_eq!(pairs.len(), 32);
+        for p in &pairs {
+            assert_eq!(p.chosen.0.len(), 48);
+            assert_eq!(p.rejected.1.len(), 48);
+            // masks are prefix-shaped
+            for m in [&p.chosen.1, &p.rejected.1] {
+                let first_zero =
+                    m.iter().position(|&x| x == 0.0).unwrap_or(m.len());
+                assert!(m[first_zero..].iter().all(|&x| x == 0.0));
+                assert!(first_zero >= 32); // at least the prompt
+            }
+        }
+    }
+
+    #[test]
+    fn pref_pairs_deterministic() {
+        let gen = TaskGen::new(Task::Tldr, 32, 16, 5);
+        let a = build_pref_pairs(&gen, 48, 0, 8, 7);
+        let b = build_pref_pairs(&gen, 48, 0, 8, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.chosen.0, y.chosen.0);
+            assert_eq!(x.rejected.0, y.rejected.0);
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once, and
+//! exposes shape-checked typed calls.
+//!
+//! One `Engine` per OS thread: the `xla` crate's `PjRtClient` is `Rc`-based
+//! (not `Send`), which matches the paper's architecture — the generation
+//! worker and the trainer each own their own backend and exchange plain
+//! host buffers (DESIGN.md §3).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+
+/// Host-side tensor passed to/from executables.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I32(_) => DType::I32,
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        if shape.len() == 1 {
+            return Ok(lit);
+        }
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: DType) -> Result<HostTensor> {
+        Ok(match dtype {
+            DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+            DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+/// Scalar convenience constructors.
+pub fn scalar_f32(x: f32) -> HostTensor {
+    HostTensor::F32(vec![x])
+}
+
+pub fn scalar_i32(x: i32) -> HostTensor {
+    HostTensor::I32(vec![x])
+}
+
+/// Cumulative per-artifact timing, for the perf pass and overhead analysis.
+#[derive(Debug, Default, Clone)]
+pub struct CallStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<BTreeMap<String, CallStats>>,
+}
+
+impl Engine {
+    /// Load a config's artifact directory. Executables compile lazily on
+    /// first call (compile-all via `warmup` for benchmarking).
+    pub fn load(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            manifest,
+            client,
+            executables: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn config_name(&self) -> &str {
+        &self.manifest.config.name
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.stats
+            .borrow_mut()
+            .entry(format!("compile:{name}"))
+            .or_default()
+            .total_secs += t0.elapsed().as_secs_f64();
+        self.executables.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Compile every artifact up front.
+    pub fn warmup(&self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.artifacts.keys().cloned().collect();
+        for n in names {
+            self.ensure_compiled(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name`. Inputs are validated against the manifest
+    /// (count, dtype, element count) before hitting PJRT.
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec: ArtifactSpec = self.manifest.artifact(name)?.clone();
+        if spec.untupled {
+            bail!("{name} is an untupled (buffer hot-path) artifact; use execute_buffers()");
+        }
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            if t.dtype() != s.dtype {
+                bail!("{name}: input '{}' dtype mismatch", s.name);
+            }
+            if t.len() != s.numel() {
+                bail!(
+                    "{name}: input '{}' has {} elements, expected {} {:?}",
+                    s.name,
+                    t.len(),
+                    s.numel(),
+                    s.shape
+                );
+            }
+            literals.push(t.to_literal(&s.shape)?);
+        }
+
+        self.ensure_compiled(name)?;
+        let t0 = Instant::now();
+        let execs = self.executables.borrow();
+        let exe = execs.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: executable returned {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.iter().zip(&spec.outputs) {
+            out.push(HostTensor::from_literal(lit, s.dtype)?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += dt;
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> BTreeMap<String, CallStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+
+    /// Load the seeded initial policy parameters from the artifact dir.
+    pub fn init_policy(&self) -> Result<Vec<f32>> {
+        let arr = crate::util::npy::read_f32(self.manifest.init_policy_path())?;
+        self.check_params(&arr.data)?;
+        Ok(arr.data)
+    }
+
+    pub fn init_rm(&self) -> Result<Vec<f32>> {
+        let arr = crate::util::npy::read_f32(self.manifest.init_rm_path())?;
+        self.check_params(&arr.data)?;
+        Ok(arr.data)
+    }
+
+    fn check_params(&self, p: &[f32]) -> Result<()> {
+        if p.len() != self.manifest.param_count {
+            bail!(
+                "param vector has {} elements, manifest says {}",
+                p.len(),
+                self.manifest.param_count
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Optimizer state threaded through train-step executables.
+#[derive(Clone)]
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
+impl TrainState {
+    pub fn new(params: Vec<f32>) -> TrainState {
+        let n = params.len();
+        TrainState {
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+        }
+    }
+
+    /// Run one fused train step. `batch` holds the loss-specific tensors
+    /// after (params, m, v, step, lr). Returns the metrics vector.
+    pub fn train_step(
+        &mut self,
+        engine: &Engine,
+        artifact: &str,
+        lr: f32,
+        batch: Vec<HostTensor>,
+    ) -> Result<Vec<f32>> {
+        self.step += 1;
+        let mut inputs = Vec::with_capacity(batch.len() + 5);
+        inputs.push(HostTensor::F32(std::mem::take(&mut self.params)));
+        inputs.push(HostTensor::F32(std::mem::take(&mut self.m)));
+        inputs.push(HostTensor::F32(std::mem::take(&mut self.v)));
+        inputs.push(scalar_f32(self.step as f32));
+        inputs.push(scalar_f32(lr));
+        inputs.extend(batch);
+        let mut out = engine.call(artifact, &inputs)?;
+        if out.len() != 4 {
+            bail!("{artifact}: expected 4 outputs, got {}", out.len());
+        }
+        let metrics = out.pop().unwrap().into_f32()?;
+        self.v = out.pop().unwrap().into_f32()?;
+        self.m = out.pop().unwrap().into_f32()?;
+        self.params = out.pop().unwrap().into_f32()?;
+        Ok(metrics)
+    }
+}
+
+/// Named metric lookup against the manifest's metric table.
+pub fn metric(
+    engine: &Engine,
+    artifact: &str,
+    metrics: &[f32],
+    name: &str,
+) -> Result<f32> {
+    let spec = engine.manifest.artifact(artifact)?;
+    let idx = spec
+        .metrics
+        .iter()
+        .position(|m| m == name)
+        .ok_or_else(|| anyhow!("{artifact} has no metric '{name}'"))?;
+    Ok(metrics[idx])
+}

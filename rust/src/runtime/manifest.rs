@@ -1,0 +1,224 @@
+//! Artifact manifest: the contract between the AOT pipeline and the runtime.
+//!
+//! `manifest.json` (written by python/compile/aot.py) describes every HLO
+//! executable's I/O signature plus the model geometry. The runtime loads it
+//! once and validates every call against it, so shape bugs surface as
+//! errors with names instead of PJRT crashes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub metrics: Vec<String>,
+    /// Untupled outputs: PJRT returns one device buffer per output
+    /// (generation hot path; see Engine::execute_buffers).
+    pub untupled: bool,
+}
+
+/// Model geometry + hyperparameters mirrored from python configs.py.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub size: String,
+    pub task: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub prompt_len: usize,
+    pub resp_len: usize,
+    pub seq_len: usize,
+    pub gen_batch: usize,
+    pub train_pairs: usize,
+    pub beta_kl: f64,
+    pub ppo_clip: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub param_count: usize,
+    pub kv_cache_shape: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    let dtype = match j.req("dtype")?.as_str() {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => bail!("bad dtype {other:?}"),
+    };
+    Ok(IoSpec {
+        name: j.req("name")?.as_str().unwrap_or("").to_string(),
+        shape: j
+            .req("shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad shape"))?,
+        dtype,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let c = j.req("config")?;
+        let gets = |k: &str| -> Result<String> {
+            Ok(c.req(k)?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad {k}"))?
+                .to_string())
+        };
+        let getn = |k: &str| -> Result<usize> {
+            c.req(k)?.as_usize().ok_or_else(|| anyhow!("bad {k}"))
+        };
+        let getf = |k: &str| -> Result<f64> {
+            c.req(k)?.as_f64().ok_or_else(|| anyhow!("bad {k}"))
+        };
+        let config = ModelConfig {
+            name: gets("name")?,
+            size: gets("size")?,
+            task: gets("task")?,
+            d_model: getn("d_model")?,
+            n_layers: getn("n_layers")?,
+            n_heads: getn("n_heads")?,
+            head_dim: getn("head_dim")?,
+            vocab: getn("vocab")?,
+            prompt_len: getn("prompt_len")?,
+            resp_len: getn("resp_len")?,
+            seq_len: getn("seq_len")?,
+            gen_batch: getn("gen_batch")?,
+            train_pairs: getn("train_pairs")?,
+            beta_kl: getf("beta_kl")?,
+            ppo_clip: getf("ppo_clip")?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs not array"))?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs not array"))?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let metrics = a
+                .get("metrics")
+                .and_then(|m| m.as_arr())
+                .map(|v| {
+                    v.iter()
+                        .filter_map(|x| x.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a
+                        .req("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad file"))?
+                        .to_string(),
+                    inputs,
+                    outputs,
+                    metrics,
+                    untupled: a
+                        .get("untupled")
+                        .and_then(|u| u.as_bool())
+                        .unwrap_or(false),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config,
+            param_count: j
+                .req("param_count")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("bad param_count"))?,
+            kv_cache_shape: j
+                .req("kv_cache_shape")?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("bad kv_cache_shape"))?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact '{name}' in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    pub fn init_policy_path(&self) -> PathBuf {
+        self.dir.join("init_policy.npy")
+    }
+
+    pub fn init_rm_path(&self) -> PathBuf {
+        self.dir.join("init_rm.npy")
+    }
+
+    pub fn kv_cache_len(&self) -> usize {
+        self.kv_cache_shape.iter().product()
+    }
+}
+
+/// Locate the artifacts root: `--artifacts` flag value, else
+/// `$ASYNC_RLHF_ARTIFACTS`, else ./artifacts.
+pub fn artifacts_root(cli: Option<&str>) -> PathBuf {
+    if let Some(p) = cli {
+        return PathBuf::from(p);
+    }
+    if let Ok(p) = std::env::var("ASYNC_RLHF_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from("artifacts")
+}

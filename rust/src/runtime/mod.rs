@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact manifests + compiled-executable engine.
+//!
+//! The AOT boundary (DESIGN.md §1): python lowers every model computation
+//! to HLO text under `artifacts/<config>/`; this module loads, compiles
+//! (once, per thread-local client) and executes them with host buffers.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{metric, scalar_f32, scalar_i32, Engine, HostTensor, TrainState};
+pub use manifest::{artifacts_root, ArtifactSpec, DType, IoSpec, Manifest, ModelConfig};

@@ -1,0 +1,239 @@
+//! Discrete-event clock simulation of the sync/async schedules.
+//!
+//! The CPU testbed genuinely overlaps generation and training on separate
+//! threads, but its gen:train time ratio differs from the paper's GPU
+//! fleets. This simulator replays the *scheduling policy* under any phase
+//! durations — e.g. the paper's measured №Robots numbers (gen 21 s,
+//! train 33 s, A.2) or GSM8k (12.2 s / 12.8 s, A.3) — to reproduce Fig 2,
+//! Fig 6 (training- vs generation-bound idle time) and the A.2 ideal-vs-
+//! actual speedup analysis.
+
+use crate::metrics::{Phase, Timeline};
+
+/// Phase durations (seconds) of one RLHF step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCosts {
+    pub gen: f64,
+    pub score: f64,
+    pub train: f64,
+    /// Parameter-publication overhead paid by the trainer per step (async
+    /// only; the paper's A.2 "communication between training and
+    /// generation").
+    pub publish: f64,
+}
+
+impl StepCosts {
+    pub fn new(gen: f64, score: f64, train: f64) -> StepCosts {
+        StepCosts { gen, score, train, publish: 0.0 }
+    }
+
+    pub fn with_publish(mut self, p: f64) -> StepCosts {
+        self.publish = p;
+        self
+    }
+
+    fn trainer_work(&self) -> f64 {
+        self.score + self.train + self.publish
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub wall: f64,
+    /// Seconds the generation resource spent idle.
+    pub gen_idle: f64,
+    /// Seconds the training resource spent idle.
+    pub train_idle: f64,
+    pub timeline: Timeline,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    GenerationBound,
+    TrainingBound,
+    Balanced,
+}
+
+/// Which resource limits the async schedule (paper Fig 6)?
+pub fn classify(costs: &StepCosts) -> Bound {
+    let g = costs.gen;
+    let t = costs.trainer_work();
+    if g > t * 1.05 {
+        Bound::GenerationBound
+    } else if t > g * 1.05 {
+        Bound::TrainingBound
+    } else {
+        Bound::Balanced
+    }
+}
+
+/// Synchronous schedule: gen -> score -> train, strictly sequential on the
+/// same resources (paper Fig 2 top / Fig 12 top). While training runs the
+/// generation resource idles, and vice versa.
+pub fn simulate_sync(costs: &StepCosts, steps: u64) -> SimResult {
+    let mut tl = Timeline::new();
+    let mut t = 0.0;
+    let mut gen_idle = 0.0;
+    let mut train_idle = 0.0;
+    for _ in 0..steps {
+        tl.push_span(Phase::Generate, t, t + costs.gen);
+        train_idle += costs.gen;
+        t += costs.gen;
+        tl.push_span(Phase::Score, t, t + costs.score);
+        tl.push_span(Phase::Train, t + costs.score, t + costs.score + costs.train);
+        gen_idle += costs.score + costs.train;
+        t += costs.score + costs.train;
+    }
+    SimResult { wall: t, gen_idle, train_idle, timeline: tl }
+}
+
+/// Asynchronous schedule (paper Fig 2 bottom): the generation worker and
+/// the trainer run concurrently; a bound-1 queue enforces one-step
+/// off-policy. Discrete-event simulation of the exact producer/consumer
+/// protocol implemented in coordinator::asynchronous.
+pub fn simulate_async(costs: &StepCosts, steps: u64) -> SimResult {
+    let mut tl = Timeline::new();
+    let mut gen_idle = 0.0;
+    let mut train_idle = 0.0;
+
+    // round i finishes generating at g_done[i]; the trainer may start
+    // consuming round i at max(g_done[i], trainer free); the generator may
+    // start round i+1 only when the queue has space: round i has been
+    // *taken* by the trainer (bound-1 queue => at most one finished,
+    // untaken round).
+    let mut gen_free = 0.0f64; // generator available
+    let mut train_free = 0.0f64; // trainer available
+    let mut queued_done: Option<f64> = None; // finish time of queued round
+
+    let mut produced = 0u64;
+    let mut consumed = 0u64;
+    while consumed < steps {
+        // generator produces whenever the queue is empty
+        if queued_done.is_none() && produced < steps {
+            let start = gen_free;
+            let done = start + costs.gen;
+            tl.push_span(Phase::Generate, start, done);
+            queued_done = Some(done);
+            produced += 1;
+            gen_free = done;
+        }
+        // trainer consumes the queued round
+        let done = queued_done.take().expect("deadlock in sim");
+        let start = train_free.max(done);
+        train_idle += start - train_free;
+        // generator may begin the next round as soon as the queue frees:
+        // i.e. when the trainer *takes* this round
+        gen_idle += start.max(gen_free) - gen_free;
+        gen_free = gen_free.max(start);
+        let t_end = start + costs.trainer_work();
+        tl.push_span(Phase::Score, start, start + costs.score);
+        tl.push_span(
+            Phase::Train,
+            start + costs.score,
+            start + costs.score + costs.train,
+        );
+        if costs.publish > 0.0 {
+            tl.push_span(Phase::Publish, start + costs.score + costs.train, t_end);
+        }
+        train_free = t_end;
+        consumed += 1;
+    }
+    SimResult {
+        wall: train_free,
+        gen_idle,
+        train_idle,
+        timeline: tl,
+    }
+}
+
+/// Paper A.2-style analysis row: sync wall, async wall, ideal async wall
+/// (= steps * max(gen, trainer)), speedup and overhead.
+#[derive(Debug, Clone)]
+pub struct SpeedupAnalysis {
+    pub sync_wall: f64,
+    pub async_wall: f64,
+    pub ideal_wall: f64,
+    pub speedup_pct: f64,
+    pub ideal_speedup_pct: f64,
+    pub overhead_per_step: f64,
+}
+
+pub fn analyze(costs: &StepCosts, steps: u64) -> SpeedupAnalysis {
+    let sync = simulate_sync(costs, steps);
+    let asy = simulate_async(costs, steps);
+    let ideal = steps as f64 * costs.gen.max(costs.trainer_work() - costs.publish)
+        + costs.gen.min(costs.trainer_work()); // pipeline fill
+    SpeedupAnalysis {
+        sync_wall: sync.wall,
+        async_wall: asy.wall,
+        ideal_wall: ideal,
+        speedup_pct: (sync.wall / asy.wall - 1.0) * 100.0,
+        ideal_speedup_pct: (sync.wall / ideal - 1.0) * 100.0,
+        overhead_per_step: (asy.wall - ideal) / steps as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_wall_is_sum() {
+        let c = StepCosts::new(2.0, 0.5, 3.0);
+        let r = simulate_sync(&c, 10);
+        assert!((r.wall - 55.0).abs() < 1e-9);
+        assert!((r.gen_idle - 35.0).abs() < 1e-9);
+        assert!((r.train_idle - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn async_wall_is_max_dominated() {
+        // training-bound: trainer work 3.5 > gen 2.0
+        let c = StepCosts::new(2.0, 0.5, 3.0);
+        let r = simulate_async(&c, 100);
+        // wall ≈ gen (pipeline fill) + 100 * 3.5
+        assert!((r.wall - (2.0 + 100.0 * 3.5)).abs() < 1e-6, "wall={}", r.wall);
+        assert!(r.wall < simulate_sync(&c, 100).wall);
+    }
+
+    #[test]
+    fn async_generation_bound() {
+        let c = StepCosts::new(5.0, 0.5, 1.0);
+        let r = simulate_async(&c, 50);
+        // generation dominates: wall ≈ 50 * 5 + trainer tail
+        assert!(r.wall >= 250.0 && r.wall <= 250.0 + 2.0, "wall={}", r.wall);
+        assert_eq!(classify(&c), Bound::GenerationBound);
+    }
+
+    #[test]
+    fn classify_bounds() {
+        assert_eq!(
+            classify(&StepCosts::new(1.0, 0.1, 3.0)),
+            Bound::TrainingBound
+        );
+        assert_eq!(
+            classify(&StepCosts::new(1.0, 0.0, 1.0)),
+            Bound::Balanced
+        );
+    }
+
+    #[test]
+    fn paper_norobots_numbers() {
+        // A.2: gen 21 s, train 33 s, 233 steps -> sync ≈ 209 min, ideal
+        // async ≈ 128 min (63% faster)
+        let c = StepCosts::new(21.0, 0.0, 33.0);
+        let a = analyze(&c, 233);
+        assert!((a.sync_wall / 60.0 - 209.7).abs() < 1.0);
+        assert!((a.ideal_wall / 60.0 - 128.5).abs() < 1.0);
+        assert!(a.ideal_speedup_pct > 60.0 && a.ideal_speedup_pct < 66.0);
+    }
+
+    #[test]
+    fn publish_overhead_slows_async() {
+        let base = StepCosts::new(2.0, 0.2, 2.0);
+        let slow = base.with_publish(0.5);
+        let a = simulate_async(&base, 50).wall;
+        let b = simulate_async(&slow, 50).wall;
+        assert!(b > a);
+    }
+}

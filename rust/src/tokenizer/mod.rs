@@ -1,0 +1,182 @@
+//! Symbolic vocabulary shared with python/compile/configs.py (VOCAB = 64).
+//!
+//! The synthetic tasks operate over a small closed vocabulary: special
+//! tokens, digits, arithmetic operators, instruction verbs and 32 "content"
+//! tokens standing in for words. `detok` renders sequences for logs.
+
+pub const VOCAB_SIZE: i32 = 64;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+
+/// Digits 0..=9 -> token ids 4..=13.
+pub const DIGIT_BASE: i32 = 4;
+
+/// Arithmetic operators.
+pub const OP_PLUS: i32 = 14;
+pub const OP_MINUS: i32 = 15;
+pub const OP_TIMES: i32 = 16;
+pub const OP_EQ: i32 = 17;
+
+/// Chat instruction verbs (paper §5.1 analogue tasks).
+pub const INSTR_COPY: i32 = 18;
+pub const INSTR_REVERSE: i32 = 19;
+pub const INSTR_SORT: i32 = 20;
+pub const INSTR_FIRST: i32 = 21;
+pub const INSTR_LAST: i32 = 22;
+
+/// 32 content tokens ("words"): ids 24..56.
+pub const CONTENT_BASE: i32 = 24;
+pub const CONTENT_COUNT: i32 = 32;
+
+pub fn digit(d: u32) -> i32 {
+    debug_assert!(d < 10);
+    DIGIT_BASE + d as i32
+}
+
+pub fn is_digit(tok: i32) -> bool {
+    (DIGIT_BASE..DIGIT_BASE + 10).contains(&tok)
+}
+
+pub fn digit_value(tok: i32) -> Option<u32> {
+    if is_digit(tok) {
+        Some((tok - DIGIT_BASE) as u32)
+    } else {
+        None
+    }
+}
+
+pub fn is_content(tok: i32) -> bool {
+    (CONTENT_BASE..CONTENT_BASE + CONTENT_COUNT).contains(&tok)
+}
+
+pub fn content(i: i32) -> i32 {
+    debug_assert!((0..CONTENT_COUNT).contains(&i));
+    CONTENT_BASE + i
+}
+
+/// Encode a non-negative number as digit tokens (most significant first).
+pub fn encode_number(mut n: u32) -> Vec<i32> {
+    if n == 0 {
+        return vec![digit(0)];
+    }
+    let mut out = Vec::new();
+    while n > 0 {
+        out.push(digit(n % 10));
+        n /= 10;
+    }
+    out.reverse();
+    out
+}
+
+/// Decode a digit-token run back to a number; None on any non-digit.
+pub fn decode_number(toks: &[i32]) -> Option<u32> {
+    if toks.is_empty() {
+        return None;
+    }
+    let mut n: u32 = 0;
+    for &t in toks {
+        n = n.checked_mul(10)?.checked_add(digit_value(t)?)?;
+    }
+    Some(n)
+}
+
+/// Human-readable rendering for logs and examples.
+pub fn detok(tokens: &[i32]) -> String {
+    let mut out = String::new();
+    for &t in tokens {
+        let s = match t {
+            PAD => "·".to_string(),
+            BOS => "⟨bos⟩".to_string(),
+            EOS => "⟨eos⟩".to_string(),
+            SEP => "|".to_string(),
+            OP_PLUS => "+".to_string(),
+            OP_MINUS => "-".to_string(),
+            OP_TIMES => "*".to_string(),
+            OP_EQ => "=".to_string(),
+            INSTR_COPY => "COPY".to_string(),
+            INSTR_REVERSE => "REV".to_string(),
+            INSTR_SORT => "SORT".to_string(),
+            INSTR_FIRST => "FIRST".to_string(),
+            INSTR_LAST => "LAST".to_string(),
+            t if is_digit(t) => digit_value(t).unwrap().to_string(),
+            t if is_content(t) => {
+                // content tokens render as letters a..z then A..F
+                let i = t - CONTENT_BASE;
+                let c = if i < 26 {
+                    (b'a' + i as u8) as char
+                } else {
+                    (b'A' + (i - 26) as u8) as char
+                };
+                c.to_string()
+            }
+            t => format!("<{t}>"),
+        };
+        out.push_str(&s);
+        out.push(' ');
+    }
+    out.trim_end().to_string()
+}
+
+/// Trim a generated response at (and including) the first EOS; returns the
+/// response body (without EOS) and whether EOS was present.
+pub fn trim_at_eos(resp: &[i32]) -> (&[i32], bool) {
+    match resp.iter().position(|&t| t == EOS) {
+        Some(i) => (&resp[..i], true),
+        None => (resp, false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn number_roundtrip() {
+        for n in [0u32, 7, 10, 99, 123, 4096] {
+            assert_eq!(decode_number(&encode_number(n)), Some(n));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_non_digits() {
+        assert_eq!(decode_number(&[digit(1), SEP]), None);
+        assert_eq!(decode_number(&[]), None);
+    }
+
+    #[test]
+    fn vocab_ranges_disjoint() {
+        // specials, digits, ops, instrs, content must not overlap
+        let mut seen = std::collections::HashSet::new();
+        for t in [PAD, BOS, EOS, SEP, OP_PLUS, OP_MINUS, OP_TIMES, OP_EQ,
+                  INSTR_COPY, INSTR_REVERSE, INSTR_SORT, INSTR_FIRST,
+                  INSTR_LAST] {
+            assert!(seen.insert(t), "duplicate token id {t}");
+        }
+        for d in 0..10 {
+            assert!(seen.insert(digit(d)));
+        }
+        for i in 0..CONTENT_COUNT {
+            assert!(seen.insert(content(i)));
+        }
+        assert!(seen.iter().all(|&t| (0..VOCAB_SIZE).contains(&t)));
+    }
+
+    #[test]
+    fn trim_eos() {
+        let (body, has) = trim_at_eos(&[5, 6, EOS, 7]);
+        assert_eq!(body, &[5, 6]);
+        assert!(has);
+        let (body, has) = trim_at_eos(&[5, 6]);
+        assert_eq!(body, &[5, 6]);
+        assert!(!has);
+    }
+
+    #[test]
+    fn detok_renders() {
+        let s = detok(&[BOS, content(0), OP_PLUS, digit(3), EOS, PAD]);
+        assert_eq!(s, "⟨bos⟩ a + 3 ⟨eos⟩ ·");
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiny CLI argument parser (substrate: no clap in the offline crate set).
+//!
+//! Grammar: `binary <subcommand> [positional ...] [--flag] [--key value]`.
+//! Flags may also be written `--key=value`. Unknown keys are an error so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+impl Args {
+    /// Parse raw argv (without the binary name). `bool_flags` lists keys
+    /// that take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args, ArgError> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&stripped) {
+                    args.flags.push(stripped.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        ArgError(format!("--{stripped} needs a value"))
+                    })?;
+                    args.options.insert(stripped.to_string(), v.clone());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a.clone());
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                ArgError(format!("--{key}: cannot parse '{s}'"))
+            }),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Parse a comma-separated list, e.g. `--n 1,2,4,8`.
+    pub fn get_list<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, ArgError>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| {
+                        ArgError(format!("--{key}: cannot parse '{p}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn basic() {
+        let a = Args::parse(
+            &v(&["train", "tldr_s", "--steps", "100", "--verbose"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["tldr_s"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn eq_form_and_parse() {
+        let a = Args::parse(&v(&["x", "--lr=0.5"]), &[]).unwrap();
+        assert_eq!(a.get_parse("lr", 0.0f64).unwrap(), 0.5);
+        assert_eq!(a.get_parse("missing", 7u32).unwrap(), 7);
+    }
+
+    #[test]
+    fn list() {
+        let a = Args::parse(&v(&["x", "--n", "1,2,4"]), &[]).unwrap();
+        assert_eq!(a.get_list("n", &[9usize]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_list("m", &[9usize]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&v(&["x", "--steps"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = Args::parse(&v(&["x", "--steps", "abc"]), &[]).unwrap();
+        assert!(a.get_parse("steps", 0u32).is_err());
+    }
+}

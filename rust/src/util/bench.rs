@@ -1,0 +1,73 @@
+//! Tiny benchmark harness (substrate: no criterion in the offline crate
+//! set). Used by `rust/benches/*` with `harness = false`.
+//!
+//! Reports min/mean/p50/p95 over timed iterations after warmup, in a
+//! stable, grep-friendly format that EXPERIMENTS.md records.
+
+use std::time::Instant;
+
+use super::{mean, percentile};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Vec<f32>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f32 {
+        mean(&self.secs)
+    }
+
+    pub fn min(&self) -> f32 {
+        self.secs.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn p(&self, p: f32) -> f32 {
+        percentile(&self.secs, p)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "bench {:<40} iters {:>3}  mean {:>9.4}s  min {:>9.4}s  \
+             p50 {:>9.4}s  p95 {:>9.4}s",
+            self.name,
+            self.iters,
+            self.mean(),
+            self.min(),
+            self.p(50.0),
+            self.p(95.0),
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        secs.push(t0.elapsed().as_secs_f32());
+    }
+    let r = BenchResult { name: name.to_string(), iters, secs };
+    r.print();
+    r
+}
+
+/// Shared bench preamble: resolve the artifacts root and skip politely when
+/// a config is missing (benches must not fail on fresh checkouts).
+pub fn artifact_dir_or_skip(model: &str) -> Option<std::path::PathBuf> {
+    let root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"));
+    let dir = root.join(model);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        println!("SKIP bench: artifacts/{model} missing (run `make artifacts`)");
+        None
+    }
+}

@@ -1,0 +1,52 @@
+//! Substrate utilities built in-repo (the offline crate set has no serde /
+//! clap / rand / proptest — see DESIGN.md §3).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod npy;
+pub mod prop;
+pub mod rng;
+
+/// Simple statistics helpers used across metrics and benches.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+pub fn stddev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f32>() / (xs.len() - 1) as f32)
+        .sqrt()
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a copy.
+pub fn percentile(xs: &[f32], p: f32) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f32).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((stddev(&xs) - 1.2909944).abs() < 1e-5);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Minimal NumPy `.npy` reader/writer for f32 arrays (substrate module).
+//!
+//! The AOT pipeline emits seeded initial parameters as `.npy`; checkpoints
+//! written by the Rust trainers use the same format so they can be inspected
+//! from Python. Only little-endian f32, C-order — all this repo needs.
+
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+pub fn read_f32<P: AsRef<Path>>(path: P) -> io::Result<NpyArray> {
+    let mut f = fs::File::open(&path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != b"\x93NUMPY" {
+        return Err(bad("not an npy file"));
+    }
+    let (major, _minor) = (magic[6], magic[7]);
+    let header_len = if major >= 2 {
+        let mut b = [0u8; 4];
+        f.read_exact(&mut b)?;
+        u32::from_le_bytes(b) as usize
+    } else {
+        let mut b = [0u8; 2];
+        f.read_exact(&mut b)?;
+        u16::from_le_bytes(b) as usize
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header);
+
+    if !header.contains("'<f4'") && !header.contains("\"<f4\"") {
+        return Err(bad(&format!("unsupported dtype in header: {header}")));
+    }
+    if header.contains("'fortran_order': True") {
+        return Err(bad("fortran order not supported"));
+    }
+    let shape = parse_shape(&header).ok_or_else(|| bad("bad shape"))?;
+    let count: usize = shape.iter().product::<usize>().max(1);
+
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    if raw.len() < count * 4 {
+        return Err(bad("truncated data"));
+    }
+    let data = raw[..count * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(NpyArray { shape, data })
+}
+
+pub fn write_f32<P: AsRef<Path>>(
+    path: P,
+    shape: &[usize],
+    data: &[f32],
+) -> io::Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = fs::File::create(path)?;
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for x in data {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn parse_shape(header: &str) -> Option<Vec<usize>> {
+    let start = header.find("'shape':")? + 8;
+    let rest = &header[start..];
+    let open = rest.find('(')? + 1;
+    let close = rest.find(')')?;
+    let inner = &rest[open..close];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let t = part.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(t.parse().ok()?);
+    }
+    Some(out)
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("npy: {msg}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_1d() {
+        let dir = std::env::temp_dir().join("async_rlhf_npy_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.npy");
+        let data: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        write_f32(&p, &[100], &data).unwrap();
+        let arr = read_f32(&p).unwrap();
+        assert_eq!(arr.shape, vec![100]);
+        assert_eq!(arr.data, data);
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let dir = std::env::temp_dir().join("async_rlhf_npy_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.npy");
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        write_f32(&p, &[3, 4], &data).unwrap();
+        let arr = read_f32(&p).unwrap();
+        assert_eq!(arr.shape, vec![3, 4]);
+        assert_eq!(arr.data, data);
+    }
+
+    #[test]
+    fn reads_numpy_written_file() {
+        // Byte-for-byte fixture produced by numpy 2.x: np.save of
+        // np.arange(3, dtype='<f4'). Verifies cross-tool compatibility
+        // without invoking python at test time.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"\x93NUMPY\x01\x00");
+        let header =
+            "{'descr': '<f4', 'fortran_order': False, 'shape': (3,), }";
+        let mut h = header.to_string();
+        let pad = (64 - (10 + h.len() + 1) % 64) % 64;
+        h.push_str(&" ".repeat(pad));
+        h.push('\n');
+        bytes.extend_from_slice(&(h.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(h.as_bytes());
+        for v in [0f32, 1.0, 2.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let dir = std::env::temp_dir().join("async_rlhf_npy_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.npy");
+        fs::write(&p, &bytes).unwrap();
+        let arr = read_f32(&p).unwrap();
+        assert_eq!(arr.data, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let dir = std::env::temp_dir().join("async_rlhf_npy_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.npy");
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"\x93NUMPY\x01\x00");
+        let h = "{'descr': '<i8', 'fortran_order': False, 'shape': (1,), }\n";
+        bytes.extend_from_slice(&(h.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(h.as_bytes());
+        bytes.extend_from_slice(&[0u8; 8]);
+        fs::write(&p, &bytes).unwrap();
+        assert!(read_f32(&p).is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! Minimal property-based testing helper (substrate: no proptest offline).
+//!
+//! `prop_check` runs a property over many seeded random cases and, on
+//! failure, reports the failing seed so the case can be replayed exactly:
+//!
+//! ```ignore
+//! prop_check("queue never exceeds bound", 200, |rng| {
+//!     let n = rng.gen_usize(64) + 1;
+//!     ... build a random scenario, return Err(msg) if violated ...
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `property`. Panics with the failing seed and
+/// message on the first violation. Set `ASYNC_RLHF_PROP_SEED` to replay a
+/// single failing case.
+pub fn prop_check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Pcg32) -> PropResult,
+{
+    if let Ok(seed) = std::env::var("ASYNC_RLHF_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("bad ASYNC_RLHF_PROP_SEED");
+        let mut rng = Pcg32::new(seed, 0xeb);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for seed in 0..cases {
+        let mut rng = Pcg32::new(seed, 0xeb);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed at seed {seed} \
+                 (ASYNC_RLHF_PROP_SEED={seed} to replay): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        prop_check("u32 addition commutes", 100, |rng| {
+            let a = rng.next_u32() / 2;
+            let b = rng.next_u32() / 2;
+            prop_assert!(a + b == b + a, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_reports_seed() {
+        prop_check("always fails eventually", 50, |rng| {
+            let x = rng.gen_usize(10);
+            prop_assert!(x < 9, "drew {x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,221 @@
+//! End-to-end RLHF integration tests on the dev artifact bundle: SFT ->
+//! proxy RM -> RLHF (sync and async), checking learning signal and the
+//! async coordinator's invariants on real executables.
+
+use std::path::PathBuf;
+
+use async_rlhf::config::{Algo, ExpConfig, Mode};
+use async_rlhf::coordinator;
+use async_rlhf::eval::evaluate;
+
+fn dev_available() -> bool {
+    let root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let ok = root.join("dev").join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/dev missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn test_cfg(name: &str) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.model = "dev".into();
+    cfg.artifacts_root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    cfg.steps = 10;
+    cfg.sft_steps = 80;
+    cfg.rm_steps = 60;
+    cfg.eval_prompts = 32;
+    cfg.run_dir = std::env::temp_dir().join(format!("async_rlhf_test_{name}"));
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    cfg
+}
+
+#[test]
+fn sft_then_rm_pipeline_learns() {
+    if !dev_available() {
+        return;
+    }
+    let cfg = test_cfg("pipeline");
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    // SFT should produce a policy that formats responses (some EOS usage):
+    let ev = evaluate(
+        &prep.engine,
+        &prep.sft_params,
+        &prep.sft_params,
+        &prep.taskgen,
+        32,
+        0.7,
+        1,
+    )
+    .unwrap();
+    assert!(ev.n >= 32);
+    assert!(ev.kl_ppl.is_finite() && ev.kl_ppl > 0.5);
+    // SFT vs random init: random params should have far lower gold score
+    let init = prep.engine.init_policy().unwrap();
+    let ev0 = evaluate(
+        &prep.engine, &init, &prep.sft_params, &prep.taskgen, 32, 0.7, 1,
+    )
+    .unwrap();
+    assert!(
+        ev.mean_gold > ev0.mean_gold,
+        "SFT {} vs random {}",
+        ev.mean_gold,
+        ev0.mean_gold
+    );
+    // checkpoints are cached: second prepare is instant and identical
+    let prep2 = coordinator::prepare(&cfg, false).unwrap();
+    assert_eq!(prep.sft_params, prep2.sft_params);
+    assert_eq!(prep.rm_params, prep2.rm_params);
+}
+
+#[test]
+fn sync_dpo_improves_rm_reward() {
+    if !dev_available() {
+        return;
+    }
+    let mut cfg = test_cfg("sync_dpo");
+    cfg.algo = Algo::Dpo;
+    cfg.mode = Mode::Sync;
+    cfg.steps = 16;
+    cfg.lr = 1e-3;
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+    let series = out.log.series("rm_reward");
+    assert!(series.len() >= 8);
+    let early: f32 =
+        series[..3].iter().map(|(_, v)| v).sum::<f32>() / 3.0;
+    let late: f32 = series[series.len() - 3..]
+        .iter()
+        .map(|(_, v)| v)
+        .sum::<f32>()
+        / 3.0;
+    assert!(
+        late > early,
+        "RM reward did not improve: early {early} late {late}"
+    );
+    assert_eq!(out.log.rows.len(), cfg.steps as usize);
+    assert_eq!(
+        out.episodes,
+        cfg.steps * prep.engine.manifest.config.gen_batch as u64
+    );
+}
+
+#[test]
+fn async_matches_sync_and_is_one_step_off_policy() {
+    if !dev_available() {
+        return;
+    }
+    let mut sync_cfg = test_cfg("parity");
+    sync_cfg.algo = Algo::Dpo;
+    sync_cfg.steps = 12;
+    sync_cfg.lr = 1e-3;
+    let prep = coordinator::prepare(&sync_cfg, false).unwrap();
+    let sync_out = coordinator::run(&sync_cfg, &prep, false).unwrap();
+
+    let mut async_cfg = sync_cfg.clone();
+    async_cfg.mode = Mode::Async;
+    let async_out = coordinator::run(&async_cfg, &prep, false).unwrap();
+
+    // staleness is exactly <= 1 (one-step off-policy, bound-1 queue)
+    for row in &async_out.log.rows {
+        let st = row.values["staleness"];
+        assert!(st <= 1.0 + 1e-6, "staleness {st} > 1 at step {}", row.step);
+    }
+    // sync is fully on-policy
+    for row in &sync_out.log.rows {
+        assert_eq!(row.values["staleness"], 0.0);
+    }
+    // both learn in the same direction (final rm reward within tolerance)
+    let s = sync_out.log.recent_mean("rm_reward", 4).unwrap();
+    let a = async_out.log.recent_mean("rm_reward", 4).unwrap();
+    assert!(
+        (s - a).abs() < 1.5,
+        "sync {s} vs async {a} diverged beyond tolerance"
+    );
+    // same episode accounting
+    assert_eq!(sync_out.episodes, async_out.episodes);
+}
+
+#[test]
+fn ppo_and_rloo_paths_execute() {
+    if !dev_available() {
+        return;
+    }
+    for algo in [Algo::Ppo, Algo::Rloo, Algo::Prloo, Algo::Copg, Algo::BestOfN] {
+        let mut cfg = test_cfg(&format!("algo_{}", algo.name()));
+        cfg.algo = algo;
+        cfg.steps = 3;
+        let prep = coordinator::prepare(&cfg, false).unwrap();
+        let out = coordinator::run(&cfg, &prep, false).unwrap();
+        assert_eq!(out.log.rows.len(), 3, "{algo}");
+        for row in &out.log.rows {
+            assert!(
+                row.values["loss"].is_finite(),
+                "{algo} produced non-finite loss"
+            );
+        }
+    }
+}
+
+#[test]
+fn n_minibatches_schedule_counts_and_staleness() {
+    if !dev_available() {
+        return;
+    }
+    let mut cfg = test_cfg("n_sched");
+    cfg.algo = Algo::Dpo;
+    cfg.n_minibatches = 4;
+    cfg.steps = 8;
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+    assert_eq!(out.log.rows.len(), 8);
+    // within each window of N=4 updates, staleness climbs 0,1,2,3
+    let st: Vec<f32> = out
+        .log
+        .rows
+        .iter()
+        .map(|r| r.values["staleness"])
+        .collect();
+    assert_eq!(&st[..4], &[0.0, 1.0, 2.0, 3.0], "staleness ladder: {st:?}");
+    assert_eq!(&st[4..8], &[0.0, 1.0, 2.0, 3.0]);
+}
+
+#[test]
+fn updates_per_batch_multiplies_versions_not_episodes() {
+    if !dev_available() {
+        return;
+    }
+    let mut cfg = test_cfg("t_epochs");
+    cfg.algo = Algo::Dpo;
+    cfg.updates_per_batch = 3;
+    cfg.steps = 4;
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+    // episodes: one gen round per step regardless of T
+    assert_eq!(
+        out.episodes,
+        cfg.steps * prep.engine.manifest.config.gen_batch as u64
+    );
+}
+
+#[test]
+fn k4_best_of_k_consumes_two_rounds_per_step() {
+    if !dev_available() {
+        return;
+    }
+    let mut cfg = test_cfg("k4");
+    cfg.algo = Algo::Dpo;
+    cfg.k_samples = 4;
+    cfg.steps = 4;
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+    // 2 gen rounds per training step (paper §4.2: gen takes K/2 longer)
+    assert_eq!(
+        out.episodes,
+        cfg.steps * 2 * prep.engine.manifest.config.gen_batch as u64
+    );
+}

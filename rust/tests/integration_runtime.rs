@@ -1,0 +1,399 @@
+//! Integration tests over the PJRT runtime + compiled dev artifacts.
+//!
+//! These exercise the full AOT boundary: HLO text emitted by python is
+//! loaded, compiled and executed from Rust, and its numerics are checked
+//! against invariants (logprob semantics, decode/full-forward parity
+//! through the generation engines, train-step loss descent).
+//!
+//! Requires `make artifacts` (skips, loudly, when artifacts/dev is absent —
+//! CI always builds artifacts first).
+
+use std::path::PathBuf;
+
+use async_rlhf::data::{pack_sequence, Task, TaskGen};
+use async_rlhf::gen::{
+    cached::CachedEngine, fused::FusedEngine, naive::NaiveEngine, Generator,
+    SampleOpts,
+};
+use async_rlhf::runtime::{scalar_f32, Engine, HostTensor, TrainState};
+use async_rlhf::tokenizer as tk;
+use async_rlhf::util::rng::Pcg32;
+
+fn dev_dir() -> Option<PathBuf> {
+    let root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let dir = root.join("dev");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/dev missing — run `make artifacts`");
+        None
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match dev_dir() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn engine_loads_and_compiles_all_artifacts() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    engine.warmup().unwrap();
+    assert!(engine.manifest.param_count > 0);
+    assert!(engine.manifest.artifacts.len() >= 12);
+}
+
+#[test]
+fn call_validates_shapes() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    // wrong input count
+    assert!(engine.call("score_rm", &[]).is_err());
+    // wrong element count
+    let bad = vec![
+        HostTensor::F32(vec![0.0; 3]),
+        HostTensor::I32(vec![0; 3]),
+        HostTensor::F32(vec![0.0; 3]),
+    ];
+    let err = engine.call("score_rm", &bad).unwrap_err().to_string();
+    assert!(err.contains("elements"), "{err}");
+    // wrong dtype
+    let cfg = &engine.manifest.config;
+    let n = engine.manifest.param_count;
+    let bad_dtype = vec![
+        HostTensor::F32(vec![0.0; n]),
+        HostTensor::F32(vec![0.0; cfg.gen_batch * cfg.seq_len]),
+        HostTensor::F32(vec![0.0; cfg.gen_batch * cfg.seq_len]),
+    ];
+    let err = engine.call("score_rm", &bad_dtype).unwrap_err().to_string();
+    assert!(err.contains("dtype"), "{err}");
+}
+
+#[test]
+fn logprob_semantics() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let params = engine.init_policy().unwrap();
+    let (b, s) = (cfg.gen_batch, cfg.seq_len);
+    let mut rng = Pcg32::new(3, 0);
+    let toks: Vec<i32> = (0..b * s)
+        .map(|_| rng.gen_range(cfg.vocab as u32) as i32)
+        .collect();
+    // full mask vs zero mask
+    let full = engine
+        .call(
+            "logprob",
+            &[
+                HostTensor::F32(params.clone()),
+                HostTensor::I32(toks.clone()),
+                HostTensor::F32(vec![1.0; b * s]),
+            ],
+        )
+        .unwrap();
+    let seq_lp = full[0].as_f32().unwrap();
+    let tok_lp = full[1].as_f32().unwrap();
+    for (i, &lp) in seq_lp.iter().enumerate() {
+        let sum: f32 = tok_lp[i * s..(i + 1) * s].iter().sum();
+        assert!((lp - sum).abs() < 1e-3, "row {i}: {lp} vs {sum}");
+        assert!(lp < 0.0);
+    }
+    // token logprobs are <= 0 and position 0 is 0
+    for i in 0..b {
+        assert_eq!(tok_lp[i * s], 0.0);
+    }
+    let zero = engine
+        .call(
+            "logprob",
+            &[
+                HostTensor::F32(params),
+                HostTensor::I32(toks),
+                HostTensor::F32(vec![0.0; b * s]),
+            ],
+        )
+        .unwrap();
+    for &lp in zero[0].as_f32().unwrap() {
+        assert_eq!(lp, 0.0);
+    }
+}
+
+#[test]
+fn cached_and_naive_engines_emit_identical_sequences() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let params = engine.init_policy().unwrap();
+    let taskgen = TaskGen::new(Task::Tldr, cfg.prompt_len, cfg.resp_len, 7);
+    let prompts: Vec<Vec<i32>> = taskgen
+        .batch(0, cfg.gen_batch)
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let opts = SampleOpts { temperature: 0.7, greedy: false };
+
+    let mut rng1 = Pcg32::new(99, 1);
+    let a = CachedEngine
+        .generate(&engine, &params, &prompts, opts, &mut rng1)
+        .unwrap();
+    let mut rng2 = Pcg32::new(99, 1);
+    let b = NaiveEngine
+        .generate(&engine, &params, &prompts, opts, &mut rng2)
+        .unwrap();
+    assert_eq!(a.tokens, b.tokens, "engines diverged");
+    assert_eq!(a.resp_mask, b.resp_mask);
+    assert_eq!(a.terminated, b.terminated);
+    for (ra, rb) in a.blp.iter().zip(&b.blp) {
+        for (x, y) in ra.iter().zip(rb) {
+            assert!((x - y).abs() < 2e-3, "blp diverged: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn behaviour_logprobs_match_logprob_executable() {
+    // The on-policy invariant for EVERY engine: blp recorded during
+    // generation equals the logprob executable's token logprobs on the
+    // same sequences (=> IS ratios are exactly 1 on-policy). This is the
+    // correctness anchor that also covers the fused on-device sampler.
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let params = engine.init_policy().unwrap();
+    let taskgen = TaskGen::new(Task::Tldr, cfg.prompt_len, cfg.resp_len, 11);
+    let prompts: Vec<Vec<i32>> = taskgen
+        .batch(0, cfg.gen_batch)
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let engines: [&dyn Generator; 3] =
+        [&CachedEngine, &NaiveEngine, &FusedEngine];
+    for generator in engines {
+        let mut rng = Pcg32::new(5, 0);
+        let gen = generator
+            .generate(
+                &engine,
+                &params,
+                &prompts,
+                SampleOpts { temperature: 0.7, greedy: false },
+                &mut rng,
+            )
+            .unwrap();
+        let (b, s) = (cfg.gen_batch, cfg.seq_len);
+        let mut toks = Vec::with_capacity(b * s);
+        let mut mask = Vec::with_capacity(b * s);
+        for i in 0..b {
+            toks.extend_from_slice(&gen.tokens[i]);
+            mask.extend_from_slice(&gen.resp_mask[i]);
+        }
+        let out = engine
+            .call(
+                "logprob",
+                &[
+                    HostTensor::F32(params.clone()),
+                    HostTensor::I32(toks),
+                    HostTensor::F32(mask.clone()),
+                ],
+            )
+            .unwrap();
+        let tok_lp = out[1].as_f32().unwrap();
+        let mut checked = 0;
+        for i in 0..b {
+            for t in 0..s {
+                if gen.resp_mask[i][t] == 1.0 {
+                    let expect = tok_lp[i * s + t];
+                    let got = gen.blp[i][t];
+                    assert!(
+                        (expect - got).abs() < 2e-3,
+                        "{}: row {i} pos {t}: blp {got} vs logprob {expect}",
+                        generator.name()
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 0, "{}", generator.name());
+    }
+}
+
+#[test]
+fn fused_engine_respects_eos_and_mask_conventions() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let params = engine.init_policy().unwrap();
+    let taskgen = TaskGen::new(Task::Tldr, cfg.prompt_len, cfg.resp_len, 19);
+    let prompts: Vec<Vec<i32>> = taskgen
+        .batch(0, cfg.gen_batch)
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let mut rng = Pcg32::new(2, 0);
+    let gen = FusedEngine
+        .generate(
+            &engine,
+            &params,
+            &prompts,
+            SampleOpts { temperature: 0.7, greedy: false },
+            &mut rng,
+        )
+        .unwrap();
+    for i in 0..cfg.gen_batch {
+        // prompt preserved
+        assert_eq!(&gen.tokens[i][..cfg.prompt_len], &prompts[i][..]);
+        // mask zero on prompt
+        assert!(gen.resp_mask[i][..cfg.prompt_len].iter().all(|&m| m == 0.0));
+        // after EOS (in-mask), everything is PAD with zero mask
+        if gen.terminated[i] {
+            let resp = gen.response(i, cfg.prompt_len);
+            assert_eq!(*resp.last().unwrap(), tk::EOS);
+            let eos_pos = cfg.prompt_len + resp.len() - 1;
+            for t in eos_pos + 1..cfg.seq_len {
+                assert_eq!(gen.tokens[i][t], tk::PAD, "row {i} pos {t}");
+                assert_eq!(gen.resp_mask[i][t], 0.0);
+            }
+        }
+    }
+    // greedy mode is deterministic regardless of seed
+    let mut rng_a = Pcg32::new(1, 0);
+    let mut rng_b = Pcg32::new(999, 7);
+    let greedy = SampleOpts { temperature: 0.7, greedy: true };
+    let a = FusedEngine
+        .generate(&engine, &params, &prompts, greedy, &mut rng_a)
+        .unwrap();
+    let b = FusedEngine
+        .generate(&engine, &params, &prompts, greedy, &mut rng_b)
+        .unwrap();
+    assert_eq!(a.tokens, b.tokens);
+}
+
+#[test]
+fn sft_train_step_reduces_loss() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let (b, s) = (cfg.gen_batch, cfg.seq_len);
+    let taskgen = TaskGen::new(Task::Tldr, cfg.prompt_len, cfg.resp_len, 13);
+    let mut toks = Vec::with_capacity(b * s);
+    let mut mask = Vec::with_capacity(b * s);
+    for ex in taskgen.batch(0, b) {
+        let (t, m) = pack_sequence(&ex.prompt, &ex.reference, s, true);
+        toks.extend(t);
+        mask.extend(m);
+    }
+    let mut state = TrainState::new(engine.init_policy().unwrap());
+    let mut losses = Vec::new();
+    for _ in 0..10 {
+        let m = state
+            .train_step(
+                &engine,
+                "train_sft",
+                1e-3,
+                vec![
+                    HostTensor::I32(toks.clone()),
+                    HostTensor::F32(mask.clone()),
+                ],
+            )
+            .unwrap();
+        losses.push(m[0]);
+    }
+    assert!(
+        losses[9] < losses[0] * 0.9,
+        "SFT loss did not descend: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert_eq!(state.step, 10);
+}
+
+#[test]
+fn eos_forcing_terminates_generation_early() {
+    // A policy SFT'd toward short EOS-terminated outputs should trigger the
+    // cached engine's early exit (steps < resp_len). We emulate by packing
+    // an extreme logit bias through training: instead, check the mechanism
+    // directly — train on responses that are a single EOS.
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let (b, s) = (cfg.gen_batch, cfg.seq_len);
+    let mut state = TrainState::new(engine.init_policy().unwrap());
+    let taskgen = TaskGen::new(Task::Tldr, cfg.prompt_len, cfg.resp_len, 17);
+    let examples = taskgen.batch(0, b);
+    let mut toks = Vec::with_capacity(b * s);
+    let mut mask = Vec::with_capacity(b * s);
+    for ex in &examples {
+        let (t, m) = pack_sequence(&ex.prompt, &[], s, true); // response = EOS only
+        toks.extend(t);
+        mask.extend(m);
+    }
+    for _ in 0..30 {
+        state
+            .train_step(
+                &engine,
+                "train_sft",
+                2e-3,
+                vec![
+                    HostTensor::I32(toks.clone()),
+                    HostTensor::F32(mask.clone()),
+                ],
+            )
+            .unwrap();
+    }
+    let prompts: Vec<Vec<i32>> =
+        examples.iter().map(|e| e.prompt.clone()).collect();
+    let mut rng = Pcg32::new(1, 1);
+    let gen = CachedEngine
+        .generate(
+            &engine,
+            &state.params,
+            &prompts,
+            SampleOpts { temperature: 0.2, greedy: false },
+            &mut rng,
+        )
+        .unwrap();
+    assert!(
+        gen.steps < cfg.resp_len,
+        "no early exit: {} steps",
+        gen.steps
+    );
+    assert!(gen.terminated.iter().filter(|&&t| t).count() > b / 2);
+    // terminated rows end with EOS in-mask
+    for i in 0..b {
+        if gen.terminated[i] {
+            let resp = gen.response(i, cfg.prompt_len);
+            assert_eq!(*resp.last().unwrap(), tk::EOS);
+        }
+    }
+}
+
+#[test]
+fn train_state_scalar_plumbing() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    // step scalar is 1-based and lr is passed through: two steps with lr=0
+    // must not change params
+    let params = engine.init_policy().unwrap();
+    let cfg = engine.manifest.config.clone();
+    let (b, s) = (cfg.gen_batch, cfg.seq_len);
+    let mut state = TrainState::new(params.clone());
+    for _ in 0..2 {
+        state
+            .train_step(
+                &engine,
+                "train_sft",
+                0.0,
+                vec![
+                    HostTensor::I32(vec![1; b * s]),
+                    HostTensor::F32(vec![1.0; b * s]),
+                ],
+            )
+            .unwrap();
+    }
+    assert_eq!(state.params, params, "lr=0 must be a no-op on params");
+    let _ = scalar_f32(0.0);
+}
