@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI gate: style checks alongside the tier-1 build+test pass.
+#
+#   ./ci.sh          # fmt + clippy + build + test
+#   ./ci.sh --fast   # skip the release build (style + debug tests only)
+#
+# Runs from the repo root; the crate lives under rust/. Benches emit
+# machine-readable perf snapshots (BENCH_hot_path.json) when artifacts
+# are present — build them first with `python -m compile.aot` if you want
+# the perf trajectory recorded.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+# the crate manifest lives with the sources under rust/ (fall back to the
+# repo root if a workspace manifest is ever added there)
+if [[ ! -f Cargo.toml && -f rust/Cargo.toml ]]; then
+  cd rust
+fi
+if [[ ! -f Cargo.toml ]]; then
+  echo "error: no Cargo.toml at repo root or rust/ — source-only checkout," >&2
+  echo "       the cargo gate needs the crate manifest first" >&2
+  exit 1
+fi
+
+echo "== style gate =="
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings
+
+echo "== tier-1 =="
+if [[ "${1:-}" != "--fast" ]]; then
+  cargo build --release
+fi
+cargo test -q

@@ -11,6 +11,7 @@ use async_rlhf::config::{Algo, ExpConfig, Mode};
 use async_rlhf::coordinator;
 use async_rlhf::eval::evaluate;
 use async_rlhf::gen::{cached::CachedEngine, Generator, SampleOpts};
+use async_rlhf::runtime::ParamView;
 use async_rlhf::tokenizer::detok;
 use async_rlhf::util::rng::Pcg32;
 
@@ -62,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         examples.iter().map(|e| e.prompt.clone()).collect();
     let mut rng = Pcg32::new(3, 0);
     let gen = CachedEngine.generate(
-        &prep.engine, &out.final_params, &prompts,
+        &prep.engine, ParamView::fresh(&out.final_params), &prompts,
         SampleOpts::default(), &mut rng,
     )?;
     println!("\nheld-out conversations:");

@@ -13,6 +13,7 @@ use async_rlhf::config::{Algo, ExpConfig, Mode};
 use async_rlhf::coordinator;
 use async_rlhf::eval::evaluate;
 use async_rlhf::gen::{cached::CachedEngine, Generator, SampleOpts};
+use async_rlhf::runtime::ParamView;
 use async_rlhf::tokenizer::detok;
 use async_rlhf::util::rng::Pcg32;
 
@@ -76,7 +77,7 @@ fn main() -> anyhow::Result<()> {
             examples.iter().map(|e| e.prompt.clone()).collect();
         let mut rng = Pcg32::new(0, 0);
         let gen = CachedEngine.generate(
-            &prep.engine, final_params, &prompts,
+            &prep.engine, ParamView::fresh(final_params), &prompts,
             SampleOpts { temperature: 0.7, greedy: true }, &mut rng,
         )?;
         println!("\nsample problems (greedy):");

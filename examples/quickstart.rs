@@ -12,6 +12,7 @@ use async_rlhf::config::{Algo, ExpConfig, Mode};
 use async_rlhf::coordinator;
 use async_rlhf::eval::evaluate;
 use async_rlhf::gen::{cached::CachedEngine, Generator, SampleOpts};
+use async_rlhf::runtime::ParamView;
 use async_rlhf::tokenizer::detok;
 use async_rlhf::util::rng::Pcg32;
 
@@ -35,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let prompts: Vec<Vec<i32>> = examples.iter().map(|e| e.prompt.clone()).collect();
     let mut rng = Pcg32::new(0, 0);
     let before = CachedEngine.generate(
-        &prep.engine, &prep.sft_params, &prompts,
+        &prep.engine, ParamView::fresh(&prep.sft_params), &prompts,
         SampleOpts::default(), &mut rng,
     )?;
 
@@ -50,7 +51,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut rng = Pcg32::new(0, 0);
     let after = CachedEngine.generate(
-        &prep.engine, &out.final_params, &prompts,
+        &prep.engine, ParamView::fresh(&out.final_params), &prompts,
         SampleOpts::default(), &mut rng,
     )?;
 

@@ -46,11 +46,30 @@ def to_hlo_text(lowered, return_tuple=True) -> str:
     return comp.as_hlo_text()
 
 
-# Artifacts whose outputs are untupled. Empty: the xla crate's PJRT
-# execute never sets untuple_result, so multi-output modules still come
-# back as one tuple buffer — the generation hot path instead fuses the
-# whole sampling loop into the `generate` executable (one call per round).
-UNTUPLED = set()
+# Artifacts the runtime executes on the buffer path: the Rust side
+# (Engine::execute_buffers) keeps their outputs as device buffers, so hot
+# state stays device-resident between calls and only what the host needs
+# is downloaded. (For multi-output modules return_tuple does not change
+# the emitted HLO — the root stays a tuple — so the flag is a runtime
+# protocol marker; clients whose PJRT execute untuples the root get
+# per-output buffers for free, and the engine falls back to a host-side
+# tuple split on clients that return one tuple buffer.) Concretely:
+# train steps keep (params, m, v) on device and fetch just the metrics;
+# the fused generate fetches its three sampled outputs with the policy
+# served from the device cache. Tupled artifacts (prefill/decode/logprob/
+# score_rm) still return one tuple literal via Engine::call — the
+# step-wise engines deliberately stay on that path as the Fig-14
+# middle tier.
+UNTUPLED = {
+    "generate",
+    "train_sft",
+    "train_rm",
+    "train_dpo",
+    "train_ppo",
+    "train_rloo",
+    "train_prloo",
+    "train_copg",
+}
 
 
 def _spec(shape, dtype):
@@ -187,6 +206,14 @@ def build_config(cfg: configs.Config, out_dir: str, verbose=True):
             _io_entry(f"out{i}", o.shape, o.dtype)
             for i, o in enumerate(jax.tree_util.tree_leaves(out_tree))
         ]
+        if name in UNTUPLED and len(outs) < 2:
+            # The runtime tells an untupling client's per-leaf result apart
+            # from a fallback client's root-tuple buffer by output count —
+            # a 1-output untupled artifact would be ambiguous (both look
+            # like one buffer). Keep single-output artifacts tupled.
+            raise ValueError(
+                f"{name}: untupled artifacts need >= 2 outputs, got {len(outs)}"
+            )
         artifacts[name] = {
             "file": fname,
             "inputs": [_io_entry(n, s, d) for n, s, d in args],

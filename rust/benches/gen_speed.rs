@@ -6,7 +6,7 @@
 
 use async_rlhf::data::{Task, TaskGen};
 use async_rlhf::gen::{cached::CachedEngine, fused::FusedEngine, naive::NaiveEngine, Generator, SampleOpts};
-use async_rlhf::runtime::Engine;
+use async_rlhf::runtime::{Engine, ParamView};
 use async_rlhf::util::bench::{artifact_dir_or_skip, bench};
 use async_rlhf::util::rng::Pcg32;
 
@@ -33,16 +33,20 @@ fn main() {
             .collect();
         let opts = SampleOpts { temperature: 0.7, greedy: false };
 
+        // one device-cached param set shared by all engines: the measured
+        // gap is forward-pass structure, not param upload traffic
+        let pv = ParamView::cached("bench_policy", 0, &params);
         let run = |gen: &dyn Generator, label: &str| {
             let mut seed = 0u64;
             bench(&format!("{model}/{label}"), 1, 5, || {
                 seed += 1;
                 let mut rng = Pcg32::new(seed, 0);
-                gen.generate(&engine, &params, &prompts, opts, &mut rng)
+                gen.generate(&engine, pv, &prompts, opts, &mut rng)
                     .unwrap();
             })
         };
-        let fused = run(&FusedEngine, "fused");
+        let fused_engine = FusedEngine::default();
+        let fused = run(&fused_engine, "fused");
         let cached = run(&CachedEngine, "cached");
         let naive = run(&NaiveEngine, "naive");
         rows.push((

@@ -2,13 +2,22 @@
 //!
 //! Times each executable class in isolation (prefill, decode step, RM
 //! score, logprob, fused train step) plus the host-side costs (sampling,
-//! batch assembly buffers, param publication clone) so regressions are
-//! attributable to a layer.
+//! param publication snapshot) so regressions are attributable to a layer.
+//!
+//! Each parameterised executable is measured twice: with fresh host params
+//! (the seed behaviour — full upload every call) and with the device
+//! cache (upload once per version). The train step is additionally
+//! profiled for host↔device *bytes per update* on both paths, and the
+//! whole run is dumped to `BENCH_hot_path.json` (override the path with
+//! `ASYNC_RLHF_BENCH_OUT`) so future PRs can track the perf trajectory.
 
 use async_rlhf::data::{Task, TaskGen};
 use async_rlhf::gen::sampler;
-use async_rlhf::runtime::{scalar_f32, scalar_i32, Engine, HostTensor};
+use async_rlhf::runtime::{
+    scalar_f32, CallArg, Engine, HostTensor, ParamView, TrainState,
+};
 use async_rlhf::util::bench::{artifact_dir_or_skip, bench};
+use async_rlhf::util::json::Json;
 use async_rlhf::util::rng::Pcg32;
 
 fn main() {
@@ -37,41 +46,48 @@ fn main() {
     }
     let toks: Vec<i32> = vec![1; b * s];
     let mask: Vec<f32> = vec![1.0; b * s];
+    let cached = ParamView::cached("bench", 0, &params);
 
-    // --- executable calls ---
-    bench(&format!("{model}/prefill"), 2, 10, || {
+    // --- executable calls: fresh (seed path) vs device-cached params ---
+    bench(&format!("{model}/prefill (fresh params)"), 2, 10, || {
         engine
-            .call(
+            .call_with(
                 "prefill",
                 &[
-                    HostTensor::F32(params.clone()),
-                    HostTensor::I32(prompt_flat.clone()),
+                    CallArg::Param(ParamView::fresh(&params)),
+                    CallArg::I32(&prompt_flat),
                 ],
+            )
+            .unwrap();
+    });
+    bench(&format!("{model}/prefill (cached params)"), 2, 10, || {
+        engine
+            .call_with(
+                "prefill",
+                &[CallArg::Param(cached), CallArg::I32(&prompt_flat)],
             )
             .unwrap();
     });
 
     let kv = engine
-        .call(
+        .call_with(
             "prefill",
-            &[
-                HostTensor::F32(params.clone()),
-                HostTensor::I32(prompt_flat.clone()),
-            ],
+            &[CallArg::Param(cached), CallArg::I32(&prompt_flat)],
         )
         .unwrap()
         .into_iter()
         .next()
         .unwrap();
+    let step_tok = vec![5i32; b];
     bench(&format!("{model}/decode_step (literal kv)"), 2, 10, || {
         engine
-            .call(
+            .call_with(
                 "decode",
                 &[
-                    HostTensor::F32(params.clone()),
-                    kv.clone(),
-                    HostTensor::I32(vec![5; b]),
-                    scalar_i32(p as i32),
+                    CallArg::Param(cached),
+                    CallArg::from(&kv),
+                    CallArg::I32(&step_tok),
+                    CallArg::ScalarI32(p as i32),
                 ],
             )
             .unwrap();
@@ -79,49 +95,78 @@ fn main() {
 
     bench(&format!("{model}/generate (fused round)"), 1, 5, || {
         engine
-            .call(
+            .call_with(
                 "generate",
                 &[
-                    HostTensor::F32(params.clone()),
-                    HostTensor::I32(prompt_flat.clone()),
-                    scalar_i32(7),
-                    scalar_f32(0.7),
+                    CallArg::Param(cached),
+                    CallArg::I32(&prompt_flat),
+                    CallArg::ScalarI32(7),
+                    CallArg::ScalarF32(0.7),
                 ],
             )
             .unwrap();
     });
 
-    bench(&format!("{model}/score_rm"), 2, 10, || {
+    bench(&format!("{model}/score_rm (cached params)"), 2, 10, || {
         engine
-            .call(
+            .call_with(
                 "score_rm",
                 &[
-                    HostTensor::F32(params.clone()),
-                    HostTensor::I32(toks.clone()),
-                    HostTensor::F32(mask.clone()),
+                    CallArg::Param(cached),
+                    CallArg::I32(&toks),
+                    CallArg::F32(&mask),
                 ],
             )
             .unwrap();
     });
 
-    bench(&format!("{model}/logprob"), 2, 10, || {
+    bench(&format!("{model}/logprob (fresh params)"), 2, 10, || {
         engine
-            .call(
+            .call_with(
                 "logprob",
                 &[
-                    HostTensor::F32(params.clone()),
-                    HostTensor::I32(toks.clone()),
-                    HostTensor::F32(mask.clone()),
+                    CallArg::Param(ParamView::fresh(&params)),
+                    CallArg::I32(&toks),
+                    CallArg::F32(&mask),
+                ],
+            )
+            .unwrap();
+    });
+    bench(&format!("{model}/logprob (cached params)"), 2, 10, || {
+        engine
+            .call_with(
+                "logprob",
+                &[
+                    CallArg::Param(cached),
+                    CallArg::I32(&toks),
+                    CallArg::F32(&mask),
                 ],
             )
             .unwrap();
     });
 
+    // --- train step: seed path vs device-resident path, bytes accounted ---
     let bp = cfg.train_pairs;
     let pair_toks: Vec<i32> = vec![1; bp * s];
     let pair_mask: Vec<f32> = vec![1.0; bp * s];
     let rlp: Vec<f32> = vec![-1.0; bp];
-    bench(&format!("{model}/train_dpo (fused)"), 2, 10, || {
+    let train_batch = vec![
+        HostTensor::I32(pair_toks.clone()),
+        HostTensor::F32(pair_mask.clone()),
+        HostTensor::I32(pair_toks.clone()),
+        HostTensor::F32(pair_mask.clone()),
+        HostTensor::F32(rlp.clone()),
+        HostTensor::F32(rlp.clone()),
+    ];
+    let steps = 10u64;
+
+    // snapshot the per-executable phase before profiling train traffic
+    let mut all_stats = engine.stats();
+    let exec_cache_counters = engine.param_cache_counters();
+
+    // seed path: full host params/m/v round-trip through `call` each update
+    engine.reset_stats();
+    bench(&format!("{model}/train_dpo (seed host path)"), 2, steps as usize, || {
         engine
             .call(
                 "train_dpo",
@@ -141,6 +186,34 @@ fn main() {
             )
             .unwrap();
     });
+    let (seed_up, seed_down) = engine.transfer_totals();
+    for (name, st) in engine.stats() {
+        all_stats.insert(format!("{name} [seed train path]"), st);
+    }
+    let seed_calls = 2 + steps; // warmup included in the byte totals
+    let seed_bytes_per_step = (seed_up + seed_down) / seed_calls;
+
+    // device-resident path: batch uploaded once, params/m/v stay on device,
+    // only the metrics vector comes back per update
+    engine.reset_stats();
+    let mut state = TrainState::new(params.clone());
+    let dev_batch = engine.upload_inputs("train_dpo", 5, &train_batch).unwrap();
+    bench(&format!("{model}/train_dpo (device resident)"), 2, steps as usize, || {
+        state
+            .train_step_uploaded(&engine, "train_dpo", 3e-4, &dev_batch)
+            .unwrap();
+    });
+    let (dev_up, dev_down) = engine.transfer_totals();
+    for (name, st) in engine.stats() {
+        all_stats.insert(format!("{name} [device train path]"), st);
+    }
+    let dev_bytes_per_step = (dev_up + dev_down) / seed_calls;
+    let reduction = 1.0 - dev_bytes_per_step as f64 / seed_bytes_per_step.max(1) as f64;
+    println!(
+        "\ntrain-step host<->device traffic: seed {seed_bytes_per_step} B/step, \
+         device-resident {dev_bytes_per_step} B/step ({:.1}% less)",
+        reduction * 100.0
+    );
 
     // --- host-side costs ---
     let logits: Vec<f32> = (0..b * v).map(|i| (i % 17) as f32 * 0.1).collect();
@@ -156,16 +229,62 @@ fn main() {
         let copy = params.clone();
         std::hint::black_box(&copy);
     });
+    let arc: std::sync::Arc<[f32]> = std::sync::Arc::from(&params[..]);
+    bench("host/param_publish_arc_swap", 10, 50, || {
+        let fetched = arc.clone();
+        std::hint::black_box(&fetched);
+    });
 
     // per-artifact cumulative stats gathered during this bench
     println!("\ncumulative engine stats:");
-    for (name, st) in engine.stats() {
+    for (name, st) in &all_stats {
         println!(
-            "  {:<22} calls {:>4}  total {:>8.3}s  mean {:>8.4}s",
-            name,
-            st.calls,
-            st.total_secs,
-            st.total_secs / st.calls.max(1) as f64
+            "  {:<40} calls {:>4}  total {:>8.3}s  up {:>10} B  down {:>10} B",
+            name, st.calls, st.total_secs, st.bytes_up, st.bytes_down
         );
     }
+    let (hits, misses) = exec_cache_counters;
+    println!("param cache (executable phase): {hits} hits, {misses} misses");
+
+    // --- machine-readable dump for the perf trajectory ---
+    let artifacts = Json::Obj(
+        all_stats
+            .iter()
+            .map(|(name, st)| {
+                (
+                    name.clone(),
+                    Json::obj(vec![
+                        ("calls", Json::num(st.calls as f64)),
+                        ("total_secs", Json::num(st.total_secs)),
+                        ("bytes_up", Json::num(st.bytes_up as f64)),
+                        ("bytes_down", Json::num(st.bytes_down as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let report = Json::obj(vec![
+        ("model", Json::str(&model)),
+        ("param_count", Json::num(n as f64)),
+        (
+            "train_step_bytes",
+            Json::obj(vec![
+                ("seed_path_per_step", Json::num(seed_bytes_per_step as f64)),
+                ("device_resident_per_step", Json::num(dev_bytes_per_step as f64)),
+                ("reduction", Json::num(reduction)),
+            ]),
+        ),
+        (
+            "param_cache",
+            Json::obj(vec![
+                ("hits", Json::num(hits as f64)),
+                ("misses", Json::num(misses as f64)),
+            ]),
+        ),
+        ("artifacts", artifacts),
+    ]);
+    let out_path = std::env::var("ASYNC_RLHF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hot_path.json".into());
+    std::fs::write(&out_path, report.to_string()).expect("write bench json");
+    println!("wrote {out_path}");
 }

@@ -14,20 +14,23 @@
 //! - **trainer (this thread)**: pops a round, labels it (reward + reference
 //!   logprobs), takes the update(s), publishes the new params.
 //!
-//! Parameter publication is a full `Vec<f32>` snapshot through a channel —
-//! the same "passing policy parameters is a synchronous call" cost the
-//! paper measures in A.2.
+//! Parameter publication is a latest-wins `Arc<[f32]>` slot: the trainer
+//! downloads its device-resident params once per publish, snapshots them
+//! into an `Arc`, and the swap itself is a pointer move — the worker
+//! clones the `Arc`, not the parameters. The worker's engine re-uploads
+//! the policy to its device only when the published version actually
+//! changed (the A.2 "passing policy parameters" cost is paid per publish,
+//! never per call).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::trainer::{
     assemble, generate_round, label_round, round_metrics, rounds_per_batch,
-    sample_opts, train_on_batch, Round,
+    sample_opts, staleness, train_on_batch, LabelScratch, Round,
 };
 use super::RunOutput;
 use crate::config::ExpConfig;
@@ -35,12 +38,49 @@ use crate::coordinator::pretrain::RLHF_RANGE;
 use crate::data::{Task, TaskGen};
 use crate::gen::fused::FusedEngine;
 use crate::metrics::{Phase, RunLog, Timeline};
-use crate::runtime::{Engine, TrainState};
+use crate::runtime::{Engine, ParamView, TrainState};
 use crate::util::rng::Pcg32;
 
 /// Messages from the generation worker.
 struct GenMsg {
     round: Round,
+}
+
+/// Latest-wins published-policy slot. The trainer overwrites, the worker
+/// reads whatever is freshest; intermediate versions are simply dropped
+/// (Algorithm 1 only ever wants θ_i, never the history).
+pub(crate) struct ParamSlot {
+    /// Fast-path hint so the worker can skip the lock when nothing new
+    /// was published. Updated after the slot contents.
+    hint: AtomicU64,
+    latest: Mutex<(u64, Arc<[f32]>)>,
+}
+
+impl ParamSlot {
+    pub(crate) fn new(version: u64, params: Arc<[f32]>) -> ParamSlot {
+        ParamSlot {
+            hint: AtomicU64::new(version),
+            latest: Mutex::new((version, params)),
+        }
+    }
+
+    /// Publish `params` as `version`: one pointer swap under the lock.
+    pub(crate) fn publish(&self, version: u64, params: Arc<[f32]>) {
+        *self.latest.lock().unwrap() = (version, params);
+        self.hint.store(version, Ordering::Release);
+    }
+
+    /// The freshest publication newer than `have`, if any.
+    pub(crate) fn fetch(&self, have: u64) -> Option<(u64, Arc<[f32]>)> {
+        if self.hint.load(Ordering::Acquire) <= have {
+            return None;
+        }
+        let guard = self.latest.lock().unwrap();
+        if guard.0 <= have {
+            return None;
+        }
+        Some((guard.0, guard.1.clone()))
+    }
 }
 
 pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<RunOutput> {
@@ -62,16 +102,16 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
     // bound-1 queue would admit staleness 2 (one round queued + one in
     // flight), which the integration tests reject.
     let (round_tx, round_rx) = mpsc::sync_channel::<GenMsg>(0);
-    // Param publications; the worker drains to the latest before each round.
-    let (param_tx, param_rx) = mpsc::channel::<(u64, Vec<f32>)>();
+    // Latest-wins param slot, seeded with the SFT checkpoint at version 0.
+    let slot = Arc::new(ParamSlot::new(0, Arc::from(&sft_params[..])));
     let stop = Arc::new(AtomicBool::new(false));
-    let published_version = Arc::new(AtomicU64::new(0));
 
     // -- generation worker ---------------------------------------------------
     let worker = {
         let stop = stop.clone();
+        let slot = slot.clone();
         let artifact_dir = cfg.artifact_dir();
-        let init_params = sft_params.clone();
+        let init_params: Arc<[f32]> = Arc::from(&sft_params[..]);
         let taskgen = TaskGen::new(
             taskgen.task,
             taskgen.prompt_len,
@@ -86,7 +126,7 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
             .spawn(move || -> Result<(f64, u64)> {
                 // own engine, own PJRT client (separate "GPU")
                 let engine = Engine::load(&artifact_dir)?;
-                let generator = FusedEngine;
+                let generator = FusedEngine::default();
                 let mut rng = Pcg32::new(seed, 0xa57c);
                 let mut params = init_params;
                 let mut version = 0u64;
@@ -96,16 +136,23 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
                 let mut rounds_done = 0u64;
                 while !stop.load(Ordering::Relaxed) {
                     // pick up the freshest published policy (Algorithm 1:
-                    // "update generation model θ <- θ_i")
-                    while let Ok((v, p)) = param_rx.try_recv() {
-                        if v >= version {
-                            version = v;
-                            params = p;
-                        }
+                    // "update generation model θ <- θ_i"); the cached view
+                    // below re-uploads to device only on a version change
+                    if let Some((v, p)) = slot.fetch(version) {
+                        version = v;
+                        params = p;
                     }
                     let round = generate_round(
-                        &engine, &generator, &params, version, &taskgen,
-                        cursor, k, opts, &mut rng, origin,
+                        &engine,
+                        &generator,
+                        ParamView::cached("policy", version, &params),
+                        version,
+                        &taskgen,
+                        cursor,
+                        k,
+                        opts,
+                        &mut rng,
+                        origin,
                     )?;
                     cursor += gen_bs / k as u64;
                     gen_total += round.gen_secs;
@@ -123,6 +170,7 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
 
     // -- trainer loop ---------------------------------------------------------
     let mut state = TrainState::new(sft_params.clone());
+    let mut scratch = LabelScratch::default();
     let rpb = rounds_per_batch(cfg.k_samples);
     let mut episodes = 0u64;
     let mut step = 0u64;
@@ -154,6 +202,7 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
                         cfg.k_samples,
                         cfg.eos_penalty,
                         cfg.gold_reward,
+                        &mut scratch,
                     )
                 })?;
                 rounds.push((msg.round, labels));
@@ -172,30 +221,32 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
             version += cfg.updates_per_batch as u64;
             step += 1;
 
-            // publish the new policy to the generation worker
-            timeline.record(Phase::Publish, || {
-                published_version.store(version, Ordering::Relaxed);
-                let _ = param_tx.send((version, state.params.clone()));
-            });
+            // publish the new policy: device -> host once per publish,
+            // then a latest-wins pointer swap
+            timeline.record(Phase::Publish, || -> Result<()> {
+                let host = state.params_host(engine)?;
+                slot.publish(version, Arc::from(host));
+                Ok(())
+            })?;
 
             let data_version = rounds
                 .iter()
                 .map(|(r, _)| r.params_version)
                 .max()
                 .unwrap();
-            let staleness = version.saturating_sub(1) - data_version.min(version.saturating_sub(1));
-            staleness_sum += staleness;
+            let stale = staleness(version, data_version);
+            staleness_sum += stale;
 
             let (_, labels) = &rounds[0];
             let mut row = round_metrics(labels);
             let m = all_metrics.last().unwrap();
             row.push(("loss", m[0]));
-            row.push(("staleness", staleness as f32));
+            row.push(("staleness", stale as f32));
             log.push(step, episodes, timeline.wall(), &row);
             if verbose && step % 8 == 0 {
                 eprintln!(
                     "[async {}] step {step}/{} episodes {episodes} \
-                     win {:.3} kl-ppl {:.4} staleness {staleness}",
+                     win {:.3} kl-ppl {:.4} staleness {stale}",
                     cfg.algo,
                     cfg.steps,
                     log.recent_mean("win_rate", 8).unwrap_or(0.0),
@@ -223,9 +274,38 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
     let _ = Task::from_name(&engine.manifest.config.task);
 
     Ok(RunOutput {
-        final_params: state.params,
+        final_params: state.into_params(engine)?,
         log,
         timeline,
         episodes,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ParamSlot;
+    use std::sync::Arc;
+
+    #[test]
+    fn param_slot_is_latest_wins() {
+        let slot = ParamSlot::new(0, Arc::from(&[0.0f32][..]));
+        assert!(slot.fetch(0).is_none(), "nothing newer than the seed");
+        for v in 1..=5u64 {
+            slot.publish(v, Arc::from(&[v as f32][..]));
+        }
+        // a reader at version 0 sees only the freshest publication
+        let (v, p) = slot.fetch(0).expect("new version visible");
+        assert_eq!(v, 5);
+        assert_eq!(&p[..], &[5.0]);
+        // and nothing newer than what it now has
+        assert!(slot.fetch(5).is_none());
+    }
+
+    #[test]
+    fn param_slot_fetch_is_cheap_pointer_clone() {
+        let big: Arc<[f32]> = Arc::from(vec![1.0f32; 1024].into_boxed_slice());
+        let slot = ParamSlot::new(1, big.clone());
+        let (_, p) = slot.fetch(0).unwrap();
+        assert!(Arc::ptr_eq(&p, &big), "fetch must share, not copy");
+    }
 }

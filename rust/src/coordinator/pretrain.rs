@@ -71,9 +71,10 @@ pub fn sft_checkpoint(
             );
         }
     }
+    let params = state.into_params(engine)?;
     std::fs::create_dir_all(run_dir.join("checkpoints"))?;
-    npy::write_f32(&path, &[state.params.len()], &state.params)?;
-    Ok(state.params)
+    npy::write_f32(&path, &[params.len()], &params)?;
+    Ok(params)
 }
 
 /// Train (or load cached) proxy RM from the SFT checkpoint on gold-labelled
@@ -138,7 +139,8 @@ pub fn rm_checkpoint(
             );
         }
     }
+    let params = state.into_params(engine)?;
     std::fs::create_dir_all(run_dir.join("checkpoints"))?;
-    npy::write_f32(&path, &[state.params.len()], &state.params)?;
-    Ok(state.params)
+    npy::write_f32(&path, &[params.len()], &params)?;
+    Ok(params)
 }

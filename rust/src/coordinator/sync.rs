@@ -6,12 +6,16 @@
 //! N=1 is fully on-policy; larger N makes later updates increasingly
 //! off-policy (the data's behaviour policy is N-1 updates stale by the
 //! last minibatch).
+//!
+//! Generation and training share one engine here, so the policy params
+//! never leave the device: generation reads the trainer's live device
+//! buffer directly (`TrainState::param_view`).
 
 use anyhow::Result;
 
 use super::trainer::{
     assemble, generate_round, label_round, round_metrics, rounds_per_batch,
-    sample_opts, train_on_batch, Labels, Round,
+    sample_opts, staleness, train_on_batch, LabelScratch, Labels, Round,
 };
 use super::RunOutput;
 use crate::config::ExpConfig;
@@ -28,9 +32,10 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
     let engine: &Engine = &prep.engine;
     let taskgen: &TaskGen = &prep.taskgen;
     let sft_params = prep.sft_params.clone();
-    let generator = FusedEngine;
+    let generator = FusedEngine::default();
     let mut rng = Pcg32::new(cfg.seed, 0x5c);
     let mut state = TrainState::new(sft_params.clone());
+    let mut scratch = LabelScratch::default();
     let mut log = RunLog::new();
     log.set_meta("label", cfg.label());
     let mut timeline = Timeline::new();
@@ -54,7 +59,7 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
                     generate_round(
                         engine,
                         &generator,
-                        &state.params,
+                        state.param_view("policy", version),
                         version,
                         taskgen,
                         cursor,
@@ -75,6 +80,7 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
                         cfg.k_samples,
                         cfg.eos_penalty,
                         cfg.gold_reward,
+                        &mut scratch,
                     )
                 })?;
                 rounds.push((round, labels));
@@ -101,7 +107,10 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
             let mut row = round_metrics(labels);
             let m = all_metrics.last().unwrap();
             row.push(("loss", m[0]));
-            row.push(("staleness", (version.saturating_sub(1 + labels_version(rounds))) as f32));
+            row.push((
+                "staleness",
+                staleness(version, labels_version(rounds)) as f32,
+            ));
             log.push(step, episodes, timeline.wall(), &row);
             if verbose && step % 8 == 0 {
                 eprintln!(
@@ -121,7 +130,7 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
     }
 
     Ok(RunOutput {
-        final_params: state.params,
+        final_params: state.into_params(engine)?,
         log,
         timeline,
         episodes,

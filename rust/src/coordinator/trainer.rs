@@ -9,7 +9,7 @@ use crate::config::{Algo, ExpConfig};
 use crate::data::{Example, Task, TaskGen};
 use crate::gen::{GenBatch, Generator, SampleOpts};
 use crate::reward::{gold, valid_mask};
-use crate::runtime::{Engine, HostTensor, TrainState};
+use crate::runtime::{CallArg, Engine, HostTensor, ParamView, TrainState};
 use crate::tokenizer as tk;
 use crate::util::rng::Pcg32;
 
@@ -47,12 +47,14 @@ pub fn round_prompts(
     (examples, prompts)
 }
 
-/// Generate one round (runs on whichever thread owns the generation engine).
+/// Generate one round (runs on whichever thread owns the generation
+/// engine). `params` is a [`ParamView`]: cached/device views avoid
+/// re-uploading the policy unless its version changed.
 #[allow(clippy::too_many_arguments)]
 pub fn generate_round(
     engine: &Engine,
     generator: &dyn Generator,
-    params: &[f32],
+    params: ParamView<'_>,
     params_version: u64,
     taskgen: &TaskGen,
     start_index: u64,
@@ -99,10 +101,23 @@ pub struct Labels {
     pub mean_len: f32,
 }
 
+/// Reusable flattening scratch for per-round labelling: one allocation
+/// per run instead of two per round.
+#[derive(Default)]
+pub struct LabelScratch {
+    toks: Vec<i32>,
+    mask: Vec<f32>,
+}
+
 /// Label a round: score with the proxy RM (or the rule reward for math),
 /// judge with gold, compute reference logprobs. Runs on the trainer thread
 /// (paper Algorithm 1 places reward + loss on the learner). `rm` is the
 /// (engine, params) scorer — possibly a different-scale bundle (Fig 5).
+///
+/// `ref_params` is frozen for the run, so it lives in the engine's device
+/// cache under the `"ref"` key: uploaded on the first round, reused
+/// thereafter (the engine's reference params must not change under the
+/// same key — every coordinator uses the one SFT checkpoint per run).
 pub fn label_round(
     engine: &Engine,
     round: &Round,
@@ -111,6 +126,7 @@ pub fn label_round(
     k: usize,
     eos_penalty: f32,
     gold_reward: bool,
+    scratch: &mut LabelScratch,
 ) -> Result<Labels> {
     let cfg = &engine.manifest.config;
     let (b, s, p) = (cfg.gen_batch, cfg.seq_len, cfg.prompt_len);
@@ -160,28 +176,30 @@ pub fn label_round(
     };
 
     // --- reference logprobs (KL anchor + DPO reference) ---
-    let mut toks_flat = Vec::with_capacity(b * s);
-    let mut mask_flat = Vec::with_capacity(b * s);
+    scratch.toks.clear();
+    scratch.mask.clear();
+    scratch.toks.reserve(b * s);
+    scratch.mask.reserve(b * s);
     for i in 0..b {
-        toks_flat.extend_from_slice(&gen.tokens[i]);
-        mask_flat.extend_from_slice(&gen.resp_mask[i]);
+        scratch.toks.extend_from_slice(&gen.tokens[i]);
+        scratch.mask.extend_from_slice(&gen.resp_mask[i]);
     }
-    let out = engine.call(
+    let out = engine.call_with(
         "logprob",
         &[
-            HostTensor::F32(ref_params.to_vec()),
-            HostTensor::I32(toks_flat),
-            HostTensor::F32(mask_flat.clone()),
+            CallArg::Param(ParamView::cached("ref", 0, ref_params)),
+            CallArg::I32(&scratch.toks),
+            CallArg::F32(&scratch.mask),
         ],
     )?;
     let mut it = out.into_iter();
     let rlp_seq = it.next().unwrap().into_f32()?;
     let rlp_tok = it.next().unwrap().into_f32()?;
 
-    let mask_total: f32 = mask_flat.iter().sum();
+    let mask_total: f32 = scratch.mask.iter().sum();
     let rlp_masked: f32 = rlp_tok
         .iter()
-        .zip(&mask_flat)
+        .zip(&scratch.mask)
         .map(|(l, m)| l * m)
         .sum();
     let ref_ppl = (-rlp_masked / mask_total.max(1.0)).exp();
@@ -189,7 +207,7 @@ pub fn label_round(
         .blp
         .iter()
         .flatten()
-        .zip(&mask_flat)
+        .zip(&scratch.mask)
         .map(|(l, m)| l * m)
         .sum();
 
@@ -398,6 +416,10 @@ pub fn rounds_per_batch(k: usize) -> usize {
 
 /// Run `t` optimizer updates on one assembled batch ("ppo epochs",
 /// paper §4.1). Returns the metrics of each update.
+///
+/// The batch is uploaded to the device once and reused across the whole
+/// inner loop; on untupled train artifacts the optimizer triple also stays
+/// device-resident, so repeat updates move only the metrics vector.
 pub fn train_on_batch(
     engine: &Engine,
     state: &mut TrainState,
@@ -405,13 +427,23 @@ pub fn train_on_batch(
     lr: f32,
     t_updates: usize,
 ) -> Result<Vec<Vec<f32>>> {
+    let dev_batch = engine.upload_inputs(batch.artifact, 5, &batch.tensors)?;
     let mut all = Vec::with_capacity(t_updates);
     for _ in 0..t_updates {
         let metrics =
-            state.train_step(engine, batch.artifact, lr, batch.tensors.clone())?;
+            state.train_step_uploaded(engine, batch.artifact, lr, &dev_batch)?;
         all.push(metrics);
     }
     Ok(all)
+}
+
+/// Staleness of a just-applied update: how many optimizer versions behind
+/// the freshest pre-update version (`version - 1`) the training data's
+/// behaviour policy was. 0 means fully on-policy.
+pub fn staleness(version_after_update: u64, data_version: u64) -> u64 {
+    version_after_update
+        .saturating_sub(1)
+        .saturating_sub(data_version)
 }
 
 /// Per-round training-curve metrics derived from labels (gold win-rate and
@@ -431,4 +463,53 @@ pub fn round_metrics(labels: &Labels) -> Vec<(&'static str, f32)> {
 /// ExpConfig-driven sampling options.
 pub fn sample_opts(cfg: &ExpConfig) -> SampleOpts {
     SampleOpts { temperature: cfg.temperature, greedy: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::staleness;
+
+    #[test]
+    fn staleness_is_plain_saturating_sub() {
+        // on-policy: data generated at the pre-update version
+        assert_eq!(staleness(1, 0), 0);
+        assert_eq!(staleness(5, 4), 0);
+        // one version behind
+        assert_eq!(staleness(5, 3), 1);
+        // data "from the future" (defensive) saturates to 0
+        assert_eq!(staleness(1, 7), 0);
+        assert_eq!(staleness(0, 0), 0);
+    }
+
+    #[test]
+    fn one_step_queue_bounds_staleness() {
+        // Discrete model of the bound-0 rendezvous queue: the worker picks
+        // up the freshest published params right after handing round t
+        // over (i.e. before step t's update publishes), so round t+1 is
+        // generated with the version published after step t-1. Per-step
+        // staleness is then bounded by 2*T - 1 (T = updates_per_batch) and
+        // for the paper's T=1 the mean is <= updates_per_batch = 1.
+        for t_updates in [1u64, 2, 3] {
+            let steps = 50u64;
+            let mut published = 0u64; // latest version the worker saw
+            let mut version = 0u64; // trainer's optimizer version
+            let mut next_round_version = 0u64; // round in flight
+            let mut sum = 0u64;
+            for _ in 0..steps {
+                let data_version = next_round_version;
+                // handover: worker immediately starts the next round with
+                // the freshest published params (step's publish not yet out)
+                next_round_version = published;
+                version += t_updates;
+                published = version; // end-of-step publish
+                let st = staleness(version, data_version);
+                assert!(st <= 2 * t_updates - 1, "st {st} T {t_updates}");
+                sum += st;
+            }
+            let mean = sum as f64 / steps as f64;
+            if t_updates == 1 {
+                assert!(mean <= 1.0, "mean staleness {mean} > updates_per_batch");
+            }
+        }
+    }
 }

@@ -11,7 +11,7 @@ use crate::data::{Task, TaskGen};
 use crate::gen::fused::FusedEngine;
 use crate::gen::{Generator, SampleOpts};
 use crate::reward::gold;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{CallArg, Engine, ParamView};
 use crate::tokenizer as tk;
 use crate::util::rng::Pcg32;
 
@@ -29,6 +29,11 @@ pub struct EvalResult {
 /// Evaluate `params` on `n_prompts` held-out prompts (rounded up to whole
 /// generation batches). Math tasks are decoded greedily (pass@1);
 /// everything else samples at `temperature` like training.
+///
+/// Both param sets are frozen for the duration of the call, so they are
+/// uploaded to the device once (under eval-private cache keys, invalidated
+/// on entry since successive evals pass different vectors) and reused for
+/// every round.
 pub fn evaluate(
     engine: &Engine,
     params: &[f32],
@@ -42,9 +47,16 @@ pub fn evaluate(
     let (bg, s, p) = (cfg.gen_batch, cfg.seq_len, cfg.prompt_len);
     let task = taskgen.task;
     let greedy = task == Task::Math;
-    let generator = FusedEngine;
+    let generator = FusedEngine::default();
     let mut rng = Pcg32::new(seed, 0xe7a1);
     let opts = SampleOpts { temperature, greedy };
+
+    // successive evaluate() calls pass arbitrary param vectors under the
+    // same keys: drop any stale entries, then upload once per call
+    engine.invalidate_params("eval_policy");
+    engine.invalidate_params("eval_ref");
+    let policy = ParamView::cached("eval_policy", 0, params);
+    let reference = ParamView::cached("eval_ref", 0, ref_params);
 
     let rounds = n_prompts.div_ceil(bg);
     let mut win_sum = 0.0f32;
@@ -54,27 +66,29 @@ pub fn evaluate(
     let mut lp_sum = 0.0f64;
     let mut tok_sum = 0.0f64;
     let mut total = 0usize;
+    let mut toks_flat = Vec::with_capacity(bg * s);
+    let mut mask_flat = Vec::with_capacity(bg * s);
 
     for r in 0..rounds {
         let start = EVAL_RANGE + (r * bg) as u64;
         let examples = taskgen.batch(start, bg);
         let prompts: Vec<Vec<i32>> =
             examples.iter().map(|e| e.prompt.clone()).collect();
-        let gen = generator.generate(engine, params, &prompts, opts, &mut rng)?;
+        let gen = generator.generate(engine, policy, &prompts, opts, &mut rng)?;
 
         // reference-model logprobs for the KL/ppl measurement
-        let mut toks_flat = Vec::with_capacity(bg * s);
-        let mut mask_flat = Vec::with_capacity(bg * s);
+        toks_flat.clear();
+        mask_flat.clear();
         for i in 0..bg {
             toks_flat.extend_from_slice(&gen.tokens[i]);
             mask_flat.extend_from_slice(&gen.resp_mask[i]);
         }
-        let out = engine.call(
+        let out = engine.call_with(
             "logprob",
             &[
-                HostTensor::F32(ref_params.to_vec()),
-                HostTensor::I32(toks_flat),
-                HostTensor::F32(mask_flat.clone()),
+                CallArg::Param(reference),
+                CallArg::I32(&toks_flat),
+                CallArg::F32(&mask_flat),
             ],
         )?;
         let rlp_tok = out.into_iter().nth(1).unwrap().into_f32()?;

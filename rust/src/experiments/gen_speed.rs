@@ -15,7 +15,7 @@ use super::runner::{print_table, save_csv};
 use super::{out_dir, require_model};
 use crate::data::{Task, TaskGen};
 use crate::gen::{cached::CachedEngine, naive::NaiveEngine, Generator, SampleOpts};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, ParamView};
 use crate::util::args::Args;
 
 pub fn fig14(args: &Args) -> Result<()> {
@@ -43,16 +43,19 @@ pub fn fig14(args: &Args) -> Result<()> {
             examples.iter().map(|e| e.prompt.clone()).collect();
         let opts = SampleOpts { temperature: 0.7, greedy: false };
 
+        // same device-cached param set for both engines, so the measured
+        // gap is forward-pass cost, not param upload traffic
+        let pv = ParamView::cached("bench_policy", 0, &params);
         let mut times = Vec::new();
         for gen in [&CachedEngine as &dyn Generator, &NaiveEngine] {
             // warmup compiles the executables
             let mut rng = crate::util::rng::Pcg32::new(seed, 1);
-            gen.generate(&engine, &params, &prompts, opts, &mut rng)?;
+            gen.generate(&engine, pv, &prompts, opts, &mut rng)?;
             let t0 = Instant::now();
             let mut tokens = 0usize;
             for rep in 0..reps {
                 let mut rng = crate::util::rng::Pcg32::new(seed, 2 + rep as u64);
-                let out = gen.generate(&engine, &params, &prompts, opts, &mut rng)?;
+                let out = gen.generate(&engine, pv, &prompts, opts, &mut rng)?;
                 tokens += out
                     .resp_mask
                     .iter()

@@ -6,14 +6,17 @@
 //!
 //! This engine is the middle tier of the Fig-14 comparison: linear decode
 //! (vs the naive engine's quadratic recompute) but it pays a host<->device
-//! round-trip of the KV cache per token through the PJRT literal API. The
-//! top tier, [`super::fused::FusedEngine`], moves the whole loop on-device
+//! round-trip of the KV cache per token through the PJRT literal API —
+//! deliberately left on the host-literal path. The params, though, come
+//! from the device cache: a cached [`ParamView`] uploads once per round
+//! (first call), not once per token. The top tier,
+//! [`super::fused::FusedEngine`], moves the whole loop on-device
 //! (EXPERIMENTS.md §Perf).
 
 use anyhow::Result;
 
 use super::{DecodeState, GenBatch, Generator, SampleOpts};
-use crate::runtime::{scalar_i32, Engine, HostTensor};
+use crate::runtime::{CallArg, Engine, ParamView};
 use crate::util::rng::Pcg32;
 
 #[derive(Default)]
@@ -27,7 +30,7 @@ impl Generator for CachedEngine {
     fn generate(
         &self,
         engine: &Engine,
-        params: &[f32],
+        params: ParamView<'_>,
         prompts: &[Vec<i32>],
         opts: SampleOpts,
         rng: &mut Pcg32,
@@ -43,12 +46,9 @@ impl Generator for CachedEngine {
         for row in prompts {
             prompt_flat.extend_from_slice(&row[..p]);
         }
-        let out = engine.call(
+        let out = engine.call_with(
             "prefill",
-            &[
-                HostTensor::F32(params.to_vec()),
-                HostTensor::I32(prompt_flat),
-            ],
+            &[CallArg::Param(params), CallArg::I32(&prompt_flat)],
         )?;
         let mut it = out.into_iter();
         let mut kv = it.next().unwrap();
@@ -62,13 +62,13 @@ impl Generator for CachedEngine {
                 break;
             }
             // decode: token at `pos` -> logits for pos+1, updated cache
-            let out = engine.call(
+            let out = engine.call_with(
                 "decode",
                 &[
-                    HostTensor::F32(params.to_vec()),
-                    kv,
-                    HostTensor::I32(sampled),
-                    scalar_i32(pos as i32),
+                    CallArg::Param(params),
+                    CallArg::from(&kv),
+                    CallArg::I32(&sampled),
+                    CallArg::ScalarI32(pos as i32),
                 ],
             )?;
             let mut it = out.into_iter();

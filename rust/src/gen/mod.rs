@@ -27,7 +27,7 @@ pub mod sampler;
 
 use anyhow::Result;
 
-use crate::runtime::Engine;
+use crate::runtime::{Engine, ParamView};
 use crate::tokenizer as tk;
 use crate::util::rng::Pcg32;
 
@@ -77,11 +77,14 @@ impl Default for SampleOpts {
 pub trait Generator {
     fn name(&self) -> &'static str;
 
-    /// Generate responses for exactly `gen_batch` prompts using `params`.
+    /// Generate responses for exactly `gen_batch` prompts using `params`
+    /// (host, device-cached by version, or already resident — see
+    /// [`ParamView`]). Cached views upload the params once per version,
+    /// not once per PJRT call.
     fn generate(
         &self,
         engine: &Engine,
-        params: &[f32],
+        params: ParamView<'_>,
         prompts: &[Vec<i32>],
         opts: SampleOpts,
         rng: &mut Pcg32,

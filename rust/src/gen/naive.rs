@@ -5,12 +5,14 @@
 //! per token -> O(S^2) per response, versus the cached engine's O(S).
 //! This is the baseline whose gap to the cached engine reproduces paper
 //! Fig 14 / Appendix C.1 (vLLM is 12-20x faster than transformers, and the
-//! gap grows superlinearly with model size).
+//! gap grows superlinearly with model size). Params still come from the
+//! device cache (cached [`ParamView`]s upload once per round, not once
+//! per token) so the measured gap is forward-pass cost, not param I/O.
 
 use anyhow::Result;
 
 use super::{DecodeState, GenBatch, Generator, SampleOpts};
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{CallArg, Engine, ParamView};
 use crate::util::rng::Pcg32;
 
 #[derive(Default)]
@@ -24,7 +26,7 @@ impl Generator for NaiveEngine {
     fn generate(
         &self,
         engine: &Engine,
-        params: &[f32],
+        params: ParamView<'_>,
         prompts: &[Vec<i32>],
         opts: SampleOpts,
         rng: &mut Pcg32,
@@ -35,24 +37,23 @@ impl Generator for NaiveEngine {
 
         let mut st = DecodeState::new(prompts, p, s);
         let mut steps = 0;
+        let mut toks_flat = Vec::with_capacity(b * s);
+        let mut logits = Vec::with_capacity(b * v);
         for pos in p..s {
             steps += 1;
             // recompute the whole sequence to get logits at pos-1 (which
             // predict the token at pos) — the training-library way
-            let mut toks_flat = Vec::with_capacity(b * s);
+            toks_flat.clear();
             for row in &st.tokens {
                 toks_flat.extend_from_slice(row);
             }
-            let out = engine.call(
+            let out = engine.call_with(
                 "forward_full",
-                &[
-                    HostTensor::F32(params.to_vec()),
-                    HostTensor::I32(toks_flat),
-                ],
+                &[CallArg::Param(params), CallArg::I32(&toks_flat)],
             )?;
             let logits_all = out.into_iter().next().unwrap().into_f32()?;
             // slice [B, S, V] at position pos-1
-            let mut logits = Vec::with_capacity(b * v);
+            logits.clear();
             for i in 0..b {
                 let base = i * s * v + (pos - 1) * v;
                 logits.extend_from_slice(&logits_all[base..base + v]);

@@ -167,7 +167,11 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
         examples.iter().map(|e| e.prompt.clone()).collect();
     let mut rng = Pcg32::new(0, 0);
     let gen = CachedEngine.generate(
-        &engine, &sft, &prompts, SampleOpts::default(), &mut rng,
+        &engine,
+        async_rlhf::runtime::ParamView::fresh(&sft),
+        &prompts,
+        SampleOpts::default(),
+        &mut rng,
     )?;
     for i in 0..6.min(prompts.len()) {
         println!("prompt: {}", detok(&examples[i].prompt));

@@ -10,13 +10,19 @@ use anyhow::Result;
 
 use super::gold;
 use crate::data::{pack_sequence, Example, TaskGen};
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{CallArg, Engine, ParamView};
 use crate::util::rng::Pcg32;
 
 /// Score full sequences (prompt ++ response ++ EOS ++ PAD) with the proxy
 /// RM. `seqs`/`masks` must be gen_batch rows (the executable's fixed batch);
 /// masks cover the whole valid sequence (prompt + response) because the
 /// score reads the last valid token.
+///
+/// The RM params are frozen for a run, so they live in the engine's device
+/// cache under the `"rm"` key: uploaded on the first scoring call, reused
+/// for every round after (don't score with two different RM param sets
+/// through one engine — each run holds exactly one, cross-scale RMs get
+/// their own engine).
 pub fn score_batch(
     engine: &Engine,
     rm_params: &[f32],
@@ -33,12 +39,12 @@ pub fn score_batch(
         toks.extend_from_slice(row);
         mask.extend_from_slice(m);
     }
-    let out = engine.call(
+    let out = engine.call_with(
         "score_rm",
         &[
-            HostTensor::F32(rm_params.to_vec()),
-            HostTensor::I32(toks),
-            HostTensor::F32(mask),
+            CallArg::Param(ParamView::cached("rm", 0, rm_params)),
+            CallArg::I32(&toks),
+            CallArg::F32(&mask),
         ],
     )?;
     out.into_iter().next().unwrap().into_f32()

@@ -5,15 +5,40 @@
 //! (not `Send`), which matches the paper's architecture — the generation
 //! worker and the trainer each own their own backend and exchange plain
 //! host buffers (DESIGN.md §3).
+//!
+//! # Execution paths
+//!
+//! There are two ways through PJRT, chosen per artifact by the manifest's
+//! `untupled` flag (set in python/compile/aot.py):
+//!
+//! - **Host-literal path** (`call` / `call_with`, tupled artifacts): every
+//!   input becomes a device buffer for the call, the single tuple result
+//!   is downloaded and split on the host. Used by prefill/decode/logprob/
+//!   score_rm — the step-wise engines deliberately stay here as the
+//!   Fig-14 middle tier.
+//! - **Buffer path** (`execute_buffers`, untupled artifacts): PJRT returns
+//!   one `DeviceBuffer` per output, so hot state (train params, Adam
+//!   moments) stays device-resident across calls and only what the host
+//!   actually needs (metrics, sampled tokens) is downloaded. Used by the
+//!   fused `generate` and every `train_*` artifact.
+//!
+//! Both paths draw parameter inputs from the engine's **device cache**: a
+//! [`ParamView::cached`] argument uploads its host vector once per
+//! `(key, version)` and reuses the resident buffer until the version
+//! changes. Frozen sets (the SFT reference, the proxy RM) therefore upload
+//! exactly once per run, and the generation worker re-uploads only when
+//! the trainer publishes a new policy version. All host↔device traffic is
+//! accounted per artifact in [`CallStats`] (`bytes_up` / `bytes_down`).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::manifest::{ArtifactSpec, DType, Manifest};
+use super::manifest::{ArtifactSpec, DType, IoSpec, Manifest};
 
 /// Host-side tensor passed to/from executables.
 #[derive(Debug, Clone)]
@@ -70,15 +95,11 @@ impl HostTensor {
     }
 
     fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
         let lit = match self {
             HostTensor::F32(v) => xla::Literal::vec1(v),
             HostTensor::I32(v) => xla::Literal::vec1(v),
         };
-        if shape.len() == 1 {
-            return Ok(lit);
-        }
-        Ok(lit.reshape(&dims)?)
+        shaped(lit, shape)
     }
 
     fn from_literal(lit: &xla::Literal, dtype: DType) -> Result<HostTensor> {
@@ -87,6 +108,16 @@ impl HostTensor {
             DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
         })
     }
+}
+
+/// Reshape a rank-1 literal to the manifest shape (rank-1 stays as-is,
+/// scalars become rank-0).
+fn shaped(lit: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
 }
 
 /// Scalar convenience constructors.
@@ -98,11 +129,94 @@ pub fn scalar_i32(x: i32) -> HostTensor {
     HostTensor::I32(vec![x])
 }
 
-/// Cumulative per-artifact timing, for the perf pass and overhead analysis.
+/// A parameter vector as seen by a call: plain host memory, a device-cache
+/// slot keyed by `(key, version)`, or an already-resident buffer.
+///
+/// The cache contract: within one engine, `(key, version)` uniquely
+/// identifies the vector's *content*. Callers that rebind a key with new
+/// content must bump the version (the async trainer does) or invalidate
+/// the key first ([`Engine::invalidate_params`], as `eval` does).
+#[derive(Clone, Copy)]
+pub enum ParamView<'a> {
+    /// Upload fresh on every call — no caching (ad-hoc callers, benches).
+    Fresh(&'a [f32]),
+    /// Upload once per `(key, version)`, then reuse the device buffer.
+    Cached { key: &'a str, version: u64, host: &'a [f32] },
+    /// Already device-resident (e.g. the live training params in sync
+    /// mode) — no transfer at all.
+    Device(&'a DeviceBuffer),
+}
+
+impl<'a> ParamView<'a> {
+    pub fn fresh(host: &'a [f32]) -> ParamView<'a> {
+        ParamView::Fresh(host)
+    }
+
+    pub fn cached(key: &'a str, version: u64, host: &'a [f32]) -> ParamView<'a> {
+        ParamView::Cached { key, version, host }
+    }
+}
+
+/// One argument to an executable call. Slice variants are borrowed so
+/// callers can reuse flattening scratch across rounds; `Param` goes
+/// through the device cache; `Device` chains a previous call's output
+/// without touching the host.
+pub enum CallArg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+    Param(ParamView<'a>),
+    Device(&'a DeviceBuffer),
+}
+
+impl<'a> From<&'a HostTensor> for CallArg<'a> {
+    fn from(t: &'a HostTensor) -> CallArg<'a> {
+        match t {
+            HostTensor::F32(v) => CallArg::F32(v),
+            HostTensor::I32(v) => CallArg::I32(v),
+        }
+    }
+}
+
+/// A device-resident tensor: an output of `execute_buffers` or an upload.
+/// Cloning shares the underlying PJRT buffer (cheap `Rc` bump). Download
+/// through [`Engine::download`] so the transfer is accounted.
+#[derive(Clone)]
+pub struct DeviceBuffer {
+    buf: Rc<xla::PjRtBuffer>,
+    dtype: DType,
+    numel: usize,
+    /// Stats key the buffer's transfers are attributed to (the artifact
+    /// or cache key that produced it).
+    origin: String,
+}
+
+impl DeviceBuffer {
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+}
+
+/// Cumulative per-artifact timing and host↔device traffic, for the perf
+/// pass and overhead analysis. On the buffer path `total_secs` covers
+/// dispatch plus any accounted downloads; `bytes_*` count payload bytes
+/// actually moved (cache hits and `Device` args move nothing).
 #[derive(Debug, Default, Clone)]
 pub struct CallStats {
     pub calls: u64,
     pub total_secs: f64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+struct ParamEntry {
+    version: u64,
+    buffer: DeviceBuffer,
 }
 
 pub struct Engine {
@@ -110,6 +224,29 @@ pub struct Engine {
     client: xla::PjRtClient,
     executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
     stats: RefCell<BTreeMap<String, CallStats>>,
+    /// Named/versioned device-resident parameter sets (see [`ParamView`]).
+    param_cache: RefCell<BTreeMap<String, ParamEntry>>,
+    cache_hits: Cell<u64>,
+    cache_misses: Cell<u64>,
+    /// One-shot warning flag for clients that return untupled artifacts'
+    /// root tuple as a single buffer (see `execute_buffers_spec`).
+    tuple_fallback_warned: Cell<bool>,
+}
+
+fn check_input(name: &str, s: &IoSpec, dtype: DType, len: usize) -> Result<()> {
+    if dtype != s.dtype {
+        bail!("{name}: input '{}' dtype mismatch", s.name);
+    }
+    if len != s.numel() {
+        bail!(
+            "{name}: input '{}' has {} elements, expected {} {:?}",
+            s.name,
+            len,
+            s.numel(),
+            s.shape
+        );
+    }
+    Ok(())
 }
 
 impl Engine {
@@ -123,6 +260,10 @@ impl Engine {
             client,
             executables: RefCell::new(BTreeMap::new()),
             stats: RefCell::new(BTreeMap::new()),
+            param_cache: RefCell::new(BTreeMap::new()),
+            cache_hits: Cell::new(0),
+            cache_misses: Cell::new(0),
+            tuple_fallback_warned: Cell::new(false),
         })
     }
 
@@ -162,45 +303,197 @@ impl Engine {
         Ok(())
     }
 
-    /// Execute artifact `name`. Inputs are validated against the manifest
-    /// (count, dtype, element count) before hitting PJRT.
-    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let spec: ArtifactSpec = self.manifest.artifact(name)?.clone();
-        if spec.untupled {
-            bail!("{name} is an untupled (buffer hot-path) artifact; use execute_buffers()");
-        }
-        if inputs.len() != spec.inputs.len() {
+    fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Resolve call arguments to device buffers: host slices upload, cached
+    /// params hit or refill the device cache, `Device` args are reused
+    /// as-is. Returns the buffers plus the bytes actually uploaded.
+    fn resolve_args(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        args: &[CallArg],
+    ) -> Result<(Vec<Rc<xla::PjRtBuffer>>, u64)> {
+        if args.len() != spec.inputs.len() {
             bail!(
                 "{name}: expected {} inputs, got {}",
                 spec.inputs.len(),
-                inputs.len()
+                args.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (t, s) in inputs.iter().zip(&spec.inputs) {
-            if t.dtype() != s.dtype {
-                bail!("{name}: input '{}' dtype mismatch", s.name);
-            }
-            if t.len() != s.numel() {
-                bail!(
-                    "{name}: input '{}' has {} elements, expected {} {:?}",
-                    s.name,
-                    t.len(),
-                    s.numel(),
-                    s.shape
-                );
-            }
-            literals.push(t.to_literal(&s.shape)?);
+        let mut bufs = Vec::with_capacity(args.len());
+        let mut bytes_up = 0u64;
+        for (arg, s) in args.iter().zip(&spec.inputs) {
+            let buf = match arg {
+                CallArg::F32(v) => {
+                    check_input(name, s, DType::F32, v.len())?;
+                    bytes_up += 4 * v.len() as u64;
+                    Rc::new(self.upload_literal(&shaped(
+                        xla::Literal::vec1(v),
+                        &s.shape,
+                    )?)?)
+                }
+                CallArg::I32(v) => {
+                    check_input(name, s, DType::I32, v.len())?;
+                    bytes_up += 4 * v.len() as u64;
+                    Rc::new(self.upload_literal(&shaped(
+                        xla::Literal::vec1(v),
+                        &s.shape,
+                    )?)?)
+                }
+                CallArg::ScalarF32(x) => {
+                    check_input(name, s, DType::F32, 1)?;
+                    bytes_up += 4;
+                    Rc::new(self.upload_literal(&shaped(
+                        xla::Literal::vec1(&[*x]),
+                        &s.shape,
+                    )?)?)
+                }
+                CallArg::ScalarI32(x) => {
+                    check_input(name, s, DType::I32, 1)?;
+                    bytes_up += 4;
+                    Rc::new(self.upload_literal(&shaped(
+                        xla::Literal::vec1(&[*x]),
+                        &s.shape,
+                    )?)?)
+                }
+                CallArg::Param(view) => {
+                    self.resolve_param(name, s, *view, &mut bytes_up)?
+                }
+                CallArg::Device(b) => {
+                    check_input(name, s, b.dtype, b.numel)?;
+                    b.buf.clone()
+                }
+            };
+            bufs.push(buf);
         }
+        Ok((bufs, bytes_up))
+    }
 
-        self.ensure_compiled(name)?;
+    fn resolve_param(
+        &self,
+        name: &str,
+        s: &IoSpec,
+        view: ParamView,
+        bytes_up: &mut u64,
+    ) -> Result<Rc<xla::PjRtBuffer>> {
+        match view {
+            ParamView::Fresh(host) => {
+                check_input(name, s, DType::F32, host.len())?;
+                *bytes_up += 4 * host.len() as u64;
+                Ok(Rc::new(self.upload_literal(&shaped(
+                    xla::Literal::vec1(host),
+                    &s.shape,
+                )?)?))
+            }
+            ParamView::Device(b) => {
+                check_input(name, s, b.dtype, b.numel)?;
+                Ok(b.buf.clone())
+            }
+            ParamView::Cached { key, version, host } => {
+                check_input(name, s, DType::F32, host.len())?;
+                let mut cache = self.param_cache.borrow_mut();
+                if let Some(e) = cache.get(key) {
+                    if e.version == version && e.buffer.numel == host.len() {
+                        self.cache_hits.set(self.cache_hits.get() + 1);
+                        return Ok(e.buffer.buf.clone());
+                    }
+                }
+                self.cache_misses.set(self.cache_misses.get() + 1);
+                *bytes_up += 4 * host.len() as u64;
+                let buffer = DeviceBuffer {
+                    buf: Rc::new(self.upload_literal(&shaped(
+                        xla::Literal::vec1(host),
+                        &s.shape,
+                    )?)?),
+                    dtype: DType::F32,
+                    numel: host.len(),
+                    origin: format!("params:{key}"),
+                };
+                let rc = buffer.buf.clone();
+                cache.insert(key.to_string(), ParamEntry { version, buffer });
+                Ok(rc)
+            }
+        }
+    }
+
+    /// Execute artifact `name` with host-tensor inputs (legacy entry
+    /// point). Untupled artifacts run on the buffer path and download
+    /// every output.
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let args: Vec<CallArg> = inputs.iter().map(CallArg::from).collect();
+        self.call_with(name, &args)
+    }
+
+    /// Execute artifact `name` with mixed host/cached/device inputs,
+    /// returning host outputs. Inputs are validated against the manifest
+    /// (count, dtype, element count) before hitting PJRT.
+    pub fn call_with(&self, name: &str, args: &[CallArg]) -> Result<Vec<HostTensor>> {
+        let spec: ArtifactSpec = self.manifest.artifact(name)?.clone();
+        if spec.untupled {
+            // Host-bound call on a buffer-path artifact: take the raw
+            // execution result so a fallback client's single root-tuple
+            // buffer is split with ONE download (seed-equivalent), never
+            // re-uploaded just to be downloaded again.
+            let t0 = Instant::now();
+            let (outs, bytes_up) = self.execute_raw(name, &spec, args)?;
+            let mut bytes_down = 0u64;
+            let out: Vec<HostTensor> = if outs.len() == spec.outputs.len() {
+                let mut host = Vec::with_capacity(outs.len());
+                for (b, s) in outs.iter().zip(&spec.outputs) {
+                    host.push(HostTensor::from_literal(
+                        &b.to_literal_sync()?,
+                        s.dtype,
+                    )?);
+                    bytes_down += 4 * s.numel() as u64;
+                }
+                host
+            } else if outs.len() == 1 && spec.outputs.len() > 1 {
+                let parts = outs[0].to_literal_sync()?.to_tuple()?;
+                if parts.len() != spec.outputs.len() {
+                    bail!(
+                        "{name}: tuple has {} parts, manifest says {}",
+                        parts.len(),
+                        spec.outputs.len()
+                    );
+                }
+                let mut host = Vec::with_capacity(parts.len());
+                for (lit, s) in parts.iter().zip(&spec.outputs) {
+                    host.push(HostTensor::from_literal(lit, s.dtype)?);
+                    bytes_down += 4 * s.numel() as u64;
+                }
+                host
+            } else {
+                bail!(
+                    "{name}: executable returned {} outputs, manifest says {}",
+                    outs.len(),
+                    spec.outputs.len()
+                );
+            };
+            let dt = t0.elapsed().as_secs_f64();
+            let mut stats = self.stats.borrow_mut();
+            let e = stats.entry(name.to_string()).or_default();
+            e.calls += 1;
+            e.total_secs += dt;
+            e.bytes_up += bytes_up;
+            e.bytes_down += bytes_down;
+            return Ok(out);
+        }
         let t0 = Instant::now();
-        let execs = self.executables.borrow();
-        let exe = execs.get(name).unwrap();
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
-        let parts = result.to_tuple()?;
+        let (outs, bytes_up) = self.execute_raw(name, &spec, args)?;
+        // aot.py lowers tupled artifacts with return_tuple=True: always a
+        // single tuple result, even 1-ary (per-leaf on untupling clients).
+        let parts: Vec<xla::Literal> = if outs.len() == 1 {
+            outs[0].to_literal_sync()?.to_tuple()?
+        } else {
+            let mut lits = Vec::with_capacity(outs.len());
+            for b in &outs {
+                lits.push(b.to_literal_sync()?);
+            }
+            lits
+        };
         if parts.len() != spec.outputs.len() {
             bail!(
                 "{name}: executable returned {} outputs, manifest says {}",
@@ -209,15 +502,223 @@ impl Engine {
             );
         }
         let mut out = Vec::with_capacity(parts.len());
+        let mut bytes_down = 0u64;
         for (lit, s) in parts.iter().zip(&spec.outputs) {
             out.push(HostTensor::from_literal(lit, s.dtype)?);
+            bytes_down += 4 * s.numel() as u64;
         }
         let dt = t0.elapsed().as_secs_f64();
         let mut stats = self.stats.borrow_mut();
         let e = stats.entry(name.to_string()).or_default();
         e.calls += 1;
         e.total_secs += dt;
+        e.bytes_up += bytes_up;
+        e.bytes_down += bytes_down;
         Ok(out)
+    }
+
+    /// Execute an untupled artifact and keep the outputs device-resident:
+    /// PJRT hands back one buffer per output, nothing is downloaded.
+    /// Chain outputs into later calls with [`CallArg::Device`]; fetch the
+    /// ones the host needs with [`Engine::download`].
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        args: &[CallArg],
+    ) -> Result<Vec<DeviceBuffer>> {
+        let spec: ArtifactSpec = self.manifest.artifact(name)?.clone();
+        if !spec.untupled {
+            bail!(
+                "{name} is a tupled (host-literal) artifact; use call()/call_with()"
+            );
+        }
+        self.execute_buffers_spec(name, &spec, args)
+    }
+
+    /// Resolve args and execute on device, returning PJRT's raw per-device
+    /// result row (one buffer per output leaf on untupling clients, one
+    /// root-tuple buffer otherwise) plus the bytes uploaded.
+    fn execute_raw(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        args: &[CallArg],
+    ) -> Result<(Vec<xla::PjRtBuffer>, u64)> {
+        let (bufs, bytes_up) = self.resolve_args(name, spec, args)?;
+        self.ensure_compiled(name)?;
+        let execs = self.executables.borrow();
+        let exe = execs.get(name).unwrap();
+        let mut results = exe.execute_b(&bufs)?;
+        if results.is_empty() {
+            bail!("{name}: empty execution result");
+        }
+        Ok((results.swap_remove(0), bytes_up))
+    }
+
+    // NOTE: a 1-output untupled artifact is indistinguishable here from a
+    // fallback client's 1-ary root tuple (both are outs.len() == 1), so
+    // aot.py refuses to mark single-output artifacts untupled.
+    fn execute_buffers_spec(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        args: &[CallArg],
+    ) -> Result<Vec<DeviceBuffer>> {
+        let t0 = Instant::now();
+        let (outs, mut bytes_up) = self.execute_raw(name, spec, args)?;
+        let mut bytes_down = 0u64;
+        let out: Vec<DeviceBuffer> = if outs.len() == spec.outputs.len() {
+            // Client untuples the root: one buffer per output leaf.
+            outs.into_iter()
+                .zip(&spec.outputs)
+                .map(|(b, s)| DeviceBuffer {
+                    buf: Rc::new(b),
+                    dtype: s.dtype,
+                    numel: s.numel(),
+                    origin: name.to_string(),
+                })
+                .collect()
+        } else if outs.len() == 1 && spec.outputs.len() > 1 {
+            // Client that never sets untuple_result: the root tuple comes
+            // back as ONE buffer, and PJRT exposes no on-device tuple
+            // split — split through the host once and re-upload, so
+            // callers still see per-output device buffers. Correct on
+            // every client; the zero-copy win needs an untupling one.
+            if !self.tuple_fallback_warned.replace(true) {
+                eprintln!(
+                    "[engine] {name}: PJRT client returned the root tuple \
+                     as one buffer; splitting untupled outputs via host \
+                     (device-resident chaining degrades to per-call \
+                     round-trips)"
+                );
+            }
+            let lit = outs[0].to_literal_sync()?;
+            let parts = lit.to_tuple()?;
+            if parts.len() != spec.outputs.len() {
+                bail!(
+                    "{name}: tuple has {} parts, manifest says {}",
+                    parts.len(),
+                    spec.outputs.len()
+                );
+            }
+            parts
+                .iter()
+                .zip(&spec.outputs)
+                .map(|(part, s)| {
+                    bytes_down += 4 * s.numel() as u64;
+                    bytes_up += 4 * s.numel() as u64;
+                    Ok(DeviceBuffer {
+                        buf: Rc::new(self.upload_literal(part)?),
+                        dtype: s.dtype,
+                        numel: s.numel(),
+                        origin: name.to_string(),
+                    })
+                })
+                .collect::<Result<_>>()?
+        } else {
+            bail!(
+                "{name}: executable returned {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            );
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += dt;
+        e.bytes_up += bytes_up;
+        e.bytes_down += bytes_down;
+        Ok(out)
+    }
+
+    /// Download a device buffer to the host (blocking), accounting the
+    /// transfer against the buffer's origin artifact.
+    pub fn download(&self, buffer: &DeviceBuffer) -> Result<HostTensor> {
+        let t0 = Instant::now();
+        let lit = buffer.buf.to_literal_sync()?;
+        let out = HostTensor::from_literal(&lit, buffer.dtype)?;
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(buffer.origin.clone()).or_default();
+        e.total_secs += t0.elapsed().as_secs_f64();
+        e.bytes_down += 4 * buffer.numel as u64;
+        Ok(out)
+    }
+
+    /// Upload a host f32 vector as a standalone device buffer (train-state
+    /// seeding); transfers are attributed to `origin`.
+    pub fn upload_f32(&self, origin: &str, data: &[f32]) -> Result<DeviceBuffer> {
+        let buf = DeviceBuffer {
+            buf: Rc::new(self.upload_literal(&xla::Literal::vec1(data))?),
+            dtype: DType::F32,
+            numel: data.len(),
+            origin: origin.to_string(),
+        };
+        self.stats
+            .borrow_mut()
+            .entry(origin.to_string())
+            .or_default()
+            .bytes_up += 4 * data.len() as u64;
+        Ok(buf)
+    }
+
+    /// Upload host tensors destined for `name`'s inputs starting at
+    /// position `offset` (e.g. 5 to skip params/m/v/step/lr on train
+    /// artifacts), validating each against the manifest. Upload once,
+    /// reuse across the `updates_per_batch` inner loop.
+    pub fn upload_inputs(
+        &self,
+        name: &str,
+        offset: usize,
+        tensors: &[HostTensor],
+    ) -> Result<Vec<DeviceBuffer>> {
+        let spec: ArtifactSpec = self.manifest.artifact(name)?.clone();
+        if offset + tensors.len() > spec.inputs.len() {
+            bail!(
+                "{name}: {} tensors at offset {offset} exceed the {}-input spec",
+                tensors.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(tensors.len());
+        let mut bytes_up = 0u64;
+        for (t, s) in tensors.iter().zip(&spec.inputs[offset..]) {
+            check_input(name, s, t.dtype(), t.len())?;
+            bytes_up += 4 * t.len() as u64;
+            out.push(DeviceBuffer {
+                buf: Rc::new(self.upload_literal(&t.to_literal(&s.shape)?)?),
+                dtype: t.dtype(),
+                numel: t.len(),
+                origin: name.to_string(),
+            });
+        }
+        self.stats
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_default()
+            .bytes_up += bytes_up;
+        Ok(out)
+    }
+
+    /// Drop a cached parameter set (callers that reuse a key with new
+    /// content and no version to bump, e.g. `eval`).
+    pub fn invalidate_params(&self, key: &str) {
+        self.param_cache.borrow_mut().remove(key);
+    }
+
+    /// `(hits, misses)` of the device parameter cache since the last
+    /// `reset_stats`.
+    pub fn param_cache_counters(&self) -> (u64, u64) {
+        (self.cache_hits.get(), self.cache_misses.get())
+    }
+
+    /// Total `(bytes_up, bytes_down)` moved host↔device across all
+    /// artifacts since the last `reset_stats`.
+    pub fn transfer_totals(&self) -> (u64, u64) {
+        let stats = self.stats.borrow();
+        stats
+            .values()
+            .fold((0, 0), |(u, d), s| (u + s.bytes_up, d + s.bytes_down))
     }
 
     pub fn stats(&self) -> BTreeMap<String, CallStats> {
@@ -226,6 +727,8 @@ impl Engine {
 
     pub fn reset_stats(&self) {
         self.stats.borrow_mut().clear();
+        self.cache_hits.set(0);
+        self.cache_misses.set(0);
     }
 
     /// Load the seeded initial policy parameters from the artifact dir.
@@ -254,12 +757,33 @@ impl Engine {
 }
 
 /// Optimizer state threaded through train-step executables.
+///
+/// On untupled train artifacts the `(params, m, v)` triple lives as device
+/// buffers across the `updates_per_batch` inner loop *and* across steps;
+/// only the metrics vector is downloaded per update, and the host mirrors
+/// refresh lazily at publish/eval/checkpoint boundaries (`params_host`,
+/// `into_params`). On legacy tupled artifacts every call round-trips the
+/// triple through host literals, exactly like the seed runtime.
+///
+/// Device buffers belong to the engine that created them: drive one
+/// `TrainState` with one `Engine` (the trainer thread's own), as every
+/// coordinator does.
 #[derive(Clone)]
 pub struct TrainState {
-    pub params: Vec<f32>,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
+    params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
     pub step: u64,
+    device: Option<DeviceOptState>,
+    /// True when the device triple is ahead of the host mirrors.
+    host_stale: bool,
+}
+
+#[derive(Clone)]
+struct DeviceOptState {
+    params: DeviceBuffer,
+    m: DeviceBuffer,
+    v: DeviceBuffer,
 }
 
 impl TrainState {
@@ -270,11 +794,17 @@ impl TrainState {
             m: vec![0.0; n],
             v: vec![0.0; n],
             step: 0,
+            device: None,
+            host_stale: false,
         }
     }
 
     /// Run one fused train step. `batch` holds the loss-specific tensors
     /// after (params, m, v, step, lr). Returns the metrics vector.
+    ///
+    /// Uploads the batch for this one call; loops over the same batch
+    /// should upload once via [`Engine::upload_inputs`] and call
+    /// [`TrainState::train_step_uploaded`] instead.
     pub fn train_step(
         &mut self,
         engine: &Engine,
@@ -282,23 +812,124 @@ impl TrainState {
         lr: f32,
         batch: Vec<HostTensor>,
     ) -> Result<Vec<f32>> {
+        let dev_batch = engine.upload_inputs(artifact, 5, &batch)?;
+        self.train_step_uploaded(engine, artifact, lr, &dev_batch)
+    }
+
+    /// One fused train step over an already-uploaded batch.
+    pub fn train_step_uploaded(
+        &mut self,
+        engine: &Engine,
+        artifact: &str,
+        lr: f32,
+        batch: &[DeviceBuffer],
+    ) -> Result<Vec<f32>> {
         self.step += 1;
-        let mut inputs = Vec::with_capacity(batch.len() + 5);
-        inputs.push(HostTensor::F32(std::mem::take(&mut self.params)));
-        inputs.push(HostTensor::F32(std::mem::take(&mut self.m)));
-        inputs.push(HostTensor::F32(std::mem::take(&mut self.v)));
-        inputs.push(scalar_f32(self.step as f32));
-        inputs.push(scalar_f32(lr));
-        inputs.extend(batch);
-        let mut out = engine.call(artifact, &inputs)?;
-        if out.len() != 4 {
-            bail!("{artifact}: expected 4 outputs, got {}", out.len());
+        if engine.manifest.artifact(artifact)?.untupled {
+            self.ensure_device(engine)?;
+            let (params, m, v, metrics) = {
+                let dev = self.device.as_ref().unwrap();
+                let mut args: Vec<CallArg> = Vec::with_capacity(batch.len() + 5);
+                args.push(CallArg::Device(&dev.params));
+                args.push(CallArg::Device(&dev.m));
+                args.push(CallArg::Device(&dev.v));
+                args.push(CallArg::ScalarF32(self.step as f32));
+                args.push(CallArg::ScalarF32(lr));
+                args.extend(batch.iter().map(CallArg::Device));
+                let mut out = engine.execute_buffers(artifact, &args)?;
+                if out.len() != 4 {
+                    bail!("{artifact}: expected 4 outputs, got {}", out.len());
+                }
+                let metrics = engine.download(&out[3])?.into_f32()?;
+                out.truncate(3);
+                let v = out.pop().unwrap();
+                let m = out.pop().unwrap();
+                let params = out.pop().unwrap();
+                (params, m, v, metrics)
+            };
+            self.device = Some(DeviceOptState { params, m, v });
+            self.host_stale = true;
+            Ok(metrics)
+        } else {
+            // Legacy host-literal path: the triple round-trips every call.
+            self.sync_host(engine)?;
+            self.device = None;
+            let mut out = {
+                let mut args: Vec<CallArg> = Vec::with_capacity(batch.len() + 5);
+                args.push(CallArg::F32(&self.params));
+                args.push(CallArg::F32(&self.m));
+                args.push(CallArg::F32(&self.v));
+                args.push(CallArg::ScalarF32(self.step as f32));
+                args.push(CallArg::ScalarF32(lr));
+                args.extend(batch.iter().map(CallArg::Device));
+                engine.call_with(artifact, &args)?
+            };
+            if out.len() != 4 {
+                bail!("{artifact}: expected 4 outputs, got {}", out.len());
+            }
+            let metrics = out.pop().unwrap().into_f32()?;
+            self.v = out.pop().unwrap().into_f32()?;
+            self.m = out.pop().unwrap().into_f32()?;
+            self.params = out.pop().unwrap().into_f32()?;
+            Ok(metrics)
         }
-        let metrics = out.pop().unwrap().into_f32()?;
-        self.v = out.pop().unwrap().into_f32()?;
-        self.m = out.pop().unwrap().into_f32()?;
-        self.params = out.pop().unwrap().into_f32()?;
-        Ok(metrics)
+    }
+
+    fn ensure_device(&mut self, engine: &Engine) -> Result<()> {
+        if self.device.is_some() {
+            return Ok(());
+        }
+        self.device = Some(DeviceOptState {
+            params: engine.upload_f32("train_state", &self.params)?,
+            m: engine.upload_f32("train_state", &self.m)?,
+            v: engine.upload_f32("train_state", &self.v)?,
+        });
+        Ok(())
+    }
+
+    /// Refresh the host mirrors from the device triple (checkpoint/final
+    /// boundaries, and before falling back to the host-literal train
+    /// path). No-op when already in sync.
+    pub fn sync_host(&mut self, engine: &Engine) -> Result<()> {
+        if !self.host_stale {
+            return Ok(());
+        }
+        let dev = self.device.as_ref().expect("stale host without device state");
+        self.params = engine.download(&dev.params)?.into_f32()?;
+        self.m = engine.download(&dev.m)?.into_f32()?;
+        self.v = engine.download(&dev.v)?.into_f32()?;
+        self.host_stale = false;
+        Ok(())
+    }
+
+    /// Current parameters on the host. Downloads ONLY the params when the
+    /// device is ahead — publish boundaries don't need the Adam moments,
+    /// so m/v stay device-resident until `sync_host`/`into_params`
+    /// (a third of the per-publish device→host bytes).
+    pub fn params_host(&mut self, engine: &Engine) -> Result<&[f32]> {
+        if self.host_stale {
+            let dev =
+                self.device.as_ref().expect("stale host without device state");
+            self.params = engine.download(&dev.params)?.into_f32()?;
+            // host_stale stays set: the m/v mirrors are still behind
+        }
+        Ok(&self.params)
+    }
+
+    /// Consume the state, returning the final parameters.
+    pub fn into_params(mut self, engine: &Engine) -> Result<Vec<f32>> {
+        self.sync_host(engine)?;
+        Ok(self.params)
+    }
+
+    /// Parameter view for same-engine consumers (sync-mode generation):
+    /// the live device buffer when one exists — zero transfer — else the
+    /// host mirror under the given cache identity.
+    pub fn param_view<'a>(&'a self, key: &'a str, version: u64) -> ParamView<'a> {
+        match &self.device {
+            Some(dev) => ParamView::Device(&dev.params),
+            None => ParamView::cached(key, version, &self.params),
+        }
     }
 }
 

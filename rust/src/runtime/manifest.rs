@@ -37,8 +37,11 @@ pub struct ArtifactSpec {
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
     pub metrics: Vec<String>,
-    /// Untupled outputs: PJRT returns one device buffer per output
-    /// (generation hot path; see Engine::execute_buffers).
+    /// Buffer-path artifact: executed via `Engine::execute_buffers`, its
+    /// outputs stay device-resident until downloaded (one buffer per
+    /// output on untupling PJRT clients; the engine splits the root
+    /// tuple through the host on clients that return one tuple buffer).
+    /// Tupled artifacts return a single tuple literal via `Engine::call`.
     pub untupled: bool,
 }
 

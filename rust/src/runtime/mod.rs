@@ -2,10 +2,22 @@
 //!
 //! The AOT boundary (DESIGN.md §1): python lowers every model computation
 //! to HLO text under `artifacts/<config>/`; this module loads, compiles
-//! (once, per thread-local client) and executes them with host buffers.
+//! (once, per thread-local client) and executes them.
+//!
+//! Two execution paths, chosen per artifact by the manifest's `untupled`
+//! flag: the **host-literal path** (`Engine::call` / `call_with`) for
+//! tupled artifacts, which downloads the single tuple result, and the
+//! **buffer path** (`Engine::execute_buffers`) for untupled artifacts,
+//! which keeps every output device-resident until explicitly downloaded.
+//! Parameter inputs go through the engine's device cache ([`ParamView`])
+//! so frozen sets upload once per run and the policy re-uploads only on
+//! version bumps.
 
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{metric, scalar_f32, scalar_i32, Engine, HostTensor, TrainState};
+pub use engine::{
+    metric, scalar_f32, scalar_i32, CallArg, CallStats, DeviceBuffer, Engine,
+    HostTensor, ParamView, TrainState,
+};
 pub use manifest::{artifacts_root, ArtifactSpec, DType, IoSpec, Manifest, ModelConfig};

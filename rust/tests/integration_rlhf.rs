@@ -141,6 +141,43 @@ fn async_matches_sync_and_is_one_step_off_policy() {
 }
 
 #[test]
+fn async_policy_cache_tracks_version_bumps() {
+    // Smoke test for device-cache invalidation under publication: the gen
+    // worker binds the policy under a bumping version, so after the first
+    // step every round must be generated from a *newer* policy than the
+    // initial one (staleness exactly 1 in steady state — if the cache
+    // served stale params past a version bump, params_version would stop
+    // advancing and staleness would grow without bound).
+    if !dev_available() {
+        return;
+    }
+    let mut cfg = test_cfg("cache_bump");
+    cfg.algo = Algo::Dpo;
+    cfg.mode = Mode::Async;
+    cfg.steps = 6;
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+    let st: Vec<f32> = out
+        .log
+        .rows
+        .iter()
+        .map(|r| r.values["staleness"])
+        .collect();
+    assert_eq!(st[0], 0.0, "first round is generated from the SFT policy");
+    // a cache that served stale params past a version bump would freeze
+    // the worker's params_version and staleness would grow without bound
+    for (i, &s) in st.iter().enumerate().skip(1) {
+        assert!(s <= 1.0, "step {}: staleness {s} (cache went stale?)", i + 1);
+    }
+    // ...and the rendezvous makes the worker at least one publish behind
+    // on some steady-state step, so version bumps were really consumed
+    assert!(
+        st.iter().any(|&s| s == 1.0),
+        "no step consumed a bumped policy version: {st:?}"
+    );
+}
+
+#[test]
 fn ppo_and_rloo_paths_execute() {
     if !dev_available() {
         return;

@@ -15,7 +15,9 @@ use async_rlhf::gen::{
     cached::CachedEngine, fused::FusedEngine, naive::NaiveEngine, Generator,
     SampleOpts,
 };
-use async_rlhf::runtime::{scalar_f32, Engine, HostTensor, TrainState};
+use async_rlhf::runtime::{
+    scalar_f32, CallArg, Engine, HostTensor, ParamView, TrainState,
+};
 use async_rlhf::tokenizer as tk;
 use async_rlhf::util::rng::Pcg32;
 
@@ -140,11 +142,11 @@ fn cached_and_naive_engines_emit_identical_sequences() {
 
     let mut rng1 = Pcg32::new(99, 1);
     let a = CachedEngine
-        .generate(&engine, &params, &prompts, opts, &mut rng1)
+        .generate(&engine, ParamView::fresh(&params), &prompts, opts, &mut rng1)
         .unwrap();
     let mut rng2 = Pcg32::new(99, 1);
     let b = NaiveEngine
-        .generate(&engine, &params, &prompts, opts, &mut rng2)
+        .generate(&engine, ParamView::fresh(&params), &prompts, opts, &mut rng2)
         .unwrap();
     assert_eq!(a.tokens, b.tokens, "engines diverged");
     assert_eq!(a.resp_mask, b.resp_mask);
@@ -172,14 +174,14 @@ fn behaviour_logprobs_match_logprob_executable() {
         .iter()
         .map(|e| e.prompt.clone())
         .collect();
-    let engines: [&dyn Generator; 3] =
-        [&CachedEngine, &NaiveEngine, &FusedEngine];
+    let fused = FusedEngine::default();
+    let engines: [&dyn Generator; 3] = [&CachedEngine, &NaiveEngine, &fused];
     for generator in engines {
         let mut rng = Pcg32::new(5, 0);
         let gen = generator
             .generate(
                 &engine,
-                &params,
+                ParamView::fresh(&params),
                 &prompts,
                 SampleOpts { temperature: 0.7, greedy: false },
                 &mut rng,
@@ -234,11 +236,12 @@ fn fused_engine_respects_eos_and_mask_conventions() {
         .iter()
         .map(|e| e.prompt.clone())
         .collect();
+    let fused = FusedEngine::default();
     let mut rng = Pcg32::new(2, 0);
-    let gen = FusedEngine
+    let gen = fused
         .generate(
             &engine,
-            &params,
+            ParamView::fresh(&params),
             &prompts,
             SampleOpts { temperature: 0.7, greedy: false },
             &mut rng,
@@ -264,11 +267,11 @@ fn fused_engine_respects_eos_and_mask_conventions() {
     let mut rng_a = Pcg32::new(1, 0);
     let mut rng_b = Pcg32::new(999, 7);
     let greedy = SampleOpts { temperature: 0.7, greedy: true };
-    let a = FusedEngine
-        .generate(&engine, &params, &prompts, greedy, &mut rng_a)
+    let a = fused
+        .generate(&engine, ParamView::fresh(&params), &prompts, greedy, &mut rng_a)
         .unwrap();
-    let b = FusedEngine
-        .generate(&engine, &params, &prompts, greedy, &mut rng_b)
+    let b = fused
+        .generate(&engine, ParamView::fresh(&params), &prompts, greedy, &mut rng_b)
         .unwrap();
     assert_eq!(a.tokens, b.tokens);
 }
@@ -346,11 +349,12 @@ fn eos_forcing_terminates_generation_early() {
     }
     let prompts: Vec<Vec<i32>> =
         examples.iter().map(|e| e.prompt.clone()).collect();
+    let trained = state.params_host(&engine).unwrap().to_vec();
     let mut rng = Pcg32::new(1, 1);
     let gen = CachedEngine
         .generate(
             &engine,
-            &state.params,
+            ParamView::fresh(&trained),
             &prompts,
             SampleOpts { temperature: 0.2, greedy: false },
             &mut rng,
@@ -369,6 +373,129 @@ fn eos_forcing_terminates_generation_early() {
             assert_eq!(*resp.last().unwrap(), tk::EOS);
         }
     }
+}
+
+#[test]
+fn param_cache_is_bitwise_transparent_and_invalidates_on_version_bump() {
+    // Cached-vs-uncached calls must be indistinguishable: same executable,
+    // same inputs, so the outputs are bitwise identical whether the params
+    // arrive as a fresh literal, a cache miss, or a cache hit. A version
+    // bump must actually swap the device-resident contents.
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let (b, s) = (cfg.gen_batch, cfg.seq_len);
+    let params = engine.init_policy().unwrap();
+    let toks: Vec<i32> = vec![1; b * s];
+    let mask: Vec<f32> = vec![1.0; b * s];
+    fn lp(
+        engine: &Engine,
+        toks: &[i32],
+        mask: &[f32],
+        pv: ParamView<'_>,
+    ) -> Vec<HostTensor> {
+        engine
+            .call_with(
+                "logprob",
+                &[CallArg::Param(pv), CallArg::I32(toks), CallArg::F32(mask)],
+            )
+            .unwrap()
+    }
+    let fresh = lp(&engine, &toks, &mask, ParamView::fresh(&params));
+    let miss = lp(&engine, &toks, &mask, ParamView::cached("t", 0, &params));
+    let hit = lp(&engine, &toks, &mask, ParamView::cached("t", 0, &params));
+    assert_eq!(fresh[0].as_f32().unwrap(), miss[0].as_f32().unwrap());
+    assert_eq!(miss[0].as_f32().unwrap(), hit[0].as_f32().unwrap());
+    assert_eq!(miss[1].as_f32().unwrap(), hit[1].as_f32().unwrap());
+    let (hits, misses) = engine.param_cache_counters();
+    assert_eq!((hits, misses), (1, 1), "one miss then one hit");
+
+    // version bump with different content: the cache must re-upload, and
+    // the result must match an uncached call with the new params
+    let params2 = engine.init_rm().unwrap();
+    assert_ne!(params, params2);
+    let bumped = lp(&engine, &toks, &mask, ParamView::cached("t", 1, &params2));
+    let direct = lp(&engine, &toks, &mask, ParamView::fresh(&params2));
+    assert_eq!(bumped[0].as_f32().unwrap(), direct[0].as_f32().unwrap());
+    assert_ne!(
+        bumped[0].as_f32().unwrap(),
+        hit[0].as_f32().unwrap(),
+        "version bump must not serve stale params"
+    );
+    let (_, misses) = engine.param_cache_counters();
+    assert_eq!(misses, 2, "version bump is a miss");
+
+    // explicit invalidation: same (key, version), new content
+    engine.invalidate_params("t");
+    let after_inval = lp(&engine, &toks, &mask, ParamView::cached("t", 1, &params));
+    assert_eq!(after_inval[0].as_f32().unwrap(), fresh[0].as_f32().unwrap());
+}
+
+#[test]
+fn device_resident_train_matches_host_literal_path() {
+    // Engine-equivalence invariant, extended to the buffer path: the
+    // device-resident TrainState (params/m/v never leave the device,
+    // batch uploaded once) must produce bitwise-identical metrics and
+    // final params to the seed-style full host round-trip through call().
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let (b, s) = (cfg.gen_batch, cfg.seq_len);
+    let taskgen = TaskGen::new(Task::Tldr, cfg.prompt_len, cfg.resp_len, 23);
+    let mut toks = Vec::with_capacity(b * s);
+    let mut mask = Vec::with_capacity(b * s);
+    for ex in taskgen.batch(0, b) {
+        let (t, m) = pack_sequence(&ex.prompt, &ex.reference, s, true);
+        toks.extend(t);
+        mask.extend(m);
+    }
+    let n = engine.manifest.param_count;
+
+    // seed path: host params/m/v threaded through every call
+    let mut p = engine.init_policy().unwrap();
+    let mut m = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let mut host_metrics = Vec::new();
+    for step in 1..=5 {
+        let out = engine
+            .call(
+                "train_sft",
+                &[
+                    HostTensor::F32(p.clone()),
+                    HostTensor::F32(m.clone()),
+                    HostTensor::F32(v.clone()),
+                    scalar_f32(step as f32),
+                    scalar_f32(1e-3),
+                    HostTensor::I32(toks.clone()),
+                    HostTensor::F32(mask.clone()),
+                ],
+            )
+            .unwrap();
+        let mut it = out.into_iter();
+        p = it.next().unwrap().into_f32().unwrap();
+        m = it.next().unwrap().into_f32().unwrap();
+        v = it.next().unwrap().into_f32().unwrap();
+        host_metrics.push(it.next().unwrap().into_f32().unwrap());
+    }
+
+    // buffer path: batch uploaded once, triple device-resident throughout
+    let mut state = TrainState::new(engine.init_policy().unwrap());
+    let batch = vec![HostTensor::I32(toks), HostTensor::F32(mask)];
+    let dev_batch = engine.upload_inputs("train_sft", 5, &batch).unwrap();
+    let mut dev_metrics = Vec::new();
+    for _ in 0..5 {
+        dev_metrics.push(
+            state
+                .train_step_uploaded(&engine, "train_sft", 1e-3, &dev_batch)
+                .unwrap(),
+        );
+    }
+    assert_eq!(host_metrics, dev_metrics, "metrics diverged across paths");
+    assert_eq!(
+        state.params_host(&engine).unwrap(),
+        &p[..],
+        "final params diverged across paths"
+    );
 }
 
 #[test]
@@ -394,6 +521,10 @@ fn train_state_scalar_plumbing() {
             )
             .unwrap();
     }
-    assert_eq!(state.params, params, "lr=0 must be a no-op on params");
+    assert_eq!(
+        state.params_host(&engine).unwrap(),
+        &params[..],
+        "lr=0 must be a no-op on params"
+    );
     let _ = scalar_f32(0.0);
 }
