@@ -29,5 +29,8 @@ cargo clippy --all-targets -- -D warnings
 echo "== tier-1 =="
 if [[ "${1:-}" != "--fast" ]]; then
   cargo build --release
+  # benches are part of the gate: they emit the BENCH_*.json perf
+  # snapshots, so letting them rot would silently drop the trajectory
+  cargo build --benches --release
 fi
 cargo test -q

@@ -60,6 +60,19 @@ def to_hlo_text(lowered, return_tuple=True) -> str:
 # score_rm) still return one tuple literal via Engine::call — the
 # step-wise engines deliberately stay on that path as the Fig-14
 # middle tier.
+#
+# Besides the names below, build_config registers buffer-path TWINS of
+# prefill/decode/logprob (`*_dev`): aliases of the SAME emitted HLO files
+# re-entered in the manifest with untupled=True (for multi-output modules
+# return_tuple does not change the HLO, so the twin IS the same
+# computation). The tupled originals stay as the literal baselines:
+# `prefill`/`decode` for the Fig-14 middle-tier CachedEngine, while the
+# twins let the DeviceCachedEngine chain the KV cache device-to-device
+# and round labelling share one uploaded token/mask pair across
+# labelling and training, fetching only the outputs it reads. score_rm
+# has a single output, which the untupled protocol cannot represent
+# (see the >=2-outputs guard below), so it stays tupled — its *inputs*
+# still come from shared device buffers on the resident path.
 UNTUPLED = {
     "generate",
     "train_sft",
@@ -228,6 +241,16 @@ def build_config(cfg: configs.Config, out_dir: str, verbose=True):
 
     # train_bon (Best-of-N SFT, paper §3.3) reuses the SFT executable.
     artifacts["train_bon"] = dict(artifacts["train_sft"])
+
+    # Buffer-path twins: same HLO file as the tupled namesake (for
+    # multi-output modules return_tuple does not change the emitted HLO,
+    # so the twin IS the same computation — bitwise-identical outputs),
+    # re-registered with untupled=True so the runtime executes them via
+    # execute_buffers and keeps outputs device-resident. The tupled
+    # originals stay in the manifest as the literal-path baseline.
+    for twin in ["prefill", "decode", "logprob"]:
+        assert len(artifacts[twin]["outputs"]) >= 2, twin
+        artifacts[f"{twin}_dev"] = dict(artifacts[twin], untupled=True)
 
     # Seeded initial parameters. Policy and RM start from the same layout;
     # distinct seeds so the proxy RM is not the policy.

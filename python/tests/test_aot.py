@@ -38,6 +38,7 @@ def test_manifest_schema(built):
         "prefill", "decode", "generate", "forward_full", "logprob",
         "score_rm", "train_sft", "train_rm", "train_dpo", "train_ppo",
         "train_rloo", "train_prloo", "train_copg", "train_bon",
+        "prefill_dev", "decode_dev", "logprob_dev",
     }
     assert set(loaded["artifacts"]) == expected
     for name, art in loaded["artifacts"].items():
@@ -75,6 +76,25 @@ def test_bon_aliases_sft(built):
     _, manifest = built
     assert (manifest["artifacts"]["train_bon"]["file"]
             == manifest["artifacts"]["train_sft"]["file"])
+
+
+def test_dev_twins_alias_tupled_namesakes(built):
+    """The buffer-path twins must be the SAME computation as their tupled
+    namesakes (same HLO file, same I/O signature) with only the untupled
+    protocol flag flipped — that is what makes the DeviceCachedEngine's
+    bitwise-equivalence to the literal CachedEngine provable."""
+    _, manifest = built
+    for base in ["prefill", "decode", "logprob"]:
+        tupled = manifest["artifacts"][base]
+        twin = manifest["artifacts"][f"{base}_dev"]
+        assert twin["file"] == tupled["file"], base
+        assert twin["inputs"] == tupled["inputs"], base
+        assert twin["outputs"] == tupled["outputs"], base
+        assert len(twin["outputs"]) >= 2, base
+        assert twin["untupled"] and not tupled["untupled"], base
+    # score_rm has a single output: the untupled protocol cannot represent
+    # it (1-leaf result is ambiguous with a fallback client's root tuple)
+    assert not manifest["artifacts"]["score_rm"]["untupled"]
 
 
 def test_hlo_text_parses_back(built):

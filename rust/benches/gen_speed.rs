@@ -1,18 +1,39 @@
-//! Bench: generation-engine speed — paper Fig 14 / Appendix C.1.
+//! Bench: generation-engine speed — paper Fig 14 / Appendix C.1, extended
+//! with the device-KV tier.
 //!
-//! Cached (vLLM analogue) vs naive full-recompute (HF analogue) batch
-//! generation time across model scales; the cached/naive gap should grow
-//! with model size. `cargo bench --bench gen_speed`.
+//! Four tiers over the same compiled model, per scale: fused (one call per
+//! round), device (step-wise, KV chained device-to-device), cached
+//! (step-wise, KV round-tripping through PJRT literals — the vLLM-vs-HF
+//! middle tier as measured), naive (full recompute, HF analogue). Besides
+//! wall-clock, each tier's host↔device traffic is taken from the engine's
+//! per-artifact `CallStats` and reported as bytes/token — the device tier
+//! must move strictly fewer bytes/token than the literal cached tier
+//! (that is the point of KV chaining). Results are dumped to
+//! `BENCH_gen_speed.json` (override with `ASYNC_RLHF_BENCH_OUT`) so the
+//! perf trajectory is tracked alongside `BENCH_hot_path.json`.
+//! `cargo bench --bench gen_speed`.
 
 use async_rlhf::data::{Task, TaskGen};
-use async_rlhf::gen::{cached::CachedEngine, fused::FusedEngine, naive::NaiveEngine, Generator, SampleOpts};
+use async_rlhf::gen::{
+    cached::CachedEngine, device::DeviceCachedEngine, fused::FusedEngine,
+    naive::NaiveEngine, Generator, SampleOpts,
+};
 use async_rlhf::runtime::{Engine, ParamView};
 use async_rlhf::util::bench::{artifact_dir_or_skip, bench};
+use async_rlhf::util::json::Json;
 use async_rlhf::util::rng::Pcg32;
 
+struct TierResult {
+    tier: &'static str,
+    mean_secs: f64,
+    tok_per_sec: f64,
+    bytes_up_per_tok: f64,
+    bytes_down_per_tok: f64,
+}
+
 fn main() {
-    println!("== gen_speed (paper Fig 14): cached vs naive engines ==");
-    let mut rows = Vec::new();
+    println!("== gen_speed (paper Fig 14): fused/device/cached/naive ==");
+    let mut models = Vec::new();
     for model in ["tldr_s", "tldr_m", "tldr_l"] {
         let Some(dir) = artifact_dir_or_skip(model) else {
             continue;
@@ -34,46 +55,165 @@ fn main() {
         let opts = SampleOpts { temperature: 0.7, greedy: false };
 
         // one device-cached param set shared by all engines: the measured
-        // gap is forward-pass structure, not param upload traffic
+        // gap is forward-pass structure + KV transfer, never param upload
         let pv = ParamView::cached("bench_policy", 0, &params);
-        let run = |gen: &dyn Generator, label: &str| {
+        let fused_engine = FusedEngine::default();
+        let mut tiers: Vec<(&'static str, &dyn Generator)> =
+            vec![("fused", &fused_engine), ("cached", &CachedEngine)];
+        if DeviceCachedEngine::supported(&engine) {
+            tiers.insert(1, ("device", &DeviceCachedEngine));
+        } else {
+            println!(
+                "SKIP {model}/device: bundle lacks prefill_dev/decode_dev \
+                 (rebuild artifacts)"
+            );
+        }
+        tiers.push(("naive", &NaiveEngine));
+
+        let mut results: Vec<TierResult> = Vec::new();
+        for (tier, gen) in tiers {
+            // warm the executables + param cache outside the measurement,
+            // then account only the timed iterations' traffic
             let mut seed = 0u64;
-            bench(&format!("{model}/{label}"), 1, 5, || {
+            let mut rng = Pcg32::new(seed, 0);
+            gen.generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
+            if tier == "device" && engine.client_untuples() != Some(true) {
+                // the warmup round settled the capability: under the
+                // root-tuple fallback this tier degrades to per-step
+                // round-trips — don't record that as "device" in the
+                // tracked perf trajectory
+                println!(
+                    "SKIP {model}/device: PJRT client returns root tuples"
+                );
+                continue;
+            }
+            engine.reset_stats();
+            let mut tokens = 0u64;
+            let r = bench(&format!("{model}/{tier}"), 0, 5, || {
                 seed += 1;
                 let mut rng = Pcg32::new(seed, 0);
-                gen.generate(&engine, pv, &prompts, opts, &mut rng)
+                let out = gen
+                    .generate(&engine, pv, &prompts, opts, &mut rng)
                     .unwrap();
-            })
+                tokens += out
+                    .resp_mask
+                    .iter()
+                    .map(|m| m.iter().filter(|&&x| x == 1.0).count() as u64)
+                    .sum::<u64>();
+            });
+            let (up, down) = engine.transfer_totals();
+            let toks = tokens.max(1) as f64;
+            results.push(TierResult {
+                tier,
+                mean_secs: r.mean() as f64,
+                tok_per_sec: toks / (r.mean() as f64 * r.iters as f64).max(1e-12),
+                bytes_up_per_tok: up as f64 / toks,
+                bytes_down_per_tok: down as f64 / toks,
+            });
+        }
+
+        println!("\n{model} ({} params):", engine.manifest.param_count);
+        println!(
+            "  {:<8} {:>9}  {:>10}  {:>12}  {:>12}",
+            "tier", "mean_s", "tok/s", "B_up/tok", "B_down/tok"
+        );
+        for r in &results {
+            println!(
+                "  {:<8} {:>9.4}  {:>10.0}  {:>12.0}  {:>12.0}",
+                r.tier,
+                r.mean_secs,
+                r.tok_per_sec,
+                r.bytes_up_per_tok,
+                r.bytes_down_per_tok
+            );
+        }
+        let by_tier = |t: &str| results.iter().find(|r| r.tier == t);
+        if let (Some(dev), Some(cached)) = (by_tier("device"), by_tier("cached"))
+        {
+            let dev_total = dev.bytes_up_per_tok + dev.bytes_down_per_tok;
+            let cached_total =
+                cached.bytes_up_per_tok + cached.bytes_down_per_tok;
+            println!(
+                "  device-KV moves {:.1}% of the literal tier's bytes/token \
+                 [{}]",
+                100.0 * dev_total / cached_total.max(1e-12),
+                if dev_total < cached_total { "OK" } else { "REGRESSION" }
+            );
+        }
+        models.push((model, engine.manifest.param_count, results));
+    }
+
+    if models.len() >= 2 {
+        let gap = |rs: &[TierResult]| -> Option<f64> {
+            let f = rs.iter().find(|r| r.tier == "fused")?;
+            let n = rs.iter().find(|r| r.tier == "naive")?;
+            Some(n.mean_secs / f.mean_secs)
         };
-        let fused_engine = FusedEngine::default();
-        let fused = run(&fused_engine, "fused");
-        let cached = run(&CachedEngine, "cached");
-        let naive = run(&NaiveEngine, "naive");
-        rows.push((
-            model,
-            engine.manifest.param_count,
-            fused.mean(),
-            cached.mean(),
-            naive.mean(),
-        ));
+        if let (Some(first), Some(last)) =
+            (gap(&models[0].2), gap(&models[models.len() - 1].2))
+        {
+            println!(
+                "\npaper-shape check (gap grows with scale): \
+                 {first:.2}x -> {last:.2}x  [{}]",
+                if last > first { "OK" } else { "INVERTED" }
+            );
+        }
     }
-    println!(
-        "\nmodel     params      fused_s   cached_s  naive_s   naive/fused"
-    );
-    for (m, p, f, c, n) in &rows {
-        println!(
-            "{m:<9} {p:>10}  {f:>8.4}  {c:>8.4}  {n:>8.4}  {:>6.2}x",
-            n / f
-        );
-    }
-    if rows.len() >= 2 {
-        let first = rows[0].4 / rows[0].2;
-        let last = rows[rows.len() - 1].4 / rows[rows.len() - 1].2;
-        println!(
-            "\npaper-shape check (gap grows with scale): {:.2}x -> {:.2}x  [{}]",
-            first,
-            last,
-            if last > first { "OK" } else { "INVERTED" }
-        );
-    }
+
+    // --- machine-readable dump for the perf trajectory ---
+    let report = Json::obj(vec![(
+        "models",
+        Json::Obj(
+            models
+                .iter()
+                .map(|(model, params, results)| {
+                    (
+                        model.to_string(),
+                        Json::obj(vec![
+                            ("param_count", Json::num(*params as f64)),
+                            (
+                                "tiers",
+                                Json::Obj(
+                                    results
+                                        .iter()
+                                        .map(|r| {
+                                            (
+                                                r.tier.to_string(),
+                                                Json::obj(vec![
+                                                    (
+                                                        "mean_secs",
+                                                        Json::num(r.mean_secs),
+                                                    ),
+                                                    (
+                                                        "tok_per_sec",
+                                                        Json::num(r.tok_per_sec),
+                                                    ),
+                                                    (
+                                                        "bytes_up_per_tok",
+                                                        Json::num(
+                                                            r.bytes_up_per_tok,
+                                                        ),
+                                                    ),
+                                                    (
+                                                        "bytes_down_per_tok",
+                                                        Json::num(
+                                                            r.bytes_down_per_tok,
+                                                        ),
+                                                    ),
+                                                ]),
+                                            )
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        ),
+    )]);
+    let out_path = std::env::var("ASYNC_RLHF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_gen_speed.json".into());
+    std::fs::write(&out_path, report.to_string()).expect("write bench json");
+    println!("wrote {out_path}");
 }

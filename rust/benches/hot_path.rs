@@ -11,8 +11,13 @@
 //! whole run is dumped to `BENCH_hot_path.json` (override the path with
 //! `ASYNC_RLHF_BENCH_OUT`) so future PRs can track the perf trajectory.
 
+use async_rlhf::config::Algo;
+use async_rlhf::coordinator::trainer::{
+    assemble, label_round, make_resident, round_prompts, train_on_batch,
+    LabelScratch, LabelledRound, Round, ROUND_ORIGIN,
+};
 use async_rlhf::data::{Task, TaskGen};
-use async_rlhf::gen::sampler;
+use async_rlhf::gen::{fused::FusedEngine, sampler, Generator, SampleOpts};
 use async_rlhf::runtime::{
     scalar_f32, CallArg, Engine, HostTensor, ParamView, TrainState,
 };
@@ -215,6 +220,118 @@ fn main() {
         reduction * 100.0
     );
 
+    // --- round labelling traffic: seed (3x token upload) vs resident ---
+    // The seed path uploads a round's [B*S] token tensor three separate
+    // times (logprob, score_rm, train batch); the resident path stages it
+    // once under the ROUND_ORIGIN bucket and shares the device buffer.
+    let mut round_label = Vec::new();
+    // the generate bench above settled whether the client untuples; the
+    // resident path is only live (and only worth measuring) when it does
+    if engine.buffer_path_ready("logprob_dev") {
+        let rm_params = engine.init_rm().expect("rm params");
+        let (examples, prompts) = round_prompts(&taskgen, 0, b, 2);
+        let mut rng = Pcg32::new(11, 0);
+        let gen = FusedEngine::default()
+            .generate(
+                &engine,
+                ParamView::cached("bench", 0, &params),
+                &prompts,
+                SampleOpts { temperature: 0.7, greedy: false },
+                &mut rng,
+            )
+            .expect("generate round");
+        let round = Round {
+            gen,
+            examples,
+            start_index: 0,
+            params_version: 0,
+            gen_secs: 0.0,
+            gen_span: (0.0, 0.0),
+        };
+        let mut scratch = LabelScratch::default();
+        let mut tstate = TrainState::new(params.clone());
+        let rm = Some((&engine, &rm_params[..]));
+        let mut run_path = |resident: bool| -> (u64, u64) {
+            let staged = if resident {
+                make_resident(&engine, &round.gen, rm, false, &mut scratch)
+                    .expect("stage round")
+            } else {
+                None
+            };
+            let labels = label_round(
+                &engine, &round, &params, rm, 2, -1.0, false, &mut scratch,
+                staged.as_ref(),
+            )
+            .expect("label");
+            let lr = LabelledRound {
+                round: Round {
+                    gen: round.gen.clone(),
+                    examples: round.examples.clone(),
+                    start_index: 0,
+                    params_version: 0,
+                    gen_secs: 0.0,
+                    gen_span: (0.0, 0.0),
+                },
+                labels,
+                resident: staged,
+            };
+            let batch =
+                assemble(&engine, Algo::Ppo, std::slice::from_ref(&lr), 2)
+                    .expect("assemble");
+            train_on_batch(&engine, &mut tstate, &batch, 3e-4, 1)
+                .expect("train");
+            engine.transfer_totals()
+        };
+        // warm the ref/rm param caches + train state off the measurement
+        run_path(false);
+        engine.reset_stats();
+        let (seed_up, _) = run_path(false);
+        let seed_stats = engine.stats();
+        engine.reset_stats();
+        let (res_up, _) = run_path(true);
+        let res_stats = engine.stats();
+        let token_bytes = (4 * b * s) as u64;
+        let tok_uploads = |stats: &std::collections::BTreeMap<
+            String,
+            async_rlhf::runtime::CallStats,
+        >| {
+            // origins whose uploads include the [B*S] token tensor
+            ["logprob", "score_rm", "train_ppo", ROUND_ORIGIN]
+                .iter()
+                .filter(|&&k| match (k, stats.get(k)) {
+                    // train_ppo always uploads blp+rlp (2 token-sized f32
+                    // tensors); only a THIRD token-sized tensor means the
+                    // tokens themselves went up again
+                    ("train_ppo", Some(st)) => st.bytes_up >= 3 * token_bytes,
+                    (_, Some(st)) => st.bytes_up >= token_bytes,
+                    _ => false,
+                })
+                .count() as u64
+        };
+        let (seed_n, res_n) = (tok_uploads(&seed_stats), tok_uploads(&res_stats));
+        println!(
+            "\nround labelling traffic (PPO-shaped, one round): \
+             seed {seed_up} B up ({seed_n}x token upload), \
+             resident {res_up} B up ({res_n}x token upload)"
+        );
+        for (name, st) in res_stats {
+            if st.bytes_up > 0 || st.bytes_down > 0 {
+                all_stats.insert(format!("{name} [resident round]"), st);
+            }
+        }
+        round_label = vec![
+            ("seed_bytes_up", Json::num(seed_up as f64)),
+            ("resident_bytes_up", Json::num(res_up as f64)),
+            ("token_uploads_seed", Json::num(seed_n as f64)),
+            ("token_uploads_resident", Json::num(res_n as f64)),
+        ];
+    } else {
+        println!(
+            "\nSKIP round-labelling traffic: needs logprob_dev artifacts \
+             and an untupling PJRT client"
+        );
+    }
+
     // --- host-side costs ---
     let logits: Vec<f32> = (0..b * v).map(|i| (i % 17) as f32 * 0.1).collect();
     bench("host/sample_batch_row_loop", 10, 50, || {
@@ -281,6 +398,7 @@ fn main() {
                 ("misses", Json::num(misses as f64)),
             ]),
         ),
+        ("round_label_bytes", Json::obj(round_label)),
         ("artifacts", artifacts),
     ]);
     let out_path = std::env::var("ASYNC_RLHF_BENCH_OUT")

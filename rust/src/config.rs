@@ -77,6 +77,60 @@ impl fmt::Display for Algo {
     }
 }
 
+/// Which generation engine the coordinators run (paper Fig 14 tiers; see
+/// `gen/mod.rs`). `Fused` is the production default; `Cached` is the
+/// deliberately-literal middle-tier baseline; `Device` is the step-wise
+/// loop with the KV cache chained device-to-device (needs the
+/// `prefill_dev`/`decode_dev` artifacts); `Naive` is the quadratic
+/// full-recompute baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GenEngine {
+    Fused,
+    Cached,
+    Device,
+    Naive,
+}
+
+impl GenEngine {
+    pub fn from_name(s: &str) -> Result<GenEngine> {
+        Ok(match s {
+            "fused" => GenEngine::Fused,
+            "cached" => GenEngine::Cached,
+            "device" => GenEngine::Device,
+            "naive" => GenEngine::Naive,
+            _ => bail!("unknown gen engine '{s}' (fused|cached|device|naive)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GenEngine::Fused => "fused",
+            GenEngine::Cached => "cached",
+            GenEngine::Device => "device",
+            GenEngine::Naive => "naive",
+        }
+    }
+
+    /// Construct the generator. Each coordinator thread builds its own
+    /// (generators are stateless or hold per-engine scratch only).
+    pub fn build(&self) -> Box<dyn crate::gen::Generator> {
+        match self {
+            GenEngine::Fused => Box::<crate::gen::fused::FusedEngine>::default(),
+            GenEngine::Cached => Box::new(crate::gen::cached::CachedEngine),
+            GenEngine::Device => {
+                Box::new(crate::gen::device::DeviceCachedEngine)
+            }
+            GenEngine::Naive => Box::new(crate::gen::naive::NaiveEngine),
+        }
+    }
+}
+
+impl fmt::Display for GenEngine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     /// Generate-then-train on the same resources (paper Fig 2 top).
@@ -110,6 +164,8 @@ pub struct ExpConfig {
     pub artifacts_root: PathBuf,
     pub algo: Algo,
     pub mode: Mode,
+    /// Generation engine tier (paper Fig 14; `--gen-engine`).
+    pub gen_engine: GenEngine,
     /// RLHF optimizer steps (mini-batch updates).
     pub steps: u64,
     /// Off-policyness: mini-batches generated per generation round
@@ -147,6 +203,7 @@ impl Default for ExpConfig {
             artifacts_root: PathBuf::from("artifacts"),
             algo: Algo::Dpo,
             mode: Mode::Sync,
+            gen_engine: GenEngine::Fused,
             steps: 96,
             n_minibatches: 1,
             updates_per_batch: 1,
@@ -182,6 +239,9 @@ impl ExpConfig {
         }
         if let Some(m) = args.get("mode") {
             c.mode = Mode::from_name(m)?;
+        }
+        if let Some(g) = args.get("gen-engine") {
+            c.gen_engine = GenEngine::from_name(g)?;
         }
         c.steps = args.get_parse("steps", c.steps)?;
         c.n_minibatches = args.get_parse("n", c.n_minibatches)?;
@@ -220,10 +280,16 @@ impl ExpConfig {
         self.artifacts_root.join(&self.model)
     }
 
-    /// Label used in logs and run directories.
+    /// Label used in logs and run directories. The generation engine only
+    /// appears when it deviates from the production default, so existing
+    /// run/checkpoint directories keep their names.
     pub fn label(&self) -> String {
+        let gen = match self.gen_engine {
+            GenEngine::Fused => String::new(),
+            other => format!("_g{}", other.name()),
+        };
         format!(
-            "{}_{}_{}_n{}_t{}_k{}_s{}",
+            "{}_{}_{}{gen}_n{}_t{}_k{}_s{}",
             self.model,
             self.algo,
             self.mode.name(),
@@ -273,5 +339,24 @@ mod tests {
         let a = parse(&["t", "--n", "1"]).unwrap().label();
         let b = parse(&["t", "--n", "2"]).unwrap().label();
         assert_ne!(a, b);
+        let c = parse(&["t", "--gen-engine", "device"]).unwrap().label();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn gen_engine_parses_all_tiers_and_rejects_unknown() {
+        for (name, want) in [
+            ("fused", GenEngine::Fused),
+            ("cached", GenEngine::Cached),
+            ("device", GenEngine::Device),
+            ("naive", GenEngine::Naive),
+        ] {
+            let c = parse(&["t", "--gen-engine", name]).unwrap();
+            assert_eq!(c.gen_engine, want);
+            assert_eq!(want.name(), name);
+        }
+        // default is the production fused path
+        assert_eq!(parse(&["t"]).unwrap().gen_engine, GenEngine::Fused);
+        assert!(parse(&["t", "--gen-engine", "vllm"]).is_err());
     }
 }

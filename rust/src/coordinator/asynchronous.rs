@@ -29,14 +29,14 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::trainer::{
-    assemble, generate_round, label_round, round_metrics, rounds_per_batch,
-    sample_opts, staleness, train_on_batch, LabelScratch, Round,
+    assemble, generate_round, round_metrics, rounds_per_batch, sample_opts,
+    staleness, stage_and_label, train_on_batch, LabelScratch, LabelledRound,
+    Round,
 };
 use super::RunOutput;
 use crate::config::ExpConfig;
 use crate::coordinator::pretrain::RLHF_RANGE;
 use crate::data::{Task, TaskGen};
-use crate::gen::fused::FusedEngine;
 use crate::metrics::{Phase, RunLog, Timeline};
 use crate::runtime::{Engine, ParamView, TrainState};
 use crate::util::rng::Pcg32;
@@ -121,12 +121,13 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
         let opts = sample_opts(cfg);
         let k = cfg.k_samples;
         let seed = cfg.seed;
+        let gen_engine = cfg.gen_engine;
         std::thread::Builder::new()
             .name("gen-worker".into())
             .spawn(move || -> Result<(f64, u64)> {
                 // own engine, own PJRT client (separate "GPU")
                 let engine = Engine::load(&artifact_dir)?;
-                let generator = FusedEngine::default();
+                let generator = gen_engine.build();
                 let mut rng = Pcg32::new(seed, 0xa57c);
                 let mut params = init_params;
                 let mut version = 0u64;
@@ -144,7 +145,7 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
                     }
                     let round = generate_round(
                         &engine,
-                        &generator,
+                        generator.as_ref(),
                         ParamView::cached("policy", version, &params),
                         version,
                         &taskgen,
@@ -193,19 +194,24 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
                     msg.round.gen_span.1,
                 );
                 episodes += gen_bs;
-                let labels = timeline.record(Phase::Score, || {
-                    label_round(
+                // the round crossed the thread boundary as host data:
+                // stage it on the trainer's device once (when eligible),
+                // label off the shared buffers (scoring cost)
+                let (resident, labels) = timeline.record(Phase::Score, || {
+                    stage_and_label(
                         engine,
                         &msg.round,
                         &sft_params,
                         prep.rm_scorer(),
-                        cfg.k_samples,
-                        cfg.eos_penalty,
-                        cfg.gold_reward,
+                        cfg,
                         &mut scratch,
                     )
                 })?;
-                rounds.push((msg.round, labels));
+                rounds.push(LabelledRound {
+                    round: msg.round,
+                    labels,
+                    resident,
+                });
             }
 
             let batch = assemble(engine, cfg.algo, &rounds, cfg.k_samples)?;
@@ -231,13 +237,13 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
 
             let data_version = rounds
                 .iter()
-                .map(|(r, _)| r.params_version)
+                .map(|r| r.round.params_version)
                 .max()
                 .unwrap();
             let stale = staleness(version, data_version);
             staleness_sum += stale;
 
-            let (_, labels) = &rounds[0];
+            let labels = &rounds[0].labels;
             let mut row = round_metrics(labels);
             let m = all_metrics.last().unwrap();
             row.push(("loss", m[0]));

@@ -14,14 +14,13 @@
 use anyhow::Result;
 
 use super::trainer::{
-    assemble, generate_round, label_round, round_metrics, rounds_per_batch,
-    sample_opts, staleness, train_on_batch, LabelScratch, Labels, Round,
+    assemble, generate_round, round_metrics, rounds_per_batch, sample_opts,
+    staleness, stage_and_label, train_on_batch, LabelScratch, LabelledRound,
 };
 use super::RunOutput;
 use crate::config::ExpConfig;
 use crate::coordinator::pretrain::RLHF_RANGE;
 use crate::data::TaskGen;
-use crate::gen::fused::FusedEngine;
 use crate::metrics::{Phase, RunLog, Timeline};
 use crate::runtime::{Engine, TrainState};
 use crate::util::rng::Pcg32;
@@ -32,7 +31,7 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
     let engine: &Engine = &prep.engine;
     let taskgen: &TaskGen = &prep.taskgen;
     let sft_params = prep.sft_params.clone();
-    let generator = FusedEngine::default();
+    let generator = cfg.gen_engine.build();
     let mut rng = Pcg32::new(cfg.seed, 0x5c);
     let mut state = TrainState::new(sft_params.clone());
     let mut scratch = LabelScratch::default();
@@ -51,14 +50,14 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
 
     'outer: while step < cfg.steps {
         // ---- generation phase: N minibatches of data, frozen policy ----
-        let mut batches: Vec<Vec<(Round, Labels)>> = Vec::with_capacity(n);
+        let mut batches: Vec<Vec<LabelledRound>> = Vec::with_capacity(n);
         for _ in 0..n {
             let mut rounds = Vec::with_capacity(rpb);
             for _ in 0..rpb {
                 let round = timeline.record(Phase::Generate, || {
                     generate_round(
                         engine,
-                        &generator,
+                        generator.as_ref(),
                         state.param_view("policy", version),
                         version,
                         taskgen,
@@ -71,19 +70,20 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
                 })?;
                 cursor += (gen_bs / cfg.k_samples as u64).max(1);
                 episodes += gen_bs;
-                let labels = timeline.record(Phase::Score, || {
-                    label_round(
+                // stage the round's tensors on device once (when
+                // eligible), then label off the shared buffers; staging
+                // is part of the scoring cost
+                let (resident, labels) = timeline.record(Phase::Score, || {
+                    stage_and_label(
                         engine,
                         &round,
                         &sft_params,
                         prep.rm_scorer(),
-                        cfg.k_samples,
-                        cfg.eos_penalty,
-                        cfg.gold_reward,
+                        cfg,
                         &mut scratch,
                     )
                 })?;
-                rounds.push((round, labels));
+                rounds.push(LabelledRound { round, labels, resident });
             }
             batches.push(rounds);
         }
@@ -103,7 +103,7 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
             version += cfg.updates_per_batch as u64;
             step += 1;
 
-            let (_, labels) = &rounds[0];
+            let labels = &rounds[0].labels;
             let mut row = round_metrics(labels);
             let m = all_metrics.last().unwrap();
             row.push(("loss", m[0]));
@@ -137,6 +137,10 @@ pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<Run
     })
 }
 
-fn labels_version(rounds: &[(Round, Labels)]) -> u64 {
-    rounds.iter().map(|(r, _)| r.params_version).max().unwrap_or(0)
+fn labels_version(rounds: &[LabelledRound]) -> u64 {
+    rounds
+        .iter()
+        .map(|r| r.round.params_version)
+        .max()
+        .unwrap_or(0)
 }

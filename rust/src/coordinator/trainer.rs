@@ -9,9 +9,16 @@ use crate::config::{Algo, ExpConfig};
 use crate::data::{Example, Task, TaskGen};
 use crate::gen::{GenBatch, Generator, SampleOpts};
 use crate::reward::{gold, valid_mask};
-use crate::runtime::{CallArg, Engine, HostTensor, ParamView, TrainState};
+use crate::runtime::{
+    CallArg, DeviceBuffer, Engine, HostTensor, ParamView, TrainState,
+};
 use crate::tokenizer as tk;
 use crate::util::rng::Pcg32;
+
+/// Stats origin for the once-per-round token/mask uploads of the resident
+/// labelling path — one bucket so `CallStats` shows exactly how many bytes
+/// a round costs to stage (the acceptance counter for "upload once").
+pub const ROUND_ORIGIN: &str = "round";
 
 /// One generation round: `gen_batch` completions plus provenance.
 pub struct Round {
@@ -25,6 +32,146 @@ pub struct Round {
     pub gen_secs: f64,
     /// Span of generation relative to the shared timeline origin.
     pub gen_span: (f64, f64),
+}
+
+/// A round's token/mask tensors staged on the device ONCE and shared (as
+/// `CallArg::Device` inputs) across reference logprobs (`logprob_dev`),
+/// proxy-RM scoring (`score_rm`) and PPO-style train-batch assembly. The
+/// seed path uploaded the same `[B*S]` token tensor three separate times
+/// per round (label, score, train); this uploads it exactly once, under
+/// the [`ROUND_ORIGIN`] stats bucket.
+///
+/// Device buffers belong to the engine that created them: a
+/// `ResidentRound` is built by the labelling/training engine (the trainer
+/// thread's own) and must only be used with it. A cross-scale RM engine
+/// (Fig 5) cannot read these buffers — scoring falls back to the host
+/// path in that case.
+pub struct ResidentRound {
+    /// Flattened `[B*S]` round tokens (i32).
+    pub tokens: DeviceBuffer,
+    /// Flattened `[B*S]` response mask — the logprob / PPO-train mask.
+    pub resp_mask: DeviceBuffer,
+    /// Whole-sequence validity mask for RM scoring (prompt + response,
+    /// see [`crate::reward::valid_mask`]); `None` when the round's reward
+    /// does not come from a same-engine RM.
+    pub rm_mask: Option<DeviceBuffer>,
+}
+
+impl ResidentRound {
+    /// Flatten and upload a round's tensors. `with_rm_mask` additionally
+    /// stages the RM validity mask (derived from `resp_mask` on the
+    /// host — it is a different tensor, so it is its own upload).
+    pub fn upload(
+        engine: &Engine,
+        gen: &GenBatch,
+        prompt_len: usize,
+        with_rm_mask: bool,
+        scratch: &mut LabelScratch,
+    ) -> Result<ResidentRound> {
+        gen.flatten_into(&mut scratch.toks, &mut scratch.mask);
+        // logprob's input specs 1/2 carry the [B, S] shapes shared by
+        // every consumer (score_rm, train_ppo) of these buffers
+        let tokens = engine.upload_arg_as(
+            ROUND_ORIGIN,
+            "logprob",
+            1,
+            &CallArg::I32(&scratch.toks),
+        )?;
+        let resp_mask = engine.upload_arg_as(
+            ROUND_ORIGIN,
+            "logprob",
+            2,
+            &CallArg::F32(&scratch.mask),
+        )?;
+        let rm_mask = if with_rm_mask {
+            scratch.mask.clear();
+            for m in &gen.resp_mask {
+                scratch.mask.extend(valid_mask(prompt_len, m));
+            }
+            Some(engine.upload_arg_as(
+                ROUND_ORIGIN,
+                "score_rm",
+                2,
+                &CallArg::F32(&scratch.mask),
+            )?)
+        } else {
+            None
+        };
+        Ok(ResidentRound { tokens, resp_mask, rm_mask })
+    }
+}
+
+/// Stage a round for the resident labelling path when the bundle supports
+/// it (`logprob_dev` present) AND the PJRT client has been observed to
+/// untuple (under the root-tuple fallback, `execute_buffers` would move
+/// MORE bytes than the seed literal path — so fall back to it). `None`
+/// means host-literal labelling; with the default fused generator or any
+/// train step already run, the capability is known by the first label.
+/// The RM mask is staged only when the reward actually comes from a
+/// same-engine RM (rule-reward tasks and cross-engine RMs score on their
+/// own path).
+pub fn make_resident(
+    engine: &Engine,
+    gen: &GenBatch,
+    rm: Option<(&Engine, &[f32])>,
+    gold_reward: bool,
+    scratch: &mut LabelScratch,
+) -> Result<Option<ResidentRound>> {
+    if !engine.buffer_path_ready("logprob_dev") {
+        return Ok(None);
+    }
+    let cfg = &engine.manifest.config;
+    let rule_reward = Task::from_name(&cfg.task)
+        .is_some_and(|t| uses_rule_reward(t, gold_reward));
+    let with_rm_mask = !rule_reward
+        && rm.is_some_and(|(rm_engine, _)| {
+            std::ptr::eq(rm_engine as *const Engine, engine as *const Engine)
+        });
+    ResidentRound::upload(engine, gen, cfg.prompt_len, with_rm_mask, scratch)
+        .map(Some)
+}
+
+/// Rule-reward rounds (the math task, or the gold-reward ablation) never
+/// touch the proxy RM; everything else scores with it. The single
+/// predicate shared by [`make_resident`]'s staging decision and
+/// [`label_round`]'s reward dispatch, so the two cannot drift.
+fn uses_rule_reward(task: Task, gold_reward: bool) -> bool {
+    task == Task::Math || gold_reward
+}
+
+/// A labelled round plus its (optional) device-staged tensors, as consumed
+/// by [`assemble`].
+pub struct LabelledRound {
+    pub round: Round,
+    pub labels: Labels,
+    pub resident: Option<ResidentRound>,
+}
+
+/// Stage (when eligible) and label one round — the coordinators' Score
+/// phase. One definition so the sync and async paths cannot drift in
+/// staging policy or labelling traffic.
+pub fn stage_and_label(
+    engine: &Engine,
+    round: &Round,
+    ref_params: &[f32],
+    rm: Option<(&Engine, &[f32])>,
+    cfg: &ExpConfig,
+    scratch: &mut LabelScratch,
+) -> Result<(Option<ResidentRound>, Labels)> {
+    let resident =
+        make_resident(engine, &round.gen, rm, cfg.gold_reward, scratch)?;
+    let labels = label_round(
+        engine,
+        round,
+        ref_params,
+        rm,
+        cfg.k_samples,
+        cfg.eos_penalty,
+        cfg.gold_reward,
+        scratch,
+        resident.as_ref(),
+    )?;
+    Ok((resident, labels))
 }
 
 /// Prompts for round starting at `start`: each distinct prompt is repeated
@@ -118,6 +265,14 @@ pub struct LabelScratch {
 /// cache under the `"ref"` key: uploaded on the first round, reused
 /// thereafter (the engine's reference params must not change under the
 /// same key — every coordinator uses the one SFT checkpoint per run).
+///
+/// When `resident` is staged (see [`make_resident`]) the round's tensors
+/// are NOT re-uploaded here: reference logprobs run through the untupled
+/// `logprob_dev` twin and RM scoring through `score_rm`, both reading the
+/// shared device buffers. The host-literal path (resident = `None`)
+/// remains byte-for-byte the seed behaviour and is the equivalence
+/// baseline in the integration tests.
+#[allow(clippy::too_many_arguments)]
 pub fn label_round(
     engine: &Engine,
     round: &Round,
@@ -127,9 +282,10 @@ pub fn label_round(
     eos_penalty: f32,
     gold_reward: bool,
     scratch: &mut LabelScratch,
+    resident: Option<&ResidentRound>,
 ) -> Result<Labels> {
     let cfg = &engine.manifest.config;
-    let (b, s, p) = (cfg.gen_batch, cfg.seq_len, cfg.prompt_len);
+    let (b, p) = (cfg.gen_batch, cfg.prompt_len);
     let gen = &round.gen;
     let task = Task::from_name(&cfg.task)
         .ok_or_else(|| anyhow::anyhow!("bad task {}", cfg.task))?;
@@ -150,64 +306,87 @@ pub fn label_round(
     }
 
     // --- optimizer rewards ---
-    let rewards = match task {
-        // math: rule reward, no RM (paper §5.2); gold_reward: ablation in
-        // the well-trained-RM limit
-        Task::Math => gold_scores.clone(),
-        _ if gold_reward => gold_scores.clone(),
-        _ => {
-            let (rm_engine, rm_params) = rm
-                .ok_or_else(|| anyhow::anyhow!("task {task:?} needs an RM"))?;
-            let masks: Vec<Vec<f32>> = gen
-                .resp_mask
-                .iter()
-                .map(|m| valid_mask(p, m))
-                .collect();
-            let mut scores = crate::reward::score_batch(
-                rm_engine, rm_params, &gen.tokens, &masks,
-            )?;
-            for (i, sc) in scores.iter_mut().enumerate() {
-                if !gen.terminated[i] {
-                    *sc += eos_penalty; // paper Table 4: penalty without EOS
-                }
+    // math: rule reward, no RM (paper §5.2); gold_reward: ablation in
+    // the well-trained-RM limit
+    let rewards = if uses_rule_reward(task, gold_reward) {
+        gold_scores.clone()
+    } else {
+        let (rm_engine, rm_params) = rm
+            .ok_or_else(|| anyhow::anyhow!("task {task:?} needs an RM"))?;
+        // staged rounds carry an rm_mask ONLY when make_resident saw
+        // a same-engine RM (the one place that eligibility is
+        // decided), so its presence is the whole dispatch here;
+        // cross-engine RMs and unstaged rounds score via the host
+        let staged = resident.and_then(|rr| {
+            rr.rm_mask.as_ref().map(|m| (&rr.tokens, m))
+        });
+        let mut scores = match staged {
+            Some((toks, rm_mask)) => crate::reward::score_batch_resident(
+                rm_engine, rm_params, toks, rm_mask,
+            )?,
+            None => {
+                let masks: Vec<Vec<f32>> = gen
+                    .resp_mask
+                    .iter()
+                    .map(|m| valid_mask(p, m))
+                    .collect();
+                crate::reward::score_batch(
+                    rm_engine, rm_params, &gen.tokens, &masks,
+                )?
             }
-            scores
+        };
+        for (i, sc) in scores.iter_mut().enumerate() {
+            if !gen.terminated[i] {
+                *sc += eos_penalty; // paper Table 4: penalty without EOS
+            }
         }
+        scores
     };
 
     // --- reference logprobs (KL anchor + DPO reference) ---
-    scratch.toks.clear();
-    scratch.mask.clear();
-    scratch.toks.reserve(b * s);
-    scratch.mask.reserve(b * s);
-    for i in 0..b {
-        scratch.toks.extend_from_slice(&gen.tokens[i]);
-        scratch.mask.extend_from_slice(&gen.resp_mask[i]);
-    }
-    let out = engine.call_with(
-        "logprob",
-        &[
-            CallArg::Param(ParamView::cached("ref", 0, ref_params)),
-            CallArg::I32(&scratch.toks),
-            CallArg::F32(&scratch.mask),
-        ],
-    )?;
-    let mut it = out.into_iter();
-    let rlp_seq = it.next().unwrap().into_f32()?;
-    let rlp_tok = it.next().unwrap().into_f32()?;
+    let (rlp_seq, rlp_tok) = if let Some(rr) = resident {
+        // shared device buffers in, both outputs read: download them from
+        // the untupled twin (each its own accounted transfer)
+        let out = engine.execute_buffers(
+            "logprob_dev",
+            &[
+                CallArg::Param(ParamView::cached("ref", 0, ref_params)),
+                CallArg::Device(&rr.tokens),
+                CallArg::Device(&rr.resp_mask),
+            ],
+        )?;
+        (
+            engine.download(&out[0])?.into_f32()?,
+            engine.download(&out[1])?.into_f32()?,
+        )
+    } else {
+        gen.flatten_into(&mut scratch.toks, &mut scratch.mask);
+        let out = engine.call_with(
+            "logprob",
+            &[
+                CallArg::Param(ParamView::cached("ref", 0, ref_params)),
+                CallArg::I32(&scratch.toks),
+                CallArg::F32(&scratch.mask),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let rlp_seq = it.next().unwrap().into_f32()?;
+        let rlp_tok = it.next().unwrap().into_f32()?;
+        (rlp_seq, rlp_tok)
+    };
 
-    let mask_total: f32 = scratch.mask.iter().sum();
-    let rlp_masked: f32 = rlp_tok
-        .iter()
-        .zip(&scratch.mask)
-        .map(|(l, m)| l * m)
-        .sum();
+    // masked sums read straight off the round (not the flattening
+    // scratch, which the resident path never fills)
+    let flat_mask = || gen.resp_mask.iter().flatten();
+    let mask_total: f32 = flat_mask().sum();
+    let rlp_masked: f32 =
+        rlp_tok.iter().zip(flat_mask()).map(|(l, m)| l * m).sum();
     let ref_ppl = (-rlp_masked / mask_total.max(1.0)).exp();
     let blp_masked: f32 = gen
         .blp
         .iter()
         .flatten()
-        .zip(&scratch.mask)
+        .zip(flat_mask())
         .map(|(l, m)| l * m)
         .sum();
 
@@ -223,11 +402,18 @@ pub fn label_round(
     })
 }
 
+/// One train-batch tensor slot: host memory still to be uploaded, or a
+/// device buffer shared from the round's one-time staging (moves nothing).
+pub enum BatchSlot {
+    Host(HostTensor),
+    Device(DeviceBuffer),
+}
+
 /// A fully-assembled train batch: tensors in the executable's input order
 /// (after params/m/v/step/lr).
 pub struct TrainBatch {
     pub artifact: &'static str,
-    pub tensors: Vec<HostTensor>,
+    pub tensors: Vec<BatchSlot>,
     /// Completions consumed by this batch (episode accounting).
     pub episodes: u64,
 }
@@ -238,10 +424,16 @@ pub struct TrainBatch {
 ///   gen_batch singles for PPO/SFT-style losses).
 /// - K=4: `rounds` is two rounds -> one batch of best/worst pairs
 ///   (paper §4.2: generation takes K/2 times longer, training unchanged).
+///
+/// PPO's batch layout is the round layout, so its token/mask slots reuse
+/// the round's resident device buffers when staged — the third of the
+/// seed path's three per-round token uploads gone. Pairwise losses
+/// permute slots into best/worst pairs on the host (a device-side gather
+/// is an open ROADMAP item), so their slots stay host tensors.
 pub fn assemble(
     engine: &Engine,
     algo: Algo,
-    rounds: &[(Round, Labels)],
+    rounds: &[LabelledRound],
     k: usize,
 ) -> Result<TrainBatch> {
     let cfg = &engine.manifest.config;
@@ -255,23 +447,35 @@ pub fn assemble(
     if algo == Algo::Ppo {
         // PPO consumes all slots as singles (k must be 1 slot per prompt
         // conceptually; duplicated prompts are still valid episodes).
-        let (round, labels) = &rounds[0];
-        let mut toks = Vec::with_capacity(bg * s);
-        let mut mask = Vec::with_capacity(bg * s);
+        let lr = &rounds[0];
+        let (round, labels) = (&lr.round, &lr.labels);
+        let (tok_slot, mask_slot) = match &lr.resident {
+            Some(rr) => (
+                BatchSlot::Device(rr.tokens.clone()),
+                BatchSlot::Device(rr.resp_mask.clone()),
+            ),
+            None => {
+                let mut toks = Vec::new();
+                let mut mask = Vec::new();
+                round.gen.flatten_into(&mut toks, &mut mask);
+                (
+                    BatchSlot::Host(HostTensor::I32(toks)),
+                    BatchSlot::Host(HostTensor::F32(mask)),
+                )
+            }
+        };
         let mut blp = Vec::with_capacity(bg * s);
         for i in 0..bg {
-            toks.extend_from_slice(&round.gen.tokens[i]);
-            mask.extend_from_slice(&round.gen.resp_mask[i]);
             blp.extend_from_slice(&round.gen.blp[i]);
         }
         return Ok(TrainBatch {
             artifact: algo.artifact(),
             tensors: vec![
-                HostTensor::I32(toks),
-                HostTensor::F32(mask),
-                HostTensor::F32(blp),
-                HostTensor::F32(labels.rlp_tok.clone()),
-                HostTensor::F32(labels.rewards.clone()),
+                tok_slot,
+                mask_slot,
+                BatchSlot::Host(HostTensor::F32(blp)),
+                BatchSlot::Host(HostTensor::F32(labels.rlp_tok.clone())),
+                BatchSlot::Host(HostTensor::F32(labels.rewards.clone())),
             ],
             episodes,
         });
@@ -284,7 +488,8 @@ pub fn assemble(
         idx: usize,
     }
     let mut pairs: Vec<(Slot, Slot)> = Vec::with_capacity(bp);
-    for (round, labels) in rounds {
+    for lr in rounds {
+        let (round, labels) = (&lr.round, &lr.labels);
         let n_prompts = bg / k;
         for pi in 0..n_prompts {
             let slots = pi * k..(pi + 1) * k;
@@ -401,6 +606,7 @@ pub fn assemble(
         }
         Algo::Ppo => unreachable!(),
     };
+    let tensors = tensors.into_iter().map(BatchSlot::Host).collect();
 
     Ok(TrainBatch { artifact: algo.artifact(), tensors, episodes })
 }
@@ -417,8 +623,9 @@ pub fn rounds_per_batch(k: usize) -> usize {
 /// Run `t` optimizer updates on one assembled batch ("ppo epochs",
 /// paper §4.1). Returns the metrics of each update.
 ///
-/// The batch is uploaded to the device once and reused across the whole
-/// inner loop; on untupled train artifacts the optimizer triple also stays
+/// Host slots upload to the device once and are reused across the whole
+/// inner loop; device slots (round-resident tokens/masks) move nothing at
+/// all. On untupled train artifacts the optimizer triple also stays
 /// device-resident, so repeat updates move only the metrics vector.
 pub fn train_on_batch(
     engine: &Engine,
@@ -427,7 +634,17 @@ pub fn train_on_batch(
     lr: f32,
     t_updates: usize,
 ) -> Result<Vec<Vec<f32>>> {
-    let dev_batch = engine.upload_inputs(batch.artifact, 5, &batch.tensors)?;
+    let mut dev_batch = Vec::with_capacity(batch.tensors.len());
+    for (i, slot) in batch.tensors.iter().enumerate() {
+        dev_batch.push(match slot {
+            // the loss-specific inputs start after (params, m, v, step, lr)
+            BatchSlot::Host(t) => engine
+                .upload_inputs(batch.artifact, 5 + i, std::slice::from_ref(t))?
+                .pop()
+                .unwrap(),
+            BatchSlot::Device(b) => b.clone(),
+        });
+    }
     let mut all = Vec::with_capacity(t_updates);
     for _ in 0..t_updates {
         let metrics =

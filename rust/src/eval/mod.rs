@@ -77,21 +77,22 @@ pub fn evaluate(
         let gen = generator.generate(engine, policy, &prompts, opts, &mut rng)?;
 
         // reference-model logprobs for the KL/ppl measurement
-        toks_flat.clear();
-        mask_flat.clear();
-        for i in 0..bg {
-            toks_flat.extend_from_slice(&gen.tokens[i]);
-            mask_flat.extend_from_slice(&gen.resp_mask[i]);
-        }
-        let out = engine.call_with(
-            "logprob",
-            &[
-                CallArg::Param(reference),
-                CallArg::I32(&toks_flat),
-                CallArg::F32(&mask_flat),
-            ],
-        )?;
-        let rlp_tok = out.into_iter().nth(1).unwrap().into_f32()?;
+        gen.flatten_into(&mut toks_flat, &mut mask_flat);
+        let args = [
+            CallArg::Param(reference),
+            CallArg::I32(&toks_flat),
+            CallArg::F32(&mask_flat),
+        ];
+        // eval reads only the per-token logprobs: the untupled twin never
+        // downloads the unused [B] sequence output (untupling clients
+        // only — the fused generate above settled the capability)
+        let rlp_tok = if engine.buffer_path_ready("logprob_dev") {
+            let out = engine.execute_buffers("logprob_dev", &args)?;
+            engine.download(&out[1])?.into_f32()?
+        } else {
+            let out = engine.call_with("logprob", &args)?;
+            out.into_iter().nth(1).unwrap().into_f32()?
+        };
         lp_sum += rlp_tok
             .iter()
             .zip(&mask_flat)

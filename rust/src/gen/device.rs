@@ -1,0 +1,105 @@
+//! Device-resident KV-cache incremental-decode engine — the third tier of
+//! the step-wise generation ladder.
+//!
+//! Same decode loop as [`super::cached::CachedEngine`] (one `prefill` over
+//! the prompts, then one single-token `decode` per position with the host
+//! sampling in between), but executed through the buffer-path twins
+//! `prefill_dev`/`decode_dev`: the KV cache comes back as a
+//! [`DeviceBuffer`] and is chained straight into the next decode call as a
+//! `CallArg::Device` input. Per step, the host↔device traffic is one
+//! `[B]` token upload + one scalar + one `[B, V]` logits download — the
+//! multi-MB cache never touches the host (on untupling PJRT clients; a
+//! fallback client degrades to per-step round-trips with a one-shot
+//! warning from the engine, still byte-for-byte correct).
+//!
+//! Because the twins alias the *same HLO file* as the tupled artifacts
+//! (aot.py re-registers the lowering under `untupled=true`), the logits
+//! are bitwise-identical to the literal engine's, and both engines walk
+//! the same host RNG stream — so with equal seeds the emitted
+//! sequences/masks/blp are exactly equal (integration-tested). The
+//! literal `CachedEngine` stays selectable as the Fig-14 middle-tier
+//! baseline; this engine is what production would run when the
+//! measurement no longer needs the literal round-trip.
+
+use anyhow::{bail, Result};
+
+use super::{DecodeState, GenBatch, Generator, SampleOpts};
+use crate::runtime::{CallArg, DeviceBuffer, Engine, ParamView};
+use crate::util::rng::Pcg32;
+
+#[derive(Default)]
+pub struct DeviceCachedEngine;
+
+impl DeviceCachedEngine {
+    /// Whether `engine`'s bundle ships the buffer-path twins this engine
+    /// needs (older artifact directories predate them).
+    pub fn supported(engine: &Engine) -> bool {
+        engine.manifest.has_artifact("prefill_dev")
+            && engine.manifest.has_artifact("decode_dev")
+    }
+}
+
+impl Generator for DeviceCachedEngine {
+    fn name(&self) -> &'static str {
+        "device"
+    }
+
+    fn generate(
+        &self,
+        engine: &Engine,
+        params: ParamView<'_>,
+        prompts: &[Vec<i32>],
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Result<GenBatch> {
+        if !Self::supported(engine) {
+            bail!(
+                "artifact bundle '{}' lacks prefill_dev/decode_dev — rebuild \
+                 artifacts (python -m compile.aot --force) or use the \
+                 literal cached engine",
+                engine.config_name()
+            );
+        }
+        let cfg = &engine.manifest.config;
+        let (b, p, s, v) = (cfg.gen_batch, cfg.prompt_len, cfg.seq_len, cfg.vocab);
+        assert_eq!(prompts.len(), b, "gen_batch is fixed at {b}");
+
+        let mut st = DecodeState::new(prompts, p, s);
+
+        // prefill: prompt -> device-resident kv cache + logits for pos p.
+        // Only the logits are downloaded; the cache stays where it is.
+        let mut prompt_flat = Vec::with_capacity(b * p);
+        for row in prompts {
+            prompt_flat.extend_from_slice(&row[..p]);
+        }
+        let mut out = engine.execute_buffers(
+            "prefill_dev",
+            &[CallArg::Param(params), CallArg::I32(&prompt_flat)],
+        )?;
+        let mut logits = engine.download(&out[1])?.into_f32()?;
+        let mut kv: DeviceBuffer = out.swap_remove(0);
+
+        let mut steps = 0;
+        for pos in p..s {
+            steps += 1;
+            let sampled = st.step(pos, &logits, v, opts, rng);
+            if st.all_done() || pos + 1 == s {
+                break;
+            }
+            // decode: token at `pos` -> logits for pos+1, updated cache.
+            // The cache is chained device-to-device via CallArg::Device.
+            let mut out = engine.execute_buffers(
+                "decode_dev",
+                &[
+                    CallArg::Param(params),
+                    CallArg::Device(&kv),
+                    CallArg::I32(&sampled),
+                    CallArg::ScalarI32(pos as i32),
+                ],
+            )?;
+            logits = engine.download(&out[0])?.into_f32()?;
+            kv = out.swap_remove(1);
+        }
+        Ok(st.finish(steps))
+    }
+}

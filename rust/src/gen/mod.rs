@@ -1,26 +1,39 @@
 //! Generation engines (paper §2.3 / Fig 14 substitution, DESIGN.md §3).
 //!
-//! Two engines over the *same* compiled model:
-//! - [`cached::CachedEngine`] — the vLLM analogue: one prefill over the
-//!   prompt, then incremental single-token decode against a KV cache,
-//!   with early exit once every row has terminated. Per-token cost is
-//!   O(S) — linear decode.
+//! Four engines over the *same* compiled model, forming a three-tier
+//! decode-cost ladder plus the fully-fused production path:
+//!
 //! - [`naive::NaiveEngine`] — the HuggingFace-transformers analogue: the
 //!   full padded sequence is re-forwarded for every new token. Per-token
 //!   cost is O(S^2) — the quadratic recompute that makes training-library
-//!   generation infeasible at scale (paper Fig 14).
-//!
+//!   generation infeasible at scale (paper Fig 14, bottom tier).
+//! - [`cached::CachedEngine`] — the vLLM analogue: one prefill over the
+//!   prompt, then incremental single-token decode against a KV cache,
+//!   with early exit once every row has terminated. Per-token *compute*
+//!   is O(S), but the cache round-trips host↔device through PJRT
+//!   literals every step — deliberately so: this is the Fig-14 middle
+//!   tier being measured.
+//! - [`device::DeviceCachedEngine`] — the same step-wise loop with the KV
+//!   cache chained device-to-device through the untupled
+//!   `prefill_dev`/`decode_dev` twins: per step only the sampled tokens
+//!   go up and the logits come down, the cache never touches the host.
 //! - [`fused::FusedEngine`] — the production hot path: the whole sampling
-//!   loop fused into one `generate` executable, KV cache device-resident,
-//!   one PJRT call per round (EXPERIMENTS.md §Perf).
+//!   loop fused into ONE `generate` executable (KV cache inside the XLA
+//!   while-loop), one PJRT call per round (EXPERIMENTS.md §Perf).
 //!
-//! The cached and naive engines walk the same host RNG stream, so with
-//! equal seeds they emit *identical* sequences (an integration-tested
-//! invariant); the fused engine samples on-device (threefry) — its
-//! correctness anchor is the blp-vs-logprob invariant shared by all
-//! engines.
+//! The naive, cached, and device-cached engines walk the same host RNG
+//! stream — and the `*_dev` twins alias the same HLO as their tupled
+//! namesakes — so with equal seeds all three emit *bitwise-identical*
+//! sequences and behaviour logprobs (integration-tested invariants). The
+//! fused engine samples on-device (threefry); its correctness anchor is
+//! the blp-vs-logprob invariant shared by all engines.
+//!
+//! Engine selection is a runtime knob (`--gen-engine`,
+//! [`crate::config::GenEngine`]); `benches/gen_speed.rs` tracks the
+//! tokens/sec and bytes/token of every tier in `BENCH_gen_speed.json`.
 
 pub mod cached;
+pub mod device;
 pub mod fused;
 pub mod naive;
 pub mod sampler;
@@ -48,6 +61,22 @@ pub struct GenBatch {
 }
 
 impl GenBatch {
+    /// Flatten tokens and response mask into row-major `[B*S]` buffers
+    /// (cleared first) — the layout every executable input consumes. The
+    /// single definition keeps the staging, labelling, assembly and eval
+    /// flattenings from drifting apart.
+    pub fn flatten_into(&self, toks: &mut Vec<i32>, mask: &mut Vec<f32>) {
+        toks.clear();
+        mask.clear();
+        let n: usize = self.tokens.iter().map(Vec::len).sum();
+        toks.reserve(n);
+        mask.reserve(n);
+        for (t, m) in self.tokens.iter().zip(&self.resp_mask) {
+            toks.extend_from_slice(t);
+            mask.extend_from_slice(m);
+        }
+    }
+
     /// Response tokens of row `i` (everything after the prompt, incl. EOS,
     /// excl. PAD).
     pub fn response(&self, i: usize, prompt_len: usize) -> &[i32] {

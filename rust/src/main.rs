@@ -9,6 +9,7 @@
 //!
 //! Examples:
 //!   async-rlhf train tldr_s --algo dpo --mode async --steps 96
+//!   async-rlhf train tldr_s --gen-engine device   # KV chained on-device
 //!   async-rlhf exp fig3 --steps 64
 //!   async-rlhf sim --gen 21 --train 33 --steps 233
 

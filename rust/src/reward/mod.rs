@@ -8,4 +8,6 @@
 pub mod gold;
 pub mod proxy;
 
-pub use proxy::{build_pref_pairs, score_batch, valid_mask, PrefPair};
+pub use proxy::{
+    build_pref_pairs, score_batch, score_batch_resident, valid_mask, PrefPair,
+};

@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use super::gold;
 use crate::data::{pack_sequence, Example, TaskGen};
-use crate::runtime::{CallArg, Engine, ParamView};
+use crate::runtime::{CallArg, DeviceBuffer, Engine, ParamView};
 use crate::util::rng::Pcg32;
 
 /// Score full sequences (prompt ++ response ++ EOS ++ PAD) with the proxy
@@ -45,6 +45,29 @@ pub fn score_batch(
             CallArg::Param(ParamView::cached("rm", 0, rm_params)),
             CallArg::I32(&toks),
             CallArg::F32(&mask),
+        ],
+    )?;
+    out.into_iter().next().unwrap().into_f32()
+}
+
+/// [`score_batch`] over a round's already-staged device tensors (the
+/// resident labelling path): the tokens and validity mask arrive as
+/// `CallArg::Device` inputs, so scoring uploads nothing — the RM params
+/// are a device-cache hit after the first round and the only transfer is
+/// the `[B]` score download. `tokens`/`valid_mask` must have been staged
+/// on THIS engine (cross-scale RM bundles score via the host path).
+pub fn score_batch_resident(
+    engine: &Engine,
+    rm_params: &[f32],
+    tokens: &DeviceBuffer,
+    valid_mask: &DeviceBuffer,
+) -> Result<Vec<f32>> {
+    let out = engine.call_with(
+        "score_rm",
+        &[
+            CallArg::Param(ParamView::cached("rm", 0, rm_params)),
+            CallArg::Device(tokens),
+            CallArg::Device(valid_mask),
         ],
     )?;
     out.into_iter().next().unwrap().into_f32()

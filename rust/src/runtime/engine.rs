@@ -222,6 +222,9 @@ struct ParamEntry {
 pub struct Engine {
     pub manifest: Manifest,
     client: xla::PjRtClient,
+    /// Compiled executables keyed by HLO *file*, not artifact name:
+    /// aliased artifacts (train_bon -> train_sft, the `*_dev` twins ->
+    /// their tupled namesakes) share one compilation.
     executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
     stats: RefCell<BTreeMap<String, CallStats>>,
     /// Named/versioned device-resident parameter sets (see [`ParamView`]).
@@ -231,6 +234,13 @@ pub struct Engine {
     /// One-shot warning flag for clients that return untupled artifacts'
     /// root tuple as a single buffer (see `execute_buffers_spec`).
     tuple_fallback_warned: Cell<bool>,
+    /// Whether this client hands untupled artifacts back as per-leaf
+    /// buffers (`Some(true)`), or as one root-tuple buffer that the
+    /// engine must split through the host (`Some(false)`). Unknown until
+    /// the first untupled execution. Zero-copy paths that would move
+    /// MORE bytes under the fallback gate on this (see
+    /// [`Engine::client_untuples`]).
+    untuple_capability: Cell<Option<bool>>,
 }
 
 fn check_input(name: &str, s: &IoSpec, dtype: DType, len: usize) -> Result<()> {
@@ -264,16 +274,39 @@ impl Engine {
             cache_hits: Cell::new(0),
             cache_misses: Cell::new(0),
             tuple_fallback_warned: Cell::new(false),
+            untuple_capability: Cell::new(None),
         })
+    }
+
+    /// `Some(true)` once an untupled execution has come back as per-leaf
+    /// buffers, `Some(false)` once one has hit the root-tuple fallback,
+    /// `None` before either. Callers choosing between a device-chaining
+    /// path and a host-literal path should take the device path only on
+    /// `Some(true)` — under the fallback it moves *more* bytes than the
+    /// literal path it replaces.
+    pub fn client_untuples(&self) -> Option<bool> {
+        self.untuple_capability.get()
+    }
+
+    /// Single eligibility rule for opt-in zero-copy paths: the bundle
+    /// ships `artifact` AND this client has been observed to untuple.
+    /// Callers (resident labelling, eval's logprob_dev, benches) must use
+    /// this rather than re-deriving the rule, so the gating policy can't
+    /// drift between sites.
+    pub fn buffer_path_ready(&self, artifact: &str) -> bool {
+        self.manifest.has_artifact(artifact) && self.client_untuples() == Some(true)
     }
 
     pub fn config_name(&self) -> &str {
         &self.manifest.config.name
     }
 
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.executables.borrow().contains_key(name) {
-            return Ok(());
+    /// Compile `name`'s HLO file if this engine hasn't yet (aliases hit
+    /// the cache); returns the executable-cache key (the file name).
+    fn ensure_compiled(&self, name: &str) -> Result<String> {
+        let file = self.manifest.artifact(name)?.file.clone();
+        if self.executables.borrow().contains_key(&file) {
+            return Ok(file);
         }
         let path = self.manifest.hlo_path(name)?;
         let t0 = Instant::now();
@@ -286,11 +319,11 @@ impl Engine {
             .with_context(|| format!("compiling {name}"))?;
         self.stats
             .borrow_mut()
-            .entry(format!("compile:{name}"))
+            .entry(format!("compile:{file}"))
             .or_default()
             .total_secs += t0.elapsed().as_secs_f64();
-        self.executables.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
+        self.executables.borrow_mut().insert(file.clone(), exe);
+        Ok(file)
     }
 
     /// Compile every artifact up front.
@@ -441,6 +474,7 @@ impl Engine {
             let (outs, bytes_up) = self.execute_raw(name, &spec, args)?;
             let mut bytes_down = 0u64;
             let out: Vec<HostTensor> = if outs.len() == spec.outputs.len() {
+                self.untuple_capability.set(Some(true));
                 let mut host = Vec::with_capacity(outs.len());
                 for (b, s) in outs.iter().zip(&spec.outputs) {
                     host.push(HostTensor::from_literal(
@@ -451,6 +485,7 @@ impl Engine {
                 }
                 host
             } else if outs.len() == 1 && spec.outputs.len() > 1 {
+                self.untuple_capability.set(Some(false));
                 let parts = outs[0].to_literal_sync()?.to_tuple()?;
                 if parts.len() != spec.outputs.len() {
                     bail!(
@@ -545,9 +580,9 @@ impl Engine {
         args: &[CallArg],
     ) -> Result<(Vec<xla::PjRtBuffer>, u64)> {
         let (bufs, bytes_up) = self.resolve_args(name, spec, args)?;
-        self.ensure_compiled(name)?;
+        let key = self.ensure_compiled(name)?;
         let execs = self.executables.borrow();
-        let exe = execs.get(name).unwrap();
+        let exe = execs.get(&key).unwrap();
         let mut results = exe.execute_b(&bufs)?;
         if results.is_empty() {
             bail!("{name}: empty execution result");
@@ -569,6 +604,7 @@ impl Engine {
         let mut bytes_down = 0u64;
         let out: Vec<DeviceBuffer> = if outs.len() == spec.outputs.len() {
             // Client untuples the root: one buffer per output leaf.
+            self.untuple_capability.set(Some(true));
             outs.into_iter()
                 .zip(&spec.outputs)
                 .map(|(b, s)| DeviceBuffer {
@@ -584,6 +620,7 @@ impl Engine {
             // split — split through the host once and re-upload, so
             // callers still see per-output device buffers. Correct on
             // every client; the zero-copy win needs an untupling one.
+            self.untuple_capability.set(Some(false));
             if !self.tuple_fallback_warned.replace(true) {
                 eprintln!(
                     "[engine] {name}: PJRT client returned the root tuple \
@@ -646,19 +683,20 @@ impl Engine {
     }
 
     /// Upload a host f32 vector as a standalone device buffer (train-state
-    /// seeding); transfers are attributed to `origin`.
+    /// seeding); transfer bytes *and time* are attributed to `origin`, so
+    /// the batch-upload path shows up in [`CallStats`] like any call.
     pub fn upload_f32(&self, origin: &str, data: &[f32]) -> Result<DeviceBuffer> {
+        let t0 = Instant::now();
         let buf = DeviceBuffer {
             buf: Rc::new(self.upload_literal(&xla::Literal::vec1(data))?),
             dtype: DType::F32,
             numel: data.len(),
             origin: origin.to_string(),
         };
-        self.stats
-            .borrow_mut()
-            .entry(origin.to_string())
-            .or_default()
-            .bytes_up += 4 * data.len() as u64;
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(origin.to_string()).or_default();
+        e.total_secs += t0.elapsed().as_secs_f64();
+        e.bytes_up += 4 * data.len() as u64;
         Ok(buf)
     }
 
@@ -672,7 +710,10 @@ impl Engine {
         offset: usize,
         tensors: &[HostTensor],
     ) -> Result<Vec<DeviceBuffer>> {
-        let spec: ArtifactSpec = self.manifest.artifact(name)?.clone();
+        // borrow, don't clone (see upload_arg_as): called once per host
+        // slot on the per-batch path, so the spec deep-clone would be
+        // pure waste
+        let spec = self.manifest.artifact(name)?;
         if offset + tensors.len() > spec.inputs.len() {
             bail!(
                 "{name}: {} tensors at offset {offset} exceed the {}-input spec",
@@ -680,6 +721,7 @@ impl Engine {
                 spec.inputs.len()
             );
         }
+        let t0 = Instant::now();
         let mut out = Vec::with_capacity(tensors.len());
         let mut bytes_up = 0u64;
         for (t, s) in tensors.iter().zip(&spec.inputs[offset..]) {
@@ -692,12 +734,53 @@ impl Engine {
                 origin: name.to_string(),
             });
         }
-        self.stats
-            .borrow_mut()
-            .entry(name.to_string())
-            .or_default()
-            .bytes_up += bytes_up;
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_default();
+        e.total_secs += t0.elapsed().as_secs_f64();
+        e.bytes_up += bytes_up;
         Ok(out)
+    }
+
+    /// Upload one borrowed host slice destined for `name`'s input at
+    /// position `index`, attributing the transfer to `origin`. The slice
+    /// variant avoids moving callers' reusable flattening scratch into a
+    /// [`HostTensor`]; only `F32`/`I32` slice args are uploadable.
+    pub fn upload_arg_as(
+        &self,
+        origin: &str,
+        name: &str,
+        index: usize,
+        arg: &CallArg,
+    ) -> Result<DeviceBuffer> {
+        // borrow, don't clone: the manifest is immutable for the engine's
+        // lifetime and the upload only reads the input spec
+        let spec = self.manifest.artifact(name)?;
+        let s = spec.inputs.get(index).ok_or_else(|| {
+            anyhow!("{name}: no input at position {index}")
+        })?;
+        let t0 = Instant::now();
+        let (lit, dtype, numel) = match arg {
+            CallArg::F32(v) => {
+                check_input(name, s, DType::F32, v.len())?;
+                (shaped(xla::Literal::vec1(v), &s.shape)?, DType::F32, v.len())
+            }
+            CallArg::I32(v) => {
+                check_input(name, s, DType::I32, v.len())?;
+                (shaped(xla::Literal::vec1(v), &s.shape)?, DType::I32, v.len())
+            }
+            _ => bail!("{name}: upload_arg_as takes host slice args only"),
+        };
+        let buf = DeviceBuffer {
+            buf: Rc::new(self.upload_literal(&lit)?),
+            dtype,
+            numel,
+            origin: origin.to_string(),
+        };
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(origin.to_string()).or_default();
+        e.total_secs += t0.elapsed().as_secs_f64();
+        e.bytes_up += 4 * numel as u64;
+        Ok(buf)
     }
 
     /// Drop a cached parameter set (callers that reuse a key with new

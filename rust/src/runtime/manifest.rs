@@ -191,6 +191,13 @@ impl Manifest {
         })
     }
 
+    /// Whether the bundle ships an artifact — used to feature-gate paths
+    /// that need the newer buffer-path twins (`prefill_dev` etc.) while
+    /// staying loadable against older artifact directories.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)

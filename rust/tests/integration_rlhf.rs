@@ -6,7 +6,14 @@ use std::path::PathBuf;
 
 use async_rlhf::config::{Algo, ExpConfig, Mode};
 use async_rlhf::coordinator;
+use async_rlhf::coordinator::trainer::{
+    assemble, generate_round, label_round, make_resident, sample_opts,
+    train_on_batch, LabelScratch, LabelledRound, ROUND_ORIGIN,
+};
 use async_rlhf::eval::evaluate;
+use async_rlhf::gen::fused::FusedEngine;
+use async_rlhf::runtime::{ParamView, TrainState};
+use async_rlhf::util::rng::Pcg32;
 
 fn dev_available() -> bool {
     let root = std::env::var("ASYNC_RLHF_ARTIFACTS")
@@ -138,6 +145,103 @@ fn async_matches_sync_and_is_one_step_off_policy() {
     );
     // same episode accounting
     assert_eq!(sync_out.episodes, async_out.episodes);
+}
+
+#[test]
+fn resident_round_labels_match_host_literal_labels() {
+    // Labelling-path equivalence: staging a round's tensors on device once
+    // (ResidentRound + logprob_dev + device-input score_rm) must produce
+    // labels BITWISE identical to the seed host-literal path — same
+    // executables, same input values, different transport. Then the
+    // acceptance byte counter: across label + train (PPO layout) the round
+    // tokens upload exactly once, under the ROUND_ORIGIN bucket.
+    if !dev_available() {
+        return;
+    }
+    let cfg = test_cfg("resident_label");
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let engine = &prep.engine;
+    if !engine.manifest.has_artifact("logprob_dev") {
+        eprintln!("SKIP: bundle lacks logprob_dev — rebuild artifacts");
+        return;
+    }
+    let mcfg = engine.manifest.config.clone();
+    let (b, s) = (mcfg.gen_batch, mcfg.seq_len);
+    let generator = FusedEngine::default();
+    let mut rng = Pcg32::new(3, 9);
+    let round = generate_round(
+        engine,
+        &generator,
+        ParamView::cached("policy", 0, &prep.sft_params),
+        0,
+        &prep.taskgen,
+        0,
+        2,
+        sample_opts(&cfg),
+        &mut rng,
+        std::time::Instant::now(),
+    )
+    .unwrap();
+
+    let mut scratch = LabelScratch::default();
+    let baseline = label_round(
+        engine, &round, &prep.sft_params, prep.rm_scorer(), 2,
+        cfg.eos_penalty, false, &mut scratch, None,
+    )
+    .unwrap();
+    // the fused generate above settled the client capability; on a
+    // root-tuple client the resident path stays off by design
+    let Some(resident) =
+        make_resident(engine, &round.gen, prep.rm_scorer(), false, &mut scratch)
+            .unwrap()
+    else {
+        eprintln!("SKIP: PJRT client returns root tuples (no zero-copy staging)");
+        return;
+    };
+    let labels = label_round(
+        engine, &round, &prep.sft_params, prep.rm_scorer(), 2,
+        cfg.eos_penalty, false, &mut scratch, Some(&resident),
+    )
+    .unwrap();
+    assert_eq!(baseline.rewards, labels.rewards, "RM scores diverged");
+    assert_eq!(baseline.rlp_tok, labels.rlp_tok, "token logprobs diverged");
+    assert_eq!(baseline.rlp_seq, labels.rlp_seq, "seq logprobs diverged");
+    assert_eq!(baseline.gold_scores, labels.gold_scores);
+    assert_eq!(baseline.wins, labels.wins);
+    assert_eq!(baseline.ref_ppl, labels.ref_ppl);
+    assert_eq!(baseline.mean_blp, labels.mean_blp);
+    assert_eq!(baseline.mean_len, labels.mean_len);
+
+    // --- per-round byte counter (ref/rm caches are warm by now) ---
+    let mut state = TrainState::new(prep.sft_params.clone());
+    engine.reset_stats();
+    let resident =
+        make_resident(engine, &round.gen, prep.rm_scorer(), false, &mut scratch)
+            .unwrap();
+    let labels = label_round(
+        engine, &round, &prep.sft_params, prep.rm_scorer(), 2,
+        cfg.eos_penalty, false, &mut scratch, resident.as_ref(),
+    )
+    .unwrap();
+    let lr = LabelledRound { round, labels, resident };
+    let batch = assemble(engine, Algo::Ppo, std::slice::from_ref(&lr), 2).unwrap();
+    train_on_batch(engine, &mut state, &batch, 1e-4, 1).unwrap();
+
+    let stats = engine.stats();
+    let tensor_bytes = (4 * b * s) as u64; // one [B*S] tensor, i32 or f32
+    let up = |k: &str| stats.get(k).map_or(0, |st| st.bytes_up);
+    // tokens + resp_mask + rm_mask staged exactly once, under "round"
+    assert_eq!(up(ROUND_ORIGIN), 3 * tensor_bytes, "round staged more than once");
+    // labelling re-uploads NOTHING (params are cache hits, inputs shared)
+    assert_eq!(up("logprob_dev"), 0, "logprob_dev re-uploaded round tensors");
+    assert_eq!(up("score_rm"), 0, "score_rm re-uploaded round tensors");
+    // the train batch uploads only blp + rlp + rewards (+ 2 scalars) —
+    // tokens/mask ride the shared device buffers
+    assert_eq!(
+        up("train_ppo"),
+        2 * tensor_bytes + (4 * b) as u64 + 8,
+        "train_ppo re-uploaded round tokens/mask"
+    );
 }
 
 #[test]

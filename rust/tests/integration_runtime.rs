@@ -12,8 +12,8 @@ use std::path::PathBuf;
 
 use async_rlhf::data::{pack_sequence, Task, TaskGen};
 use async_rlhf::gen::{
-    cached::CachedEngine, fused::FusedEngine, naive::NaiveEngine, Generator,
-    SampleOpts,
+    cached::CachedEngine, device::DeviceCachedEngine, fused::FusedEngine,
+    naive::NaiveEngine, Generator, SampleOpts,
 };
 use async_rlhf::runtime::{
     scalar_f32, CallArg, Engine, HostTensor, ParamView, TrainState,
@@ -156,6 +156,161 @@ fn cached_and_naive_engines_emit_identical_sequences() {
             assert!((x - y).abs() < 2e-3, "blp diverged: {x} vs {y}");
         }
     }
+}
+
+#[test]
+fn device_cached_engine_bitwise_matches_literal_cached() {
+    // The device-KV tier shares the host RNG stream with the literal
+    // cached engine AND executes the same HLO (the *_dev twins alias the
+    // tupled artifacts' files), so with equal seeds the sequences, masks
+    // and behaviour logprobs must be BITWISE identical — on untupling and
+    // fallback PJRT clients alike.
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    if !DeviceCachedEngine::supported(&engine) {
+        eprintln!("SKIP: bundle lacks prefill_dev/decode_dev — rebuild artifacts");
+        return;
+    }
+    let cfg = engine.manifest.config.clone();
+    let params = engine.init_policy().unwrap();
+    let taskgen = TaskGen::new(Task::Tldr, cfg.prompt_len, cfg.resp_len, 7);
+    let prompts: Vec<Vec<i32>> = taskgen
+        .batch(0, cfg.gen_batch)
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let opts = SampleOpts { temperature: 0.7, greedy: false };
+
+    let mut rng1 = Pcg32::new(99, 1);
+    let a = CachedEngine
+        .generate(&engine, ParamView::cached("p", 0, &params), &prompts, opts, &mut rng1)
+        .unwrap();
+    let mut rng2 = Pcg32::new(99, 1);
+    let b = DeviceCachedEngine
+        .generate(&engine, ParamView::cached("p", 0, &params), &prompts, opts, &mut rng2)
+        .unwrap();
+    assert_eq!(a.tokens, b.tokens, "sequences diverged");
+    assert_eq!(a.resp_mask, b.resp_mask);
+    assert_eq!(a.blp, b.blp, "behaviour logprobs must be bitwise equal");
+    assert_eq!(a.terminated, b.terminated);
+    assert_eq!(a.steps, b.steps, "early-exit behaviour diverged");
+}
+
+#[test]
+fn device_kv_tier_moves_fewer_bytes_than_literal_cached() {
+    // Per decoded token the device tier uploads [B] tokens + a scalar and
+    // downloads [B, V] logits, while the literal tier round-trips the
+    // whole KV cache both ways. Strictly fewer bytes — the acceptance
+    // criterion for the third generation tier. Only meaningful on
+    // untupling PJRT clients (the fallback host-split degrades chaining
+    // to per-step round-trips by design).
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    if !DeviceCachedEngine::supported(&engine) {
+        eprintln!("SKIP: bundle lacks prefill_dev/decode_dev — rebuild artifacts");
+        return;
+    }
+    let cfg = engine.manifest.config.clone();
+    let params = engine.init_policy().unwrap();
+    let taskgen = TaskGen::new(Task::Tldr, cfg.prompt_len, cfg.resp_len, 7);
+    let prompts: Vec<Vec<i32>> = taskgen
+        .batch(0, cfg.gen_batch)
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let opts = SampleOpts { temperature: 0.7, greedy: false };
+    let pv = ParamView::cached("p", 0, &params);
+
+    // detect a fallback (root-tuple) client: an untupled execution that
+    // downloads anything during the buffer split is not untupling
+    let mut prompt_flat = Vec::new();
+    for row in &prompts {
+        prompt_flat.extend_from_slice(&row[..cfg.prompt_len]);
+    }
+    engine.reset_stats();
+    engine
+        .execute_buffers(
+            "prefill_dev",
+            &[CallArg::Param(pv), CallArg::I32(&prompt_flat)],
+        )
+        .unwrap();
+    let (_, down) = engine.transfer_totals();
+    if down > 0 {
+        eprintln!("SKIP: PJRT client returns root tuples (no zero-copy chaining)");
+        return;
+    }
+
+    // warm both paths (compile + param cache), then measure one round each
+    let mut rng = Pcg32::new(1, 0);
+    CachedEngine.generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
+    let mut rng = Pcg32::new(1, 0);
+    DeviceCachedEngine.generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
+
+    engine.reset_stats();
+    let mut rng = Pcg32::new(42, 3);
+    CachedEngine.generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
+    let (lit_up, lit_down) = engine.transfer_totals();
+
+    engine.reset_stats();
+    let mut rng = Pcg32::new(42, 3);
+    DeviceCachedEngine.generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
+    let (dev_up, dev_down) = engine.transfer_totals();
+
+    // the KV cache dwarfs everything else: the device tier must move
+    // strictly fewer bytes in BOTH directions
+    assert!(
+        dev_up < lit_up && dev_down < lit_down,
+        "device tier up/down {dev_up}/{dev_down} not below literal {lit_up}/{lit_down}"
+    );
+    // and the gap must be at least one KV cache per decoded step
+    let kv_bytes = (4 * engine.manifest.kv_cache_len()) as u64;
+    assert!(
+        lit_up - dev_up >= kv_bytes,
+        "literal tier should re-upload the cache at least once per step"
+    );
+}
+
+#[test]
+fn standalone_uploads_and_downloads_are_accounted() {
+    // upload_f32 / upload_inputs / upload_arg_as must all surface in
+    // CallStats::bytes_up under their origin (the batch-upload paths are
+    // exactly where under-reporting would hide the hot-path story), and
+    // downloads against the buffer's origin.
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let (b, s) = (cfg.gen_batch, cfg.seq_len);
+
+    engine.reset_stats();
+    let buf = engine.upload_f32("acct", &[0.5f32; 16]).unwrap();
+    assert_eq!(engine.stats()["acct"].bytes_up, 64);
+
+    let toks = vec![1i32; b * s];
+    let mask = vec![1.0f32; b * s];
+    engine
+        .upload_inputs(
+            "train_sft",
+            5,
+            &[
+                HostTensor::I32(toks.clone()),
+                HostTensor::F32(mask.clone()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(
+        engine.stats()["train_sft"].bytes_up,
+        (8 * b * s) as u64,
+        "upload_inputs must account both tensors"
+    );
+
+    let dev = engine
+        .upload_arg_as("round", "logprob", 1, &CallArg::I32(&toks))
+        .unwrap();
+    assert_eq!(engine.stats()["round"].bytes_up, (4 * b * s) as u64);
+    assert_eq!(dev.numel(), b * s);
+
+    engine.download(&buf).unwrap();
+    assert_eq!(engine.stats()["acct"].bytes_down, 64);
 }
 
 #[test]
