@@ -5,9 +5,9 @@
 #   ./ci.sh --fast   # skip the release build (style + debug tests only)
 #
 # Runs from the repo root; the crate lives under rust/. Benches emit
-# machine-readable perf snapshots (BENCH_hot_path.json) when artifacts
-# are present — build them first with `python -m compile.aot` if you want
-# the perf trajectory recorded.
+# machine-readable perf snapshots (BENCH_hot_path.json, BENCH_gen_speed.json,
+# BENCH_staleness.json) when artifacts are present — build them first with
+# `python -m compile.aot` if you want the perf trajectory recorded.
 
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -30,7 +30,22 @@ echo "== tier-1 =="
 if [[ "${1:-}" != "--fast" ]]; then
   cargo build --release
   # benches are part of the gate: they emit the BENCH_*.json perf
-  # snapshots, so letting them rot would silently drop the trajectory
+  # snapshots (hot_path, gen_speed, staleness), so letting them rot
+  # would silently drop the trajectory
   cargo build --benches --release
 fi
 cargo test -q
+
+echo "== staleness invariants =="
+# the pipeline's staleness-bound tests are release-gating and already ran
+# in the full `cargo test -q` above; here just assert they still EXIST
+# (cargo exits 0 on a zero-match filter, so a rename/module move would
+# otherwise drop the gate silently) — --list doesn't re-run anything
+for filter in staleness bounded_queue; do
+  # capture first: grep -q on the pipe would EPIPE cargo under pipefail
+  listing=$(cargo test -q "$filter" -- --list 2>/dev/null)
+  echo "$listing" | grep -q ": test" || {
+    echo "error: no tests match filter '$filter' — staleness gate dropped" >&2
+    exit 1
+  }
+done

@@ -1,0 +1,63 @@
+//! Bench: staleness ladder — queue depth K × workers M on the small
+//! artifact, through the unified pipeline.
+//!
+//! Runs the `experiments::staleness_ladder` sweep (K ∈ {0,1,2,4} ×
+//! M ∈ {1,2} by default) with a short step budget and dumps win-rate,
+//! KL, measured mean/max staleness vs the proven bound, trainer idle
+//! time and wall clock per config to `BENCH_staleness.json` (override
+//! the path with `ASYNC_RLHF_BENCH_OUT`), so the off-policy
+//! quality/throughput trade-off is part of the recorded perf trajectory.
+
+use async_rlhf::config::{Algo, ExpConfig};
+use async_rlhf::coordinator;
+use async_rlhf::experiments::staleness_ladder::{bench_json, sweep};
+use async_rlhf::util::bench::artifact_dir_or_skip;
+
+fn main() {
+    println!("== staleness ladder: K x M through the pipeline ==");
+    let model = std::env::var("ASYNC_RLHF_BENCH_MODEL")
+        .unwrap_or_else(|_| "tldr_s".into());
+    let Some(_) = artifact_dir_or_skip(&model) else {
+        return;
+    };
+
+    let cfg = ExpConfig {
+        model: model.clone(),
+        algo: Algo::Dpo,
+        steps: 12,
+        sft_steps: 60,
+        rm_steps: 40,
+        eval_prompts: 32,
+        run_dir: std::env::temp_dir().join("async_rlhf_bench_staleness"),
+        ..ExpConfig::default()
+    };
+    let prep = coordinator::prepare(&cfg, false).expect("prepare");
+
+    let points = sweep(&cfg, &prep, &[0, 1, 2, 4], &[1, 2], false)
+        .expect("staleness sweep");
+    println!(
+        "{:>8} {:>9} {:>8} {:>11} {:>10} {:>6} {:>8} {:>8}",
+        "config", "win_rate", "kl_ppl", "mean_stale", "max_stale", "bound",
+        "idle_s", "wall_s"
+    );
+    for p in &points {
+        println!(
+            "K={} M={} {:>9.3} {:>8.4} {:>11.2} {:>10} {:>6} {:>8.2} {:>8.1}",
+            p.k_bound,
+            p.workers,
+            p.win_rate,
+            p.kl_ppl,
+            p.mean_staleness,
+            p.max_staleness,
+            p.bound,
+            p.idle_secs,
+            p.wall_secs,
+        );
+    }
+
+    let report = bench_json(&model, cfg.steps, &points);
+    let out_path = std::env::var("ASYNC_RLHF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_staleness.json".into());
+    std::fs::write(&out_path, report.to_string()).expect("write bench json");
+    println!("wrote {out_path}");
+}

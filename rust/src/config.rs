@@ -133,9 +133,13 @@ impl fmt::Display for GenEngine {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
-    /// Generate-then-train on the same resources (paper Fig 2 top).
+    /// Generate-then-train on the same resources (paper Fig 2 top):
+    /// the pipeline's inline round source.
     Sync,
-    /// Cleanba-style one-step off-policy overlap (paper Fig 2 bottom).
+    /// Overlapped generation/training (paper Fig 2 bottom): the
+    /// pipeline's worker pool, shaped by `gen_workers` (M) and
+    /// `staleness_bound` (K). The defaults M=1, K=0 are the paper's
+    /// Cleanba-style one-step off-policy coordinator.
     Async,
 }
 
@@ -176,6 +180,16 @@ pub struct ExpConfig {
     /// Completions sampled per prompt for pairwise losses (paper §4.2;
     /// K=2 default, K=4 trains on best/worst).
     pub k_samples: usize,
+    /// Generation workers M in async mode (`--gen-workers`): threads each
+    /// owning their own engine, partitioning the prompt stream. Ignored
+    /// in sync mode (generation runs inline on the trainer).
+    pub gen_workers: usize,
+    /// Async round-queue depth K (`--staleness-bound`): up to K rounds
+    /// may sit queued between generation and training, so training data
+    /// is at most K+1 policy versions stale (at the default
+    /// `updates_per_batch` = 1; see `coordinator::pipeline`). K=0 is the
+    /// paper's rendezvous handover — exactly one-step off-policy.
+    pub staleness_bound: usize,
     pub lr: f32,
     pub temperature: f32,
     /// Reward for completions without EOS (paper Table 4: -1.0).
@@ -208,6 +222,8 @@ impl Default for ExpConfig {
             n_minibatches: 1,
             updates_per_batch: 1,
             k_samples: 2,
+            gen_workers: 1,
+            staleness_bound: 0,
             lr: 3e-5,
             temperature: 0.7,
             eos_penalty: -1.0,
@@ -247,6 +263,9 @@ impl ExpConfig {
         c.n_minibatches = args.get_parse("n", c.n_minibatches)?;
         c.updates_per_batch = args.get_parse("t", c.updates_per_batch)?;
         c.k_samples = args.get_parse("k", c.k_samples)?;
+        c.gen_workers = args.get_parse("gen-workers", c.gen_workers)?;
+        c.staleness_bound =
+            args.get_parse("staleness-bound", c.staleness_bound)?;
         c.lr = args.get_parse("lr", c.lr)?;
         c.temperature = args.get_parse("temperature", c.temperature)?;
         c.seed = args.get_parse("seed", c.seed)?;
@@ -269,8 +288,19 @@ impl ExpConfig {
         }
         if self.mode == Mode::Async && self.n_minibatches != 1 {
             bail!(
-                "async mode is one-step off-policy (N=1); \
-                 use sync mode to sweep N"
+                "async mode streams rounds (N=1); use sync mode to sweep \
+                 the N-minibatch ladder, --staleness-bound to sweep K"
+            );
+        }
+        if self.gen_workers == 0 {
+            bail!("--gen-workers must be >= 1");
+        }
+        if self.mode == Mode::Sync
+            && (self.gen_workers != 1 || self.staleness_bound != 0)
+        {
+            bail!(
+                "--gen-workers/--staleness-bound shape the async worker \
+                 pool; sync mode generates inline (use --mode async)"
             );
         }
         Ok(())
@@ -280,16 +310,22 @@ impl ExpConfig {
         self.artifacts_root.join(&self.model)
     }
 
-    /// Label used in logs and run directories. The generation engine only
-    /// appears when it deviates from the production default, so existing
+    /// Label used in logs and run directories. The generation engine and
+    /// the async pool shape (workers M / queue depth K) only appear when
+    /// they deviate from the production defaults, so existing
     /// run/checkpoint directories keep their names.
     pub fn label(&self) -> String {
         let gen = match self.gen_engine {
             GenEngine::Fused => String::new(),
             other => format!("_g{}", other.name()),
         };
+        let pool = if (self.gen_workers, self.staleness_bound) == (1, 0) {
+            String::new()
+        } else {
+            format!("_w{}q{}", self.gen_workers, self.staleness_bound)
+        };
         format!(
-            "{}_{}_{}{gen}_n{}_t{}_k{}_s{}",
+            "{}_{}_{}{pool}{gen}_n{}_t{}_k{}_s{}",
             self.model,
             self.algo,
             self.mode.name(),
@@ -341,6 +377,39 @@ mod tests {
         assert_ne!(a, b);
         let c = parse(&["t", "--gen-engine", "device"]).unwrap().label();
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn worker_pool_knobs_parse_and_default_to_cleanba() {
+        // defaults are the paper's one-step coordinator: M=1, K=0
+        let c = parse(&["t", "--mode", "async"]).unwrap();
+        assert_eq!((c.gen_workers, c.staleness_bound), (1, 0));
+        let c = parse(&[
+            "t", "--mode", "async", "--gen-workers", "2",
+            "--staleness-bound", "4",
+        ])
+        .unwrap();
+        assert_eq!((c.gen_workers, c.staleness_bound), (2, 4));
+        // the pool shape names the run dir (and only when non-default)
+        assert!(c.label().contains("_w2q4_"), "label: {}", c.label());
+        assert!(!parse(&["t", "--mode", "async"])
+            .unwrap()
+            .label()
+            .contains("_w"));
+        // zero workers is meaningless
+        assert!(
+            parse(&["t", "--mode", "async", "--gen-workers", "0"]).is_err()
+        );
+    }
+
+    #[test]
+    fn sync_mode_rejects_worker_pool_knobs() {
+        assert!(parse(&["t", "--gen-workers", "2"]).is_err());
+        assert!(parse(&["t", "--staleness-bound", "1"]).is_err());
+        assert!(parse(&[
+            "t", "--mode", "async", "--staleness-bound", "1"
+        ])
+        .is_ok());
     }
 
     #[test]

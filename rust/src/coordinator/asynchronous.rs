@@ -1,317 +1,40 @@
-//! Asynchronous RLHF (paper Fig 2 bottom, Algorithm 1): Cleanba-style
-//! one-step off-policy training.
+//! Asynchronous RLHF (paper Fig 2 bottom, Algorithm 1): off-policy
+//! training overlapped with generation.
 //!
-//! Two OS threads, each owning its own PJRT backend (the `xla` crate's
-//! client is not `Send`, which conveniently mirrors the paper's separate
-//! generation/training processes):
+//! Thin constructor over the unified [`pipeline`] trainer loop: the
+//! asynchronous schedule is [`pipeline::run`] fed by a [`WorkerPool`] of
+//! `cfg.gen_workers` generation threads (each owning its own PJRT
+//! backend) behind a bounded round queue of depth `cfg.staleness_bound`.
 //!
-//! - **generation worker**: pulls the freshest published policy, generates
-//!   one round, hands it to the trainer over a rendezvous queue. The
-//!   rendezvous is the staleness guarantee: the worker generates round
-//!   i+1 while round i trains, and never runs further ahead, so training
-//!   data is always exactly one policy version behind (θ_{t+1} is updated
-//!   with data from θ_t — paper §3.5, Cleanba).
-//! - **trainer (this thread)**: pops a round, labels it (reward + reference
-//!   logprobs), takes the update(s), publishes the new params.
-//!
-//! Parameter publication is a latest-wins `Arc<[f32]>` slot: the trainer
-//! downloads its device-resident params once per publish, snapshots them
-//! into an `Arc`, and the swap itself is a pointer move — the worker
-//! clones the `Arc`, not the parameters. The worker's engine re-uploads
-//! the policy to its device only when the published version actually
-//! changed (the A.2 "passing policy parameters" cost is paid per publish,
-//! never per call).
+//! The defaults — one worker, queue depth 0 (a rendezvous handover) —
+//! are exactly the paper's Cleanba-style one-step off-policy coordinator:
+//! the worker generates round i+1 while round i trains and never runs
+//! further ahead, so θ_{t+1} is updated with data from θ_t (§3.5). Larger
+//! `--staleness-bound K` admits up to K queued rounds (staleness ≤ K+1
+//! policy versions); more `--gen-workers` add generation throughput, one
+//! in-flight round of staleness each. See `pipeline` for the invariant.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use anyhow::Result;
 
-use anyhow::{anyhow, Result};
-
-use super::trainer::{
-    assemble, generate_round, round_metrics, rounds_per_batch, sample_opts,
-    staleness, stage_and_label, train_on_batch, LabelScratch, LabelledRound,
-    Round,
-};
+use super::pipeline::{self, RoundSource, WorkerPool};
 use super::RunOutput;
 use crate::config::ExpConfig;
-use crate::coordinator::pretrain::RLHF_RANGE;
-use crate::data::{Task, TaskGen};
-use crate::metrics::{Phase, RunLog, Timeline};
-use crate::runtime::{Engine, ParamView, TrainState};
-use crate::util::rng::Pcg32;
 
-/// Messages from the generation worker.
-struct GenMsg {
-    round: Round,
-}
-
-/// Latest-wins published-policy slot. The trainer overwrites, the worker
-/// reads whatever is freshest; intermediate versions are simply dropped
-/// (Algorithm 1 only ever wants θ_i, never the history).
-pub(crate) struct ParamSlot {
-    /// Fast-path hint so the worker can skip the lock when nothing new
-    /// was published. Updated after the slot contents.
-    hint: AtomicU64,
-    latest: Mutex<(u64, Arc<[f32]>)>,
-}
-
-impl ParamSlot {
-    pub(crate) fn new(version: u64, params: Arc<[f32]>) -> ParamSlot {
-        ParamSlot {
-            hint: AtomicU64::new(version),
-            latest: Mutex::new((version, params)),
-        }
-    }
-
-    /// Publish `params` as `version`: one pointer swap under the lock.
-    pub(crate) fn publish(&self, version: u64, params: Arc<[f32]>) {
-        *self.latest.lock().unwrap() = (version, params);
-        self.hint.store(version, Ordering::Release);
-    }
-
-    /// The freshest publication newer than `have`, if any.
-    pub(crate) fn fetch(&self, have: u64) -> Option<(u64, Arc<[f32]>)> {
-        if self.hint.load(Ordering::Acquire) <= have {
-            return None;
-        }
-        let guard = self.latest.lock().unwrap();
-        if guard.0 <= have {
-            return None;
-        }
-        Some((guard.0, guard.1.clone()))
-    }
-}
-
-pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<RunOutput> {
-    let engine: &Engine = &prep.engine;
-    let taskgen: &TaskGen = &prep.taskgen;
-    let sft_params = prep.sft_params.clone();
-    let origin = Instant::now();
-    let mut timeline = Timeline::shared_origin(origin);
-    let mut log = RunLog::new();
-    log.set_meta("label", cfg.label());
-
-    // -- channels ----------------------------------------------------------
-    // Rendezvous round queue (bound 0): the worker's `send` blocks until
-    // the trainer is ready to take the round. This is what enforces
-    // *one-step* off-policy: the worker can generate round i+1 (with the
-    // params published after round i-1's update) WHILE the trainer trains
-    // round i, but can never start round i+2 before round i+1 is handed
-    // over — so training data is at most one policy version stale. A
-    // bound-1 queue would admit staleness 2 (one round queued + one in
-    // flight), which the integration tests reject.
-    let (round_tx, round_rx) = mpsc::sync_channel::<GenMsg>(0);
-    // Latest-wins param slot, seeded with the SFT checkpoint at version 0.
-    let slot = Arc::new(ParamSlot::new(0, Arc::from(&sft_params[..])));
-    let stop = Arc::new(AtomicBool::new(false));
-
-    // -- generation worker ---------------------------------------------------
-    let worker = {
-        let stop = stop.clone();
-        let slot = slot.clone();
-        let artifact_dir = cfg.artifact_dir();
-        let init_params: Arc<[f32]> = Arc::from(&sft_params[..]);
-        let taskgen = TaskGen::new(
-            taskgen.task,
-            taskgen.prompt_len,
-            taskgen.resp_len,
-            cfg.seed,
-        );
-        let opts = sample_opts(cfg);
-        let k = cfg.k_samples;
-        let seed = cfg.seed;
-        let gen_engine = cfg.gen_engine;
-        std::thread::Builder::new()
-            .name("gen-worker".into())
-            .spawn(move || -> Result<(f64, u64)> {
-                // own engine, own PJRT client (separate "GPU")
-                let engine = Engine::load(&artifact_dir)?;
-                let generator = gen_engine.build();
-                let mut rng = Pcg32::new(seed, 0xa57c);
-                let mut params = init_params;
-                let mut version = 0u64;
-                let mut cursor = RLHF_RANGE;
-                let gen_bs = engine.manifest.config.gen_batch as u64;
-                let mut gen_total = 0.0f64;
-                let mut rounds_done = 0u64;
-                while !stop.load(Ordering::Relaxed) {
-                    // pick up the freshest published policy (Algorithm 1:
-                    // "update generation model θ <- θ_i"); the cached view
-                    // below re-uploads to device only on a version change
-                    if let Some((v, p)) = slot.fetch(version) {
-                        version = v;
-                        params = p;
-                    }
-                    let round = generate_round(
-                        &engine,
-                        generator.as_ref(),
-                        ParamView::cached("policy", version, &params),
-                        version,
-                        &taskgen,
-                        cursor,
-                        k,
-                        opts,
-                        &mut rng,
-                        origin,
-                    )?;
-                    cursor += gen_bs / k as u64;
-                    gen_total += round.gen_secs;
-                    rounds_done += 1;
-                    // rendezvous: blocks until the trainer takes the
-                    // round — the one-step off-policy bound
-                    if round_tx.send(GenMsg { round }).is_err() {
-                        break;
-                    }
-                }
-                Ok((gen_total, rounds_done))
-            })
-            .expect("spawn gen-worker")
-    };
-
-    // -- trainer loop ---------------------------------------------------------
-    let mut state = TrainState::new(sft_params.clone());
-    let mut scratch = LabelScratch::default();
-    let rpb = rounds_per_batch(cfg.k_samples);
-    let mut episodes = 0u64;
-    let mut step = 0u64;
-    let mut version = 0u64;
-    let gen_bs = engine.manifest.config.gen_batch as u64;
-    let mut staleness_sum = 0u64;
-    let result = (|| -> Result<()> {
-        while step < cfg.steps {
-            let mut rounds = Vec::with_capacity(rpb);
-            for _ in 0..rpb {
-                let t_wait = origin.elapsed().as_secs_f64();
-                let msg = round_rx
-                    .recv()
-                    .map_err(|_| anyhow!("generation worker died"))?;
-                let t_got = origin.elapsed().as_secs_f64();
-                timeline.push_span(Phase::Idle, t_wait, t_got);
-                timeline.push_span(
-                    Phase::Generate,
-                    msg.round.gen_span.0,
-                    msg.round.gen_span.1,
-                );
-                episodes += gen_bs;
-                // the round crossed the thread boundary as host data:
-                // stage it on the trainer's device once (when eligible),
-                // label off the shared buffers (scoring cost)
-                let (resident, labels) = timeline.record(Phase::Score, || {
-                    stage_and_label(
-                        engine,
-                        &msg.round,
-                        &sft_params,
-                        prep.rm_scorer(),
-                        cfg,
-                        &mut scratch,
-                    )
-                })?;
-                rounds.push(LabelledRound {
-                    round: msg.round,
-                    labels,
-                    resident,
-                });
-            }
-
-            let batch = assemble(engine, cfg.algo, &rounds, cfg.k_samples)?;
-            let all_metrics = timeline.record(Phase::Train, || {
-                train_on_batch(
-                    engine,
-                    &mut state,
-                    &batch,
-                    cfg.lr,
-                    cfg.updates_per_batch,
-                )
-            })?;
-            version += cfg.updates_per_batch as u64;
-            step += 1;
-
-            // publish the new policy: device -> host once per publish,
-            // then a latest-wins pointer swap
-            timeline.record(Phase::Publish, || -> Result<()> {
-                let host = state.params_host(engine)?;
-                slot.publish(version, Arc::from(host));
-                Ok(())
-            })?;
-
-            let data_version = rounds
-                .iter()
-                .map(|r| r.round.params_version)
-                .max()
-                .unwrap();
-            let stale = staleness(version, data_version);
-            staleness_sum += stale;
-
-            let labels = &rounds[0].labels;
-            let mut row = round_metrics(labels);
-            let m = all_metrics.last().unwrap();
-            row.push(("loss", m[0]));
-            row.push(("staleness", stale as f32));
-            log.push(step, episodes, timeline.wall(), &row);
-            if verbose && step % 8 == 0 {
-                eprintln!(
-                    "[async {}] step {step}/{} episodes {episodes} \
-                     win {:.3} kl-ppl {:.4} staleness {stale}",
-                    cfg.algo,
-                    cfg.steps,
-                    log.recent_mean("win_rate", 8).unwrap_or(0.0),
-                    log.recent_mean("kl_ppl", 8).unwrap_or(0.0),
-                );
-            }
-        }
-        Ok(())
-    })();
-
-    // shut the worker down
-    stop.store(true, Ordering::Relaxed);
-    drop(round_rx);
-    let worker_out = worker.join().map_err(|_| anyhow!("worker panicked"))?;
-    result?;
-    let (gen_total, gen_rounds) = worker_out?;
-    log.set_meta("gen_total_secs", format!("{gen_total:.3}"));
-    log.set_meta("gen_rounds", gen_rounds);
-    log.set_meta(
-        "mean_staleness",
-        format!("{:.3}", staleness_sum as f64 / cfg.steps.max(1) as f64),
-    );
-
-    // suppress unused warning for math-only runs
-    let _ = Task::from_name(&engine.manifest.config.task);
-
-    Ok(RunOutput {
-        final_params: state.into_params(engine)?,
-        log,
-        timeline,
-        episodes,
-    })
-}
-
-#[cfg(test)]
-mod tests {
-    use super::ParamSlot;
-    use std::sync::Arc;
-
-    #[test]
-    fn param_slot_is_latest_wins() {
-        let slot = ParamSlot::new(0, Arc::from(&[0.0f32][..]));
-        assert!(slot.fetch(0).is_none(), "nothing newer than the seed");
-        for v in 1..=5u64 {
-            slot.publish(v, Arc::from(&[v as f32][..]));
-        }
-        // a reader at version 0 sees only the freshest publication
-        let (v, p) = slot.fetch(0).expect("new version visible");
-        assert_eq!(v, 5);
-        assert_eq!(&p[..], &[5.0]);
-        // and nothing newer than what it now has
-        assert!(slot.fetch(5).is_none());
-    }
-
-    #[test]
-    fn param_slot_fetch_is_cheap_pointer_clone() {
-        let big: Arc<[f32]> = Arc::from(vec![1.0f32; 1024].into_boxed_slice());
-        let slot = ParamSlot::new(1, big.clone());
-        let (_, p) = slot.fetch(0).unwrap();
-        assert!(Arc::ptr_eq(&p, &big), "fetch must share, not copy");
-    }
+/// Run asynchronous RLHF with the worker pool described by
+/// `cfg.gen_workers` / `cfg.staleness_bound`.
+pub fn run(
+    cfg: &ExpConfig,
+    prep: &super::Prepared,
+    verbose: bool,
+) -> Result<RunOutput> {
+    pipeline::run(
+        cfg,
+        prep,
+        |origin| {
+            let src: Box<dyn RoundSource> =
+                Box::new(WorkerPool::spawn(cfg, prep, origin)?);
+            Ok(src)
+        },
+        verbose,
+    )
 }

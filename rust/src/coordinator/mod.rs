@@ -1,15 +1,24 @@
 //! L3 coordinator — the paper's system contribution.
 //!
-//! - [`sync`]: synchronous generate-then-train (paper Fig 2 top), including
-//!   the N-mini-batch off-policyness ladder of §3.2.
-//! - [`asynchronous`]: Cleanba-style one-step off-policy training with a
-//!   dedicated generation worker thread and bound-1 sample queue
-//!   (paper §3.5, Algorithm 1).
+//! - [`pipeline`]: the unified streaming trainer loop. A
+//!   [`pipeline::RoundSource`] yields generation rounds; the one trainer
+//!   loop ([`pipeline::run`]) stages/labels, assembles, trains, publishes
+//!   and logs — identically for every schedule. Sources:
+//!   [`pipeline::InlineSource`] (generate on the trainer's engine — the
+//!   synchronous schedule, with the §3.2 N-minibatch ladder) and
+//!   [`pipeline::WorkerPool`] (M generation worker threads behind a
+//!   **bounded** round queue of depth K — with one worker, queue depth
+//!   K ⇒ training data is at most K+1 policy versions stale at the
+//!   default one update per batch; K=0 is a rendezvous handover, the
+//!   paper's Cleanba one-step coordinator of §3.5/Algorithm 1).
+//! - [`sync`] / [`asynchronous`]: thin mode constructors over the
+//!   pipeline, kept for CLI compatibility (`--mode sync|async`).
 //! - [`trainer`]: shared round machinery (labelling, batch assembly,
-//!   fused train-step invocation) used by both.
+//!   fused train-step invocation, staleness accounting).
 //! - [`pretrain`]: the SFT + proxy-RM pipeline that precedes RLHF.
 
 pub mod asynchronous;
+pub mod pipeline;
 pub mod pretrain;
 pub mod sync;
 pub mod trainer;

@@ -1,0 +1,705 @@
+//! Unified streaming RLHF pipeline: ONE trainer loop, N generation
+//! workers, a configurable staleness bound K.
+//!
+//! The paper's central question — "how much off-policyness can we
+//! tolerate?" — is a single knob. This module makes it one: a
+//! [`RoundSource`] yields generation rounds to [`run`], the only trainer
+//! loop in the crate (stage/label → assemble → train → publish → log),
+//! and the two sources are the two ends of the design space:
+//!
+//! - [`InlineSource`] generates on the trainer's own engine/thread —
+//!   the synchronous generate-then-train schedule (paper Fig 2 top),
+//!   including the §3.2 N-minibatch off-policy ladder. Generation reads
+//!   the trainer's live device parameters ([`TrainState::param_view`]),
+//!   so the policy never leaves the device.
+//! - [`WorkerPool`] runs M generation worker threads, each owning its
+//!   own `Engine`/PJRT backend, feeding a **bounded** round queue of
+//!   depth K. `M = 1, K = 0` is a rendezvous handover — exactly the
+//!   Cleanba one-step off-policy coordinator of paper §3.5/Algorithm 1.
+//!
+//! ## The staleness invariant
+//!
+//! With one worker and queue depth K, at most K rounds sit queued and
+//! one more is blocked mid-`send`, each generated with parameters
+//! fetched *before* the publish of the step that consumed its
+//! predecessor. In optimizer-update units with T = `updates_per_batch`,
+//! per-step staleness is therefore bounded by
+//! [`staleness_bound_updates`]`(K, 1, T) = (K + 2)·T − 1`; for the
+//! default T = 1 that is **queue depth K ⇒ staleness ≤ K + 1** policy
+//! versions (K = 0 reproduces the one-step bound the seed coordinator
+//! enforced). The bound is proven for M = 1 — tight under instantaneous
+//! generation, see the discrete model test below. For M > 1 the same
+//! formula `(K + M + 1)·T − 1` is the *fair-scheduling* bound (each
+//! worker's in-flight round adds one step of age): it holds whenever no
+//! worker's single generation call is starved across K + M trainer
+//! steps, which the queue back-pressure cannot itself force — so
+//! multi-worker staleness is *measured and reported*, not hard-asserted.
+//! Per-config measurements land in `BENCH_staleness.json` via
+//! `benches/staleness.rs`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::pretrain::RLHF_RANGE;
+use super::trainer::{
+    assemble, batch_data_version, generate_round, round_metrics,
+    rounds_per_batch, sample_opts, stage_and_label, staleness,
+    train_on_batch, LabelScratch, LabelledRound, Round,
+};
+use super::{Prepared, RunOutput};
+use crate::config::ExpConfig;
+use crate::data::TaskGen;
+use crate::gen::{Generator, SampleOpts};
+use crate::metrics::{Phase, RunLog, Timeline};
+use crate::runtime::{Engine, ParamView, TrainState};
+use crate::util::rng::Pcg32;
+
+/// Prompts consumed by one generation round: the cursor stride. The
+/// `.max(1)` guard keeps the cursor strictly monotone even in degenerate
+/// geometries (`k_samples > gen_batch`) — the seed async worker lacked it
+/// and would replay the same prompts forever.
+pub fn cursor_stride(gen_batch: u64, k: usize) -> u64 {
+    (gen_batch / k as u64).max(1)
+}
+
+/// Worst-case per-step staleness, in optimizer-update units, of a
+/// worker-pool run with queue depth `k_bound`, `m` workers and `t`
+/// updates per batch: K queued rounds + M blocked sends, each generated
+/// one publish behind, gives `(K + M + 1)·T − 1`. Proven (and tight) for
+/// `m = 1`; for `m > 1` it additionally assumes fair worker scheduling —
+/// a worker stalled mid-generation while its siblings keep feeding the
+/// trainer can exceed it (see the module docs). Inline (sync N-ladder)
+/// staleness is bounded separately by `(N − 1)·T + T − 1`.
+pub fn staleness_bound_updates(k_bound: usize, m: usize, t: usize) -> u64 {
+    assert!(m >= 1 && t >= 1, "worker pools have m >= 1 and t >= 1");
+    ((k_bound + m + 1) * t) as u64 - 1
+}
+
+/// Latest-wins published-policy slot. The trainer overwrites, workers
+/// read whatever is freshest; intermediate versions are simply dropped
+/// (Algorithm 1 only ever wants θ_i, never the history).
+pub struct ParamSlot {
+    /// Fast-path hint so a worker can skip the lock when nothing new
+    /// was published. Updated after the slot contents.
+    hint: AtomicU64,
+    latest: Mutex<(u64, Arc<[f32]>)>,
+}
+
+impl ParamSlot {
+    pub fn new(version: u64, params: Arc<[f32]>) -> ParamSlot {
+        ParamSlot {
+            hint: AtomicU64::new(version),
+            latest: Mutex::new((version, params)),
+        }
+    }
+
+    /// Publish `params` as `version`: one pointer swap under the lock.
+    pub fn publish(&self, version: u64, params: Arc<[f32]>) {
+        *self.latest.lock().unwrap() = (version, params);
+        self.hint.store(version, Ordering::Release);
+    }
+
+    /// The freshest publication newer than `have`, if any.
+    pub fn fetch(&self, have: u64) -> Option<(u64, Arc<[f32]>)> {
+        if self.hint.load(Ordering::Acquire) <= have {
+            return None;
+        }
+        let guard = self.latest.lock().unwrap();
+        if guard.0 <= have {
+            return None;
+        }
+        Some((guard.0, guard.1.clone()))
+    }
+}
+
+/// What the trainer loop exposes to its round source on every call: the
+/// trainer's engine and optimizer state (inline generation reads the live
+/// device parameters, worker pools snapshot them at publish), the current
+/// optimizer version, and the shared timeline for span accounting.
+pub struct TrainerCx<'a> {
+    pub engine: &'a Engine,
+    pub state: &'a mut TrainState,
+    pub version: u64,
+    pub timeline: &'a mut Timeline,
+}
+
+/// A stream of generation rounds feeding the one trainer loop ([`run`]).
+///
+/// Implementations decide *where* rounds come from (inline on the
+/// trainer's engine, or a pool of worker threads) and *how stale* they
+/// may be; the trainer loop is identical either way.
+pub trait RoundSource {
+    /// Tag used in verbose step logs ("sync" / "async").
+    fn label(&self) -> &'static str;
+
+    /// Produce the next round, generating inline or awaiting a worker.
+    /// The source records its own Generate/Idle spans on `cx.timeline`.
+    fn next(&mut self, cx: TrainerCx<'_>) -> Result<Round>;
+
+    /// Completions accounted so far. Inline sources count at generation
+    /// (the §3.2 ladder pays for a whole N-minibatch window up front,
+    /// trained or not — the seed sync accounting); worker pools count at
+    /// handover (in-flight worker rounds are not yet episodes).
+    fn episodes(&self) -> u64;
+
+    /// Called once after every optimizer step, with `cx.version` already
+    /// bumped. Worker pools snapshot and publish the new policy here;
+    /// inline sources read the live device buffer and need not.
+    fn publish(&mut self, cx: TrainerCx<'_>) -> Result<()>;
+
+    /// Tear down (join workers), contributing source metadata — e.g.
+    /// per-worker generation accounting — to the run log.
+    fn finish(self: Box<Self>, log: &mut RunLog) -> Result<()>;
+}
+
+/// The single RLHF trainer loop, written once against [`RoundSource`]:
+/// pull `rounds_per_batch` rounds, stage + label them, assemble the
+/// algorithm-specific batch, take `updates_per_batch` optimizer steps,
+/// publish, log. `make_source` receives the shared timeline origin so
+/// worker gen-spans land on the trainer's clock.
+pub fn run<'p>(
+    cfg: &ExpConfig,
+    prep: &'p Prepared,
+    make_source: impl FnOnce(Instant) -> Result<Box<dyn RoundSource + 'p>>,
+    verbose: bool,
+) -> Result<RunOutput> {
+    let engine: &Engine = &prep.engine;
+    let sft_params = prep.sft_params.clone();
+    let mut timeline = Timeline::new();
+    let mut source = make_source(timeline.origin())?;
+    let mut log = RunLog::new();
+    log.set_meta("label", cfg.label());
+
+    let mut state = TrainState::new(sft_params.clone());
+    let mut scratch = LabelScratch::default();
+    let rpb = rounds_per_batch(cfg.k_samples);
+    let mut step = 0u64;
+    let mut version = 0u64;
+    let mut staleness_sum = 0u64;
+    let mut staleness_max = 0u64;
+
+    let result = (|| -> Result<()> {
+        while step < cfg.steps {
+            let mut rounds = Vec::with_capacity(rpb);
+            for _ in 0..rpb {
+                let round = source.next(TrainerCx {
+                    engine,
+                    state: &mut state,
+                    version,
+                    timeline: &mut timeline,
+                })?;
+                // stage the round's tensors on device once (when
+                // eligible), then label off the shared buffers; staging
+                // is part of the scoring cost
+                let (resident, labels) = timeline.record(Phase::Score, || {
+                    stage_and_label(
+                        engine,
+                        &round,
+                        &sft_params,
+                        prep.rm_scorer(),
+                        cfg,
+                        &mut scratch,
+                    )
+                })?;
+                rounds.push(LabelledRound { round, labels, resident });
+            }
+
+            let batch = assemble(engine, cfg.algo, &rounds, cfg.k_samples)?;
+            let all_metrics = timeline.record(Phase::Train, || {
+                train_on_batch(
+                    engine,
+                    &mut state,
+                    &batch,
+                    cfg.lr,
+                    cfg.updates_per_batch,
+                )
+            })?;
+            version += cfg.updates_per_batch as u64;
+            step += 1;
+
+            source.publish(TrainerCx {
+                engine,
+                state: &mut state,
+                version,
+                timeline: &mut timeline,
+            })?;
+
+            let stale = staleness(version, batch_data_version(&rounds));
+            staleness_sum += stale;
+            staleness_max = staleness_max.max(stale);
+
+            let episodes = source.episodes();
+            let labels = &rounds[0].labels;
+            let mut row = round_metrics(labels);
+            let m = all_metrics.last().unwrap();
+            row.push(("loss", m[0]));
+            row.push(("staleness", stale as f32));
+            log.push(step, episodes, timeline.wall(), &row);
+            if verbose && step % 8 == 0 {
+                eprintln!(
+                    "[{} {}] step {step}/{} episodes {episodes} \
+                     win {:.3} kl-ppl {:.4} loss {:.4} staleness {stale}",
+                    source.label(),
+                    cfg.algo,
+                    cfg.steps,
+                    log.recent_mean("win_rate", 8).unwrap_or(0.0),
+                    log.recent_mean("kl_ppl", 8).unwrap_or(0.0),
+                    m[0],
+                );
+            }
+        }
+        Ok(())
+    })();
+
+    // tear the source down whether or not the loop succeeded (a worker
+    // blocked in `send` must be released before join)
+    let episodes = source.episodes();
+    let finish = source.finish(&mut log);
+    result?;
+    finish?;
+
+    log.set_meta(
+        "mean_staleness",
+        format!("{:.3}", staleness_sum as f64 / cfg.steps.max(1) as f64),
+    );
+    log.set_meta("max_staleness", staleness_max);
+
+    Ok(RunOutput {
+        final_params: state.into_params(engine)?,
+        log,
+        timeline,
+        episodes,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// InlineSource: generate on the trainer's engine (synchronous schedule)
+// ---------------------------------------------------------------------------
+
+/// Generates rounds on the trainer's own engine and thread — the
+/// synchronous generate-then-train schedule (paper Fig 2 top). Implements
+/// the §3.2 off-policy ladder: each refill generates `n_minibatches`
+/// batches of rounds with the then-current (frozen) policy; the trainer
+/// drains them over the next N steps, so the last batch is N−1 updates
+/// stale by the time it trains.
+pub struct InlineSource<'p> {
+    generator: Box<dyn Generator>,
+    taskgen: &'p TaskGen,
+    rng: Pcg32,
+    opts: SampleOpts,
+    k: usize,
+    rounds_per_refill: usize,
+    cursor: u64,
+    stride: u64,
+    gen_bs: u64,
+    generated: u64,
+    buffered: VecDeque<Round>,
+}
+
+impl<'p> InlineSource<'p> {
+    pub fn new(cfg: &ExpConfig, prep: &'p Prepared) -> InlineSource<'p> {
+        let gen_bs = prep.engine.manifest.config.gen_batch as u64;
+        InlineSource {
+            generator: cfg.gen_engine.build(),
+            taskgen: &prep.taskgen,
+            rng: Pcg32::new(cfg.seed, 0x5c),
+            opts: sample_opts(cfg),
+            k: cfg.k_samples,
+            rounds_per_refill: cfg.n_minibatches * rounds_per_batch(cfg.k_samples),
+            cursor: RLHF_RANGE,
+            stride: cursor_stride(gen_bs, cfg.k_samples),
+            gen_bs,
+            generated: 0,
+            buffered: VecDeque::new(),
+        }
+    }
+}
+
+impl RoundSource for InlineSource<'_> {
+    fn label(&self) -> &'static str {
+        "sync"
+    }
+
+    fn next(&mut self, cx: TrainerCx<'_>) -> Result<Round> {
+        let TrainerCx { engine, state, version, timeline } = cx;
+        if self.buffered.is_empty() {
+            // generation phase: N minibatches of data, frozen policy
+            let origin = timeline.origin();
+            for _ in 0..self.rounds_per_refill {
+                let round = timeline.record(Phase::Generate, || {
+                    generate_round(
+                        engine,
+                        self.generator.as_ref(),
+                        state.param_view("policy", version),
+                        version,
+                        self.taskgen,
+                        self.cursor,
+                        self.k,
+                        self.opts,
+                        &mut self.rng,
+                        origin,
+                    )
+                })?;
+                self.cursor += self.stride;
+                self.generated += 1;
+                self.buffered.push_back(round);
+            }
+        }
+        Ok(self.buffered.pop_front().expect("refill yields >= 1 round"))
+    }
+
+    fn episodes(&self) -> u64 {
+        // counted at generation: a refill window's episodes are spent
+        // the moment the frozen policy generates them (seed accounting)
+        self.generated * self.gen_bs
+    }
+
+    fn publish(&mut self, _cx: TrainerCx<'_>) -> Result<()> {
+        // generation reads the trainer's live device parameters directly;
+        // there is nothing to move
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>, _log: &mut RunLog) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WorkerPool: M generation workers, bounded round queue of depth K
+// ---------------------------------------------------------------------------
+
+/// One round crossing the worker → trainer queue.
+struct GenMsg {
+    round: Round,
+}
+
+/// Per-worker generation accounting returned at join.
+type WorkerOut = Result<(f64, u64)>;
+
+/// M generation worker threads, each owning its own PJRT backend (the
+/// `xla` crate's client is not `Send`, which conveniently mirrors the
+/// paper's separate generation/training processes), feeding the trainer
+/// over a bounded queue of depth K:
+///
+/// - each **worker** pulls the freshest published policy, generates one
+///   round, and hands it over `send`, which blocks while the queue is
+///   full — that back-pressure is the staleness guarantee;
+/// - the **trainer** pops rounds; with K = 0 the queue is a rendezvous
+///   and `M = 1, K = 0` reproduces the seed Cleanba coordinator exactly
+///   (θ_{t+1} updated with data from θ_t, paper §3.5).
+///
+/// Workers partition the prompt stream by striding: worker `w` starts at
+/// `RLHF_RANGE + w·stride` and hops `M·stride` per round, so pools of any
+/// width consume disjoint, contiguously-tiling prompt ranges.
+///
+/// Parameter publication is a latest-wins [`ParamSlot`]: the trainer
+/// downloads its device-resident params once per publish, snapshots them
+/// into an `Arc`, and the swap itself is a pointer move — workers clone
+/// the `Arc`, not the parameters, and re-upload to their device only when
+/// the version actually changed (the A.2 "passing policy parameters" cost
+/// is paid per publish, never per call).
+pub struct WorkerPool {
+    rx: mpsc::Receiver<GenMsg>,
+    slot: Arc<ParamSlot>,
+    stop: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<WorkerOut>>,
+    gen_bs: u64,
+    received: u64,
+}
+
+impl WorkerPool {
+    /// Spawn `cfg.gen_workers` workers over a queue of depth
+    /// `cfg.staleness_bound`. `origin` is the trainer timeline's clock so
+    /// worker gen-spans are directly comparable.
+    pub fn spawn(
+        cfg: &ExpConfig,
+        prep: &Prepared,
+        origin: Instant,
+    ) -> Result<WorkerPool> {
+        let m = cfg.gen_workers.max(1);
+        let gen_bs = prep.engine.manifest.config.gen_batch as u64;
+        let stride = cursor_stride(gen_bs, cfg.k_samples);
+        let (round_tx, round_rx) =
+            mpsc::sync_channel::<GenMsg>(cfg.staleness_bound);
+        // seeded with the SFT checkpoint at version 0
+        let slot =
+            Arc::new(ParamSlot::new(0, Arc::from(&prep.sft_params[..])));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let mut workers = Vec::with_capacity(m);
+        for w in 0..m {
+            let tx = round_tx.clone();
+            let stop = stop.clone();
+            let slot = slot.clone();
+            let artifact_dir = cfg.artifact_dir();
+            let init_params: Arc<[f32]> = Arc::from(&prep.sft_params[..]);
+            let taskgen = TaskGen::new(
+                prep.taskgen.task,
+                prep.taskgen.prompt_len,
+                prep.taskgen.resp_len,
+                cfg.seed,
+            );
+            let opts = sample_opts(cfg);
+            let k = cfg.k_samples;
+            let seed = cfg.seed;
+            let gen_engine = cfg.gen_engine;
+            let start = RLHF_RANGE + w as u64 * stride;
+            let hop = stride * m as u64;
+            let handle = std::thread::Builder::new()
+                .name(format!("gen-worker-{w}"))
+                .spawn(move || -> Result<(f64, u64)> {
+                    // own engine, own PJRT client (separate "GPU");
+                    // worker 0 keeps the seed coordinator's RNG stream so
+                    // M=1 pools replay it bitwise
+                    let engine = Engine::load(&artifact_dir)?;
+                    let generator = gen_engine.build();
+                    let mut rng = Pcg32::new(seed, 0xa57c + w as u64);
+                    let mut params = init_params;
+                    let mut version = 0u64;
+                    let mut cursor = start;
+                    let mut gen_total = 0.0f64;
+                    let mut rounds_done = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        // pick up the freshest published policy
+                        // (Algorithm 1: "update generation model
+                        // θ <- θ_i"); the cached view below re-uploads to
+                        // device only on a version change
+                        if let Some((v, p)) = slot.fetch(version) {
+                            version = v;
+                            params = p;
+                        }
+                        let round = generate_round(
+                            &engine,
+                            generator.as_ref(),
+                            ParamView::cached("policy", version, &params),
+                            version,
+                            &taskgen,
+                            cursor,
+                            k,
+                            opts,
+                            &mut rng,
+                            origin,
+                        )?;
+                        cursor += hop;
+                        gen_total += round.gen_secs;
+                        rounds_done += 1;
+                        // blocks while K rounds are queued — the
+                        // staleness bound's back-pressure
+                        if tx.send(GenMsg { round }).is_err() {
+                            break;
+                        }
+                    }
+                    Ok((gen_total, rounds_done))
+                })
+                .map_err(|e| anyhow!("spawn gen-worker-{w}: {e}"))?;
+            workers.push(handle);
+        }
+        // trainer holds no sender: when every worker exits, recv errors
+        drop(round_tx);
+        Ok(WorkerPool {
+            rx: round_rx,
+            slot,
+            stop,
+            workers,
+            gen_bs,
+            received: 0,
+        })
+    }
+}
+
+impl RoundSource for WorkerPool {
+    fn label(&self) -> &'static str {
+        "async"
+    }
+
+    fn next(&mut self, cx: TrainerCx<'_>) -> Result<Round> {
+        let TrainerCx { timeline, .. } = cx;
+        let t_wait = timeline.origin().elapsed().as_secs_f64();
+        let msg = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("generation workers died"))?;
+        let t_got = timeline.origin().elapsed().as_secs_f64();
+        timeline.push_span(Phase::Idle, t_wait, t_got);
+        timeline.push_span(
+            Phase::Generate,
+            msg.round.gen_span.0,
+            msg.round.gen_span.1,
+        );
+        self.received += 1;
+        Ok(msg.round)
+    }
+
+    fn episodes(&self) -> u64 {
+        // counted at handover: rounds still in flight inside a worker
+        // (or queued) are not episodes yet
+        self.received * self.gen_bs
+    }
+
+    fn publish(&mut self, cx: TrainerCx<'_>) -> Result<()> {
+        let TrainerCx { engine, state, version, timeline } = cx;
+        // device -> host once per publish, then a latest-wins pointer swap
+        timeline.record(Phase::Publish, || -> Result<()> {
+            let host = state.params_host(engine)?;
+            self.slot.publish(version, Arc::from(host));
+            Ok(())
+        })
+    }
+
+    fn finish(self: Box<Self>, log: &mut RunLog) -> Result<()> {
+        let pool = *self;
+        pool.stop.store(true, Ordering::Relaxed);
+        // release workers blocked in `send` so join cannot deadlock
+        drop(pool.rx);
+        let mut gen_total = 0.0f64;
+        let mut rounds_total = 0u64;
+        let mut first_err = None;
+        for (w, handle) in pool.workers.into_iter().enumerate() {
+            let joined = handle
+                .join()
+                .map_err(|_| anyhow!("gen-worker-{w} panicked"))?;
+            match joined {
+                Ok((secs, rounds)) => {
+                    log.set_meta(&format!("gen_secs_w{w}"), format!("{secs:.3}"));
+                    log.set_meta(&format!("gen_rounds_w{w}"), rounds);
+                    gen_total += secs;
+                    rounds_total += rounds;
+                }
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        log.set_meta("gen_total_secs", format!("{gen_total:.3}"));
+        log.set_meta("gen_rounds", rounds_total);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+
+    use super::super::trainer::staleness;
+    use super::{cursor_stride, staleness_bound_updates, ParamSlot};
+
+    #[test]
+    fn param_slot_is_latest_wins() {
+        let slot = ParamSlot::new(0, Arc::from(&[0.0f32][..]));
+        assert!(slot.fetch(0).is_none(), "nothing newer than the seed");
+        for v in 1..=5u64 {
+            slot.publish(v, Arc::from(&[v as f32][..]));
+        }
+        // a reader at version 0 sees only the freshest publication
+        let (v, p) = slot.fetch(0).expect("new version visible");
+        assert_eq!(v, 5);
+        assert_eq!(&p[..], &[5.0]);
+        // and nothing newer than what it now has
+        assert!(slot.fetch(5).is_none());
+    }
+
+    #[test]
+    fn param_slot_fetch_is_cheap_pointer_clone() {
+        let big: Arc<[f32]> = Arc::from(vec![1.0f32; 1024].into_boxed_slice());
+        let slot = ParamSlot::new(1, big.clone());
+        let (_, p) = slot.fetch(0).unwrap();
+        assert!(Arc::ptr_eq(&p, &big), "fetch must share, not copy");
+    }
+
+    #[test]
+    fn cursor_never_freezes_when_k_exceeds_gen_batch() {
+        // normal geometries: one round consumes gen_batch/k prompts
+        assert_eq!(cursor_stride(8, 2), 4);
+        assert_eq!(cursor_stride(4, 4), 1);
+        // regression: the seed async worker advanced by gen_bs / k
+        // WITHOUT the guard, so k > gen_batch froze the cursor and
+        // replayed the same prompts forever
+        assert_eq!(cursor_stride(2, 4), 1);
+        let mut cursor = 0u64;
+        for _ in 0..10 {
+            cursor += cursor_stride(2, 4);
+        }
+        assert_eq!(cursor, 10, "cursor must be strictly monotone");
+    }
+
+    /// Discrete worst-case model of the K-bounded queue with one worker
+    /// and *instantaneous* generation: the worker fills the queue (K
+    /// rounds) plus one blocked `send`, fetching the freshest publish
+    /// before each round. Per-step staleness must never exceed
+    /// `staleness_bound_updates(K, 1, T) = (K + 2)·T − 1`, and the bound
+    /// is tight (instant generation reaches it).
+    #[test]
+    fn bounded_queue_model_staleness_is_tight_at_bound() {
+        for k_bound in 0..5usize {
+            for t in 1..4u64 {
+                let mut queue: VecDeque<u64> = VecDeque::new();
+                let mut blocked: Option<u64> = None;
+                let mut published = 0u64;
+                let mut version = 0u64;
+                let mut max_seen = 0u64;
+                let refill = |queue: &mut VecDeque<u64>,
+                              blocked: &mut Option<u64>,
+                              published: u64| {
+                    while queue.len() < k_bound {
+                        queue.push_back(published);
+                    }
+                    if blocked.is_none() {
+                        *blocked = Some(published);
+                    }
+                };
+                refill(&mut queue, &mut blocked, published);
+                for _ in 0..50 {
+                    // trainer pops one round; a blocked send slides in
+                    let data = match queue.pop_front() {
+                        Some(front) => {
+                            if let Some(b) = blocked.take() {
+                                queue.push_back(b);
+                            }
+                            front
+                        }
+                        None => blocked.take().expect("rendezvous handover"),
+                    };
+                    // worker runs ahead again before this step publishes
+                    refill(&mut queue, &mut blocked, published);
+                    version += t;
+                    published = version;
+                    let st = staleness(version, data);
+                    let bound = staleness_bound_updates(k_bound, 1, t as usize);
+                    assert!(
+                        st <= bound,
+                        "K={k_bound} T={t}: staleness {st} > bound {bound}"
+                    );
+                    max_seen = max_seen.max(st);
+                }
+                assert_eq!(
+                    max_seen,
+                    staleness_bound_updates(k_bound, 1, t as usize),
+                    "K={k_bound} T={t}: bound should be tight under \
+                     instantaneous generation"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn staleness_bound_reduces_to_the_documented_invariants() {
+        // queue depth K, one worker, T=1: staleness <= K + 1 policy
+        // versions — K=0 is the seed coordinator's one-step bound
+        assert_eq!(staleness_bound_updates(0, 1, 1), 1);
+        assert_eq!(staleness_bound_updates(1, 1, 1), 2);
+        assert_eq!(staleness_bound_updates(4, 1, 1), 5);
+        // M workers add one in-flight round each
+        assert_eq!(staleness_bound_updates(0, 2, 1), 2);
+        assert_eq!(staleness_bound_updates(2, 2, 1), 4);
+        // T updates per batch scale every version distance
+        assert_eq!(staleness_bound_updates(0, 1, 3), 5);
+    }
+}

@@ -1,146 +1,37 @@
 //! Synchronous RLHF (paper Fig 2 top / Fig 12 top): generate, then train,
 //! on the same resources — generation idles while training and vice versa.
 //!
-//! Also implements the off-policyness ladder of §3.2: generate N
-//! mini-batches with the current policy, then take N sequential updates.
-//! N=1 is fully on-policy; larger N makes later updates increasingly
-//! off-policy (the data's behaviour policy is N-1 updates stale by the
-//! last minibatch).
-//!
-//! Generation and training share one engine here, so the policy params
-//! never leave the device: generation reads the trainer's live device
-//! buffer directly (`TrainState::param_view`).
+//! Thin constructor over the unified [`pipeline`] trainer loop: the
+//! synchronous schedule is [`pipeline::run`] fed by an
+//! [`InlineSource`], which generates on the trainer's own engine (the
+//! policy params never leave the device — generation reads the trainer's
+//! live device buffer via `TrainState::param_view`) and implements the
+//! off-policyness ladder of §3.2: generate N mini-batches with the
+//! current policy, then take N sequential updates. N=1 is fully
+//! on-policy; larger N makes later updates increasingly off-policy (the
+//! data's behaviour policy is N−1 updates stale by the last minibatch).
 
 use anyhow::Result;
 
-use super::trainer::{
-    assemble, generate_round, round_metrics, rounds_per_batch, sample_opts,
-    staleness, stage_and_label, train_on_batch, LabelScratch, LabelledRound,
-};
+use super::pipeline::{self, InlineSource, RoundSource};
 use super::RunOutput;
 use crate::config::ExpConfig;
-use crate::coordinator::pretrain::RLHF_RANGE;
-use crate::data::TaskGen;
-use crate::metrics::{Phase, RunLog, Timeline};
-use crate::runtime::{Engine, TrainState};
-use crate::util::rng::Pcg32;
 
 /// Run synchronous RLHF. The SFT checkpoint in `prep` is both the initial
 /// policy and the KL reference.
-pub fn run(cfg: &ExpConfig, prep: &super::Prepared, verbose: bool) -> Result<RunOutput> {
-    let engine: &Engine = &prep.engine;
-    let taskgen: &TaskGen = &prep.taskgen;
-    let sft_params = prep.sft_params.clone();
-    let generator = cfg.gen_engine.build();
-    let mut rng = Pcg32::new(cfg.seed, 0x5c);
-    let mut state = TrainState::new(sft_params.clone());
-    let mut scratch = LabelScratch::default();
-    let mut log = RunLog::new();
-    log.set_meta("label", cfg.label());
-    let mut timeline = Timeline::new();
-    let origin = timeline.origin();
-
-    let gen_bs = engine.manifest.config.gen_batch as u64;
-    let rpb = rounds_per_batch(cfg.k_samples);
-    let n = cfg.n_minibatches;
-    let mut cursor = RLHF_RANGE;
-    let mut episodes = 0u64;
-    let mut step = 0u64;
-    let mut version = 0u64;
-
-    'outer: while step < cfg.steps {
-        // ---- generation phase: N minibatches of data, frozen policy ----
-        let mut batches: Vec<Vec<LabelledRound>> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let mut rounds = Vec::with_capacity(rpb);
-            for _ in 0..rpb {
-                let round = timeline.record(Phase::Generate, || {
-                    generate_round(
-                        engine,
-                        generator.as_ref(),
-                        state.param_view("policy", version),
-                        version,
-                        taskgen,
-                        cursor,
-                        cfg.k_samples,
-                        sample_opts(cfg),
-                        &mut rng,
-                        origin,
-                    )
-                })?;
-                cursor += (gen_bs / cfg.k_samples as u64).max(1);
-                episodes += gen_bs;
-                // stage the round's tensors on device once (when
-                // eligible), then label off the shared buffers; staging
-                // is part of the scoring cost
-                let (resident, labels) = timeline.record(Phase::Score, || {
-                    stage_and_label(
-                        engine,
-                        &round,
-                        &sft_params,
-                        prep.rm_scorer(),
-                        cfg,
-                        &mut scratch,
-                    )
-                })?;
-                rounds.push(LabelledRound { round, labels, resident });
-            }
-            batches.push(rounds);
-        }
-
-        // ---- training phase: N sequential updates on the frozen data ----
-        for rounds in &batches {
-            let batch = assemble(engine, cfg.algo, rounds, cfg.k_samples)?;
-            let all_metrics = timeline.record(Phase::Train, || {
-                train_on_batch(
-                    engine,
-                    &mut state,
-                    &batch,
-                    cfg.lr,
-                    cfg.updates_per_batch,
-                )
-            })?;
-            version += cfg.updates_per_batch as u64;
-            step += 1;
-
-            let labels = &rounds[0].labels;
-            let mut row = round_metrics(labels);
-            let m = all_metrics.last().unwrap();
-            row.push(("loss", m[0]));
-            row.push((
-                "staleness",
-                staleness(version, labels_version(rounds)) as f32,
-            ));
-            log.push(step, episodes, timeline.wall(), &row);
-            if verbose && step % 8 == 0 {
-                eprintln!(
-                    "[sync {}] step {step}/{} episodes {episodes} \
-                     win {:.3} kl-ppl {:.4} loss {:.4}",
-                    cfg.algo,
-                    cfg.steps,
-                    log.recent_mean("win_rate", 8).unwrap_or(0.0),
-                    log.recent_mean("kl_ppl", 8).unwrap_or(0.0),
-                    m[0],
-                );
-            }
-            if step >= cfg.steps {
-                break 'outer;
-            }
-        }
-    }
-
-    Ok(RunOutput {
-        final_params: state.into_params(engine)?,
-        log,
-        timeline,
-        episodes,
-    })
-}
-
-fn labels_version(rounds: &[LabelledRound]) -> u64 {
-    rounds
-        .iter()
-        .map(|r| r.round.params_version)
-        .max()
-        .unwrap_or(0)
+pub fn run<'p>(
+    cfg: &ExpConfig,
+    prep: &'p super::Prepared,
+    verbose: bool,
+) -> Result<RunOutput> {
+    pipeline::run(
+        cfg,
+        prep,
+        |_origin| {
+            let src: Box<dyn RoundSource + 'p> =
+                Box::new(InlineSource::new(cfg, prep));
+            Ok(src)
+        },
+        verbose,
+    )
 }

@@ -663,6 +663,19 @@ pub fn staleness(version_after_update: u64, data_version: u64) -> u64 {
         .saturating_sub(data_version)
 }
 
+/// Behaviour-policy version of a train batch: the freshest
+/// `params_version` among its rounds (k=4 batches pair two rounds, which
+/// the sync N-ladder may have generated at different versions; taking the
+/// max keeps [`staleness`] conservative). The one definition shared by
+/// every [`staleness`] measurement in the pipeline.
+pub fn batch_data_version(rounds: &[LabelledRound]) -> u64 {
+    rounds
+        .iter()
+        .map(|r| r.round.params_version)
+        .max()
+        .unwrap_or(0)
+}
+
 /// Per-round training-curve metrics derived from labels (gold win-rate and
 /// KL-as-ppl measured on the training stream itself, costing nothing —
 /// final eval uses held-out prompts).

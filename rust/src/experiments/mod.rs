@@ -14,6 +14,7 @@ mod offpolicy;
 mod optimize;
 mod scaling;
 mod speed;
+pub mod staleness_ladder;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -42,6 +43,7 @@ pub fn catalog() -> Vec<Exp> {
         Exp { id: "fig13", paper: "Fig 13: Proximal RLOO vs CoPG off-policy", run: losses::fig13 },
         Exp { id: "fig14", paper: "Fig 14/C.1: cached vs naive generation speed by scale", run: gen_speed::fig14 },
         Exp { id: "overhead", paper: "A.2: async overhead decomposition (ideal vs actual)", run: speed::overhead },
+        Exp { id: "staleness", paper: "Staleness ladder: queue depth K x workers M (pipeline API)", run: staleness_ladder::ladder },
     ]
 }
 

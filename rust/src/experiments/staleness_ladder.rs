@@ -1,0 +1,185 @@
+//! Staleness ladder: the pipeline's K × M sweep.
+//!
+//! The related work treats the staleness bound as the object of study
+//! (*Staleness–Learning Rate Scaling Laws for Asynchronous RLHF* sweeps
+//! it directly); with the unified pipeline it is a config knob, so this
+//! runner sweeps queue depth K × worker count M on one artifact and
+//! reports, per config: final win-rate and KL, mean/max measured
+//! staleness against the proven bound, trainer idle time and wall clock.
+//!
+//! `async-rlhf exp staleness` prints the table and saves the CSV;
+//! `benches/staleness.rs` drives [`sweep`] on the small artifact and
+//! dumps [`bench_json`] to `BENCH_staleness.json` for the perf/quality
+//! trajectory.
+
+use anyhow::Result;
+
+use super::runner::{base_cfg, print_table, run_variant, save_csv};
+use super::{out_dir, require_model};
+use crate::config::{ExpConfig, Mode};
+use crate::coordinator::pipeline::staleness_bound_updates;
+use crate::coordinator::{self, Prepared};
+use crate::metrics::Phase;
+use crate::util::args::Args;
+use crate::util::json::Json;
+
+/// One (K, M) configuration's measurements.
+pub struct LadderPoint {
+    pub k_bound: usize,
+    pub workers: usize,
+    pub win_rate: f32,
+    pub kl_ppl: f32,
+    pub mean_staleness: f64,
+    pub max_staleness: u64,
+    /// Worst case for this config ([`staleness_bound_updates`]): proven
+    /// for M=1, fair-scheduling for M>1 — `max_staleness` is checked
+    /// against it where proven, reported against it otherwise.
+    pub bound: u64,
+    /// Trainer idle seconds (waiting on the round queue).
+    pub idle_secs: f64,
+    pub wall_secs: f64,
+}
+
+/// Run the ladder: every (K, M) in `ks` × `ms`, async mode, on a shared
+/// `prep`. Errors if a single-worker config's measured staleness escapes
+/// its proven bound — the sweep doubles as an invariant check on real
+/// executables; multi-worker configs only warn (their bound assumes fair
+/// worker scheduling) and the JSON records `within_bound` either way.
+pub fn sweep(
+    base: &ExpConfig,
+    prep: &Prepared,
+    ks: &[usize],
+    ms: &[usize],
+    verbose: bool,
+) -> Result<Vec<LadderPoint>> {
+    let mut points = Vec::with_capacity(ks.len() * ms.len());
+    for &m in ms {
+        for &k in ks {
+            let mut cfg = base.clone();
+            cfg.mode = Mode::Async;
+            cfg.gen_workers = m;
+            cfg.staleness_bound = k;
+            eprintln!("[staleness] K={k} M={m}");
+            let r = run_variant(&cfg, prep, verbose)?;
+            let st: Vec<u64> = r
+                .out
+                .log
+                .rows
+                .iter()
+                .filter_map(|row| row.values.get("staleness"))
+                .map(|&s| s as u64)
+                .collect();
+            let max_staleness = st.iter().copied().max().unwrap_or(0);
+            let mean_staleness =
+                st.iter().sum::<u64>() as f64 / st.len().max(1) as f64;
+            let bound = staleness_bound_updates(k, m, cfg.updates_per_batch);
+            if max_staleness > bound {
+                if m == 1 {
+                    anyhow::bail!(
+                        "K={k}: measured staleness {max_staleness} exceeds \
+                         the proven bound {bound}"
+                    );
+                }
+                eprintln!(
+                    "[staleness] WARN K={k} M={m}: {max_staleness} > \
+                     fair-scheduling bound {bound} (a worker stalled)"
+                );
+            }
+            points.push(LadderPoint {
+                k_bound: k,
+                workers: m,
+                win_rate: r.eval.win_rate,
+                kl_ppl: r.eval.kl_ppl,
+                mean_staleness,
+                max_staleness,
+                bound,
+                idle_secs: r.out.timeline.total(Phase::Idle),
+                wall_secs: r.out.timeline.wall(),
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Table rows for printing/CSV.
+fn rows(points: &[LadderPoint]) -> Vec<Vec<String>> {
+    points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("K={} M={}", p.k_bound, p.workers),
+                format!("{:.3}", p.win_rate),
+                format!("{:.4}", p.kl_ppl),
+                format!("{:.2}", p.mean_staleness),
+                format!("{}", p.max_staleness),
+                format!("{}", p.bound),
+                format!("{:.2}", p.idle_secs),
+                format!("{:.1}", p.wall_secs),
+            ]
+        })
+        .collect()
+}
+
+const HEADERS: &[&str] = &[
+    "config",
+    "win_rate",
+    "kl_ppl",
+    "mean_stale",
+    "max_stale",
+    "bound",
+    "idle_s",
+    "wall_s",
+];
+
+/// Machine-readable dump for `BENCH_staleness.json`.
+pub fn bench_json(model: &str, steps: u64, points: &[LadderPoint]) -> Json {
+    let configs = points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("k_bound", Json::num(p.k_bound as f64)),
+                ("gen_workers", Json::num(p.workers as f64)),
+                ("win_rate", Json::num(p.win_rate as f64)),
+                ("kl_ppl", Json::num(p.kl_ppl as f64)),
+                ("mean_staleness", Json::num(p.mean_staleness)),
+                ("max_staleness", Json::num(p.max_staleness as f64)),
+                ("bound", Json::num(p.bound as f64)),
+                (
+                    "within_bound",
+                    Json::Bool(p.max_staleness <= p.bound),
+                ),
+                ("idle_secs", Json::num(p.idle_secs)),
+                ("wall_secs", Json::num(p.wall_secs)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("model", Json::str(model)),
+        ("steps", Json::num(steps as f64)),
+        ("configs", Json::Arr(configs)),
+    ])
+}
+
+/// `exp staleness`: K ∈ {0,1,2,4} × M ∈ {1,2} by default
+/// (`--k-sweep` / `--m-sweep` override), small artifact.
+pub fn ladder(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tldr_s").to_string();
+    require_model(args, &model)?;
+    let ks: Vec<usize> = args.get_list("k-sweep", &[0usize, 1, 2, 4])?;
+    let ms: Vec<usize> = args.get_list("m-sweep", &[1usize, 2])?;
+    let base = base_cfg(args, &model)?;
+    let verbose = !args.has_flag("quiet");
+    let prep = coordinator::prepare(&base, verbose)?;
+
+    let points = sweep(&base, &prep, &ks, &ms, verbose)?;
+    let table = rows(&points);
+    print_table(
+        "Staleness ladder: queue depth K x workers M (async pipeline)",
+        HEADERS,
+        &table,
+    );
+    let dir = out_dir(args).join("staleness");
+    save_csv(&dir, "ladder", HEADERS, &table)?;
+    println!("saved: {}", dir.display());
+    Ok(())
+}

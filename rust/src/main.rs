@@ -9,8 +9,10 @@
 //!
 //! Examples:
 //!   async-rlhf train tldr_s --algo dpo --mode async --steps 96
+//!   async-rlhf train tldr_s --mode async --gen-workers 2 --staleness-bound 4
 //!   async-rlhf train tldr_s --gen-engine device   # KV chained on-device
 //!   async-rlhf exp fig3 --steps 64
+//!   async-rlhf exp staleness --steps 24           # K x M ladder
 //!   async-rlhf sim --gen 21 --train 33 --steps 233
 
 use anyhow::{anyhow, bail, Result};

@@ -212,10 +212,6 @@ impl Timeline {
         Timeline { origin: Instant::now(), spans: Vec::new() }
     }
 
-    pub fn shared_origin(origin: Instant) -> Timeline {
-        Timeline { origin, spans: Vec::new() }
-    }
-
     pub fn origin(&self) -> Instant {
         self.origin
     }
@@ -230,6 +226,16 @@ impl Timeline {
 
     pub fn push_span(&mut self, phase: Phase, start: f64, end: f64) {
         self.spans.push(Span { phase, start, end });
+    }
+
+    /// Total seconds spent in one phase (e.g. trainer idle time while
+    /// waiting on generation workers).
+    pub fn total(&self, phase: Phase) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.phase == phase)
+            .map(|s| s.end - s.start)
+            .sum()
     }
 
     /// Total seconds spent per phase.
@@ -315,6 +321,8 @@ mod tests {
         let totals = t.totals();
         assert!((totals[&Phase::Generate] - 1.5).abs() < 1e-9);
         assert!((totals[&Phase::Train] - 2.0).abs() < 1e-9);
+        assert!((t.total(Phase::Generate) - 1.5).abs() < 1e-9);
+        assert_eq!(t.total(Phase::Idle), 0.0);
         assert!((t.wall() - 3.5).abs() < 1e-9);
         let art = t.render_ascii(40);
         assert!(art.contains("generate"));

@@ -5,6 +5,9 @@
 //! logic (prompt duplication, pair selection, episode accounting, schedule
 //! partitioning, queue staleness in the clock simulator).
 
+use async_rlhf::coordinator::pipeline::{
+    cursor_stride, staleness_bound_updates,
+};
 use async_rlhf::coordinator::trainer::{round_prompts, rounds_per_batch};
 use async_rlhf::data::{pack_sequence, Task, TaskGen};
 use async_rlhf::metrics::Phase;
@@ -192,6 +195,78 @@ fn async_wall_is_bottleneck_dominated() {
             sim.wall >= lower - 1e-6 && sim.wall <= upper,
             "wall {} outside [{lower}, {upper}]",
             sim.wall
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn worker_pool_cursors_partition_prompt_stream() {
+    // M pool workers stride the prompt stream: worker w starts at
+    // w * stride and hops M * stride per round. Over any number of
+    // rounds the consumed index ranges must be disjoint and tile the
+    // stream contiguously — no prompt trained twice, none skipped.
+    prop_check("worker cursor partition", 100, |rng| {
+        let m = 1 + rng.gen_usize(4);
+        let k = if rng.gen_bool(0.5) { 2 } else { 4 };
+        let n_prompts = 1 + rng.gen_usize(6);
+        let gen_batch = (n_prompts * k) as u64;
+        let stride = cursor_stride(gen_batch, k);
+        prop_assert!(stride == n_prompts as u64, "stride {stride}");
+        let rounds = 1 + rng.gen_usize(20);
+        let mut seen = std::collections::HashSet::new();
+        for w in 0..m {
+            let mut cursor = w as u64 * stride;
+            for _ in 0..rounds {
+                for i in cursor..cursor + stride {
+                    prop_assert!(seen.insert(i), "prompt {i} reused (w {w})");
+                }
+                cursor += stride * m as u64;
+            }
+        }
+        prop_assert!(
+            seen.len() as u64 == rounds as u64 * m as u64 * stride,
+            "coverage {} != {}",
+            seen.len(),
+            rounds as u64 * m as u64 * stride
+        );
+        // contiguous tiling: exactly the first rounds*m*stride indices
+        let max = seen.iter().copied().max().unwrap();
+        prop_assert!(
+            max + 1 == rounds as u64 * m as u64 * stride,
+            "stream has holes below {max}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn staleness_bound_is_monotone_in_queue_workers_and_epochs() {
+    // The bound (K + M + 1)·T − 1 (proven for M=1, fair-scheduling for
+    // M>1) must grow monotonically in every knob and reduce to the seed
+    // coordinator's one-step bound at the defaults.
+    prop_check("staleness bound monotone", 100, |rng| {
+        let k = rng.gen_usize(8);
+        let m = 1 + rng.gen_usize(4);
+        let t = 1 + rng.gen_usize(4);
+        let b = staleness_bound_updates(k, m, t);
+        if t >= 2 {
+            prop_assert!(
+                b > staleness_bound_updates(k, m, t - 1),
+                "not T-monotone"
+            );
+        }
+        prop_assert!(
+            staleness_bound_updates(k + 1, m, t) > b,
+            "not K-monotone"
+        );
+        prop_assert!(
+            staleness_bound_updates(k, m + 1, t) > b,
+            "not M-monotone"
+        );
+        prop_assert!(
+            staleness_bound_updates(0, 1, 1) == 1,
+            "K=0 M=1 T=1 must be the one-step bound"
         );
         Ok(())
     });
