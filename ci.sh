@@ -36,12 +36,13 @@ if [[ "${1:-}" != "--fast" ]]; then
 fi
 cargo test -q
 
-echo "== staleness invariants =="
-# the pipeline's staleness-bound tests are release-gating and already ran
-# in the full `cargo test -q` above; here just assert they still EXIST
-# (cargo exits 0 on a zero-match filter, so a rename/module move would
-# otherwise drop the gate silently) — --list doesn't re-run anything
-for filter in staleness bounded_queue; do
+echo "== invariant gates (staleness, pair gather) =="
+# the pipeline's staleness-bound tests and the pair-gather equivalence /
+# byte-counter tests are release-gating and already ran in the full
+# `cargo test -q` above; here just assert they still EXIST (cargo exits 0
+# on a zero-match filter, so a rename/module move would otherwise drop
+# the gate silently) — --list doesn't re-run anything
+for filter in staleness bounded_queue pair_gather; do
   # capture first: grep -q on the pipe would EPIPE cargo under pipefail
   listing=$(cargo test -q "$filter" -- --list 2>/dev/null)
   echo "$listing" | grep -q ": test" || {

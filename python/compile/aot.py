@@ -75,6 +75,7 @@ def to_hlo_text(lowered, return_tuple=True) -> str:
 # still come from shared device buffers on the resident path.
 UNTUPLED = {
     "generate",
+    "gather_pairs",
     "train_sft",
     "train_rm",
     "train_dpo",
@@ -158,6 +159,20 @@ def executable_defs(cfg: configs.Config):
         ("forward_full",
          lambda flat, tokens: (model.logits_fn(cfg, flat, tokens),),
          [("params", (n,), F32), ("tokens", (Bg, S), I32)], None),
+        # Device-side best/worst pair gather (losses.gather_pairs): turns
+        # two rounds' resident [Bg, S] buffers plus a host [2*Bp] index
+        # vector into train-batch-layout tensors that never leave the
+        # device. Untupled so the runtime chains the outputs straight into
+        # the pairwise train_* executables.
+        ("gather_pairs",
+         lambda *a: losses.gather_pairs(cfg, *a),
+         [("tok_a", (Bg, S), I32), ("mask_a", (Bg, S), F32),
+          ("blp_a", (Bg, S), F32), ("rlp_a", (Bg, S), F32),
+          ("rseq_a", (Bg,), F32),
+          ("tok_b", (Bg, S), I32), ("mask_b", (Bg, S), F32),
+          ("blp_b", (Bg, S), F32), ("rlp_b", (Bg, S), F32),
+          ("rseq_b", (Bg,), F32),
+          ("pair_idx", (2 * Bp,), I32)], None),
         ("logprob",
          lambda flat, tokens, mask: model.seq_logprob(cfg, flat, tokens, mask),
          [("params", (n,), F32), ("tokens", (Bg, S), I32),

@@ -229,6 +229,40 @@ def proximal_rloo(cfg, flat, tok1, mask1, tok2, mask2, blp1, blp2,
     )
 
 
+# ---------------------------------------------------------------------------
+# Device-side batch assembly (not a loss): best/worst pair gather
+# ---------------------------------------------------------------------------
+
+def gather_pairs(cfg, tok_a, mask_a, blp_a, rlp_a, rseq_a,
+                 tok_b, mask_b, blp_b, rlp_b, rseq_b, idx):
+    """Permute round-layout buffers into best/worst train-batch layout.
+
+    The Rust coordinator keeps a round's [Bg, S] token/mask/blp/rlp tensors
+    (and the [Bg] reference sequence logprobs) device-resident; only the
+    [2*Bp] pair-index vector — best-side rows then worst-side rows,
+    computed on host from the rewards — is uploaded per train batch. Two
+    round inputs cover the K=4 two-round ladder (rows of round b are
+    addressed at Bg + i); the K=2 single-round case passes the same
+    buffers for a and b with indices < Bg.
+
+    Outputs (train-batch layout, stay device-resident):
+      0..3   tok1/mask1/tok2/mask2          [Bp, S]   DPO + RLOO family
+      4..7   blp1/blp2/rlp1/rlp2            [Bp, S]   RLOO family
+      8..9   rseq1/rseq2                    [Bp]      DPO reference margins
+      10..11 tok_all/mask_all (rows = idx)  [2*Bp, S] Best-of-N singles
+    """
+    bp = cfg.train_pairs
+    tok = jnp.concatenate([tok_a, tok_b], axis=0)
+    mask = jnp.concatenate([mask_a, mask_b], axis=0)
+    blp = jnp.concatenate([blp_a, blp_b], axis=0)
+    rlp = jnp.concatenate([rlp_a, rlp_b], axis=0)
+    rseq = jnp.concatenate([rseq_a, rseq_b], axis=0)
+    i1, i2 = idx[:bp], idx[bp:]
+    return (tok[i1], mask[i1], tok[i2], mask[i2],
+            blp[i1], blp[i2], rlp[i1], rlp[i2],
+            rseq[i1], rseq[i2], tok[idx], mask[idx])
+
+
 def copg(cfg, flat, tok1, mask1, tok2, mask2, blp1, blp2, rlp1, rlp2,
          r1, r2, beta):
     """CoPG-style RLOO (Flet-Berliac et al. 2024), paper Appendix B.

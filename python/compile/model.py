@@ -18,6 +18,8 @@ token per call against the cache. Both are exported as separate HLO
 artifacts driven by the Rust generation engines.
 """
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -25,9 +27,11 @@ from . import configs
 from .kernels import attention as attn_kernel
 from .kernels import ref as attn_ref
 
-# Flip to True to bypass the Pallas kernel (debugging aid; tests compare
-# both paths).
-USE_REF_ATTENTION = False
+# Flip to True (or set USE_REF_ATTENTION=1) to bypass the Pallas kernel
+# (debugging aid; tests compare both paths).
+USE_REF_ATTENTION = os.environ.get("USE_REF_ATTENTION", "").lower() not in (
+    "", "0", "false", "no",
+)
 
 RMS_EPS = 1e-5
 

@@ -36,8 +36,8 @@ def test_manifest_schema(built):
     assert loaded["config"]["name"] == "dev"
     expected = {
         "prefill", "decode", "generate", "forward_full", "logprob",
-        "score_rm", "train_sft", "train_rm", "train_dpo", "train_ppo",
-        "train_rloo", "train_prloo", "train_copg", "train_bon",
+        "score_rm", "gather_pairs", "train_sft", "train_rm", "train_dpo",
+        "train_ppo", "train_rloo", "train_prloo", "train_copg", "train_bon",
         "prefill_dev", "decode_dev", "logprob_dev",
     }
     assert set(loaded["artifacts"]) == expected
@@ -95,6 +95,33 @@ def test_dev_twins_alias_tupled_namesakes(built):
     # score_rm has a single output: the untupled protocol cannot represent
     # it (1-leaf result is ambiguous with a fallback client's root tuple)
     assert not manifest["artifacts"]["score_rm"]["untupled"]
+
+
+def test_gather_pairs_registered_untupled(built):
+    """The pair-gather artifact must run on the buffer path (untupled, so
+    its train-layout outputs stay device-resident) and its manifest entry
+    must carry the exact shapes the Rust runtime validates against —
+    keys/dtypes here mirror what runtime/manifest.rs parses, so a schema
+    drift fails on this side before it crashes PJRT on that side."""
+    out, manifest = built
+    art = manifest["artifacts"]["gather_pairs"]
+    assert art["untupled"]
+    assert len(art["outputs"]) >= 2  # untupled protocol requirement
+    bg, s, bp = CFG.gen_batch, CFG.seq_len, CFG.train_pairs
+    ins = {i["name"]: (tuple(i["shape"]), i["dtype"]) for i in art["inputs"]}
+    assert ins["pair_idx"] == ((2 * bp,), "i32")
+    for side in "ab":
+        assert ins[f"tok_{side}"] == ((bg, s), "i32")
+        for t in ["mask", "blp", "rlp"]:
+            assert ins[f"{t}_{side}"] == ((bg, s), "f32")
+        assert ins[f"rseq_{side}"] == ((bg,), "f32")
+    out_shapes = [tuple(o["shape"]) for o in art["outputs"]]
+    # 4 pair-side [Bp,S] token/mask + 4 blp/rlp, 2 [Bp] rseq, 2 [2Bp,S]
+    assert out_shapes == [(bp, s)] * 8 + [(bp,)] * 2 + [(2 * bp, s)] * 2
+    # the JSON round-trips and the runtime-critical keys survive it
+    loaded = json.loads(open(os.path.join(out, "manifest.json")).read())
+    assert loaded["artifacts"]["gather_pairs"]["untupled"] is True
+    assert loaded["artifacts"]["gather_pairs"]["inputs"] == art["inputs"]
 
 
 def test_hlo_text_parses_back(built):

@@ -225,6 +225,7 @@ fn main() {
     // times (logprob, score_rm, train batch); the resident path stages it
     // once under the ROUND_ORIGIN bucket and shares the device buffer.
     let mut round_label = Vec::new();
+    let mut pairwise_dpo = Vec::new();
     // the generate bench above settled whether the client untuples; the
     // resident path is only live (and only worth measuring) when it does
     if engine.buffer_path_ready("logprob_dev") {
@@ -251,16 +252,24 @@ fn main() {
         let mut scratch = LabelScratch::default();
         let mut tstate = TrainState::new(params.clone());
         let rm = Some((&engine, &rm_params[..]));
-        let mut run_path = |resident: bool| -> (u64, u64) {
-            let staged = if resident {
-                make_resident(&engine, &round.gen, rm, false, &mut scratch)
-                    .expect("stage round")
+        let mut run_path = |algo: Algo, resident: bool| -> (u64, u64) {
+            let mut staged = if resident {
+                make_resident(
+                    &engine,
+                    &round.gen,
+                    None,
+                    rm,
+                    false,
+                    async_rlhf::coordinator::trainer::algo_stages_blp(algo),
+                    &mut scratch,
+                )
+                .expect("stage round")
             } else {
                 None
             };
             let labels = label_round(
                 &engine, &round, &params, rm, 2, -1.0, false, &mut scratch,
-                staged.as_ref(),
+                staged.as_mut(),
             )
             .expect("label");
             let lr = LabelledRound {
@@ -275,20 +284,19 @@ fn main() {
                 labels,
                 resident: staged,
             };
-            let batch =
-                assemble(&engine, Algo::Ppo, std::slice::from_ref(&lr), 2)
-                    .expect("assemble");
+            let batch = assemble(&engine, algo, std::slice::from_ref(&lr), 2)
+                .expect("assemble");
             train_on_batch(&engine, &mut tstate, &batch, 3e-4, 1)
                 .expect("train");
             engine.transfer_totals()
         };
         // warm the ref/rm param caches + train state off the measurement
-        run_path(false);
+        run_path(Algo::Ppo, false);
         engine.reset_stats();
-        let (seed_up, _) = run_path(false);
+        let (seed_up, _) = run_path(Algo::Ppo, false);
         let seed_stats = engine.stats();
         engine.reset_stats();
-        let (res_up, _) = run_path(true);
+        let (res_up, _) = run_path(Algo::Ppo, true);
         let res_stats = engine.stats();
         let token_bytes = (4 * b * s) as u64;
         let tok_uploads = |stats: &std::collections::BTreeMap<
@@ -325,6 +333,53 @@ fn main() {
             ("token_uploads_seed", Json::num(seed_n as f64)),
             ("token_uploads_resident", Json::num(res_n as f64)),
         ];
+
+        // --- pairwise (DPO) bytes per batch: host assembly vs gather ---
+        // The host path uploads 4 [Bp,S] best/worst tensors (+ 2 [Bp]
+        // margins) per DPO batch; the gather path uploads the [2*Bp]
+        // pair-index vector and reads everything else off the resident
+        // round. Measured, not asserted — the JSON records the win.
+        if engine.buffer_path_ready("gather_pairs") {
+            engine.reset_stats();
+            let (host_total, _) = run_path(Algo::Dpo, false);
+            let host_stats = engine.stats();
+            engine.reset_stats();
+            let (gather_total, _) = run_path(Algo::Dpo, true);
+            let gather_stats = engine.stats();
+            let up = |stats: &std::collections::BTreeMap<
+                String,
+                async_rlhf::runtime::CallStats,
+            >,
+                      k: &str| {
+                stats.get(k).map_or(0, |st| st.bytes_up)
+            };
+            let host_batch = up(&host_stats, "train_dpo");
+            let gather_batch =
+                up(&gather_stats, "train_dpo") + up(&gather_stats, "gather_pairs");
+            let idx_bytes = (4 * 2 * cfg.train_pairs) as u64;
+            println!(
+                "\npairwise (DPO) train-batch uploads: host assembly \
+                 {host_batch} B, pair gather {gather_batch} B \
+                 (index vector {idx_bytes} B); cycle totals \
+                 {host_total} B vs {gather_total} B up"
+            );
+            pairwise_dpo = vec![
+                ("host_batch_bytes_up", Json::num(host_batch as f64)),
+                ("gather_batch_bytes_up", Json::num(gather_batch as f64)),
+                ("index_vector_bytes", Json::num(idx_bytes as f64)),
+                ("host_cycle_bytes_up", Json::num(host_total as f64)),
+                ("gather_cycle_bytes_up", Json::num(gather_total as f64)),
+            ];
+            for (name, st) in gather_stats {
+                if st.bytes_up > 0 || st.bytes_down > 0 {
+                    all_stats.insert(format!("{name} [pair gather]"), st);
+                }
+            }
+        } else {
+            println!(
+                "\nSKIP pairwise gather traffic: bundle lacks gather_pairs"
+            );
+        }
     } else {
         println!(
             "\nSKIP round-labelling traffic: needs logprob_dev artifacts \
@@ -399,6 +454,7 @@ fn main() {
             ]),
         ),
         ("round_label_bytes", Json::obj(round_label)),
+        ("pairwise_dpo_bytes", Json::obj(pairwise_dpo)),
         ("artifacts", artifacts),
     ]);
     let out_path = std::env::var("ASYNC_RLHF_BENCH_OUT")

@@ -47,9 +47,9 @@ use anyhow::{anyhow, Result};
 
 use super::pretrain::RLHF_RANGE;
 use super::trainer::{
-    assemble, batch_data_version, generate_round, round_metrics,
-    rounds_per_batch, sample_opts, stage_and_label, staleness,
-    train_on_batch, LabelScratch, LabelledRound, Round,
+    assemble, batch_data_version, generate_round, generate_round_staged,
+    round_metrics, rounds_per_batch, sample_opts, stage_and_label, staleness,
+    train_on_batch, LabelScratch, LabelledRound, Round, SourcedRound,
 };
 use super::{Prepared, RunOutput};
 use crate::config::ExpConfig;
@@ -139,7 +139,11 @@ pub trait RoundSource {
 
     /// Produce the next round, generating inline or awaiting a worker.
     /// The source records its own Generate/Idle spans on `cx.timeline`.
-    fn next(&mut self, cx: TrainerCx<'_>) -> Result<Round>;
+    /// Inline sources may attach the fused generate's device-resident
+    /// output buffers ([`SourcedRound::staged`]) so the trainer stages
+    /// the round with zero token uploads; worker rounds crossed a thread
+    /// boundary and are host-only.
+    fn next(&mut self, cx: TrainerCx<'_>) -> Result<SourcedRound>;
 
     /// Completions accounted so far. Inline sources count at generation
     /// (the §3.2 ladder pays for a whole N-minibatch window up front,
@@ -187,26 +191,28 @@ pub fn run<'p>(
         while step < cfg.steps {
             let mut rounds = Vec::with_capacity(rpb);
             for _ in 0..rpb {
-                let round = source.next(TrainerCx {
+                let sr = source.next(TrainerCx {
                     engine,
                     state: &mut state,
                     version,
                     timeline: &mut timeline,
                 })?;
                 // stage the round's tensors on device once (when
-                // eligible), then label off the shared buffers; staging
-                // is part of the scoring cost
+                // eligible — chaining the inline source's generate
+                // buffers, when attached, for a zero-upload staging),
+                // then label off the shared buffers; staging is part of
+                // the scoring cost
                 let (resident, labels) = timeline.record(Phase::Score, || {
                     stage_and_label(
                         engine,
-                        &round,
+                        &sr,
                         &sft_params,
                         prep.rm_scorer(),
                         cfg,
                         &mut scratch,
                     )
                 })?;
-                rounds.push(LabelledRound { round, labels, resident });
+                rounds.push(LabelledRound { round: sr.round, labels, resident });
             }
 
             let batch = assemble(engine, cfg.algo, &rounds, cfg.k_samples)?;
@@ -298,7 +304,11 @@ pub struct InlineSource<'p> {
     stride: u64,
     gen_bs: u64,
     generated: u64,
-    buffered: VecDeque<Round>,
+    /// Refill window of rounds awaiting training. Sync rounds keep their
+    /// fused-generate output buffers attached (same engine, same thread),
+    /// so even ladder rounds trained N−1 steps later stage with zero
+    /// token uploads.
+    buffered: VecDeque<SourcedRound>,
 }
 
 impl<'p> InlineSource<'p> {
@@ -325,14 +335,16 @@ impl RoundSource for InlineSource<'_> {
         "sync"
     }
 
-    fn next(&mut self, cx: TrainerCx<'_>) -> Result<Round> {
+    fn next(&mut self, cx: TrainerCx<'_>) -> Result<SourcedRound> {
         let TrainerCx { engine, state, version, timeline } = cx;
         if self.buffered.is_empty() {
-            // generation phase: N minibatches of data, frozen policy
+            // generation phase: N minibatches of data, frozen policy;
+            // the staged variant keeps the fused outputs device-resident
+            // for the trainer (same engine) to chain into round staging
             let origin = timeline.origin();
             for _ in 0..self.rounds_per_refill {
                 let round = timeline.record(Phase::Generate, || {
-                    generate_round(
+                    generate_round_staged(
                         engine,
                         self.generator.as_ref(),
                         state.param_view("policy", version),
@@ -518,7 +530,7 @@ impl RoundSource for WorkerPool {
         "async"
     }
 
-    fn next(&mut self, cx: TrainerCx<'_>) -> Result<Round> {
+    fn next(&mut self, cx: TrainerCx<'_>) -> Result<SourcedRound> {
         let TrainerCx { timeline, .. } = cx;
         let t_wait = timeline.origin().elapsed().as_secs_f64();
         let msg = self
@@ -533,7 +545,9 @@ impl RoundSource for WorkerPool {
             msg.round.gen_span.1,
         );
         self.received += 1;
-        Ok(msg.round)
+        // worker rounds crossed the thread boundary as host data: the
+        // trainer re-stages them (the async mode's one upload per round)
+        Ok(SourcedRound { round: msg.round, staged: None })
     }
 
     fn episodes(&self) -> u64 {

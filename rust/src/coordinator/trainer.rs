@@ -7,7 +7,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{Algo, ExpConfig};
 use crate::data::{Example, Task, TaskGen};
-use crate::gen::{GenBatch, Generator, SampleOpts};
+use crate::gen::{GenBatch, GenBuffers, Generator, SampleOpts};
 use crate::reward::{gold, valid_mask};
 use crate::runtime::{
     CallArg, DeviceBuffer, Engine, HostTensor, ParamView, TrainState,
@@ -34,12 +34,15 @@ pub struct Round {
     pub gen_span: (f64, f64),
 }
 
-/// A round's token/mask tensors staged on the device ONCE and shared (as
+/// A round's tensors staged on the device ONCE and shared (as
 /// `CallArg::Device` inputs) across reference logprobs (`logprob_dev`),
-/// proxy-RM scoring (`score_rm`) and PPO-style train-batch assembly. The
-/// seed path uploaded the same `[B*S]` token tensor three separate times
-/// per round (label, score, train); this uploads it exactly once, under
-/// the [`ROUND_ORIGIN`] stats bucket.
+/// proxy-RM scoring (`score_rm`) and train-batch assembly — PPO reads the
+/// buffers in round layout, the pairwise family permutes them through the
+/// `gather_pairs` executable. The seed path uploaded the same `[B*S]`
+/// token tensor three separate times per round (label, score, train);
+/// this uploads it exactly once, under the [`ROUND_ORIGIN`] stats bucket
+/// — or **zero** times when the fused generate's output buffers are
+/// chained in (sync mode, see [`GenBuffers`]).
 ///
 /// Device buffers belong to the engine that created them: a
 /// `ResidentRound` is built by the labelling/training engine (the trainer
@@ -55,34 +58,77 @@ pub struct ResidentRound {
     /// see [`crate::reward::valid_mask`]); `None` when the round's reward
     /// does not come from a same-engine RM.
     pub rm_mask: Option<DeviceBuffer>,
+    /// Flattened `[B*S]` behaviour logprobs. Staged (one upload) only
+    /// when the algorithm's train batch consumes them (PPO / RLOO
+    /// family, [`algo_stages_blp`]); chained for free from the fused
+    /// generate's buffers in sync mode regardless.
+    pub blp: Option<DeviceBuffer>,
+    /// Reference token logprobs `[B*S]` — `logprob_dev`'s second output,
+    /// captured during labelling (zero upload; `None` until the round is
+    /// labelled or when labelling took the host-literal path).
+    pub rlp_tok: Option<DeviceBuffer>,
+    /// Reference sequence logprobs `[B]` — `logprob_dev`'s first output,
+    /// captured during labelling (DPO's reference margins).
+    pub rlp_seq: Option<DeviceBuffer>,
 }
 
 impl ResidentRound {
-    /// Flatten and upload a round's tensors. `with_rm_mask` additionally
-    /// stages the RM validity mask (derived from `resp_mask` on the
-    /// host — it is a different tensor, so it is its own upload).
+    /// Stage a round's tensors: chain the fused generate's still-resident
+    /// buffers when `staged` is given (zero uploads — sync mode),
+    /// otherwise flatten and upload. `with_rm_mask` additionally stages
+    /// the RM validity mask (derived from `resp_mask` on the host — it is
+    /// a different tensor, so it is always its own upload); `with_blp`
+    /// stages the behaviour logprobs on the upload path (see the field
+    /// doc — the chained path carries them for free).
     pub fn upload(
         engine: &Engine,
         gen: &GenBatch,
+        staged: Option<&GenBuffers>,
         prompt_len: usize,
         with_rm_mask: bool,
+        with_blp: bool,
         scratch: &mut LabelScratch,
     ) -> Result<ResidentRound> {
-        gen.flatten_into(&mut scratch.toks, &mut scratch.mask);
-        // logprob's input specs 1/2 carry the [B, S] shapes shared by
-        // every consumer (score_rm, train_ppo) of these buffers
-        let tokens = engine.upload_arg_as(
-            ROUND_ORIGIN,
-            "logprob",
-            1,
-            &CallArg::I32(&scratch.toks),
-        )?;
-        let resp_mask = engine.upload_arg_as(
-            ROUND_ORIGIN,
-            "logprob",
-            2,
-            &CallArg::F32(&scratch.mask),
-        )?;
+        let (tokens, resp_mask, blp) = match staged {
+            Some(gb) => (
+                gb.tokens.clone(),
+                gb.resp_mask.clone(),
+                Some(gb.blp.clone()),
+            ),
+            None => {
+                gen.flatten_into(&mut scratch.toks, &mut scratch.mask);
+                // logprob's input specs 1/2 carry the [B, S] shapes shared
+                // by every consumer (score_rm, gather_pairs, train_ppo) of
+                // these buffers
+                let tokens = engine.upload_arg_as(
+                    ROUND_ORIGIN,
+                    "logprob",
+                    1,
+                    &CallArg::I32(&scratch.toks),
+                )?;
+                let resp_mask = engine.upload_arg_as(
+                    ROUND_ORIGIN,
+                    "logprob",
+                    2,
+                    &CallArg::F32(&scratch.mask),
+                )?;
+                let blp = if with_blp {
+                    scratch.mask.clear();
+                    for row in &gen.blp {
+                        scratch.mask.extend_from_slice(row);
+                    }
+                    Some(engine.upload_arg_as(
+                        ROUND_ORIGIN,
+                        "logprob",
+                        2,
+                        &CallArg::F32(&scratch.mask),
+                    )?)
+                } else {
+                    None
+                };
+                (tokens, resp_mask, blp)
+            }
+        };
         let rm_mask = if with_rm_mask {
             scratch.mask.clear();
             for m in &gen.resp_mask {
@@ -97,8 +143,23 @@ impl ResidentRound {
         } else {
             None
         };
-        Ok(ResidentRound { tokens, resp_mask, rm_mask })
+        Ok(ResidentRound {
+            tokens,
+            resp_mask,
+            rm_mask,
+            blp,
+            rlp_tok: None,
+            rlp_seq: None,
+        })
     }
+}
+
+/// Whether `algo`'s train batch consumes per-token behaviour logprobs —
+/// the only algorithms worth paying a `[B*S]` blp staging upload for on
+/// the async path (sync rounds chain the buffer for free; DPO and
+/// Best-of-N never read blp).
+pub fn algo_stages_blp(algo: Algo) -> bool {
+    matches!(algo, Algo::Ppo | Algo::Rloo | Algo::Prloo | Algo::Copg)
 }
 
 /// Stage a round for the resident labelling path when the bundle supports
@@ -113,8 +174,10 @@ impl ResidentRound {
 pub fn make_resident(
     engine: &Engine,
     gen: &GenBatch,
+    staged: Option<&GenBuffers>,
     rm: Option<(&Engine, &[f32])>,
     gold_reward: bool,
+    with_blp: bool,
     scratch: &mut LabelScratch,
 ) -> Result<Option<ResidentRound>> {
     if !engine.buffer_path_ready("logprob_dev") {
@@ -127,8 +190,16 @@ pub fn make_resident(
         && rm.is_some_and(|(rm_engine, _)| {
             std::ptr::eq(rm_engine as *const Engine, engine as *const Engine)
         });
-    ResidentRound::upload(engine, gen, cfg.prompt_len, with_rm_mask, scratch)
-        .map(Some)
+    ResidentRound::upload(
+        engine,
+        gen,
+        staged,
+        cfg.prompt_len,
+        with_rm_mask,
+        with_blp,
+        scratch,
+    )
+    .map(Some)
 }
 
 /// Rule-reward rounds (the math task, or the gold-reward ablation) never
@@ -147,29 +218,46 @@ pub struct LabelledRound {
     pub resident: Option<ResidentRound>,
 }
 
+/// A generated round plus (sync mode) the fused generate's still-resident
+/// output buffers, as handed from a [`crate::coordinator::pipeline::RoundSource`]
+/// to the trainer loop. Async rounds cross the worker→trainer thread
+/// boundary as plain host data, so `staged` is `None` there — that one
+/// re-upload per round is the price of the thread hop.
+pub struct SourcedRound {
+    pub round: Round,
+    pub staged: Option<GenBuffers>,
+}
+
 /// Stage (when eligible) and label one round — the coordinators' Score
 /// phase. One definition so the sync and async paths cannot drift in
 /// staging policy or labelling traffic.
 pub fn stage_and_label(
     engine: &Engine,
-    round: &Round,
+    sr: &SourcedRound,
     ref_params: &[f32],
     rm: Option<(&Engine, &[f32])>,
     cfg: &ExpConfig,
     scratch: &mut LabelScratch,
 ) -> Result<(Option<ResidentRound>, Labels)> {
-    let resident =
-        make_resident(engine, &round.gen, rm, cfg.gold_reward, scratch)?;
+    let mut resident = make_resident(
+        engine,
+        &sr.round.gen,
+        sr.staged.as_ref(),
+        rm,
+        cfg.gold_reward,
+        algo_stages_blp(cfg.algo),
+        scratch,
+    )?;
     let labels = label_round(
         engine,
-        round,
+        &sr.round,
         ref_params,
         rm,
         cfg.k_samples,
         cfg.eos_penalty,
         cfg.gold_reward,
         scratch,
-        resident.as_ref(),
+        resident.as_mut(),
     )?;
     Ok((resident, labels))
 }
@@ -225,6 +313,44 @@ pub fn generate_round(
     })
 }
 
+/// Sync-mode variant of [`generate_round`]: also chains the fused
+/// generate's device-resident outputs into the returned [`SourcedRound`]
+/// when the engine produced them ([`Generator::generate_staged`]). The
+/// buffers belong to `engine`, so only same-thread/same-engine callers
+/// (the inline source — `engine` IS the trainer's) may use this; worker
+/// threads use [`generate_round`] and ship host data.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_round_staged(
+    engine: &Engine,
+    generator: &dyn Generator,
+    params: ParamView<'_>,
+    params_version: u64,
+    taskgen: &TaskGen,
+    start_index: u64,
+    k: usize,
+    opts: SampleOpts,
+    rng: &mut Pcg32,
+    origin: std::time::Instant,
+) -> Result<SourcedRound> {
+    let cfg = &engine.manifest.config;
+    let (examples, prompts) = round_prompts(taskgen, start_index, cfg.gen_batch, k);
+    let t0 = origin.elapsed().as_secs_f64();
+    let (gen, staged) =
+        generator.generate_staged(engine, params, &prompts, opts, rng)?;
+    let t1 = origin.elapsed().as_secs_f64();
+    Ok(SourcedRound {
+        round: Round {
+            gen,
+            examples,
+            start_index,
+            params_version,
+            gen_secs: t1 - t0,
+            gen_span: (t0, t1),
+        },
+        staged,
+    })
+}
+
 /// Labels for one round: rewards (what the optimizer sees), gold scores and
 /// wins (what evaluation sees), reference logprobs (KL anchor).
 pub struct Labels {
@@ -269,9 +395,11 @@ pub struct LabelScratch {
 /// When `resident` is staged (see [`make_resident`]) the round's tensors
 /// are NOT re-uploaded here: reference logprobs run through the untupled
 /// `logprob_dev` twin and RM scoring through `score_rm`, both reading the
-/// shared device buffers. The host-literal path (resident = `None`)
-/// remains byte-for-byte the seed behaviour and is the equivalence
-/// baseline in the integration tests.
+/// shared device buffers — and `logprob_dev`'s output buffers are
+/// captured back into the resident round (`rlp_tok`/`rlp_seq`) so the
+/// pairwise gather can consume them with zero re-upload. The host-literal
+/// path (resident = `None`) remains byte-for-byte the seed behaviour and
+/// is the equivalence baseline in the integration tests.
 #[allow(clippy::too_many_arguments)]
 pub fn label_round(
     engine: &Engine,
@@ -282,7 +410,7 @@ pub fn label_round(
     eos_penalty: f32,
     gold_reward: bool,
     scratch: &mut LabelScratch,
-    resident: Option<&ResidentRound>,
+    resident: Option<&mut ResidentRound>,
 ) -> Result<Labels> {
     let cfg = &engine.manifest.config;
     let (b, p) = (cfg.gen_batch, cfg.prompt_len);
@@ -317,7 +445,7 @@ pub fn label_round(
         // a same-engine RM (the one place that eligibility is
         // decided), so its presence is the whole dispatch here;
         // cross-engine RMs and unstaged rounds score via the host
-        let staged = resident.and_then(|rr| {
+        let staged = resident.as_deref().and_then(|rr| {
             rr.rm_mask.as_ref().map(|m| (&rr.tokens, m))
         });
         let mut scores = match staged {
@@ -355,10 +483,17 @@ pub fn label_round(
                 CallArg::Device(&rr.resp_mask),
             ],
         )?;
-        (
+        let host = (
             engine.download(&out[0])?.into_f32()?,
             engine.download(&out[1])?.into_f32()?,
-        )
+        );
+        // capture the device outputs too: the pairwise gather reads
+        // rlp_seq (DPO margins) and rlp_tok (RLOO anchors) straight off
+        // these buffers — zero re-upload
+        let mut it = out.into_iter();
+        rr.rlp_seq = it.next();
+        rr.rlp_tok = it.next();
+        host
     } else {
         gen.flatten_into(&mut scratch.toks, &mut scratch.mask);
         let out = engine.call_with(
@@ -418,6 +553,34 @@ pub struct TrainBatch {
     pub episodes: u64,
 }
 
+/// Best/worst completion (by reward) among one prompt's `slots` range.
+///
+/// NaN-safe by construction: `f32::total_cmp` is a total order (NaN sorts
+/// above +inf), so a NaN reward — an exploding RM score, a poisoned
+/// logprob — selects deterministically instead of panicking the trainer
+/// loop mid-run (the seed used `partial_cmp(..).unwrap()`).
+pub fn best_worst(
+    rewards: &[f32],
+    slots: std::ops::Range<usize>,
+) -> (usize, usize) {
+    debug_assert!(!slots.is_empty());
+    let best = slots
+        .clone()
+        .max_by(|&a, &b| rewards[a].total_cmp(&rewards[b]))
+        .unwrap();
+    let worst = slots
+        .min_by(|&a, &b| rewards[a].total_cmp(&rewards[b]))
+        .unwrap();
+    (best, worst)
+}
+
+/// One best/worst selection: row indices into `rounds[round]`'s gen batch.
+struct Pair {
+    round: usize,
+    best: usize,
+    worst: usize,
+}
+
 /// Assemble the algorithm-specific train batch from a labelled round pair.
 ///
 /// - K=2: `rounds` is one round -> one batch (train_pairs pairs, or
@@ -425,11 +588,15 @@ pub struct TrainBatch {
 /// - K=4: `rounds` is two rounds -> one batch of best/worst pairs
 ///   (paper §4.2: generation takes K/2 times longer, training unchanged).
 ///
-/// PPO's batch layout is the round layout, so its token/mask slots reuse
-/// the round's resident device buffers when staged — the third of the
-/// seed path's three per-round token uploads gone. Pairwise losses
-/// permute slots into best/worst pairs on the host (a device-side gather
-/// is an open ROADMAP item), so their slots stay host tensors.
+/// PPO's batch layout is the round layout, so its token/mask/blp/rlp
+/// slots reuse the round's resident device buffers when staged. Pairwise
+/// losses (DPO/RLOO family/Best-of-N) permute rows into best/worst pairs:
+/// with staged rounds on an untupling client the permutation runs on
+/// device through the `gather_pairs` executable — only the `[2*Bp]`
+/// pair-index vector is uploaded, every `[B,S]` tensor stays resident —
+/// and otherwise falls back to the host assembly (permanently so for
+/// root-tuple clients, where staging never engages). Both paths produce
+/// bitwise-identical train batches (integration-tested).
 pub fn assemble(
     engine: &Engine,
     algo: Algo,
@@ -449,10 +616,12 @@ pub fn assemble(
         // conceptually; duplicated prompts are still valid episodes).
         let lr = &rounds[0];
         let (round, labels) = (&lr.round, &lr.labels);
-        let (tok_slot, mask_slot) = match &lr.resident {
+        let (tok_slot, mask_slot, blp_dev, rlp_dev) = match &lr.resident {
             Some(rr) => (
                 BatchSlot::Device(rr.tokens.clone()),
                 BatchSlot::Device(rr.resp_mask.clone()),
+                rr.blp.clone().map(BatchSlot::Device),
+                rr.rlp_tok.clone().map(BatchSlot::Device),
             ),
             None => {
                 let mut toks = Vec::new();
@@ -461,58 +630,44 @@ pub fn assemble(
                 (
                     BatchSlot::Host(HostTensor::I32(toks)),
                     BatchSlot::Host(HostTensor::F32(mask)),
+                    None,
+                    None,
                 )
             }
         };
-        let mut blp = Vec::with_capacity(bg * s);
-        for i in 0..bg {
-            blp.extend_from_slice(&round.gen.blp[i]);
-        }
+        let blp_slot = blp_dev.unwrap_or_else(|| {
+            let mut blp = Vec::with_capacity(bg * s);
+            for i in 0..bg {
+                blp.extend_from_slice(&round.gen.blp[i]);
+            }
+            BatchSlot::Host(HostTensor::F32(blp))
+        });
+        let rlp_slot = rlp_dev.unwrap_or_else(|| {
+            BatchSlot::Host(HostTensor::F32(labels.rlp_tok.clone()))
+        });
         return Ok(TrainBatch {
             artifact: algo.artifact(),
             tensors: vec![
                 tok_slot,
                 mask_slot,
-                BatchSlot::Host(HostTensor::F32(blp)),
-                BatchSlot::Host(HostTensor::F32(labels.rlp_tok.clone())),
+                blp_slot,
+                rlp_slot,
                 BatchSlot::Host(HostTensor::F32(labels.rewards.clone())),
             ],
             episodes,
         });
     }
 
-    // Pairwise: pick best/worst of each prompt's k completions by reward.
-    struct Slot<'a> {
-        round: &'a Round,
-        labels: &'a Labels,
-        idx: usize,
-    }
-    let mut pairs: Vec<(Slot, Slot)> = Vec::with_capacity(bp);
-    for lr in rounds {
-        let (round, labels) = (&lr.round, &lr.labels);
-        let n_prompts = bg / k;
+    // Pairwise: pick best/worst of each prompt's k completions by reward
+    // (on host — the rewards live here; only the resulting index vector
+    // matters to the device path).
+    let n_prompts = bg / k;
+    let mut pairs: Vec<Pair> = Vec::with_capacity(bp);
+    for (ri, lr) in rounds.iter().enumerate() {
         for pi in 0..n_prompts {
-            let slots = pi * k..(pi + 1) * k;
-            let best = slots
-                .clone()
-                .max_by(|&a, &b| {
-                    labels.rewards[a]
-                        .partial_cmp(&labels.rewards[b])
-                        .unwrap()
-                })
-                .unwrap();
-            let worst = slots
-                .clone()
-                .min_by(|&a, &b| {
-                    labels.rewards[a]
-                        .partial_cmp(&labels.rewards[b])
-                        .unwrap()
-                })
-                .unwrap();
-            pairs.push((
-                Slot { round, labels, idx: best },
-                Slot { round, labels, idx: worst },
-            ));
+            let (best, worst) =
+                best_worst(&lr.labels.rewards, pi * k..(pi + 1) * k);
+            pairs.push(Pair { round: ri, best, worst });
         }
     }
     if pairs.len() != bp {
@@ -522,41 +677,65 @@ pub fn assemble(
         );
     }
 
-    let flat_i32 = |f: fn(&Slot) -> Vec<i32>, side: usize| -> Vec<i32> {
-        let mut out = Vec::with_capacity(bp * s);
-        for p in &pairs {
-            out.extend(f(if side == 0 { &p.0 } else { &p.1 }));
-        }
-        out
+    let row = |p: &Pair, side: usize| -> (&LabelledRound, usize) {
+        (&rounds[p.round], if side == 0 { p.best } else { p.worst })
     };
-    let flat_f32 = |f: fn(&Slot) -> Vec<f32>, side: usize| -> Vec<f32> {
-        let mut out = Vec::with_capacity(bp * s);
-        for p in &pairs {
-            out.extend(f(if side == 0 { &p.0 } else { &p.1 }));
-        }
-        out
-    };
-    fn toks(sl: &Slot) -> Vec<i32> {
-        sl.round.gen.tokens[sl.idx].clone()
-    }
-    fn mask(sl: &Slot) -> Vec<f32> {
-        sl.round.gen.resp_mask[sl.idx].clone()
-    }
-    fn blp(sl: &Slot) -> Vec<f32> {
-        sl.round.gen.blp[sl.idx].clone()
-    }
-    fn rlp(sl: &Slot) -> Vec<f32> {
-        let s = sl.round.gen.tokens[sl.idx].len();
-        sl.labels.rlp_tok[sl.idx * s..(sl.idx + 1) * s].to_vec()
-    }
     let reward = |side: usize| -> Vec<f32> {
         pairs
             .iter()
             .map(|p| {
-                let sl = if side == 0 { &p.0 } else { &p.1 };
-                sl.labels.rewards[sl.idx]
+                let (lr, i) = row(p, side);
+                lr.labels.rewards[i]
             })
             .collect()
+    };
+
+    // --- device path: gather_pairs over the rounds' resident buffers ---
+    if let Some(gathered) = gather_pairs_device(engine, algo, rounds, &pairs)? {
+        let mut tensors = gathered;
+        if matches!(algo, Algo::Rloo | Algo::Prloo | Algo::Copg) {
+            // rewards are host-made ([Bp] each — the EOS penalty and the
+            // gold/RM dispatch happen on host) and tiny; they ride along
+            tensors.push(BatchSlot::Host(HostTensor::F32(reward(0))));
+            tensors.push(BatchSlot::Host(HostTensor::F32(reward(1))));
+        }
+        return Ok(TrainBatch { artifact: algo.artifact(), tensors, episodes });
+    }
+
+    // --- host fallback: permute on the host, extending from slices (this
+    // path is permanent for root-tuple clients, so it stays
+    // allocation-light: one Vec per tensor, no per-row clones) ---
+    let flat_toks = |side: usize| -> Vec<i32> {
+        let mut out = Vec::with_capacity(bp * s);
+        for p in &pairs {
+            let (lr, i) = row(p, side);
+            out.extend_from_slice(&lr.round.gen.tokens[i]);
+        }
+        out
+    };
+    let flat_mask = |side: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(bp * s);
+        for p in &pairs {
+            let (lr, i) = row(p, side);
+            out.extend_from_slice(&lr.round.gen.resp_mask[i]);
+        }
+        out
+    };
+    let flat_blp = |side: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(bp * s);
+        for p in &pairs {
+            let (lr, i) = row(p, side);
+            out.extend_from_slice(&lr.round.gen.blp[i]);
+        }
+        out
+    };
+    let flat_rlp = |side: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(bp * s);
+        for p in &pairs {
+            let (lr, i) = row(p, side);
+            out.extend_from_slice(&lr.labels.rlp_tok[i * s..(i + 1) * s]);
+        }
+        out
     };
 
     let tensors = match algo {
@@ -565,29 +744,29 @@ pub fn assemble(
                 pairs
                     .iter()
                     .map(|p| {
-                        let sl = if side == 0 { &p.0 } else { &p.1 };
-                        sl.labels.rlp_seq[sl.idx]
+                        let (lr, i) = row(p, side);
+                        lr.labels.rlp_seq[i]
                     })
                     .collect()
             };
             vec![
-                HostTensor::I32(flat_i32(toks, 0)),
-                HostTensor::F32(flat_f32(mask, 0)),
-                HostTensor::I32(flat_i32(toks, 1)),
-                HostTensor::F32(flat_f32(mask, 1)),
+                HostTensor::I32(flat_toks(0)),
+                HostTensor::F32(flat_mask(0)),
+                HostTensor::I32(flat_toks(1)),
+                HostTensor::F32(flat_mask(1)),
                 HostTensor::F32(rlp_seq(0)),
                 HostTensor::F32(rlp_seq(1)),
             ]
         }
         Algo::Rloo | Algo::Prloo | Algo::Copg => vec![
-            HostTensor::I32(flat_i32(toks, 0)),
-            HostTensor::F32(flat_f32(mask, 0)),
-            HostTensor::I32(flat_i32(toks, 1)),
-            HostTensor::F32(flat_f32(mask, 1)),
-            HostTensor::F32(flat_f32(blp, 0)),
-            HostTensor::F32(flat_f32(blp, 1)),
-            HostTensor::F32(flat_f32(rlp, 0)),
-            HostTensor::F32(flat_f32(rlp, 1)),
+            HostTensor::I32(flat_toks(0)),
+            HostTensor::F32(flat_mask(0)),
+            HostTensor::I32(flat_toks(1)),
+            HostTensor::F32(flat_mask(1)),
+            HostTensor::F32(flat_blp(0)),
+            HostTensor::F32(flat_blp(1)),
+            HostTensor::F32(flat_rlp(0)),
+            HostTensor::F32(flat_rlp(1)),
             HostTensor::F32(reward(0)),
             HostTensor::F32(reward(1)),
         ],
@@ -597,9 +776,10 @@ pub fn assemble(
             let mut toks_out = Vec::with_capacity(bg * s);
             let mut mask_out = Vec::with_capacity(bg * s);
             for p in &pairs {
+                let (lr, i) = row(p, 0);
                 for _ in 0..2 {
-                    toks_out.extend(toks(&p.0));
-                    mask_out.extend(mask(&p.0));
+                    toks_out.extend_from_slice(&lr.round.gen.tokens[i]);
+                    mask_out.extend_from_slice(&lr.round.gen.resp_mask[i]);
                 }
             }
             vec![HostTensor::I32(toks_out), HostTensor::F32(mask_out)]
@@ -609,6 +789,120 @@ pub fn assemble(
     let tensors = tensors.into_iter().map(BatchSlot::Host).collect();
 
     Ok(TrainBatch { artifact: algo.artifact(), tensors, episodes })
+}
+
+/// Run the `gather_pairs` executable over the rounds' resident buffers,
+/// returning the algorithm's train-batch device slots, or `None` to fall
+/// back to the host assembly: when the bundle lacks the artifact or the
+/// client returns root tuples ([`Engine::buffer_path_ready`]), when any
+/// round is unstaged or missing its chained rlp buffers (host-literal
+/// labelling fills neither), or when a RLOO-family batch lacks staged
+/// blp.
+///
+/// The `[2*Bp]` index vector — the ONLY per-batch upload — addresses the
+/// concatenated two-round row space (round r row i ↦ r·Bg + i); K=2
+/// batches bind the same round to both gather inputs, so indices stay
+/// below Bg and the concat's second half is simply never addressed.
+fn gather_pairs_device(
+    engine: &Engine,
+    algo: Algo,
+    rounds: &[LabelledRound],
+    pairs: &[Pair],
+) -> Result<Option<Vec<BatchSlot>>> {
+    let cfg = &engine.manifest.config;
+    let (bg, bp) = (cfg.gen_batch, cfg.train_pairs);
+    if !engine.buffer_path_ready("gather_pairs") {
+        return Ok(None);
+    }
+    if algo == Algo::BestOfN && 2 * bp != bg {
+        // tok_all/mask_all are [2*Bp, S]; train_bon consumes [Bg, S]
+        return Ok(None);
+    }
+    struct Side<'a> {
+        tok: &'a DeviceBuffer,
+        mask: &'a DeviceBuffer,
+        blp: &'a DeviceBuffer,
+        rlp: &'a DeviceBuffer,
+        rseq: &'a DeviceBuffer,
+    }
+    fn side_of(lr: &LabelledRound, needs_blp: bool) -> Option<Side<'_>> {
+        let rr = lr.resident.as_ref()?;
+        let rlp = rr.rlp_tok.as_ref()?;
+        let rseq = rr.rlp_seq.as_ref()?;
+        let blp = match rr.blp.as_ref() {
+            Some(b) => b,
+            // DPO / Best-of-N never read the gathered blp outputs: feed
+            // the (shape/dtype-identical) rlp buffer as a stand-in
+            // rather than paying a [B,S] upload for ignored data
+            None if !needs_blp => rlp,
+            None => return None,
+        };
+        Some(Side { tok: &rr.tokens, mask: &rr.resp_mask, blp, rlp, rseq })
+    }
+    let needs_blp = algo_stages_blp(algo);
+    let Some(a) = side_of(&rounds[0], needs_blp) else {
+        return Ok(None);
+    };
+    let Some(b) = side_of(&rounds[rounds.len() - 1], needs_blp) else {
+        return Ok(None);
+    };
+
+    let mut idx = Vec::with_capacity(2 * bp);
+    if algo == Algo::BestOfN {
+        // duplicated best rows in pair order: tok_all/mask_all then ARE
+        // the train_bon singles batch (each best twice, the host layout)
+        for p in pairs {
+            let g = (p.round * bg + p.best) as i32;
+            idx.push(g);
+            idx.push(g);
+        }
+    } else {
+        idx.extend(pairs.iter().map(|p| (p.round * bg + p.best) as i32));
+        idx.extend(pairs.iter().map(|p| (p.round * bg + p.worst) as i32));
+    }
+
+    let out = engine.execute_buffers(
+        "gather_pairs",
+        &[
+            CallArg::Device(a.tok),
+            CallArg::Device(a.mask),
+            CallArg::Device(a.blp),
+            CallArg::Device(a.rlp),
+            CallArg::Device(a.rseq),
+            CallArg::Device(b.tok),
+            CallArg::Device(b.mask),
+            CallArg::Device(b.blp),
+            CallArg::Device(b.rlp),
+            CallArg::Device(b.rseq),
+            CallArg::I32(&idx),
+        ],
+    )?;
+    // outputs (python/compile/losses.py::gather_pairs): 0..3 tok/mask per
+    // side, 4..7 blp/rlp per side, 8..9 rseq per side, 10..11 stacked
+    let mut out: Vec<Option<DeviceBuffer>> = out.into_iter().map(Some).collect();
+    let mut take = |i: usize| BatchSlot::Device(out[i].take().unwrap());
+    Ok(Some(match algo {
+        Algo::Dpo => vec![
+            take(0),
+            take(1),
+            take(2),
+            take(3),
+            take(8),
+            take(9),
+        ],
+        Algo::Rloo | Algo::Prloo | Algo::Copg => vec![
+            take(0),
+            take(1),
+            take(2),
+            take(3),
+            take(4),
+            take(5),
+            take(6),
+            take(7),
+        ],
+        Algo::BestOfN => vec![take(10), take(11)],
+        Algo::Ppo => unreachable!("PPO consumes the round layout directly"),
+    }))
 }
 
 /// How many generation rounds one train batch consumes.

@@ -10,7 +10,12 @@
 //!
 //! The `generate` artifact is untupled, so the call runs on the buffer
 //! path: params come from the engine's device cache (uploaded only on
-//! version bumps) and only the three sampled outputs are downloaded.
+//! version bumps) and only the three sampled outputs are downloaded. On
+//! an untupling client [`Generator::generate_staged`] additionally hands
+//! those three outputs back as device-resident [`GenBuffers`], which the
+//! sync trainer chains into its round staging — the round's tokens then
+//! never re-upload (the bytes *down* are identical on both paths; the
+//! host always needs the sampled round).
 //!
 //! Sampling happens in XLA (threefry), seeded per round from the caller's
 //! PRNG — runs remain deterministic per seed, but token streams differ
@@ -22,7 +27,7 @@ use std::cell::RefCell;
 
 use anyhow::Result;
 
-use super::{GenBatch, Generator, SampleOpts};
+use super::{GenBatch, GenBuffers, Generator, SampleOpts};
 use crate::runtime::{CallArg, Engine, ParamView};
 use crate::tokenizer as tk;
 use crate::util::rng::Pcg32;
@@ -32,6 +37,99 @@ pub struct FusedEngine {
     /// Flattened-prompt scratch, reused across rounds: one allocation per
     /// engine instead of one per call.
     scratch: RefCell<Vec<i32>>,
+}
+
+/// Reassemble the executable's three flattened outputs into a [`GenBatch`]
+/// (row split, EOS-termination scan) — shared by both transport paths so
+/// they cannot drift.
+fn batch_from_flat(
+    toks_flat: Vec<i32>,
+    mask_flat: Vec<f32>,
+    blp_flat: Vec<f32>,
+    s: usize,
+    p: usize,
+) -> GenBatch {
+    let tokens: Vec<Vec<i32>> =
+        toks_flat.chunks_exact(s).map(<[i32]>::to_vec).collect();
+    let resp_mask: Vec<Vec<f32>> =
+        mask_flat.chunks_exact(s).map(<[f32]>::to_vec).collect();
+    let blp: Vec<Vec<f32>> =
+        blp_flat.chunks_exact(s).map(<[f32]>::to_vec).collect();
+    let terminated: Vec<bool> = tokens
+        .iter()
+        .zip(&resp_mask)
+        .map(|(t, m)| {
+            t.iter()
+                .zip(m)
+                .any(|(&tok, &mm)| tok == tk::EOS && mm == 1.0)
+        })
+        .collect();
+    GenBatch {
+        tokens,
+        resp_mask,
+        blp,
+        terminated,
+        steps: s - p, // fixed-length loop: no early exit on device
+    }
+}
+
+impl FusedEngine {
+    /// One fused round. `want_buffers` additionally keeps the outputs
+    /// device-resident (untupling clients only — before the capability is
+    /// known, and under the root-tuple fallback, `call_with` is the
+    /// cheaper transport and the one that settles the capability).
+    fn run(
+        &self,
+        engine: &Engine,
+        params: ParamView<'_>,
+        prompts: &[Vec<i32>],
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+        want_buffers: bool,
+    ) -> Result<(GenBatch, Option<GenBuffers>)> {
+        let cfg = &engine.manifest.config;
+        let (b, p, s) = (cfg.gen_batch, cfg.prompt_len, cfg.seq_len);
+        assert_eq!(prompts.len(), b, "gen_batch is fixed at {b}");
+        // temperature <= 0 selects greedy argmax inside the executable
+        let temp = if opts.greedy { -1.0 } else { opts.temperature };
+        let seed = (rng.next_u32() >> 1) as i32; // non-negative seed
+        let mut prompt_flat = self.scratch.borrow_mut();
+        prompt_flat.clear();
+        prompt_flat.reserve(b * p);
+        for row in prompts {
+            assert_eq!(row.len(), p, "prompts must be fixed-length");
+            prompt_flat.extend_from_slice(&row[..p]);
+        }
+        let args = [
+            CallArg::Param(params),
+            CallArg::I32(&prompt_flat),
+            CallArg::ScalarI32(seed),
+            CallArg::ScalarF32(temp),
+        ];
+        if want_buffers && engine.buffer_path_ready("generate") {
+            let outs = engine.execute_buffers("generate", &args)?;
+            // the host needs the whole round regardless (gold scoring,
+            // pair selection, metrics): bytes down match call_with
+            let toks_flat = engine.download(&outs[0])?.into_i32()?;
+            let mask_flat = engine.download(&outs[1])?.into_f32()?;
+            let blp_flat = engine.download(&outs[2])?.into_f32()?;
+            let gen = batch_from_flat(toks_flat, mask_flat, blp_flat, s, p);
+            let mut it = outs.into_iter();
+            let buffers = GenBuffers {
+                tokens: it.next().unwrap(),
+                resp_mask: it.next().unwrap(),
+                blp: it.next().unwrap(),
+            };
+            Ok((gen, Some(buffers)))
+        } else {
+            let out = engine.call_with("generate", &args)?;
+            let mut it = out.into_iter();
+            let toks_flat = it.next().unwrap().into_i32()?;
+            let mask_flat = it.next().unwrap().into_f32()?;
+            let blp_flat = it.next().unwrap().into_f32()?;
+            Ok((batch_from_flat(toks_flat, mask_flat, blp_flat, s, p), None))
+        }
+    }
 }
 
 impl Generator for FusedEngine {
@@ -47,56 +145,18 @@ impl Generator for FusedEngine {
         opts: SampleOpts,
         rng: &mut Pcg32,
     ) -> Result<GenBatch> {
-        let cfg = &engine.manifest.config;
-        let (b, p, s) = (cfg.gen_batch, cfg.prompt_len, cfg.seq_len);
-        assert_eq!(prompts.len(), b, "gen_batch is fixed at {b}");
-        // temperature <= 0 selects greedy argmax inside the executable
-        let temp = if opts.greedy { -1.0 } else { opts.temperature };
-        let seed = (rng.next_u32() >> 1) as i32; // non-negative seed
-        let out = {
-            let mut prompt_flat = self.scratch.borrow_mut();
-            prompt_flat.clear();
-            prompt_flat.reserve(b * p);
-            for row in prompts {
-                assert_eq!(row.len(), p, "prompts must be fixed-length");
-                prompt_flat.extend_from_slice(&row[..p]);
-            }
-            engine.call_with(
-                "generate",
-                &[
-                    CallArg::Param(params),
-                    CallArg::I32(&prompt_flat),
-                    CallArg::ScalarI32(seed),
-                    CallArg::ScalarF32(temp),
-                ],
-            )?
-        };
-        let mut it = out.into_iter();
-        let toks_flat = it.next().unwrap().into_i32()?;
-        let mask_flat = it.next().unwrap().into_f32()?;
-        let blp_flat = it.next().unwrap().into_f32()?;
+        self.run(engine, params, prompts, opts, rng, false)
+            .map(|(gen, _)| gen)
+    }
 
-        let tokens: Vec<Vec<i32>> =
-            toks_flat.chunks_exact(s).map(<[i32]>::to_vec).collect();
-        let resp_mask: Vec<Vec<f32>> =
-            mask_flat.chunks_exact(s).map(<[f32]>::to_vec).collect();
-        let blp: Vec<Vec<f32>> =
-            blp_flat.chunks_exact(s).map(<[f32]>::to_vec).collect();
-        let terminated: Vec<bool> = tokens
-            .iter()
-            .zip(&resp_mask)
-            .map(|(t, m)| {
-                t.iter()
-                    .zip(m)
-                    .any(|(&tok, &mm)| tok == tk::EOS && mm == 1.0)
-            })
-            .collect();
-        Ok(GenBatch {
-            tokens,
-            resp_mask,
-            blp,
-            terminated,
-            steps: s - p, // fixed-length loop: no early exit on device
-        })
+    fn generate_staged(
+        &self,
+        engine: &Engine,
+        params: ParamView<'_>,
+        prompts: &[Vec<i32>],
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Result<(GenBatch, Option<GenBuffers>)> {
+        self.run(engine, params, prompts, opts, rng, true)
     }
 }

@@ -40,9 +40,25 @@ pub mod sampler;
 
 use anyhow::Result;
 
-use crate::runtime::{Engine, ParamView};
+use crate::runtime::{DeviceBuffer, Engine, ParamView};
 use crate::tokenizer as tk;
 use crate::util::rng::Pcg32;
+
+/// A generation round's output tensors still resident on the producing
+/// engine's device: flattened `[B*S]` tokens, response mask and behaviour
+/// logprobs, exactly the fused `generate` executable's three outputs.
+/// Cloning shares the underlying PJRT buffers (cheap `Rc` bump).
+///
+/// Device buffers belong to the engine that created them, so these are
+/// only useful to same-thread/same-engine consumers: the sync trainer
+/// chains them into its round staging (zero token uploads per round);
+/// async rounds cross the worker→trainer thread boundary as plain host
+/// data instead.
+pub struct GenBuffers {
+    pub tokens: DeviceBuffer,
+    pub resp_mask: DeviceBuffer,
+    pub blp: DeviceBuffer,
+}
 
 /// One generation round over the fixed gen_batch.
 #[derive(Debug, Clone)]
@@ -118,6 +134,24 @@ pub trait Generator {
         opts: SampleOpts,
         rng: &mut Pcg32,
     ) -> Result<GenBatch>;
+
+    /// Like [`Generator::generate`], additionally returning the round's
+    /// output tensors as device-resident [`GenBuffers`] when the engine
+    /// produced them on the buffer path (the fused engine on an untupling
+    /// client). Same host result either way — the buffers are a bonus the
+    /// sync trainer chains into its round staging. Engines whose outputs
+    /// are host-assembled (the step-wise tiers) keep this default and
+    /// return `None`.
+    fn generate_staged(
+        &self,
+        engine: &Engine,
+        params: ParamView<'_>,
+        prompts: &[Vec<i32>],
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Result<(GenBatch, Option<GenBuffers>)> {
+        Ok((self.generate(engine, params, prompts, opts, rng)?, None))
+    }
 }
 
 /// Shared decode-loop state machine: token bookkeeping, EOS termination,

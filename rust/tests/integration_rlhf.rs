@@ -8,8 +8,9 @@ use async_rlhf::config::{Algo, ExpConfig, Mode};
 use async_rlhf::coordinator;
 use async_rlhf::coordinator::pipeline::staleness_bound_updates;
 use async_rlhf::coordinator::trainer::{
-    assemble, generate_round, label_round, make_resident, sample_opts,
-    train_on_batch, LabelScratch, LabelledRound, ROUND_ORIGIN,
+    algo_stages_blp, assemble, generate_round, generate_round_staged,
+    label_round, make_resident, sample_opts, train_on_batch, BatchSlot,
+    LabelScratch, LabelledRound, Round, ROUND_ORIGIN,
 };
 use async_rlhf::eval::evaluate;
 use async_rlhf::gen::fused::FusedEngine;
@@ -192,16 +193,16 @@ fn resident_round_labels_match_host_literal_labels() {
     .unwrap();
     // the fused generate above settled the client capability; on a
     // root-tuple client the resident path stays off by design
-    let Some(resident) =
-        make_resident(engine, &round.gen, prep.rm_scorer(), false, &mut scratch)
-            .unwrap()
-    else {
+    let Some(mut resident) = make_resident(
+        engine, &round.gen, None, prep.rm_scorer(), false, true, &mut scratch,
+    )
+    .unwrap() else {
         eprintln!("SKIP: PJRT client returns root tuples (no zero-copy staging)");
         return;
     };
     let labels = label_round(
         engine, &round, &prep.sft_params, prep.rm_scorer(), 2,
-        cfg.eos_penalty, false, &mut scratch, Some(&resident),
+        cfg.eos_penalty, false, &mut scratch, Some(&mut resident),
     )
     .unwrap();
     assert_eq!(baseline.rewards, labels.rewards, "RM scores diverged");
@@ -216,12 +217,13 @@ fn resident_round_labels_match_host_literal_labels() {
     // --- per-round byte counter (ref/rm caches are warm by now) ---
     let mut state = TrainState::new(prep.sft_params.clone());
     engine.reset_stats();
-    let resident =
-        make_resident(engine, &round.gen, prep.rm_scorer(), false, &mut scratch)
-            .unwrap();
+    let mut resident = make_resident(
+        engine, &round.gen, None, prep.rm_scorer(), false, true, &mut scratch,
+    )
+    .unwrap();
     let labels = label_round(
         engine, &round, &prep.sft_params, prep.rm_scorer(), 2,
-        cfg.eos_penalty, false, &mut scratch, resident.as_ref(),
+        cfg.eos_penalty, false, &mut scratch, resident.as_mut(),
     )
     .unwrap();
     let lr = LabelledRound { round, labels, resident };
@@ -231,18 +233,397 @@ fn resident_round_labels_match_host_literal_labels() {
     let stats = engine.stats();
     let tensor_bytes = (4 * b * s) as u64; // one [B*S] tensor, i32 or f32
     let up = |k: &str| stats.get(k).map_or(0, |st| st.bytes_up);
-    // tokens + resp_mask + rm_mask staged exactly once, under "round"
-    assert_eq!(up(ROUND_ORIGIN), 3 * tensor_bytes, "round staged more than once");
+    // tokens + resp_mask + blp + rm_mask staged exactly once, under
+    // "round" (blp joined the staged set so PPO/RLOO batches reuse it)
+    assert_eq!(up(ROUND_ORIGIN), 4 * tensor_bytes, "round staged more than once");
     // labelling re-uploads NOTHING (params are cache hits, inputs shared)
     assert_eq!(up("logprob_dev"), 0, "logprob_dev re-uploaded round tensors");
     assert_eq!(up("score_rm"), 0, "score_rm re-uploaded round tensors");
-    // the train batch uploads only blp + rlp + rewards (+ 2 scalars) —
-    // tokens/mask ride the shared device buffers
+    // the train batch uploads only rewards (+ 2 scalars) — tokens/mask/
+    // blp ride the staged buffers and rlp chains from logprob_dev
     assert_eq!(
         up("train_ppo"),
-        2 * tensor_bytes + (4 * b) as u64 + 8,
-        "train_ppo re-uploaded round tokens/mask"
+        (4 * b) as u64 + 8,
+        "train_ppo re-uploaded round tensors"
     );
+}
+
+/// Clone a round's host data (Round is deliberately not Clone — the two
+/// assembly paths under comparison need independent LabelledRounds).
+fn clone_round(round: &Round) -> Round {
+    Round {
+        gen: round.gen.clone(),
+        examples: round.examples.clone(),
+        start_index: round.start_index,
+        params_version: round.params_version,
+        gen_secs: 0.0,
+        gen_span: (0.0, 0.0),
+    }
+}
+
+#[test]
+fn pair_gather_matches_host_assembly_bitwise() {
+    // Device-side pair gather vs host assembly: same rounds, same labels,
+    // same seeds ⇒ bitwise-identical train metrics AND post-update
+    // parameters, for DPO and RLOO at K=2 and the K=4 two-round ladder.
+    // The gather permutes the very same values the host path flattens, so
+    // any divergence is a transport bug.
+    if !dev_available() {
+        return;
+    }
+    let cfg = test_cfg("pair_gather_eq");
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let engine = &prep.engine;
+    if !engine.manifest.has_artifact("gather_pairs") {
+        eprintln!("SKIP: bundle lacks gather_pairs — rebuild artifacts");
+        return;
+    }
+    let generator = FusedEngine::default();
+    let mut scratch = LabelScratch::default();
+    let origin = std::time::Instant::now();
+    for (algo, k) in [
+        (Algo::Dpo, 2usize),
+        (Algo::Rloo, 2),
+        (Algo::Dpo, 4),
+        (Algo::Rloo, 4),
+    ] {
+        let rpb = async_rlhf::coordinator::trainer::rounds_per_batch(k);
+        let mut rng = Pcg32::new(23, k as u64);
+        let mut host_rounds = Vec::with_capacity(rpb);
+        let mut dev_rounds = Vec::with_capacity(rpb);
+        let mut skipped = false;
+        for r in 0..rpb {
+            let round = generate_round(
+                engine,
+                &generator,
+                ParamView::cached("policy", 0, &prep.sft_params),
+                0,
+                &prep.taskgen,
+                1000 + (r as u64) * 64,
+                k,
+                sample_opts(&cfg),
+                &mut rng,
+                origin,
+            )
+            .unwrap();
+            let round2 = clone_round(&round);
+            let labels_h = label_round(
+                engine, &round, &prep.sft_params, prep.rm_scorer(), k,
+                cfg.eos_penalty, false, &mut scratch, None,
+            )
+            .unwrap();
+            let mut resident = make_resident(
+                engine, &round.gen, None, prep.rm_scorer(), false,
+                algo_stages_blp(algo), &mut scratch,
+            )
+            .unwrap();
+            if resident.is_none() {
+                eprintln!("SKIP: PJRT client returns root tuples");
+                skipped = true;
+                break;
+            }
+            let labels_d = label_round(
+                engine, &round, &prep.sft_params, prep.rm_scorer(), k,
+                cfg.eos_penalty, false, &mut scratch, resident.as_mut(),
+            )
+            .unwrap();
+            host_rounds.push(LabelledRound {
+                round,
+                labels: labels_h,
+                resident: None,
+            });
+            dev_rounds.push(LabelledRound { round: round2, labels: labels_d, resident });
+        }
+        if skipped {
+            return;
+        }
+        let batch_h = assemble(engine, algo, &host_rounds, k).unwrap();
+        let batch_d = assemble(engine, algo, &dev_rounds, k).unwrap();
+        // the device batch must actually ride device buffers (rewards are
+        // the RLOO family's host tail)
+        let n_dev = if algo == Algo::Dpo { 6 } else { 8 };
+        assert!(
+            batch_d
+                .tensors
+                .iter()
+                .take(n_dev)
+                .all(|t| matches!(t, BatchSlot::Device(_))),
+            "{algo} k={k}: gather path fell back to host slots"
+        );
+        let mut state_h = TrainState::new(prep.sft_params.clone());
+        let mut state_d = TrainState::new(prep.sft_params.clone());
+        let m_h = train_on_batch(engine, &mut state_h, &batch_h, 1e-3, 2).unwrap();
+        let m_d = train_on_batch(engine, &mut state_d, &batch_d, 1e-3, 2).unwrap();
+        assert_eq!(m_h, m_d, "{algo} k={k}: train metrics diverged");
+        assert_eq!(
+            state_h.into_params(engine).unwrap(),
+            state_d.into_params(engine).unwrap(),
+            "{algo} k={k}: post-update parameters diverged"
+        );
+    }
+}
+
+#[test]
+fn pair_gather_uploads_index_vector_only() {
+    // The acceptance byte counter: on an untupling client a DPO train
+    // batch uploads NO [B,S] host tensors — the [2*Bp] pair-index vector
+    // (gather_pairs bucket) plus the two train scalars are everything;
+    // staging the round costs tokens+mask+rm_mask once under ROUND_ORIGIN
+    // (no blp: DPO never reads it). RLOO adds the staged blp tensor and
+    // the two [Bp] reward vectors.
+    if !dev_available() {
+        return;
+    }
+    let cfg = test_cfg("pair_gather_bytes");
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let engine = &prep.engine;
+    if !engine.manifest.has_artifact("gather_pairs") {
+        eprintln!("SKIP: bundle lacks gather_pairs — rebuild artifacts");
+        return;
+    }
+    let mcfg = engine.manifest.config.clone();
+    let (b, s, bp) = (mcfg.gen_batch, mcfg.seq_len, mcfg.train_pairs);
+    let generator = FusedEngine::default();
+    let mut scratch = LabelScratch::default();
+    let origin = std::time::Instant::now();
+    let mut rng = Pcg32::new(29, 1);
+    let mut state = TrainState::new(prep.sft_params.clone());
+    let tensor_bytes = (4 * b * s) as u64;
+    let idx_bytes = (4 * 2 * bp) as u64;
+
+    for (algo, warm) in [(Algo::Dpo, true), (Algo::Rloo, false)] {
+        let round = generate_round(
+            engine,
+            &generator,
+            ParamView::cached("policy", 0, &prep.sft_params),
+            0,
+            &prep.taskgen,
+            2000,
+            2,
+            sample_opts(&cfg),
+            &mut rng,
+            origin,
+        )
+        .unwrap();
+        if warm {
+            // warm the ref/rm caches and the device train state so the
+            // measured pass holds steady-state traffic only
+            let labels = label_round(
+                engine, &round, &prep.sft_params, prep.rm_scorer(), 2,
+                cfg.eos_penalty, false, &mut scratch, None,
+            )
+            .unwrap();
+            let lr = LabelledRound {
+                round: clone_round(&round),
+                labels,
+                resident: None,
+            };
+            let batch = assemble(engine, algo, std::slice::from_ref(&lr), 2).unwrap();
+            train_on_batch(engine, &mut state, &batch, 1e-4, 1).unwrap();
+        }
+        engine.reset_stats();
+        let Some(mut resident) = make_resident(
+            engine, &round.gen, None, prep.rm_scorer(), false,
+            algo_stages_blp(algo), &mut scratch,
+        )
+        .unwrap() else {
+            eprintln!("SKIP: PJRT client returns root tuples");
+            return;
+        };
+        let labels = label_round(
+            engine, &round, &prep.sft_params, prep.rm_scorer(), 2,
+            cfg.eos_penalty, false, &mut scratch, Some(&mut resident),
+        )
+        .unwrap();
+        let lr = LabelledRound { round, labels, resident: Some(resident) };
+        let batch = assemble(engine, algo, std::slice::from_ref(&lr), 2).unwrap();
+        train_on_batch(engine, &mut state, &batch, 1e-4, 1).unwrap();
+
+        let stats = engine.stats();
+        let up = |k: &str| stats.get(k).map_or(0, |st| st.bytes_up);
+        let staged_tensors = if algo_stages_blp(algo) { 4 } else { 3 };
+        assert_eq!(
+            up(ROUND_ORIGIN),
+            staged_tensors * tensor_bytes,
+            "{algo}: unexpected round staging traffic"
+        );
+        assert_eq!(up("gather_pairs"), idx_bytes, "{algo}: gather uploaded more than the index");
+        let train_up = up(algo.artifact());
+        let expect_train = if algo == Algo::Dpo {
+            8 // step + lr scalars
+        } else {
+            8 + (2 * 4 * bp) as u64 // + the two [Bp] reward vectors
+        };
+        assert_eq!(train_up, expect_train, "{algo}: train batch uploaded [B,S] host tensors");
+        assert_eq!(up("logprob_dev"), 0);
+        assert_eq!(up("score_rm"), 0);
+    }
+}
+
+#[test]
+fn pair_gather_sync_round_stages_zero_token_uploads() {
+    // Sync-mode chaining: a round generated on the trainer's own engine
+    // hands its fused-generate buffers straight into the round staging,
+    // so the round's tokens upload ZERO times — total upload traffic for
+    // stage+label+assemble+train is the RM validity mask (host-derived),
+    // the pair-index vector and the two train scalars.
+    if !dev_available() {
+        return;
+    }
+    let cfg = test_cfg("pair_gather_sync");
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let engine = &prep.engine;
+    if !engine.manifest.has_artifact("gather_pairs") {
+        eprintln!("SKIP: bundle lacks gather_pairs — rebuild artifacts");
+        return;
+    }
+    let mcfg = engine.manifest.config.clone();
+    let (b, s, bp) = (mcfg.gen_batch, mcfg.seq_len, mcfg.train_pairs);
+    let generator = FusedEngine::default();
+    let mut scratch = LabelScratch::default();
+    let origin = std::time::Instant::now();
+    let mut rng = Pcg32::new(31, 2);
+    let mut state = TrainState::new(prep.sft_params.clone());
+
+    // one full warm cycle: settles the untuple capability (first fused
+    // call), fills the ref/rm caches and stages the device train state
+    let warm = generate_round_staged(
+        engine,
+        &generator,
+        ParamView::cached("policy", 0, &prep.sft_params),
+        0,
+        &prep.taskgen,
+        3000,
+        2,
+        sample_opts(&cfg),
+        &mut rng,
+        origin,
+    )
+    .unwrap();
+    let labels = label_round(
+        engine, &warm.round, &prep.sft_params, prep.rm_scorer(), 2,
+        cfg.eos_penalty, false, &mut scratch, None,
+    )
+    .unwrap();
+    let lr = LabelledRound { round: clone_round(&warm.round), labels, resident: None };
+    let batch = assemble(engine, Algo::Dpo, std::slice::from_ref(&lr), 2).unwrap();
+    train_on_batch(engine, &mut state, &batch, 1e-4, 1).unwrap();
+
+    let sr = generate_round_staged(
+        engine,
+        &generator,
+        ParamView::cached("policy", 0, &prep.sft_params),
+        0,
+        &prep.taskgen,
+        3064,
+        2,
+        sample_opts(&cfg),
+        &mut rng,
+        origin,
+    )
+    .unwrap();
+    let Some(staged) = sr.staged.as_ref() else {
+        eprintln!("SKIP: PJRT client returns root tuples (no generate chaining)");
+        return;
+    };
+    engine.reset_stats();
+    let mut resident = make_resident(
+        engine, &sr.round.gen, Some(staged), prep.rm_scorer(), false,
+        algo_stages_blp(Algo::Dpo), &mut scratch,
+    )
+    .unwrap()
+    .expect("untupling client must stage");
+    let labels = label_round(
+        engine, &sr.round, &prep.sft_params, prep.rm_scorer(), 2,
+        cfg.eos_penalty, false, &mut scratch, Some(&mut resident),
+    )
+    .unwrap();
+    let lr = LabelledRound { round: sr.round, labels, resident: Some(resident) };
+    let batch = assemble(engine, Algo::Dpo, std::slice::from_ref(&lr), 2).unwrap();
+    train_on_batch(engine, &mut state, &batch, 1e-4, 1).unwrap();
+
+    let stats = engine.stats();
+    let up = |k: &str| stats.get(k).map_or(0, |st| st.bytes_up);
+    let tensor_bytes = (4 * b * s) as u64;
+    // ROUND_ORIGIN carries the rm_mask ONLY: tokens/mask/blp chained from
+    // the generate buffers, zero uploads
+    assert_eq!(up(ROUND_ORIGIN), tensor_bytes, "sync round re-uploaded tokens");
+    assert_eq!(up("gather_pairs"), (4 * 2 * bp) as u64);
+    assert_eq!(up("train_dpo"), 8);
+    // the grand total: mask + index + scalars, nothing else moved up
+    assert_eq!(
+        engine.transfer_totals().0,
+        tensor_bytes + (4 * 2 * bp) as u64 + 8,
+        "sync round moved unexpected host→device bytes"
+    );
+}
+
+#[test]
+fn pair_gather_resident_blp_rlp_round_trip() {
+    // The staged blp tensor and the chained rlp buffers must read back
+    // bitwise-equal to their host-side sources — and the sync-chained
+    // generate buffers must mirror the host GenBatch exactly.
+    if !dev_available() {
+        return;
+    }
+    let cfg = test_cfg("pair_gather_rt");
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let engine = &prep.engine;
+    let generator = FusedEngine::default();
+    let mut scratch = LabelScratch::default();
+    let origin = std::time::Instant::now();
+    let mut rng = Pcg32::new(37, 3);
+    let sr = generate_round_staged(
+        engine,
+        &generator,
+        ParamView::cached("policy", 0, &prep.sft_params),
+        0,
+        &prep.taskgen,
+        4000,
+        2,
+        sample_opts(&cfg),
+        &mut rng,
+        origin,
+    )
+    .unwrap();
+    let round = sr.round;
+    let Some(mut resident) = make_resident(
+        engine, &round.gen, None, prep.rm_scorer(), false, true, &mut scratch,
+    )
+    .unwrap() else {
+        eprintln!("SKIP: PJRT client returns root tuples");
+        return;
+    };
+    let labels = label_round(
+        engine, &round, &prep.sft_params, prep.rm_scorer(), 2,
+        cfg.eos_penalty, false, &mut scratch, Some(&mut resident),
+    )
+    .unwrap();
+    let blp_host: Vec<f32> = round.gen.blp.concat();
+    let rt = |buf| engine.download(buf).unwrap().into_f32().unwrap();
+    assert_eq!(rt(resident.blp.as_ref().unwrap()), blp_host, "staged blp");
+    assert_eq!(
+        rt(resident.rlp_tok.as_ref().unwrap()),
+        labels.rlp_tok,
+        "chained rlp_tok"
+    );
+    assert_eq!(
+        rt(resident.rlp_seq.as_ref().unwrap()),
+        labels.rlp_seq,
+        "chained rlp_seq"
+    );
+    // sync-chained generate buffers mirror the host GenBatch bitwise
+    if let Some(gb) = &sr.staged {
+        let toks_host: Vec<i32> = round.gen.tokens.concat();
+        let mask_host: Vec<f32> = round.gen.resp_mask.concat();
+        assert_eq!(
+            engine.download(&gb.tokens).unwrap().into_i32().unwrap(),
+            toks_host,
+            "chained tokens"
+        );
+        assert_eq!(rt(&gb.resp_mask), mask_host, "chained resp_mask");
+        assert_eq!(rt(&gb.blp), blp_host, "chained blp");
+    }
 }
 
 #[test]

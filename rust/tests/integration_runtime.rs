@@ -16,7 +16,7 @@ use async_rlhf::gen::{
     naive::NaiveEngine, Generator, SampleOpts,
 };
 use async_rlhf::runtime::{
-    scalar_f32, CallArg, Engine, HostTensor, ParamView, TrainState,
+    scalar_f32, CallArg, DType, Engine, HostTensor, ParamView, TrainState,
 };
 use async_rlhf::tokenizer as tk;
 use async_rlhf::util::rng::Pcg32;
@@ -682,4 +682,75 @@ fn train_state_scalar_plumbing() {
         "lr=0 must be a no-op on params"
     );
     let _ = scalar_f32(0.0);
+}
+
+#[test]
+fn pair_gather_manifest_entry_parses_and_executes() {
+    // The gather_pairs manifest entry written by aot.py must round-trip
+    // through the Rust manifest parser (untupled flag, 11-input/12-output
+    // signature, index-vector shape) and the executable must really
+    // permute rows: marker tensors come back in pair-index order on both
+    // the per-side and the stacked outputs.
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let cfg = engine.manifest.config.clone();
+    let (bg, s, bp) = (cfg.gen_batch, cfg.seq_len, cfg.train_pairs);
+    let spec = engine.manifest.artifact("gather_pairs").unwrap().clone();
+    assert!(spec.untupled, "gather_pairs must run on the buffer path");
+    assert_eq!(spec.inputs.len(), 11);
+    assert_eq!(spec.outputs.len(), 12);
+    assert_eq!(spec.inputs[10].shape, vec![2 * bp], "pair index vector");
+    assert_eq!(spec.inputs[10].dtype, DType::I32);
+    assert_eq!(spec.inputs[0].numel(), bg * s);
+    assert_eq!(spec.outputs[0].numel(), bp * s, "side outputs are [Bp,S]");
+    assert_eq!(spec.outputs[8].numel(), bp, "rseq outputs are [Bp]");
+    assert_eq!(spec.outputs[10].numel(), 2 * bp * s, "stacked is [2Bp,S]");
+
+    // marker rows: round-a row i holds value i, round-b row i holds Bg+i
+    let row_marked_i32 = |base: i32| -> Vec<i32> {
+        (0..bg * s).map(|j| base + (j / s) as i32).collect()
+    };
+    let row_marked_f32 = |base: f32| -> Vec<f32> {
+        (0..bg * s).map(|j| base + (j / s) as f32).collect()
+    };
+    let rseq_a: Vec<f32> = (0..bg).map(|i| i as f32).collect();
+    let rseq_b: Vec<f32> = (0..bg).map(|i| (bg + i) as f32).collect();
+    let mut idx: Vec<i32> = (0..2 * bp as i32).rev().collect(); // any permutation
+    idx[0] = (2 * bg - 1) as i32; // reach into round b's last row
+    let tok_a = row_marked_i32(0);
+    let tok_b = row_marked_i32(bg as i32);
+    let f_a = row_marked_f32(0.0);
+    let f_b = row_marked_f32(bg as f32);
+    let out = engine
+        .execute_buffers(
+            "gather_pairs",
+            &[
+                CallArg::I32(&tok_a),
+                CallArg::F32(&f_a),
+                CallArg::F32(&f_a),
+                CallArg::F32(&f_a),
+                CallArg::F32(&rseq_a),
+                CallArg::I32(&tok_b),
+                CallArg::F32(&f_b),
+                CallArg::F32(&f_b),
+                CallArg::F32(&f_b),
+                CallArg::F32(&rseq_b),
+                CallArg::I32(&idx),
+            ],
+        )
+        .unwrap();
+    let tok1 = engine.download(&out[0]).unwrap().into_i32().unwrap();
+    let tok2 = engine.download(&out[2]).unwrap().into_i32().unwrap();
+    let rseq1 = engine.download(&out[8]).unwrap().into_f32().unwrap();
+    let tok_all = engine.download(&out[10]).unwrap().into_i32().unwrap();
+    for (p, &want) in idx[..bp].iter().enumerate() {
+        assert!(tok1[p * s..(p + 1) * s].iter().all(|&t| t == want));
+        assert_eq!(rseq1[p], want as f32);
+    }
+    for (p, &want) in idx[bp..].iter().enumerate() {
+        assert!(tok2[p * s..(p + 1) * s].iter().all(|&t| t == want));
+    }
+    for (r, &want) in idx.iter().enumerate() {
+        assert!(tok_all[r * s..(r + 1) * s].iter().all(|&t| t == want));
+    }
 }

@@ -8,7 +8,9 @@
 use async_rlhf::coordinator::pipeline::{
     cursor_stride, staleness_bound_updates,
 };
-use async_rlhf::coordinator::trainer::{round_prompts, rounds_per_batch};
+use async_rlhf::coordinator::trainer::{
+    best_worst, round_prompts, rounds_per_batch,
+};
 use async_rlhf::data::{pack_sequence, Task, TaskGen};
 use async_rlhf::metrics::Phase;
 use async_rlhf::prop_assert;
@@ -34,6 +36,56 @@ fn prompts_are_duplicated_k_times_contiguously() {
                     prompts[pi * k + j] == ex.prompt,
                     "slot {} not a copy of prompt {pi}",
                     pi * k + j
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pair_gather_best_worst_is_nan_safe() {
+    // The trainer's best/worst selection must never panic — a NaN reward
+    // (exploding RM, poisoned logprob) is exactly the input that crashed
+    // `partial_cmp(..).unwrap()`. With `total_cmp` it stays a total order:
+    // indices remain in range, and NaN-free groups agree with the naive
+    // float ordering.
+    prop_check("best/worst NaN safety", 300, |rng| {
+        let k = if rng.gen_bool(0.5) { 2 } else { 4 };
+        let groups = 1 + rng.gen_usize(6);
+        let mut rewards: Vec<f32> = (0..groups * k)
+            .map(|_| (rng.gen_f64() as f32) * 4.0 - 2.0)
+            .collect();
+        for r in rewards.iter_mut() {
+            if rng.gen_bool(0.2) {
+                *r = f32::NAN;
+            }
+        }
+        for g in 0..groups {
+            let slots = g * k..(g + 1) * k;
+            // must not panic, whatever the rewards contain
+            let (best, worst) = best_worst(&rewards, slots.clone());
+            prop_assert!(
+                slots.contains(&best) && slots.contains(&worst),
+                "selection out of range: {best}/{worst} vs {slots:?}"
+            );
+            if rewards[slots.clone()].iter().all(|r| !r.is_nan()) {
+                let naive_best = slots
+                    .clone()
+                    .max_by(|&a, &b| {
+                        rewards[a].partial_cmp(&rewards[b]).unwrap()
+                    })
+                    .unwrap();
+                let naive_worst = slots
+                    .clone()
+                    .min_by(|&a, &b| {
+                        rewards[a].partial_cmp(&rewards[b]).unwrap()
+                    })
+                    .unwrap();
+                prop_assert!(
+                    rewards[best] == rewards[naive_best]
+                        && rewards[worst] == rewards[naive_worst],
+                    "NaN-free group diverged from the seed ordering"
                 );
             }
         }
