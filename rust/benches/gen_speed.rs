@@ -1,19 +1,30 @@
 //! Bench: generation-engine speed — paper Fig 14 / Appendix C.1, extended
-//! with the device-KV tier.
+//! with the device-KV tier and the continuous in-flight batching pool.
 //!
-//! Four tiers over the same compiled model, per scale: fused (one call per
+//! Five tiers over the same compiled model, per scale: fused (one call per
 //! round), device (step-wise, KV chained device-to-device), cached
 //! (step-wise, KV round-tripping through PJRT literals — the vLLM-vs-HF
-//! middle tier as measured), naive (full recompute, HF analogue). Besides
-//! wall-clock, each tier's host↔device traffic is taken from the engine's
-//! per-artifact `CallStats` and reported as bytes/token — the device tier
-//! must move strictly fewer bytes/token than the literal cached tier
-//! (that is the point of KV chaining). Results are dumped to
-//! `BENCH_gen_speed.json` (override with `ASYNC_RLHF_BENCH_OUT`) so the
-//! perf trajectory is tracked alongside `BENCH_hot_path.json`.
-//! `cargo bench --bench gen_speed`.
+//! middle tier as measured), naive (full recompute, HF analogue), and
+//! continuous (slot pool with EOS retirement + mid-flight admission over
+//! the same prefill_dev/decode_dev artifacts as the device tier). Besides
+//! wall-clock and host↔device traffic (bytes/token from the engine's
+//! per-artifact `CallStats`), every tier reports slot-pool efficiency:
+//! occupancy (useful tokens per slot-sweep), padding_waste (1 −
+//! occupancy: the fraction of slot-steps burned on retired/PAD rows —
+//! this is the number continuous batching exists to shrink), p50/p99
+//! tokens-to-retire tail latency, and decode-call amplification per
+//! sweep (the honesty column for the cohort design: each live cohort
+//! costs one decode_dev call per sweep). The device tier must move
+//! strictly fewer bytes/token than the literal cached tier, and the
+//! continuous tier must match or beat every fixed tier's occupancy.
+//! Results are dumped to `BENCH_gen_speed.json` (override with
+//! `ASYNC_RLHF_BENCH_OUT`) so the perf trajectory is tracked alongside
+//! `BENCH_hot_path.json`. `cargo bench --bench gen_speed`.
 
 use async_rlhf::data::{Task, TaskGen};
+use async_rlhf::gen::continuous::{
+    AdmitSeq, ContinuousEngine, DeviceBackend, Pool, PoolCfg,
+};
 use async_rlhf::gen::{
     cached::CachedEngine, device::DeviceCachedEngine, fused::FusedEngine,
     naive::NaiveEngine, Generator, SampleOpts,
@@ -29,10 +40,94 @@ struct TierResult {
     tok_per_sec: f64,
     bytes_up_per_tok: f64,
     bytes_down_per_tok: f64,
+    /// Useful tokens per slot-sweep (1.0 = every slot sampled a live
+    /// response token on every sweep it was held).
+    occupancy: f64,
+    /// 1 − occupancy: slot-steps spent sweeping retired or PAD rows.
+    padding_waste: f64,
+    /// Tokens-to-retire tail latency (sweeps a sequence held its slot).
+    p50_retire_steps: f64,
+    p99_retire_steps: f64,
+    /// Device calls per sampling sweep — the continuous tier pays one
+    /// decode_dev per live cohort per sweep; fused amortizes a whole
+    /// round into one call.
+    decode_calls_per_sweep: f64,
+}
+
+/// Per-tier accumulators across the timed iterations.
+#[derive(Default)]
+struct Acc {
+    tokens: u64,
+    slot_steps: u64,
+    sweeps: u64,
+    calls: u64,
+    retire: Vec<u64>,
+}
+
+impl Acc {
+    fn occupancy(&self) -> f64 {
+        self.tokens as f64 / self.slot_steps.max(1) as f64
+    }
+
+    fn calls_per_sweep(&self) -> f64 {
+        self.calls as f64 / self.sweeps.max(1) as f64
+    }
+}
+
+fn pct(samples: &mut [u64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_unstable();
+    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+    samples[idx] as f64
+}
+
+/// One continuous-pool run: admit a sequential prompt stream into the
+/// slot pool until `target_retired` sequences have retired, folding the
+/// pool's occupancy/latency accounting into `acc`.
+fn run_continuous(
+    engine: &Engine,
+    pv: ParamView<'_>,
+    taskgen: &TaskGen,
+    opts: SampleOpts,
+    seed: u64,
+    target_retired: u64,
+    acc: &mut Acc,
+) {
+    let cfg = &engine.manifest.config;
+    let b = cfg.gen_batch;
+    let mut backend = DeviceBackend::new(engine).expect("device backend");
+    let mut pool = Pool::new(PoolCfg {
+        slots: b,
+        prompt_len: cfg.prompt_len,
+        seq_len: cfg.seq_len,
+        vocab: cfg.vocab,
+        max_cohorts: 4,
+        admit_min: 1,
+    });
+    let mut admission = taskgen
+        .admission(0, b as u64, b as u64, 1)
+        .map(|a| AdmitSeq { index: a.index, dup: a.dup, prompt: a.prompt });
+    let mut rng = Pcg32::new(seed, 0);
+    while pool.stats().retired < target_retired {
+        pool.step(&mut backend, pv, 0, &mut admission, opts, &mut rng)
+            .expect("pool step");
+    }
+    for c in pool.drain_completed() {
+        acc.retire.push(c.steps as u64);
+    }
+    let st = pool.stats();
+    acc.tokens += st.tokens;
+    acc.sweeps += st.sweeps;
+    acc.slot_steps += b as u64 * st.sweeps;
+    acc.calls += st.decode_calls;
 }
 
 fn main() {
-    println!("== gen_speed (paper Fig 14): fused/device/cached/naive ==");
+    println!(
+        "== gen_speed (paper Fig 14): fused/device/cached/naive/continuous =="
+    );
     let mut models = Vec::new();
     for model in ["tldr_s", "tldr_m", "tldr_l"] {
         let Some(dir) = artifact_dir_or_skip(model) else {
@@ -58,10 +153,12 @@ fn main() {
         // gap is forward-pass structure + KV transfer, never param upload
         let pv = ParamView::cached("bench_policy", 0, &params);
         let fused_engine = FusedEngine::default();
+        let cached_engine = CachedEngine::default();
+        let device_engine = DeviceCachedEngine::default();
         let mut tiers: Vec<(&'static str, &dyn Generator)> =
-            vec![("fused", &fused_engine), ("cached", &CachedEngine)];
+            vec![("fused", &fused_engine), ("cached", &cached_engine)];
         if DeviceCachedEngine::supported(&engine) {
-            tiers.insert(1, ("device", &DeviceCachedEngine));
+            tiers.insert(1, ("device", &device_engine));
         } else {
             println!(
                 "SKIP {model}/device: bundle lacks prefill_dev/decode_dev \
@@ -88,43 +185,110 @@ fn main() {
                 continue;
             }
             engine.reset_stats();
-            let mut tokens = 0u64;
+            let mut acc = Acc::default();
+            let b = cfg.gen_batch as u64;
             let r = bench(&format!("{model}/{tier}"), 0, 5, || {
                 seed += 1;
                 let mut rng = Pcg32::new(seed, 0);
                 let out = gen
                     .generate(&engine, pv, &prompts, opts, &mut rng)
                     .unwrap();
-                tokens += out
-                    .resp_mask
-                    .iter()
-                    .map(|m| m.iter().filter(|&&x| x == 1.0).count() as u64)
-                    .sum::<u64>();
+                let steps = out.steps as u64;
+                acc.sweeps += steps;
+                acc.slot_steps += b * steps;
+                // fused folds the whole round into one device call; the
+                // step-wise tiers pay one call per sweep
+                acc.calls += if tier == "fused" { 1 } else { steps };
+                for m in &out.resp_mask {
+                    let t = m.iter().filter(|&&x| x == 1.0).count() as u64;
+                    acc.tokens += t;
+                    // a row retires when its last response token lands;
+                    // until then it holds its batch slot
+                    acc.retire.push(t);
+                }
             });
             let (up, down) = engine.transfer_totals();
-            let toks = tokens.max(1) as f64;
+            let toks = acc.tokens.max(1) as f64;
+            let occ = acc.occupancy();
             results.push(TierResult {
                 tier,
                 mean_secs: r.mean() as f64,
                 tok_per_sec: toks / (r.mean() as f64 * r.iters as f64).max(1e-12),
                 bytes_up_per_tok: up as f64 / toks,
                 bytes_down_per_tok: down as f64 / toks,
+                occupancy: occ,
+                padding_waste: 1.0 - occ,
+                p50_retire_steps: pct(&mut acc.retire, 0.50),
+                p99_retire_steps: pct(&mut acc.retire, 0.99),
+                decode_calls_per_sweep: acc.calls_per_sweep(),
             });
+        }
+
+        // --- continuous tier: slot pool, EOS retirement, mid-flight
+        // admission over the device-KV artifacts ---
+        if ContinuousEngine::supported(&engine) {
+            let target = 2 * cfg.gen_batch as u64; // two rounds' worth
+            let mut warm = Acc::default();
+            run_continuous(&engine, pv, &taskgen, opts, 0, target, &mut warm);
+            if engine.client_untuples() != Some(true) {
+                println!(
+                    "SKIP {model}/continuous: PJRT client returns root tuples"
+                );
+            } else {
+                engine.reset_stats();
+                let mut acc = Acc::default();
+                let mut seed = 0u64;
+                let r = bench(&format!("{model}/continuous"), 0, 5, || {
+                    seed += 1;
+                    run_continuous(
+                        &engine, pv, &taskgen, opts, seed, target, &mut acc,
+                    );
+                });
+                let (up, down) = engine.transfer_totals();
+                let toks = acc.tokens.max(1) as f64;
+                let occ = acc.occupancy();
+                results.push(TierResult {
+                    tier: "continuous",
+                    mean_secs: r.mean() as f64,
+                    tok_per_sec: toks
+                        / (r.mean() as f64 * r.iters as f64).max(1e-12),
+                    bytes_up_per_tok: up as f64 / toks,
+                    bytes_down_per_tok: down as f64 / toks,
+                    occupancy: occ,
+                    padding_waste: 1.0 - occ,
+                    p50_retire_steps: pct(&mut acc.retire, 0.50),
+                    p99_retire_steps: pct(&mut acc.retire, 0.99),
+                    decode_calls_per_sweep: acc.calls_per_sweep(),
+                });
+            }
+        } else {
+            println!(
+                "SKIP {model}/continuous: bundle lacks \
+                 prefill_dev/decode_dev (rebuild artifacts)"
+            );
         }
 
         println!("\n{model} ({} params):", engine.manifest.param_count);
         println!(
-            "  {:<8} {:>9}  {:>10}  {:>12}  {:>12}",
-            "tier", "mean_s", "tok/s", "B_up/tok", "B_down/tok"
+            "  {:<10} {:>9}  {:>9}  {:>10}  {:>10}  {:>6}  {:>6}  {:>5}  \
+             {:>5}  {:>6}",
+            "tier", "mean_s", "tok/s", "B_up/tok", "B_dn/tok", "occup",
+            "waste", "p50", "p99", "c/swp"
         );
         for r in &results {
             println!(
-                "  {:<8} {:>9.4}  {:>10.0}  {:>12.0}  {:>12.0}",
+                "  {:<10} {:>9.4}  {:>9.0}  {:>10.0}  {:>10.0}  {:>6.3}  \
+                 {:>6.3}  {:>5.0}  {:>5.0}  {:>6.2}",
                 r.tier,
                 r.mean_secs,
                 r.tok_per_sec,
                 r.bytes_up_per_tok,
-                r.bytes_down_per_tok
+                r.bytes_down_per_tok,
+                r.occupancy,
+                r.padding_waste,
+                r.p50_retire_steps,
+                r.p99_retire_steps,
+                r.decode_calls_per_sweep,
             );
         }
         let by_tier = |t: &str| results.iter().find(|r| r.tier == t);
@@ -138,6 +302,19 @@ fn main() {
                  [{}]",
                 100.0 * dev_total / cached_total.max(1e-12),
                 if dev_total < cached_total { "OK" } else { "REGRESSION" }
+            );
+        }
+        if let Some(cont) = by_tier("continuous") {
+            let fixed_best = results
+                .iter()
+                .filter(|r| r.tier != "continuous")
+                .map(|r| r.occupancy)
+                .fold(0.0f64, f64::max);
+            println!(
+                "  continuous occupancy {:.3} vs best fixed {:.3} [{}]",
+                cont.occupancy,
+                fixed_best,
+                if cont.occupancy >= fixed_best { "OK" } else { "REGRESSION" }
             );
         }
         models.push((model, engine.manifest.param_count, results));
@@ -198,6 +375,34 @@ fn main() {
                                                         "bytes_down_per_tok",
                                                         Json::num(
                                                             r.bytes_down_per_tok,
+                                                        ),
+                                                    ),
+                                                    (
+                                                        "occupancy",
+                                                        Json::num(r.occupancy),
+                                                    ),
+                                                    (
+                                                        "padding_waste",
+                                                        Json::num(
+                                                            r.padding_waste,
+                                                        ),
+                                                    ),
+                                                    (
+                                                        "p50_retire_steps",
+                                                        Json::num(
+                                                            r.p50_retire_steps,
+                                                        ),
+                                                    ),
+                                                    (
+                                                        "p99_retire_steps",
+                                                        Json::num(
+                                                            r.p99_retire_steps,
+                                                        ),
+                                                    ),
+                                                    (
+                                                        "decode_calls_per_sweep",
+                                                        Json::num(
+                                                            r.decode_calls_per_sweep,
                                                         ),
                                                     ),
                                                 ]),

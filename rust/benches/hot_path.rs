@@ -246,6 +246,8 @@ fn main() {
             examples,
             start_index: 0,
             params_version: 0,
+            tok_version_min: 0,
+            tok_version_mean: 0.0,
             gen_secs: 0.0,
             gen_span: (0.0, 0.0),
         };
@@ -278,6 +280,8 @@ fn main() {
                     examples: round.examples.clone(),
                     start_index: 0,
                     params_version: 0,
+                    tok_version_min: 0,
+                    tok_version_mean: 0.0,
                     gen_secs: 0.0,
                     gen_span: (0.0, 0.0),
                 },

@@ -82,13 +82,17 @@ impl fmt::Display for Algo {
 /// deliberately-literal middle-tier baseline; `Device` is the step-wise
 /// loop with the KV cache chained device-to-device (needs the
 /// `prefill_dev`/`decode_dev` artifacts); `Naive` is the quadratic
-/// full-recompute baseline.
+/// full-recompute baseline; `Continuous` is the slot-pool engine over the
+/// same `*_dev` twins — EOS retirement, mid-flight prompt admission and
+/// between-step policy swaps in async mode (`--max-cohorts`,
+/// `--admit-min` shape its admission).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GenEngine {
     Fused,
     Cached,
     Device,
     Naive,
+    Continuous,
 }
 
 impl GenEngine {
@@ -98,7 +102,11 @@ impl GenEngine {
             "cached" => GenEngine::Cached,
             "device" => GenEngine::Device,
             "naive" => GenEngine::Naive,
-            _ => bail!("unknown gen engine '{s}' (fused|cached|device|naive)"),
+            "continuous" => GenEngine::Continuous,
+            _ => bail!(
+                "unknown gen engine '{s}' \
+                 (fused|cached|device|naive|continuous)"
+            ),
         })
     }
 
@@ -108,19 +116,28 @@ impl GenEngine {
             GenEngine::Cached => "cached",
             GenEngine::Device => "device",
             GenEngine::Naive => "naive",
+            GenEngine::Continuous => "continuous",
         }
     }
 
     /// Construct the generator. Each coordinator thread builds its own
-    /// (generators are stateless or hold per-engine scratch only).
+    /// (generators are stateless or hold per-engine scratch only). The
+    /// continuous engine's [`crate::gen::Generator`] face is its
+    /// round-mode (admission-disabled) configuration; async workers
+    /// drive its slot pool directly instead.
     pub fn build(&self) -> Box<dyn crate::gen::Generator> {
         match self {
             GenEngine::Fused => Box::<crate::gen::fused::FusedEngine>::default(),
-            GenEngine::Cached => Box::new(crate::gen::cached::CachedEngine),
+            GenEngine::Cached => {
+                Box::<crate::gen::cached::CachedEngine>::default()
+            }
             GenEngine::Device => {
-                Box::new(crate::gen::device::DeviceCachedEngine)
+                Box::<crate::gen::device::DeviceCachedEngine>::default()
             }
             GenEngine::Naive => Box::new(crate::gen::naive::NaiveEngine),
+            GenEngine::Continuous => {
+                Box::<crate::gen::continuous::ContinuousEngine>::default()
+            }
         }
     }
 }
@@ -190,6 +207,15 @@ pub struct ExpConfig {
     /// `updates_per_batch` = 1; see `coordinator::pipeline`). K=0 is the
     /// paper's rendezvous handover — exactly one-step off-policy.
     pub staleness_bound: usize,
+    /// Continuous engine only (`--max-cohorts`): concurrently live
+    /// admission cohorts per worker's slot pool. Each live cohort costs
+    /// one extra `decode_dev` call per sweep and one device KV-cache
+    /// copy; 1 defers admission until the pool fully drains.
+    pub max_cohorts: usize,
+    /// Continuous engine only (`--admit-min`): admit fresh prompts only
+    /// once at least this many slots are free (batches admissions so a
+    /// cohort's prefill is amortized over more rows).
+    pub admit_min: usize,
     pub lr: f32,
     pub temperature: f32,
     /// Reward for completions without EOS (paper Table 4: -1.0).
@@ -224,6 +250,8 @@ impl Default for ExpConfig {
             k_samples: 2,
             gen_workers: 1,
             staleness_bound: 0,
+            max_cohorts: 4,
+            admit_min: 1,
             lr: 3e-5,
             temperature: 0.7,
             eos_penalty: -1.0,
@@ -266,6 +294,8 @@ impl ExpConfig {
         c.gen_workers = args.get_parse("gen-workers", c.gen_workers)?;
         c.staleness_bound =
             args.get_parse("staleness-bound", c.staleness_bound)?;
+        c.max_cohorts = args.get_parse("max-cohorts", c.max_cohorts)?;
+        c.admit_min = args.get_parse("admit-min", c.admit_min)?;
         c.lr = args.get_parse("lr", c.lr)?;
         c.temperature = args.get_parse("temperature", c.temperature)?;
         c.seed = args.get_parse("seed", c.seed)?;
@@ -303,6 +333,17 @@ impl ExpConfig {
                  pool; sync mode generates inline (use --mode async)"
             );
         }
+        if self.max_cohorts == 0 || self.admit_min == 0 {
+            bail!("--max-cohorts and --admit-min must be >= 1");
+        }
+        if self.gen_engine != GenEngine::Continuous
+            && (self.max_cohorts, self.admit_min) != (4, 1)
+        {
+            bail!(
+                "--max-cohorts/--admit-min shape the continuous engine's \
+                 slot pool (use --gen-engine continuous)"
+            );
+        }
         Ok(())
     }
 
@@ -324,8 +365,13 @@ impl ExpConfig {
         } else {
             format!("_w{}q{}", self.gen_workers, self.staleness_bound)
         };
+        let admit = if (self.max_cohorts, self.admit_min) == (4, 1) {
+            String::new()
+        } else {
+            format!("_c{}a{}", self.max_cohorts, self.admit_min)
+        };
         format!(
-            "{}_{}_{}{pool}{gen}_n{}_t{}_k{}_s{}",
+            "{}_{}_{}{pool}{gen}{admit}_n{}_t{}_k{}_s{}",
             self.model,
             self.algo,
             self.mode.name(),
@@ -419,6 +465,7 @@ mod tests {
             ("cached", GenEngine::Cached),
             ("device", GenEngine::Device),
             ("naive", GenEngine::Naive),
+            ("continuous", GenEngine::Continuous),
         ] {
             let c = parse(&["t", "--gen-engine", name]).unwrap();
             assert_eq!(c.gen_engine, want);
@@ -427,5 +474,33 @@ mod tests {
         // default is the production fused path
         assert_eq!(parse(&["t"]).unwrap().gen_engine, GenEngine::Fused);
         assert!(parse(&["t", "--gen-engine", "vllm"]).is_err());
+    }
+
+    #[test]
+    fn continuous_admission_knobs_parse_validate_and_label() {
+        // defaults: 4 cohorts, admit into any single freed slot
+        let c = parse(&["t", "--gen-engine", "continuous"]).unwrap();
+        assert_eq!((c.max_cohorts, c.admit_min), (4, 1));
+        assert!(!c.label().contains("_c4a1"), "defaults stay unlabelled");
+        let c = parse(&[
+            "t", "--gen-engine", "continuous", "--max-cohorts", "2",
+            "--admit-min", "8",
+        ])
+        .unwrap();
+        assert_eq!((c.max_cohorts, c.admit_min), (2, 8));
+        assert!(c.label().contains("_c2a8"), "label: {}", c.label());
+        // degenerate values fail loudly
+        assert!(parse(&[
+            "t", "--gen-engine", "continuous", "--max-cohorts", "0"
+        ])
+        .is_err());
+        assert!(parse(&[
+            "t", "--gen-engine", "continuous", "--admit-min", "0"
+        ])
+        .is_err());
+        // the knobs are meaningless outside the continuous engine
+        assert!(parse(&["t", "--max-cohorts", "2"]).is_err());
+        assert!(parse(&["t", "--gen-engine", "device", "--admit-min", "4"])
+            .is_err());
     }
 }

@@ -47,14 +47,18 @@ use anyhow::{anyhow, Result};
 
 use super::pretrain::RLHF_RANGE;
 use super::trainer::{
-    assemble, batch_data_version, generate_round, generate_round_staged,
-    round_metrics, rounds_per_batch, sample_opts, stage_and_label, staleness,
-    train_on_batch, LabelScratch, LabelledRound, Round, SourcedRound,
+    assemble, batch_data_version, batch_token_versions, generate_round,
+    generate_round_staged, round_metrics, rounds_per_batch, sample_opts,
+    stage_and_label, staleness, train_on_batch, LabelScratch, LabelledRound,
+    Round, SourcedRound,
 };
 use super::{Prepared, RunOutput};
-use crate::config::ExpConfig;
+use crate::config::{ExpConfig, GenEngine};
 use crate::data::TaskGen;
-use crate::gen::{Generator, SampleOpts};
+use crate::gen::continuous::{
+    AdmitSeq, Completed, DeviceBackend, Pool, PoolCfg, RoundAssembler,
+};
+use crate::gen::{GenBatch, Generator, SampleOpts};
 use crate::metrics::{Phase, RunLog, Timeline};
 use crate::runtime::{Engine, ParamView, TrainState};
 use crate::util::rng::Pcg32;
@@ -186,6 +190,8 @@ pub fn run<'p>(
     let mut version = 0u64;
     let mut staleness_sum = 0u64;
     let mut staleness_max = 0u64;
+    let mut staleness_tok_sum = 0.0f64;
+    let mut staleness_tok_max = 0u64;
 
     let result = (|| -> Result<()> {
         while step < cfg.steps {
@@ -238,6 +244,18 @@ pub fn run<'p>(
             let stale = staleness(version, batch_data_version(&rounds));
             staleness_sum += stale;
             staleness_max = staleness_max.max(stale);
+            // per-token staleness: under the continuous engine a
+            // sequence's tokens can span policy versions (weights swap
+            // between decode steps), so the oldest-token and mean-token
+            // ages are reported alongside the per-round bound; for
+            // round-synchronous engines all three coincide
+            let (tok_min, tok_mean) = batch_token_versions(&rounds);
+            let stale_tok_max = staleness(version, tok_min);
+            let stale_tok_mean = ((version.saturating_sub(1)) as f64
+                - tok_mean)
+                .max(0.0);
+            staleness_tok_sum += stale_tok_mean;
+            staleness_tok_max = staleness_tok_max.max(stale_tok_max);
 
             let episodes = source.episodes();
             let labels = &rounds[0].labels;
@@ -245,6 +263,8 @@ pub fn run<'p>(
             let m = all_metrics.last().unwrap();
             row.push(("loss", m[0]));
             row.push(("staleness", stale as f32));
+            row.push(("staleness_tok_max", stale_tok_max as f32));
+            row.push(("staleness_tok_mean", stale_tok_mean as f32));
             log.push(step, episodes, timeline.wall(), &row);
             if verbose && step % 8 == 0 {
                 eprintln!(
@@ -274,6 +294,11 @@ pub fn run<'p>(
         format!("{:.3}", staleness_sum as f64 / cfg.steps.max(1) as f64),
     );
     log.set_meta("max_staleness", staleness_max);
+    log.set_meta(
+        "mean_staleness_tok",
+        format!("{:.3}", staleness_tok_sum / cfg.steps.max(1) as f64),
+    );
+    log.set_meta("max_staleness_tok", staleness_tok_max);
 
     Ok(RunOutput {
         final_params: state.into_params(engine)?,
@@ -461,6 +486,7 @@ impl WorkerPool {
             let k = cfg.k_samples;
             let seed = cfg.seed;
             let gen_engine = cfg.gen_engine;
+            let (max_cohorts, admit_min) = (cfg.max_cohorts, cfg.admit_min);
             let start = RLHF_RANGE + w as u64 * stride;
             let hop = stride * m as u64;
             let handle = std::thread::Builder::new()
@@ -470,8 +496,17 @@ impl WorkerPool {
                     // worker 0 keeps the seed coordinator's RNG stream so
                     // M=1 pools replay it bitwise
                     let engine = Engine::load(&artifact_dir)?;
-                    let generator = gen_engine.build();
                     let mut rng = Pcg32::new(seed, 0xa57c + w as u64);
+                    if gen_engine == GenEngine::Continuous {
+                        // slot-pool streaming: rounds are assembled from
+                        // retired sequences, not generated round-at-a-time
+                        return continuous_worker(
+                            &engine, &taskgen, &slot, &stop, &tx, init_params,
+                            k, opts, start, stride, hop, max_cohorts,
+                            admit_min, &mut rng, origin,
+                        );
+                    }
+                    let generator = gen_engine.build();
                     let mut params = init_params;
                     let mut version = 0u64;
                     let mut cursor = start;
@@ -597,13 +632,190 @@ impl RoundSource for WorkerPool {
     }
 }
 
+/// Streaming body of a continuous-engine generation worker: drive the
+/// slot pool one sweep at a time, re-reading the published policy slot
+/// *between decode steps* (PipelineRL's inflight weight swap — in-flight
+/// sequences keep their KV cache and finish under the new weights,
+/// stamping their remaining tokens with the new version), feeding retired
+/// sequences through a [`RoundAssembler`] and handing assembled rounds
+/// over the same bounded queue as the round-synchronous workers — the
+/// staleness back-pressure simply pauses the pool mid-flight while `send`
+/// blocks.
+#[allow(clippy::too_many_arguments)]
+fn continuous_worker(
+    engine: &Engine,
+    taskgen: &TaskGen,
+    slot: &ParamSlot,
+    stop: &AtomicBool,
+    tx: &mpsc::SyncSender<GenMsg>,
+    init_params: Arc<[f32]>,
+    k: usize,
+    opts: SampleOpts,
+    start: u64,
+    stride: u64,
+    hop: u64,
+    max_cohorts: usize,
+    admit_min: usize,
+    rng: &mut Pcg32,
+    origin: Instant,
+) -> Result<(f64, u64)> {
+    let mcfg = engine.manifest.config.clone();
+    let mut backend = DeviceBackend::new(engine)?;
+    let mut pool = Pool::new(PoolCfg {
+        slots: mcfg.gen_batch,
+        prompt_len: mcfg.prompt_len,
+        seq_len: mcfg.seq_len,
+        vocab: mcfg.vocab,
+        max_cohorts,
+        admit_min,
+    });
+    // the same strided prompt partition the round-based workers walk
+    // (worker w: blocks of `stride` indices, hopping M·stride, each
+    // index k times), consumed one prompt per freed slot
+    let mut admission = taskgen
+        .admission(start, stride, hop, k)
+        .map(|a| AdmitSeq { index: a.index, dup: a.dup, prompt: a.prompt });
+    let mut assembler = RoundAssembler::new(mcfg.gen_batch, k);
+    let mut params = init_params;
+    let mut version = 0u64;
+    let mut gen_total = 0.0f64;
+    let mut rounds_done = 0u64;
+    let mut t_round = origin.elapsed().as_secs_f64();
+    while !stop.load(Ordering::Relaxed) {
+        if let Some((v, p)) = slot.fetch(version) {
+            version = v;
+            params = p;
+        }
+        pool.step(
+            &mut backend,
+            ParamView::cached("policy", version, &params),
+            version,
+            &mut admission,
+            opts,
+            rng,
+        )?;
+        for c in pool.drain_completed() {
+            assembler.push(c);
+        }
+        while let Some(groups) = assembler.pop_round() {
+            let t_now = origin.elapsed().as_secs_f64();
+            let round = round_from_groups(groups, taskgen, (t_round, t_now));
+            gen_total += t_now - t_round;
+            rounds_done += 1;
+            // blocks while K rounds are queued — the staleness bound's
+            // back-pressure; in-flight sequences wait between sweeps
+            if tx.send(GenMsg { round }).is_err() {
+                return Ok((gen_total, rounds_done));
+            }
+            // blocked-send time belongs to the queue, not generation
+            t_round = origin.elapsed().as_secs_f64();
+        }
+    }
+    Ok((gen_total, rounds_done))
+}
+
+/// Assemble a trainer [`Round`] from `gen_batch / k` retired prompt
+/// groups (each `k` completions, in dup order) — the continuous engine's
+/// counterpart of `generate_round`'s fixed-round output. Examples are
+/// regenerated from the pure task stream by index; per-token version
+/// provenance aggregates into the round's staleness fields.
+fn round_from_groups(
+    groups: Vec<(u64, Vec<Completed>)>,
+    taskgen: &TaskGen,
+    span: (f64, f64),
+) -> Round {
+    let n: usize = groups.iter().map(|(_, g)| g.len()).sum();
+    let mut tokens = Vec::with_capacity(n);
+    let mut resp_mask = Vec::with_capacity(n);
+    let mut blp = Vec::with_capacity(n);
+    let mut terminated = Vec::with_capacity(n);
+    let mut examples = Vec::with_capacity(groups.len());
+    let start_index = groups.first().map(|(i, _)| *i).unwrap_or(0);
+    let mut steps_max = 0usize;
+    let mut ver_min = u64::MAX;
+    let mut ver_max = 0u64;
+    let mut ver_sum = 0.0f64;
+    let mut tok_count = 0u64;
+    for (index, group) in groups {
+        examples.push(taskgen.example(index));
+        for c in group {
+            steps_max = steps_max.max(c.steps);
+            ver_min = ver_min.min(c.version_min);
+            ver_max = ver_max.max(c.version_max);
+            ver_sum += c.version_sum;
+            tok_count += c.steps as u64;
+            tokens.push(c.tokens);
+            resp_mask.push(c.resp_mask);
+            blp.push(c.blp);
+            terminated.push(c.terminated);
+        }
+    }
+    Round {
+        gen: GenBatch { tokens, resp_mask, blp, terminated, steps: steps_max },
+        examples,
+        start_index,
+        // newest token version: keeps the per-round staleness bound's
+        // "freshest data age" meaning under version mixing
+        params_version: ver_max,
+        tok_version_min: ver_min.min(ver_max),
+        tok_version_mean: if tok_count > 0 {
+            ver_sum / tok_count as f64
+        } else {
+            ver_max as f64
+        },
+        gen_secs: span.1 - span.0,
+        gen_span: span,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use std::collections::VecDeque;
     use std::sync::Arc;
 
     use super::super::trainer::staleness;
-    use super::{cursor_stride, staleness_bound_updates, ParamSlot};
+    use super::{
+        cursor_stride, round_from_groups, staleness_bound_updates, Completed,
+        ParamSlot,
+    };
+    use crate::data::{Task, TaskGen};
+
+    #[test]
+    fn continuous_round_aggregates_token_version_provenance() {
+        let tg = TaskGen::new(Task::Tldr, 8, 4, 1);
+        let mk = |index: u64, dup: usize, vmin: u64, vmax: u64, sum: f64| {
+            Completed {
+                index,
+                dup,
+                tokens: vec![0; 12],
+                resp_mask: vec![0.0; 12],
+                blp: vec![0.0; 12],
+                terminated: true,
+                steps: 2,
+                version_min: vmin,
+                version_max: vmax,
+                version_sum: sum,
+            }
+        };
+        // two prompt groups of k=2, tokens spanning versions 0..=4
+        let groups = vec![
+            (5u64, vec![mk(5, 0, 0, 2, 2.0), mk(5, 1, 1, 3, 4.0)]),
+            (9u64, vec![mk(9, 0, 2, 4, 6.0), mk(9, 1, 2, 2, 4.0)]),
+        ];
+        let round = round_from_groups(groups, &tg, (1.0, 3.5));
+        // per-round anchor = NEWEST token version (freshest data age);
+        // per-token fields carry the oldest and the mean
+        assert_eq!(round.params_version, 4);
+        assert_eq!(round.tok_version_min, 0);
+        let expect_mean = (2.0 + 4.0 + 6.0 + 4.0) / 8.0;
+        assert!((round.tok_version_mean - expect_mean).abs() < 1e-12);
+        assert_eq!(round.start_index, 5);
+        assert_eq!(round.gen.tokens.len(), 4, "k rows per prompt group");
+        assert_eq!(round.examples.len(), 2, "one example per prompt");
+        assert_eq!(round.examples[1].prompt, tg.example(9).prompt);
+        assert_eq!(round.gen.steps, 2);
+        assert!((round.gen_secs - 2.5).abs() < 1e-12);
+    }
 
     #[test]
     fn param_slot_is_latest_wins() {

@@ -27,7 +27,19 @@ pub struct Round {
     /// Index of the first prompt of this round in the task stream.
     pub start_index: u64,
     /// Policy version that generated this round (staleness accounting).
+    /// For the continuous engine's streamed rounds — whose sequences may
+    /// mix tokens from several versions as weights swap mid-flight —
+    /// this is the NEWEST version any token sampled under, keeping the
+    /// per-round [`staleness`] bound's "freshest data age" meaning.
     pub params_version: u64,
+    /// Oldest policy version any token of this round sampled under.
+    /// Equals `params_version` for round-synchronous engines (one
+    /// version generates the whole round); older under the continuous
+    /// engine's between-step policy swaps.
+    pub tok_version_min: u64,
+    /// Response-token-weighted mean of per-token behaviour versions
+    /// (== `params_version` for round-synchronous engines).
+    pub tok_version_mean: f64,
     /// Wall-clock seconds spent generating (gen thread's measurement).
     pub gen_secs: f64,
     /// Span of generation relative to the shared timeline origin.
@@ -308,6 +320,8 @@ pub fn generate_round(
         examples,
         start_index,
         params_version,
+        tok_version_min: params_version,
+        tok_version_mean: params_version as f64,
         gen_secs: t1 - t0,
         gen_span: (t0, t1),
     })
@@ -344,6 +358,8 @@ pub fn generate_round_staged(
             examples,
             start_index,
             params_version,
+            tok_version_min: params_version,
+            tok_version_mean: params_version as f64,
             gen_secs: t1 - t0,
             gen_span: (t0, t1),
         },
@@ -968,6 +984,26 @@ pub fn batch_data_version(rounds: &[LabelledRound]) -> u64 {
         .map(|r| r.round.params_version)
         .max()
         .unwrap_or(0)
+}
+
+/// Token-level behaviour-version summary of a train batch: the oldest
+/// per-token version and the (round-averaged) mean per-token version
+/// across its rounds — the per-token counterpart of
+/// [`batch_data_version`], meaningful when the continuous engine mixes
+/// versions within a sequence. Round-synchronous engines collapse both
+/// to `params_version`.
+pub fn batch_token_versions(rounds: &[LabelledRound]) -> (u64, f64) {
+    let min = rounds
+        .iter()
+        .map(|r| r.round.tok_version_min)
+        .min()
+        .unwrap_or(0);
+    let mean = rounds
+        .iter()
+        .map(|r| r.round.tok_version_mean)
+        .sum::<f64>()
+        / rounds.len().max(1) as f64;
+    (min, mean)
 }
 
 /// Per-round training-curve metrics derived from labels (gold win-rate and

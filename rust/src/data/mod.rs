@@ -89,6 +89,71 @@ impl TaskGen {
     pub fn batch(&self, start: u64, n: usize) -> Vec<Example> {
         (0..n as u64).map(|j| self.example(start + j)).collect()
     }
+
+    /// Infinite strided admission stream over the prompt indices: blocks
+    /// of `block` consecutive indices separated by `hop`, each index
+    /// yielded `k` times consecutively (duplicates 0..k) — exactly the
+    /// order the round-based workers consume via `round_prompts` +
+    /// cursor hops, exposed one prompt at a time so the continuous
+    /// engine can admit into single freed slots mid-flight.
+    pub fn admission(
+        &self,
+        start: u64,
+        block: u64,
+        hop: u64,
+        k: usize,
+    ) -> Admission<'_> {
+        assert!(block >= 1, "admission block must be at least 1");
+        assert!(hop >= block, "hop must not revisit the block");
+        assert!(k >= 1);
+        Admission { gen: self, k, block, hop, base: start, off: 0, dup: 0 }
+    }
+}
+
+/// One admitted prompt: duplicate `dup` (of k) of stream index `index`.
+/// The full [`Example`] (reference, gold meta) is regenerated on demand
+/// from `index` by the consumer — `TaskGen::example` is pure — so only the
+/// prompt travels with the admission.
+#[derive(Debug, Clone)]
+pub struct AdmitPrompt {
+    pub index: u64,
+    pub dup: usize,
+    pub prompt: Vec<i32>,
+}
+
+/// Iterator behind [`TaskGen::admission`]. Infinite: `next()` never
+/// returns `None`.
+pub struct Admission<'a> {
+    gen: &'a TaskGen,
+    k: usize,
+    block: u64,
+    hop: u64,
+    base: u64,
+    off: u64,
+    dup: usize,
+}
+
+impl Iterator for Admission<'_> {
+    type Item = AdmitPrompt;
+
+    fn next(&mut self) -> Option<AdmitPrompt> {
+        let index = self.base + self.off;
+        let item = AdmitPrompt {
+            index,
+            dup: self.dup,
+            prompt: self.gen.example(index).prompt,
+        };
+        self.dup += 1;
+        if self.dup == self.k {
+            self.dup = 0;
+            self.off += 1;
+            if self.off == self.block {
+                self.off = 0;
+                self.base += self.hop;
+            }
+        }
+        Some(item)
+    }
 }
 
 /// Fill `len - used` remaining slots with content noise (helper shared by
@@ -165,6 +230,35 @@ mod tests {
                 assert!(!ex.reference.contains(&tk::EOS));
             }
         }
+    }
+
+    #[test]
+    fn admission_strides_blocks_with_k_duplicates() {
+        let g = TaskGen::new(Task::Tldr, 24, 12, 7);
+        // start 100, blocks of 2, hop 6, k 2:
+        // 100 100 101 101, 106 106 107 107, 112 ...
+        let got: Vec<(u64, usize)> = g
+            .admission(100, 2, 6, 2)
+            .take(9)
+            .map(|a| (a.index, a.dup))
+            .collect();
+        assert_eq!(
+            got,
+            vec![
+                (100, 0),
+                (100, 1),
+                (101, 0),
+                (101, 1),
+                (106, 0),
+                (106, 1),
+                (107, 0),
+                (107, 1),
+                (112, 0),
+            ]
+        );
+        // prompts match the pure example stream
+        let a = g.admission(100, 2, 6, 2).next().unwrap();
+        assert_eq!(a.prompt, g.example(100).prompt);
     }
 
     #[test]

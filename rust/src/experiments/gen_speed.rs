@@ -54,10 +54,12 @@ pub fn fig14(args: &Args) -> Result<()> {
         // same device-cached param set for every engine, so the measured
         // gap is forward-pass + KV transfer cost, not param upload traffic
         let pv = ParamView::cached("bench_policy", 0, &params);
+        let cached_engine = CachedEngine::default();
+        let device_engine = DeviceCachedEngine::default();
         let mut engines: Vec<(&str, &dyn Generator)> =
-            vec![("cached", &CachedEngine)];
+            vec![("cached", &cached_engine)];
         if DeviceCachedEngine::supported(&engine) {
-            engines.push(("device", &DeviceCachedEngine));
+            engines.push(("device", &device_engine));
         }
         engines.push(("naive", &NaiveEngine));
 

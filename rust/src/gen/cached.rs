@@ -13,14 +13,20 @@
 //! [`super::fused::FusedEngine`], moves the whole loop on-device
 //! (EXPERIMENTS.md §Perf).
 
+use std::cell::RefCell;
+
 use anyhow::Result;
 
-use super::{DecodeState, GenBatch, Generator, SampleOpts};
+use super::{flatten_prompts, DecodeState, GenBatch, Generator, SampleOpts};
 use crate::runtime::{CallArg, Engine, ParamView};
 use crate::util::rng::Pcg32;
 
 #[derive(Default)]
-pub struct CachedEngine;
+pub struct CachedEngine {
+    /// Flattened-prompt scratch, reused across rounds (one allocation per
+    /// engine — the same shape as the fused engine's).
+    scratch: RefCell<Vec<i32>>,
+}
 
 impl Generator for CachedEngine {
     fn name(&self) -> &'static str {
@@ -42,14 +48,13 @@ impl Generator for CachedEngine {
         let mut st = DecodeState::new(prompts, p, s);
 
         // prefill: prompt -> kv cache + logits for position p
-        let mut prompt_flat = Vec::with_capacity(b * p);
-        for row in prompts {
-            prompt_flat.extend_from_slice(&row[..p]);
-        }
+        let mut prompt_flat = self.scratch.borrow_mut();
+        flatten_prompts(prompts, p, &mut prompt_flat);
         let out = engine.call_with(
             "prefill",
             &[CallArg::Param(params), CallArg::I32(&prompt_flat)],
         )?;
+        drop(prompt_flat);
         let mut it = out.into_iter();
         let mut kv = it.next().unwrap();
         let mut logits = it.next().unwrap().into_f32()?;

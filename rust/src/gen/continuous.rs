@@ -1,0 +1,1006 @@
+//! Continuous in-flight batching — slot-based decode with EOS retirement
+//! and mid-flight prompt admission (PipelineRL's schedule over this
+//! crate's artifacts).
+//!
+//! Every other tier decodes fixed `[B, S]` rounds: a row that emits EOS at
+//! token 5 still rides the loop until the slowest row finishes, and a
+//! round only hands off when its last member does. Here the `[B]`-wide KV
+//! cache is a **slot pool**: a row that terminates retires immediately
+//! into a completion queue and its slot is re-admitted with a fresh prompt
+//! mid-flight, so the pool's occupancy (useful tokens per slot-step) stays
+//! near 1 instead of decaying along the round's tail.
+//!
+//! ## Cohorts: exact decoding under one scalar `pos`
+//!
+//! The compiled `decode_step` takes a single scalar position: it writes
+//! k/v at `pos` for ALL rows and attends with the shared mask
+//! `pos_ids <= pos`, and the model's positions are learned absolute
+//! embeddings — so rows at different decode frontiers cannot share one
+//! call, and an admitted prompt cannot be re-based at the pool's current
+//! position without changing its distribution. Instead of new Python-side
+//! artifacts, admission is **cohort-based**: every admission batch is
+//! prefilled in its own `prefill_dev` call and owns its own device-resident
+//! KV cache; per pool sweep, each live cohort advances with one
+//! `decode_dev` call at its own frontier. Rows outside a cohort are fed
+//! PAD in that cohort's call — their rows of that cache are dead weight
+//! the cohort never samples from. The number of concurrently live cohorts
+//! (= extra decode calls and cache copies per sweep) is capped by
+//! [`PoolCfg::max_cohorts`]; admission waits when the cap is reached.
+//! With admission disabled (one cohort at full occupancy) the pool is
+//! call-for-call the [`super::device::DeviceCachedEngine`] loop and emits
+//! bitwise-identical sequences at equal seeds (integration-tested).
+//!
+//! ## RNG discipline and per-token versions
+//!
+//! Every sweep draws exactly one uniform per slot in row order — a live
+//! row samples from its cohort's logits, a free row advances the stream
+//! with [`sampler::skip_draw`] — the same walk the fixed tiers take over
+//! done rows. Each sampled token is stamped with the policy version that
+//! produced its logits, so when the streaming caller swaps freshly
+//! published weights in *between* decode steps (PipelineRL's second
+//! half), the recorded per-token `blp` is a true behaviour logprob under
+//! version mixing and [`Completed`] carries min/max/mean version for the
+//! trainer's per-token staleness accounting.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use super::{sampler, GenBatch, Generator, SampleOpts};
+use crate::runtime::{CallArg, DeviceBuffer, Engine, ParamView};
+use crate::tokenizer as tk;
+use crate::util::rng::Pcg32;
+
+/// Geometry and admission policy of one slot pool.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolCfg {
+    /// Pool width B (the artifact's fixed gen_batch).
+    pub slots: usize,
+    pub prompt_len: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// Concurrently live cohorts allowed (>= 1). Each live cohort costs
+    /// one `decode_dev` call per sweep and one KV-cache copy on device;
+    /// 1 disables mid-flight admission in everything but name (fresh
+    /// prompts only enter once the whole pool has drained).
+    pub max_cohorts: usize,
+    /// Admit only once at least this many slots are free (>= 1): batches
+    /// admissions so a cohort's prefill is amortized over more rows.
+    pub admit_min: usize,
+}
+
+/// One admission request: duplicate `dup` of prompt-stream index `index`.
+#[derive(Debug, Clone)]
+pub struct AdmitSeq {
+    pub index: u64,
+    pub dup: usize,
+    /// Fixed-length prompt (`prompt_len` tokens).
+    pub prompt: Vec<i32>,
+}
+
+/// One retired sequence, in the same canonical `[S]` layout as a
+/// [`GenBatch`] row: prompt ++ response (incl. EOS) ++ PAD.
+#[derive(Debug, Clone)]
+pub struct Completed {
+    pub index: u64,
+    pub dup: usize,
+    pub tokens: Vec<i32>,
+    pub resp_mask: Vec<f32>,
+    pub blp: Vec<f32>,
+    /// Whether the row ended with EOS (vs running out of positions).
+    pub terminated: bool,
+    /// Sweeps this sequence held its slot == response tokens emitted —
+    /// the tokens-to-retire tail-latency sample.
+    pub steps: usize,
+    /// Oldest / newest policy version any of its tokens sampled under.
+    pub version_min: u64,
+    pub version_max: u64,
+    /// Sum of per-token versions (response-token-weighted means).
+    pub version_sum: f64,
+}
+
+/// Occupancy / call accounting for one pool's lifetime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Sampling sweeps executed (the fixed tiers' `steps` equivalent).
+    pub sweeps: u64,
+    /// `decode_dev` calls — `sweeps` × live cohorts; the cohort-cap cost.
+    pub decode_calls: u64,
+    /// `prefill_dev` calls — one per admitted cohort.
+    pub prefill_calls: u64,
+    /// Response tokens emitted (incl. EOS).
+    pub tokens: u64,
+    pub admitted: u64,
+    pub retired: u64,
+}
+
+impl PoolStats {
+    /// Useful-token fraction of the slot-steps spent: `tokens / (B ×
+    /// sweeps)`. The fixed tiers' occupancy decays along each round's
+    /// tail (retired rows keep sweeping); the pool re-admits instead.
+    pub fn occupancy(&self, slots: usize) -> f64 {
+        let denom = (slots as u64 * self.sweeps).max(1) as f64;
+        self.tokens as f64 / denom
+    }
+}
+
+/// The decode transport a [`Pool`] drives: prefill an admission batch into
+/// a fresh cohort cache, advance one cohort by one position, drop a
+/// drained cohort's cache. Split out so the slot lifecycle (admission,
+/// retirement, RNG bookkeeping) is testable without PJRT artifacts.
+pub trait DecodeBackend {
+    /// Prefill a full `[B, P]` prompt matrix (rows outside the admitted
+    /// set are PAD filler) into a new cohort cache; returns the cache id
+    /// and the `[B, V]` logits predicting position P.
+    fn prefill(
+        &mut self,
+        params: ParamView<'_>,
+        prompt_flat: &[i32],
+    ) -> Result<(usize, Vec<f32>)>;
+
+    /// One decode step for cohort cache `cache` at position `pos` with
+    /// per-row input tokens `toks` (PAD outside the cohort); returns the
+    /// `[B, V]` logits predicting `pos + 1`.
+    fn decode(
+        &mut self,
+        params: ParamView<'_>,
+        cache: usize,
+        toks: &[i32],
+        pos: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// The cohort drained; its cache may be freed.
+    fn retire_cache(&mut self, cache: usize);
+}
+
+/// [`DecodeBackend`] over the `prefill_dev`/`decode_dev` buffer-path
+/// twins: each cohort's KV cache is a [`DeviceBuffer`] chained
+/// device-to-device across its decode steps, exactly the
+/// [`super::device::DeviceCachedEngine`] transport. On a root-tuple PJRT
+/// client `execute_buffers` itself degrades to host round-trips (warned
+/// once by the engine) — slower, still byte-for-byte correct.
+pub struct DeviceBackend<'e> {
+    engine: &'e Engine,
+    caches: Vec<Option<DeviceBuffer>>,
+}
+
+impl<'e> DeviceBackend<'e> {
+    pub fn new(engine: &'e Engine) -> Result<DeviceBackend<'e>> {
+        if !ContinuousEngine::supported(engine) {
+            bail!(
+                "artifact bundle '{}' lacks prefill_dev/decode_dev — rebuild \
+                 artifacts (python -m compile.aot --force) to use the \
+                 continuous engine",
+                engine.config_name()
+            );
+        }
+        Ok(DeviceBackend { engine, caches: Vec::new() })
+    }
+}
+
+impl DecodeBackend for DeviceBackend<'_> {
+    fn prefill(
+        &mut self,
+        params: ParamView<'_>,
+        prompt_flat: &[i32],
+    ) -> Result<(usize, Vec<f32>)> {
+        let mut out = self.engine.execute_buffers(
+            "prefill_dev",
+            &[CallArg::Param(params), CallArg::I32(prompt_flat)],
+        )?;
+        let logits = self.engine.download(&out[1])?.into_f32()?;
+        let kv = out.swap_remove(0);
+        let id = match self.caches.iter().position(Option::is_none) {
+            Some(free) => {
+                self.caches[free] = Some(kv);
+                free
+            }
+            None => {
+                self.caches.push(Some(kv));
+                self.caches.len() - 1
+            }
+        };
+        Ok((id, logits))
+    }
+
+    fn decode(
+        &mut self,
+        params: ParamView<'_>,
+        cache: usize,
+        toks: &[i32],
+        pos: usize,
+    ) -> Result<Vec<f32>> {
+        let kv = self.caches[cache].as_ref().expect("live cohort cache");
+        let mut out = self.engine.execute_buffers(
+            "decode_dev",
+            &[
+                CallArg::Param(params),
+                CallArg::Device(kv),
+                CallArg::I32(toks),
+                CallArg::ScalarI32(pos as i32),
+            ],
+        )?;
+        let logits = self.engine.download(&out[0])?.into_f32()?;
+        self.caches[cache] = Some(out.swap_remove(1));
+        Ok(logits)
+    }
+
+    fn retire_cache(&mut self, cache: usize) {
+        self.caches[cache] = None;
+    }
+}
+
+/// In-flight state of one slot.
+struct SeqState {
+    index: u64,
+    dup: usize,
+    tokens: Vec<i32>,
+    resp_mask: Vec<f32>,
+    blp: Vec<f32>,
+    cohort: u64,
+    steps: usize,
+    version_min: u64,
+    version_max: u64,
+    version_sum: f64,
+}
+
+/// One admission batch sharing a decode frontier and a KV cache.
+struct Cohort {
+    id: u64,
+    cache: usize,
+    /// Position the current `logits` predict.
+    pos: usize,
+    logits: Vec<f32>,
+    /// Policy version that produced `logits` — the stamp for tokens
+    /// sampled from them (NOT necessarily the pool's current version:
+    /// weights may have swapped since the call).
+    logits_version: u64,
+    live: usize,
+    /// Per-sweep decode input being assembled: this sweep's sampled token
+    /// for the cohort's rows (including a row that retired ON this sweep,
+    /// whose final EOS still feeds the call — the fixed tiers do the
+    /// same), PAD elsewhere.
+    pending: Vec<i32>,
+}
+
+/// The slot pool: B slots, up to `max_cohorts` live cohorts, a completion
+/// queue. Drive it with [`Pool::step`]; each call is one sweep —
+/// sample/retire, advance every live cohort by one decode step, then
+/// admit into freed slots.
+pub struct Pool {
+    cfg: PoolCfg,
+    slots: Vec<Option<SeqState>>,
+    cohorts: Vec<Cohort>,
+    next_cohort: u64,
+    completed: Vec<Completed>,
+    stats: PoolStats,
+    prompt_scratch: Vec<i32>,
+}
+
+impl Pool {
+    pub fn new(cfg: PoolCfg) -> Pool {
+        assert!(cfg.slots >= 1, "pool needs at least one slot");
+        assert!(
+            cfg.prompt_len < cfg.seq_len,
+            "no response positions (prompt_len >= seq_len)"
+        );
+        assert!(cfg.max_cohorts >= 1 && cfg.admit_min >= 1);
+        Pool {
+            slots: (0..cfg.slots).map(|_| None).collect(),
+            cohorts: Vec::new(),
+            next_cohort: 0,
+            completed: Vec::new(),
+            stats: PoolStats::default(),
+            prompt_scratch: Vec::new(),
+            cfg,
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Live (in-flight) sequences.
+    pub fn in_flight(&self) -> usize {
+        self.cohorts.iter().map(|c| c.live).sum()
+    }
+
+    /// Nothing in flight — only admission can make the next step do work.
+    pub fn is_drained(&self) -> bool {
+        self.cohorts.is_empty()
+    }
+
+    /// Take all retired sequences accumulated since the last drain.
+    pub fn drain_completed(&mut self) -> Vec<Completed> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// One pool sweep: sample every live slot at its cohort's frontier
+    /// (one RNG draw per slot, free slots skip-draw), retire EOS /
+    /// end-of-sequence rows, advance surviving cohorts by one decode
+    /// step, then admit fresh prompts from `admission` into freed slots
+    /// (subject to the cohort cap and admission watermark). `params` /
+    /// `version` are re-read every call, so the streaming caller swaps a
+    /// newly published policy in between decode steps by simply passing
+    /// the fresh view.
+    pub fn step(
+        &mut self,
+        backend: &mut dyn DecodeBackend,
+        params: ParamView<'_>,
+        version: u64,
+        admission: &mut dyn Iterator<Item = AdmitSeq>,
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Result<()> {
+        let (b, p, s, v) = (
+            self.cfg.slots,
+            self.cfg.prompt_len,
+            self.cfg.seq_len,
+            self.cfg.vocab,
+        );
+
+        // --- sampling sweep (skipped while nothing is in flight: the
+        // very first step admits before any logits exist) ---
+        if !self.cohorts.is_empty() {
+            self.stats.sweeps += 1;
+            for c in &mut self.cohorts {
+                c.pending.fill(tk::PAD);
+            }
+            for i in 0..b {
+                let Some(seq) = self.slots[i].as_mut() else {
+                    // free slots keep the stream walk identical to the
+                    // fixed tiers' done rows: one draw, no softmax
+                    sampler::skip_draw(rng);
+                    continue;
+                };
+                let c = self
+                    .cohorts
+                    .iter_mut()
+                    .find(|c| c.id == seq.cohort)
+                    .expect("live row's cohort");
+                let pos = c.pos;
+                let row = &c.logits[i * v..(i + 1) * v];
+                let (tok, lp) =
+                    sampler::sample(row, opts.temperature, opts.greedy, rng);
+                let tok = tok as i32;
+                seq.tokens[pos] = tok;
+                seq.resp_mask[pos] = 1.0;
+                seq.blp[pos] = lp;
+                seq.steps += 1;
+                let ver = c.logits_version;
+                seq.version_min = seq.version_min.min(ver);
+                seq.version_max = seq.version_max.max(ver);
+                seq.version_sum += ver as f64;
+                c.pending[i] = tok;
+                self.stats.tokens += 1;
+                if tok == tk::EOS || pos + 1 == s {
+                    c.live -= 1;
+                    let seq = self.slots[i].take().expect("retiring live row");
+                    self.completed.push(Completed {
+                        index: seq.index,
+                        dup: seq.dup,
+                        tokens: seq.tokens,
+                        resp_mask: seq.resp_mask,
+                        blp: seq.blp,
+                        terminated: tok == tk::EOS,
+                        steps: seq.steps,
+                        version_min: seq.version_min,
+                        version_max: seq.version_max,
+                        version_sum: seq.version_sum,
+                    });
+                    self.stats.retired += 1;
+                }
+            }
+        }
+
+        // --- drop drained cohorts (their caches free immediately) ---
+        let backend_ref = &mut *backend;
+        self.cohorts.retain(|c| {
+            if c.live == 0 {
+                backend_ref.retire_cache(c.cache);
+                false
+            } else {
+                true
+            }
+        });
+
+        // --- advance every surviving cohort by one decode step ---
+        for c in &mut self.cohorts {
+            debug_assert!(
+                c.pos + 1 < s,
+                "rows at the last position must have retired in the sweep"
+            );
+            c.logits = backend.decode(params, c.cache, &c.pending, c.pos)?;
+            c.pos += 1;
+            c.logits_version = version;
+            self.stats.decode_calls += 1;
+        }
+
+        // --- admission into freed slots ---
+        if self.cohorts.len() < self.cfg.max_cohorts {
+            let free: Vec<usize> =
+                (0..b).filter(|&i| self.slots[i].is_none()).collect();
+            if free.len() >= self.cfg.admit_min {
+                let mut admitted: Vec<(usize, AdmitSeq)> =
+                    Vec::with_capacity(free.len());
+                for &slot in &free {
+                    match admission.next() {
+                        Some(a) => admitted.push((slot, a)),
+                        None => break,
+                    }
+                }
+                if !admitted.is_empty() {
+                    self.prompt_scratch.clear();
+                    self.prompt_scratch.resize(b * p, tk::PAD);
+                    for (slot, a) in &admitted {
+                        assert_eq!(
+                            a.prompt.len(),
+                            p,
+                            "prompts must be fixed-length"
+                        );
+                        self.prompt_scratch[slot * p..(slot + 1) * p]
+                            .copy_from_slice(&a.prompt);
+                    }
+                    let (cache, logits) =
+                        backend.prefill(params, &self.prompt_scratch)?;
+                    self.stats.prefill_calls += 1;
+                    let id = self.next_cohort;
+                    self.next_cohort += 1;
+                    let live = admitted.len();
+                    for (slot, a) in admitted {
+                        let mut tokens = a.prompt;
+                        tokens.resize(s, tk::PAD);
+                        self.slots[slot] = Some(SeqState {
+                            index: a.index,
+                            dup: a.dup,
+                            tokens,
+                            resp_mask: vec![0.0; s],
+                            blp: vec![0.0; s],
+                            cohort: id,
+                            steps: 0,
+                            version_min: u64::MAX,
+                            version_max: 0,
+                            version_sum: 0.0,
+                        });
+                        self.stats.admitted += 1;
+                    }
+                    self.cohorts.push(Cohort {
+                        id,
+                        cache,
+                        pos: p,
+                        logits,
+                        logits_version: version,
+                        live,
+                        pending: vec![tk::PAD; b],
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Groups retired sequences back into trainer rounds: a round needs
+/// `gen_batch / k` distinct prompts with all `k` completions each.
+/// Completions arrive in retirement order (a prompt's duplicates can
+/// retire sweeps apart, interleaved with other prompts); groups become
+/// ready when their k-th member lands and rounds are emitted in group
+/// readiness order, duplicates sorted back into admission (`dup`) order.
+pub struct RoundAssembler {
+    k: usize,
+    n_prompts: usize,
+    pending: Vec<(u64, Vec<Completed>)>,
+    ready: VecDeque<(u64, Vec<Completed>)>,
+}
+
+impl RoundAssembler {
+    pub fn new(gen_batch: usize, k: usize) -> RoundAssembler {
+        assert!(
+            k >= 1 && gen_batch % k == 0,
+            "gen_batch must be divisible by k"
+        );
+        RoundAssembler {
+            k,
+            n_prompts: gen_batch / k,
+            pending: Vec::new(),
+            ready: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, c: Completed) {
+        let pos = match self.pending.iter().position(|(i, _)| *i == c.index) {
+            Some(pos) => pos,
+            None => {
+                self.pending.push((c.index, Vec::with_capacity(self.k)));
+                self.pending.len() - 1
+            }
+        };
+        self.pending[pos].1.push(c);
+        assert!(
+            self.pending[pos].1.len() <= self.k,
+            "more than k completions for one prompt (admission bug)"
+        );
+        if self.pending[pos].1.len() == self.k {
+            let (index, mut group) = self.pending.remove(pos);
+            group.sort_by_key(|c| c.dup);
+            self.ready.push_back((index, group));
+        }
+    }
+
+    /// `gen_batch / k` ready groups — one round — if available.
+    pub fn pop_round(&mut self) -> Option<Vec<(u64, Vec<Completed>)>> {
+        if self.ready.len() < self.n_prompts {
+            return None;
+        }
+        Some(self.ready.drain(..self.n_prompts).collect())
+    }
+
+    /// Completions buffered but not yet part of an emitted round.
+    pub fn buffered(&self) -> usize {
+        self.pending.iter().map(|(_, g)| g.len()).sum::<usize>()
+            + self.ready.iter().map(|(_, g)| g.len()).sum::<usize>()
+    }
+}
+
+/// The round-mode face of the pool: a [`Generator`] that fills all B
+/// slots once (one cohort, admission disabled thereafter) and drains —
+/// call-for-call the `device` tier's loop, bitwise-equal at equal seeds.
+/// The streaming face (mid-flight admission + between-step policy swaps)
+/// is driven directly through [`Pool::step`] by the async worker pool.
+#[derive(Default)]
+pub struct ContinuousEngine;
+
+impl ContinuousEngine {
+    /// Same artifact requirement as the device tier: the buffer-path
+    /// `prefill_dev`/`decode_dev` twins.
+    pub fn supported(engine: &Engine) -> bool {
+        engine.manifest.has_artifact("prefill_dev")
+            && engine.manifest.has_artifact("decode_dev")
+    }
+}
+
+impl Generator for ContinuousEngine {
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+
+    fn generate(
+        &self,
+        engine: &Engine,
+        params: ParamView<'_>,
+        prompts: &[Vec<i32>],
+        opts: SampleOpts,
+        rng: &mut Pcg32,
+    ) -> Result<GenBatch> {
+        let cfg = &engine.manifest.config;
+        let (b, p, s, v) =
+            (cfg.gen_batch, cfg.prompt_len, cfg.seq_len, cfg.vocab);
+        assert_eq!(prompts.len(), b, "gen_batch is fixed at {b}");
+        let mut backend = DeviceBackend::new(engine)?;
+        let mut pool = Pool::new(PoolCfg {
+            slots: b,
+            prompt_len: p,
+            seq_len: s,
+            vocab: v,
+            // one cohort at full occupancy: the device-tier equivalence
+            // configuration (admission runs dry after the initial fill)
+            max_cohorts: 1,
+            admit_min: b,
+        });
+        let mut admission =
+            prompts.iter().cloned().enumerate().map(|(i, prompt)| AdmitSeq {
+                index: i as u64,
+                dup: 0,
+                prompt,
+            });
+        while pool.stats().retired < b as u64 {
+            pool.step(&mut backend, params, 0, &mut admission, opts, rng)?;
+        }
+        let mut tokens = vec![Vec::new(); b];
+        let mut resp_mask = vec![Vec::new(); b];
+        let mut blp = vec![Vec::new(); b];
+        let mut terminated = vec![false; b];
+        for c in pool.drain_completed() {
+            let i = c.index as usize;
+            tokens[i] = c.tokens;
+            resp_mask[i] = c.resp_mask;
+            blp[i] = c.blp;
+            terminated[i] = c.terminated;
+        }
+        debug_assert!(tokens.iter().all(|t| t.len() == s), "row unfilled");
+        Ok(GenBatch {
+            tokens,
+            resp_mask,
+            blp,
+            terminated,
+            steps: pool.stats().sweeps as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: usize = 4;
+    const P: usize = 2;
+    const S: usize = 8;
+    const V: usize = 16;
+
+    /// Scripted backend: no PJRT, logits force token `script(row, pos)`
+    /// at every position (consumed with greedy sampling for exactness).
+    struct Scripted<F: FnMut(usize, usize) -> i32> {
+        script: F,
+        next_cache: usize,
+        live_caches: usize,
+        max_live_caches: usize,
+        prefills: usize,
+        decodes: usize,
+    }
+
+    impl<F: FnMut(usize, usize) -> i32> Scripted<F> {
+        fn new(script: F) -> Self {
+            Scripted {
+                script,
+                next_cache: 0,
+                live_caches: 0,
+                max_live_caches: 0,
+                prefills: 0,
+                decodes: 0,
+            }
+        }
+
+        fn logits_for(&mut self, pos: usize) -> Vec<f32> {
+            let mut l = vec![0.0f32; B * V];
+            for row in 0..B {
+                let tok = (self.script)(row, pos);
+                l[row * V + tok as usize] = 80.0;
+            }
+            l
+        }
+    }
+
+    impl<F: FnMut(usize, usize) -> i32> DecodeBackend for Scripted<F> {
+        fn prefill(
+            &mut self,
+            _params: ParamView<'_>,
+            prompt_flat: &[i32],
+        ) -> Result<(usize, Vec<f32>)> {
+            assert_eq!(prompt_flat.len(), B * P);
+            self.prefills += 1;
+            self.live_caches += 1;
+            self.max_live_caches = self.max_live_caches.max(self.live_caches);
+            let id = self.next_cache;
+            self.next_cache += 1;
+            Ok((id, self.logits_for(P)))
+        }
+
+        fn decode(
+            &mut self,
+            _params: ParamView<'_>,
+            _cache: usize,
+            toks: &[i32],
+            pos: usize,
+        ) -> Result<Vec<f32>> {
+            assert_eq!(toks.len(), B);
+            self.decodes += 1;
+            Ok(self.logits_for(pos + 1))
+        }
+
+        fn retire_cache(&mut self, _cache: usize) {
+            self.live_caches -= 1;
+        }
+    }
+
+    fn cfg(max_cohorts: usize, admit_min: usize) -> PoolCfg {
+        PoolCfg {
+            slots: B,
+            prompt_len: P,
+            seq_len: S,
+            vocab: V,
+            max_cohorts,
+            admit_min,
+        }
+    }
+
+    fn admit_stream(n: usize) -> impl Iterator<Item = AdmitSeq> {
+        (0..n).map(|i| AdmitSeq {
+            index: i as u64,
+            dup: 0,
+            prompt: vec![tk::BOS, 30 + i as i32],
+        })
+    }
+
+    const GREEDY: SampleOpts = SampleOpts { temperature: 0.7, greedy: true };
+
+    /// Drive until `n` sequences retire (panics if the pool stalls).
+    fn run_until<F: FnMut(usize, usize) -> i32>(
+        pool: &mut Pool,
+        backend: &mut Scripted<F>,
+        admission: &mut dyn Iterator<Item = AdmitSeq>,
+        n: u64,
+    ) -> Vec<Completed> {
+        let mut rng = Pcg32::new(7, 0);
+        let mut out = Vec::new();
+        for _ in 0..10_000 {
+            pool.step(backend, ParamView::fresh(&[]), 0, admission, GREEDY, &mut rng)
+                .unwrap();
+            out.extend(pool.drain_completed());
+            if pool.stats().retired >= n {
+                return out;
+            }
+        }
+        panic!("pool stalled: {} of {n} retired", pool.stats().retired);
+    }
+
+    #[test]
+    fn continuous_eos_on_first_decode_step_retires_immediately() {
+        // row 0 terminates on its very first sample; its slot frees while
+        // the rest of the cohort keeps decoding
+        let mut backend = Scripted::new(|row, pos| {
+            if row == 0 && pos == P {
+                tk::EOS
+            } else {
+                7
+            }
+        });
+        let mut pool = Pool::new(cfg(1, 1));
+        let mut admission = admit_stream(B);
+        // step 1: admission only; step 2: first sweep retires row 0
+        let mut rng = Pcg32::new(7, 0);
+        pool.step(&mut backend, ParamView::fresh(&[]), 0, &mut admission, GREEDY, &mut rng)
+            .unwrap();
+        assert_eq!(pool.in_flight(), B);
+        assert_eq!(pool.stats().sweeps, 0, "admission step sweeps nothing");
+        pool.step(&mut backend, ParamView::fresh(&[]), 0, &mut admission, GREEDY, &mut rng)
+            .unwrap();
+        let done = pool.drain_completed();
+        assert_eq!(done.len(), 1);
+        let c = &done[0];
+        assert_eq!(c.index, 0);
+        assert!(c.terminated);
+        assert_eq!(c.steps, 1, "EOS on the first decode step");
+        assert_eq!(c.tokens[P], tk::EOS);
+        assert_eq!(c.resp_mask[P], 1.0);
+        assert_eq!(&c.resp_mask[P + 1..], &[0.0; S - P - 1][..]);
+        assert_eq!(pool.in_flight(), B - 1);
+    }
+
+    #[test]
+    fn continuous_eos_on_last_position_terminates_others_truncate() {
+        // row 1 emits EOS exactly at position S-1; every other row runs
+        // out of positions there and retires unterminated
+        let mut backend = Scripted::new(|row, pos| {
+            if row == 1 && pos == S - 1 {
+                tk::EOS
+            } else {
+                7
+            }
+        });
+        let mut pool = Pool::new(cfg(1, B));
+        let mut admission = admit_stream(B);
+        let done = run_until(&mut pool, &mut backend, &mut admission, B as u64);
+        assert_eq!(done.len(), B);
+        for c in &done {
+            assert_eq!(c.steps, S - P, "all rows held to the last position");
+            assert_eq!(c.terminated, c.index == 1, "only row 1 saw EOS");
+            assert_eq!(c.tokens[S - 1], if c.index == 1 { tk::EOS } else { 7 });
+            assert_eq!(c.resp_mask[S - 1], 1.0);
+        }
+        // the terminal sweep retired everyone: no decode happened for it
+        assert_eq!(pool.stats().sweeps as usize, S - P);
+        assert_eq!(pool.stats().decode_calls as usize, S - P - 1);
+    }
+
+    #[test]
+    fn continuous_all_slots_retiring_in_same_sweep_drains_pool() {
+        let mut backend = Scripted::new(|_, pos| {
+            if pos == P + 2 {
+                tk::EOS
+            } else {
+                7
+            }
+        });
+        let mut pool = Pool::new(cfg(1, B));
+        let mut admission = admit_stream(B);
+        let done = run_until(&mut pool, &mut backend, &mut admission, B as u64);
+        assert_eq!(done.len(), B);
+        assert!(done.iter().all(|c| c.terminated && c.steps == 3));
+        assert!(pool.is_drained(), "cohort must drop with its last row");
+        assert_eq!(backend.live_caches, 0, "drained cohort's cache freed");
+    }
+
+    #[test]
+    fn continuous_admission_refills_freed_slots_without_drops_or_dups() {
+        // responses of wildly mixed lengths; 3 pools' worth of prompts
+        // stream through B slots — every admitted index retires exactly
+        // once and carries its own prompt
+        let n = 3 * B;
+        let mut backend = Scripted::new(|row, pos| {
+            // row-dependent EOS: lengths 1, 3, 5, 2 (mod slot)
+            let len = [1usize, 3, 5, 2][row % 4];
+            if pos >= P + len - 1 {
+                tk::EOS
+            } else {
+                7
+            }
+        });
+        let mut pool = Pool::new(cfg(4, 1));
+        let mut admission = admit_stream(n);
+        let done = run_until(&mut pool, &mut backend, &mut admission, n as u64);
+        let mut seen: Vec<u64> = done.iter().map(|c| c.index).collect();
+        seen.sort_unstable();
+        assert_eq!(
+            seen,
+            (0..n as u64).collect::<Vec<_>>(),
+            "each admitted prompt retires exactly once"
+        );
+        for c in &done {
+            assert_eq!(
+                c.tokens[..P],
+                [tk::BOS, 30 + c.index as i32],
+                "slot reuse must not leak another sequence's prompt"
+            );
+            assert!(c.terminated);
+        }
+        // mid-flight admission actually happened: more cohorts than the
+        // one initial fill, and at some point several were live at once
+        assert!(pool.stats().prefill_calls > 1, "no mid-flight admission");
+        assert!(backend.max_live_caches > 1, "cohorts never overlapped");
+        // occupancy: every sweep fed at least one live row
+        assert!(pool.stats().tokens >= pool.stats().sweeps);
+    }
+
+    #[test]
+    fn continuous_max_cohorts_caps_live_caches_and_admission_waits() {
+        let n = 4 * B;
+        let mut backend = Scripted::new(|row, pos| {
+            let len = [1usize, 6, 4, 2][row % 4];
+            if pos >= P + len - 1 {
+                tk::EOS
+            } else {
+                7
+            }
+        });
+        let mut pool = Pool::new(cfg(2, 1));
+        let mut admission = admit_stream(n);
+        let done = run_until(&mut pool, &mut backend, &mut admission, n as u64);
+        assert_eq!(done.len(), n);
+        assert!(
+            backend.max_live_caches <= 2,
+            "cohort cap exceeded: {} caches live",
+            backend.max_live_caches
+        );
+        // the decode-call amplification is bounded by the cap
+        assert!(pool.stats().decode_calls <= 2 * pool.stats().sweeps);
+    }
+
+    #[test]
+    fn continuous_admit_min_batches_admissions() {
+        // with admit_min = B, freed slots wait until the whole pool has
+        // drained — so every cohort is a full-width prefill
+        let n = 2 * B;
+        let mut backend = Scripted::new(|row, pos| {
+            let len = [1usize, 2, 3, 4][row % 4];
+            if pos >= P + len - 1 {
+                tk::EOS
+            } else {
+                7
+            }
+        });
+        let mut pool = Pool::new(cfg(4, B));
+        let mut admission = admit_stream(n);
+        let done = run_until(&mut pool, &mut backend, &mut admission, n as u64);
+        assert_eq!(done.len(), n);
+        assert_eq!(pool.stats().prefill_calls, 2, "one full cohort per fill");
+        assert_eq!(backend.max_live_caches, 1);
+    }
+
+    #[test]
+    fn continuous_rng_walks_one_draw_per_slot_per_sweep() {
+        // the pool's stream walk must be exactly sweeps × B draws —
+        // bitwise the fixed tiers' discipline — regardless of retirement
+        // and admission churn
+        let n = 2 * B;
+        let mut backend = Scripted::new(|row, pos| {
+            let len = [1usize, 3, 2, 4][row % 4];
+            if pos >= P + len - 1 {
+                tk::EOS
+            } else {
+                7
+            }
+        });
+        let mut pool = Pool::new(cfg(2, 1));
+        let mut admission = admit_stream(n);
+        let mut rng = Pcg32::new(123, 9);
+        let mut steps_taken = 0u64;
+        while pool.stats().retired < n as u64 {
+            pool.step(
+                &mut backend,
+                ParamView::fresh(&[]),
+                0,
+                &mut admission,
+                GREEDY,
+                &mut rng,
+            )
+            .unwrap();
+            steps_taken += 1;
+            assert!(steps_taken < 1000, "stalled");
+        }
+        let mut ref_rng = Pcg32::new(123, 9);
+        for _ in 0..pool.stats().sweeps * B as u64 {
+            sampler::skip_draw(&mut ref_rng);
+        }
+        assert_eq!(rng.next_u64(), ref_rng.next_u64());
+    }
+
+    #[test]
+    fn continuous_version_stamps_follow_logits_provenance() {
+        // bump the version between steps: tokens sampled from logits
+        // computed under version v must stamp v, not the pool's current
+        // version — the stamp is the behaviour policy of that token
+        let mut backend = Scripted::new(|_, _| 7);
+        let mut pool = Pool::new(cfg(1, B));
+        let mut admission = admit_stream(B);
+        let mut rng = Pcg32::new(5, 5);
+        // admit under version 0, then advance under increasing versions
+        let mut version = 0u64;
+        while pool.stats().retired < B as u64 {
+            pool.step(
+                &mut backend,
+                ParamView::fresh(&[]),
+                version,
+                &mut admission,
+                GREEDY,
+                &mut rng,
+            )
+            .unwrap();
+            version += 1;
+        }
+        let done = pool.drain_completed();
+        for c in &done {
+            // first token's logits came from the version-0 prefill; the
+            // last from the freshest decode — a true min/max spread
+            assert_eq!(c.version_min, 0);
+            assert_eq!(c.version_max, (S - P - 1) as u64);
+            assert_eq!(c.steps, S - P);
+            let expect_sum: f64 = (0..(S - P) as u64).map(|x| x as f64).sum();
+            assert!((c.version_sum - expect_sum).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn continuous_round_assembler_groups_k_completions_in_dup_order() {
+        let mk = |index: u64, dup: usize| Completed {
+            index,
+            dup,
+            tokens: vec![0; S],
+            resp_mask: vec![0.0; S],
+            blp: vec![0.0; S],
+            terminated: true,
+            steps: 1,
+            version_min: 0,
+            version_max: 0,
+            version_sum: 0.0,
+        };
+        // gen_batch 4, k 2 → rounds of 2 prompt groups
+        let mut asm = RoundAssembler::new(4, 2);
+        // retirement order interleaves prompts and flips dup order
+        asm.push(mk(10, 1));
+        asm.push(mk(11, 0));
+        asm.push(mk(12, 0));
+        assert!(asm.pop_round().is_none(), "no group complete yet");
+        asm.push(mk(12, 1)); // group 12 completes FIRST
+        asm.push(mk(10, 0)); // then group 10
+        let round = asm.pop_round().expect("two groups ready");
+        let indices: Vec<u64> = round.iter().map(|(index, _)| *index).collect();
+        assert_eq!(indices, vec![12, 10], "groups emit in readiness order");
+        for (_, group) in &round {
+            assert_eq!(group.len(), 2);
+            assert!(group[0].dup < group[1].dup, "dups sorted back in order");
+        }
+        // group 11 still waits for its sibling
+        assert_eq!(asm.buffered(), 1);
+        assert!(asm.pop_round().is_none());
+    }
+}

@@ -21,14 +21,20 @@
 //! baseline; this engine is what production would run when the
 //! measurement no longer needs the literal round-trip.
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Result};
 
-use super::{DecodeState, GenBatch, Generator, SampleOpts};
+use super::{flatten_prompts, DecodeState, GenBatch, Generator, SampleOpts};
 use crate::runtime::{CallArg, DeviceBuffer, Engine, ParamView};
 use crate::util::rng::Pcg32;
 
 #[derive(Default)]
-pub struct DeviceCachedEngine;
+pub struct DeviceCachedEngine {
+    /// Flattened-prompt scratch, reused across rounds (one allocation per
+    /// engine — the same shape as the fused engine's).
+    scratch: RefCell<Vec<i32>>,
+}
 
 impl DeviceCachedEngine {
     /// Whether `engine`'s bundle ships the buffer-path twins this engine
@@ -68,14 +74,16 @@ impl Generator for DeviceCachedEngine {
 
         // prefill: prompt -> device-resident kv cache + logits for pos p.
         // Only the logits are downloaded; the cache stays where it is.
-        let mut prompt_flat = Vec::with_capacity(b * p);
-        for row in prompts {
-            prompt_flat.extend_from_slice(&row[..p]);
-        }
+        let prompt_flat = {
+            let mut scratch = self.scratch.borrow_mut();
+            flatten_prompts(prompts, p, &mut scratch);
+            scratch
+        };
         let mut out = engine.execute_buffers(
             "prefill_dev",
             &[CallArg::Param(params), CallArg::I32(&prompt_flat)],
         )?;
+        drop(prompt_flat);
         let mut logits = engine.download(&out[1])?.into_f32()?;
         let mut kv: DeviceBuffer = out.swap_remove(0);
 

@@ -27,7 +27,7 @@ use std::cell::RefCell;
 
 use anyhow::Result;
 
-use super::{GenBatch, GenBuffers, Generator, SampleOpts};
+use super::{flatten_prompts, GenBatch, GenBuffers, Generator, SampleOpts};
 use crate::runtime::{CallArg, Engine, ParamView};
 use crate::tokenizer as tk;
 use crate::util::rng::Pcg32;
@@ -94,12 +94,7 @@ impl FusedEngine {
         let temp = if opts.greedy { -1.0 } else { opts.temperature };
         let seed = (rng.next_u32() >> 1) as i32; // non-negative seed
         let mut prompt_flat = self.scratch.borrow_mut();
-        prompt_flat.clear();
-        prompt_flat.reserve(b * p);
-        for row in prompts {
-            assert_eq!(row.len(), p, "prompts must be fixed-length");
-            prompt_flat.extend_from_slice(&row[..p]);
-        }
+        flatten_prompts(prompts, p, &mut prompt_flat);
         let args = [
             CallArg::Param(params),
             CallArg::I32(&prompt_flat),

@@ -33,6 +33,7 @@
 //! tokens/sec and bytes/token of every tier in `BENCH_gen_speed.json`.
 
 pub mod cached;
+pub mod continuous;
 pub mod device;
 pub mod fused;
 pub mod naive;
@@ -103,6 +104,20 @@ impl GenBatch {
             .map(|p| p + 1)
             .unwrap_or(prompt_len);
         &toks[prompt_len..end]
+    }
+}
+
+/// Flatten fixed-length token rows into the row-major scratch buffer
+/// (cleared first) — the one definition of the `[B, L]` flattening every
+/// step-wise engine feeds `prefill`/`forward_full`. Callers hold the
+/// scratch (typically a `RefCell<Vec<i32>>` on the engine) so repeated
+/// rounds reuse one allocation.
+pub fn flatten_prompts(rows: &[Vec<i32>], len: usize, scratch: &mut Vec<i32>) {
+    scratch.clear();
+    scratch.reserve(rows.len() * len);
+    for row in rows {
+        assert_eq!(row.len(), len, "rows must be fixed-length ({len})");
+        scratch.extend_from_slice(&row[..len]);
     }
 }
 
@@ -197,12 +212,15 @@ impl DecodeState {
         let mut sampled = vec![tk::PAD; b];
         for i in 0..b {
             // one rng draw per row per step, even when finished, so every
-            // engine walks the stream identically (see module docs)
-            let row = &logits[i * vocab..(i + 1) * vocab];
-            let (tok, lp) = sampler::sample(row, opts.temperature, opts.greedy, rng);
+            // engine walks the stream identically (see module docs) — but
+            // finished rows advance the stream without paying the O(V)
+            // softmax whose result they would discard
             if self.done[i] {
+                sampler::skip_draw(rng);
                 continue;
             }
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let (tok, lp) = sampler::sample(row, opts.temperature, opts.greedy, rng);
             let tok = tok as i32;
             self.tokens[i][pos] = tok;
             self.resp_mask[i][pos] = 1.0;
@@ -254,6 +272,57 @@ mod tests {
         assert_eq!(toks[1], tk::PAD);
         assert_eq!(st.tokens[1][3], tk::PAD);
         assert_eq!(st.resp_mask[1][3], 0.0);
+    }
+
+    #[test]
+    fn done_row_rng_skip_leaves_stream_walk_unchanged() {
+        // The retired-row fast path (skip_draw instead of a full sample)
+        // must leave the RNG stream — and therefore every subsequently
+        // emitted token — bitwise identical to the old walk that ran the
+        // O(V) softmax on done rows and discarded it.
+        let vocab = 64;
+        let opts = SampleOpts { temperature: 0.7, greedy: false };
+        let prompts = vec![vec![tk::BOS, 30], vec![tk::BOS, 31]];
+        let mut st = DecodeState::new(&prompts, 2, 8);
+        let mut rng = Pcg32::new(99, 7);
+        // reference walk: sample every row by hand (the pre-skip behaviour)
+        let mut ref_rng = Pcg32::new(99, 7);
+        let mut logits = vec![0.0f32; 2 * vocab];
+        logits[vocab + tk::EOS as usize] = 50.0; // row1 terminates at once
+        for pos in 2..8 {
+            let toks = st.step(pos, &logits, vocab, opts, &mut rng);
+            let mut ref_toks = Vec::new();
+            for i in 0..2 {
+                let row = &logits[i * vocab..(i + 1) * vocab];
+                let (tok, _) =
+                    sampler::sample(row, opts.temperature, opts.greedy, &mut ref_rng);
+                ref_toks.push(tok as i32);
+            }
+            // live rows must emit exactly what the reference walk samples
+            if !st.done[0] || toks[0] != tk::PAD {
+                assert_eq!(toks[0], ref_toks[0], "row0 diverged at pos {pos}");
+            }
+        }
+        // ... and the two streams must end at the same state
+        assert_eq!(rng.next_u64(), ref_rng.next_u64());
+    }
+
+    #[test]
+    fn flatten_prompts_is_row_major_and_reuses_scratch() {
+        let rows = vec![vec![1, 2, 3], vec![4, 5, 6]];
+        let mut scratch = vec![9; 100];
+        flatten_prompts(&rows, 3, &mut scratch);
+        assert_eq!(scratch, vec![1, 2, 3, 4, 5, 6]);
+        // scratch is cleared, not appended
+        flatten_prompts(&rows, 3, &mut scratch);
+        assert_eq!(scratch.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "fixed-length")]
+    fn flatten_prompts_rejects_ragged_rows() {
+        let rows = vec![vec![1, 2, 3], vec![4, 5]];
+        flatten_prompts(&rows, 3, &mut Vec::new());
     }
 
     #[test]

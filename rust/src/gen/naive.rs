@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use super::{DecodeState, GenBatch, Generator, SampleOpts};
+use super::{flatten_prompts, DecodeState, GenBatch, Generator, SampleOpts};
 use crate::runtime::{CallArg, Engine, ParamView};
 use crate::util::rng::Pcg32;
 
@@ -43,10 +43,7 @@ impl Generator for NaiveEngine {
             steps += 1;
             // recompute the whole sequence to get logits at pos-1 (which
             // predict the token at pos) — the training-library way
-            toks_flat.clear();
-            for row in &st.tokens {
-                toks_flat.extend_from_slice(row);
-            }
+            flatten_prompts(&st.tokens, s, &mut toks_flat);
             let out = engine.call_with(
                 "forward_full",
                 &[CallArg::Param(params), CallArg::I32(&toks_flat)],

@@ -35,6 +35,15 @@ pub fn sample(
     (tok, log_softmax_at(logits, tok))
 }
 
+/// Advance `rng` by exactly the draws [`sample`] consumes (one uniform)
+/// WITHOUT touching any logits — the O(1) stand-in for rows whose sample
+/// would be discarded anyway (retired slots). Engines that walk a shared
+/// stream stay bitwise-aligned as long as every row consumes one call to
+/// either function per step.
+pub fn skip_draw(rng: &mut Pcg32) {
+    let _ = rng.gen_f64();
+}
+
 pub fn argmax(logits: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in logits.iter().enumerate() {
@@ -130,6 +139,27 @@ mod tests {
         let logits = vec![0.0, 1.0];
         sample(&logits, 0.7, true, &mut a);
         sample(&logits, 0.7, false, &mut b);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn skip_draw_walks_stream_like_sample() {
+        // skip_draw must consume exactly what sample consumes, so a
+        // stream interleaving skips (retired rows) with real samples is
+        // indistinguishable from one that sampled every row
+        let mut a = Pcg32::new(17, 3);
+        let mut b = Pcg32::new(17, 3);
+        let logits = vec![0.3, -1.0, 2.2, 0.0];
+        for i in 0..32 {
+            if i % 3 == 0 {
+                skip_draw(&mut a);
+                sample(&logits, 0.7, false, &mut b);
+            } else {
+                let (ta, _) = sample(&logits, 0.7, false, &mut a);
+                let (tb, _) = sample(&logits, 0.7, false, &mut b);
+                assert_eq!(ta, tb, "streams diverged at step {i}");
+            }
+        }
         assert_eq!(a.next_u64(), b.next_u64());
     }
 }

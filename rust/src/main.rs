@@ -11,6 +11,8 @@
 //!   async-rlhf train tldr_s --algo dpo --mode async --steps 96
 //!   async-rlhf train tldr_s --mode async --gen-workers 2 --staleness-bound 4
 //!   async-rlhf train tldr_s --gen-engine device   # KV chained on-device
+//!   async-rlhf train tldr_s --mode async --gen-engine continuous \
+//!                           --max-cohorts 4 --admit-min 1  # slot pool
 //!   async-rlhf exp fig3 --steps 64
 //!   async-rlhf exp staleness --steps 24           # K x M ladder
 //!   async-rlhf sim --gen 21 --train 33 --steps 233
@@ -169,7 +171,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     let prompts: Vec<Vec<i32>> =
         examples.iter().map(|e| e.prompt.clone()).collect();
     let mut rng = Pcg32::new(0, 0);
-    let gen = CachedEngine.generate(
+    let gen = CachedEngine::default().generate(
         &engine,
         async_rlhf::runtime::ParamView::fresh(&sft),
         &prompts,

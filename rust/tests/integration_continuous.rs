@@ -1,0 +1,160 @@
+//! Integration tests for the continuous in-flight batching engine on the
+//! dev artifact bundle.
+//!
+//! Two faces are exercised end-to-end: the round-mode [`Generator`]
+//! (one cohort at full occupancy, admission disabled — contractually
+//! BITWISE-equal to the device-KV tier at equal seeds, the anchor that
+//! pins the pool's sampling/RNG/retirement semantics to an
+//! already-verified engine), and the streaming face driven by the async
+//! coordinator (`--gen-engine continuous`), checked for episode
+//! accounting and the per-token staleness telemetry only the slot pool
+//! can produce.
+//!
+//! Requires `make artifacts` (skips, loudly, when artifacts/dev is
+//! absent — CI always builds artifacts first).
+
+use std::path::PathBuf;
+
+use async_rlhf::config::{Algo, ExpConfig, GenEngine, Mode};
+use async_rlhf::coordinator;
+use async_rlhf::data::{Task, TaskGen};
+use async_rlhf::gen::continuous::ContinuousEngine;
+use async_rlhf::gen::{device::DeviceCachedEngine, Generator, SampleOpts};
+use async_rlhf::runtime::{Engine, ParamView};
+use async_rlhf::util::rng::Pcg32;
+
+fn dev_dir() -> Option<PathBuf> {
+    let root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let dir = root.join("dev");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/dev missing — run `make artifacts`");
+        None
+    }
+}
+
+fn test_cfg(name: &str) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.model = "dev".into();
+    cfg.artifacts_root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    cfg.steps = 10;
+    cfg.sft_steps = 80;
+    cfg.rm_steps = 60;
+    cfg.eval_prompts = 32;
+    cfg.run_dir = std::env::temp_dir().join(format!("async_rlhf_test_{name}"));
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    cfg
+}
+
+#[test]
+fn continuous_round_mode_bitwise_matches_device_tier() {
+    // At full occupancy with admission disabled the pool must make the
+    // exact call sequence the device tier makes (one prefill, one decode
+    // per surviving sweep) and walk the host RNG identically (one draw
+    // per slot per sweep, sample or skip): sequences, masks, behaviour
+    // logprobs, termination flags and step counts all bitwise equal.
+    let Some(dir) = dev_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    if !ContinuousEngine::supported(&engine) {
+        eprintln!(
+            "SKIP: bundle lacks prefill_dev/decode_dev — rebuild artifacts"
+        );
+        return;
+    }
+    let cfg = engine.manifest.config.clone();
+    let params = engine.init_policy().unwrap();
+    let taskgen = TaskGen::new(Task::Tldr, cfg.prompt_len, cfg.resp_len, 7);
+    let prompts: Vec<Vec<i32>> = taskgen
+        .batch(0, cfg.gen_batch)
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let opts = SampleOpts { temperature: 0.7, greedy: false };
+
+    let mut rng1 = Pcg32::new(99, 1);
+    let a = DeviceCachedEngine::default()
+        .generate(
+            &engine,
+            ParamView::cached("p", 0, &params),
+            &prompts,
+            opts,
+            &mut rng1,
+        )
+        .unwrap();
+    let mut rng2 = Pcg32::new(99, 1);
+    let b = ContinuousEngine::default()
+        .generate(
+            &engine,
+            ParamView::cached("p", 0, &params),
+            &prompts,
+            opts,
+            &mut rng2,
+        )
+        .unwrap();
+    assert_eq!(a.tokens, b.tokens, "sequences diverged");
+    assert_eq!(a.resp_mask, b.resp_mask);
+    assert_eq!(a.blp, b.blp, "behaviour logprobs must be bitwise equal");
+    assert_eq!(a.terminated, b.terminated);
+    assert_eq!(a.steps, b.steps, "early-exit behaviour diverged");
+    // and the host RNG cursors agree, so downstream sampling stays in
+    // lockstep no matter which engine ran the round
+    assert_eq!(rng1.next_u64(), rng2.next_u64(), "RNG walks diverged");
+}
+
+#[test]
+fn async_continuous_end_to_end_smoke() {
+    // Full RLHF run through the streaming face: the worker drives
+    // Pool::step directly (mid-flight admission, between-step weight
+    // swaps), rounds are assembled from retirement order, and the
+    // per-token staleness telemetry lands in the log.
+    let Some(dir) = dev_dir() else { return };
+    {
+        let engine = Engine::load(&dir).unwrap();
+        if !ContinuousEngine::supported(&engine) {
+            eprintln!(
+                "SKIP: bundle lacks prefill_dev/decode_dev — rebuild artifacts"
+            );
+            return;
+        }
+    }
+    let mut cfg = test_cfg("continuous_smoke");
+    cfg.algo = Algo::Dpo;
+    cfg.mode = Mode::Async;
+    cfg.gen_engine = GenEngine::Continuous;
+    cfg.steps = 8;
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+
+    // episode accounting is engine-independent: every trained round is
+    // gen_batch sequences regardless of how they were scheduled
+    assert_eq!(out.log.rows.len(), cfg.steps as usize);
+    assert_eq!(
+        out.episodes,
+        cfg.steps * prep.engine.manifest.config.gen_batch as u64
+    );
+
+    // per-token staleness telemetry: present on every row, internally
+    // consistent (max >= mean >= 0, and the per-round staleness — the
+    // NEWEST token's age — never exceeds the oldest token's age)
+    for row in &out.log.rows {
+        let tok_max = row.values["staleness_tok_max"];
+        let tok_mean = row.values["staleness_tok_mean"];
+        let round = row.values["staleness"];
+        assert!(tok_max >= 0.0 && tok_mean >= 0.0);
+        assert!(
+            tok_max + 1e-6 >= tok_mean,
+            "token staleness max {tok_max} < mean {tok_mean}"
+        );
+        assert!(
+            tok_max + 1e-6 >= round,
+            "oldest-token staleness {tok_max} < round staleness {round}"
+        );
+    }
+    assert!(out.log.meta.contains_key("mean_staleness_tok"));
+    assert!(out.log.meta.contains_key("max_staleness_tok"));
+}

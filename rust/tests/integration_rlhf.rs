@@ -256,6 +256,8 @@ fn clone_round(round: &Round) -> Round {
         examples: round.examples.clone(),
         start_index: round.start_index,
         params_version: round.params_version,
+        tok_version_min: round.tok_version_min,
+        tok_version_mean: round.tok_version_mean,
         gen_secs: 0.0,
         gen_span: (0.0, 0.0),
     }

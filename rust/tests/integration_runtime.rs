@@ -141,7 +141,7 @@ fn cached_and_naive_engines_emit_identical_sequences() {
     let opts = SampleOpts { temperature: 0.7, greedy: false };
 
     let mut rng1 = Pcg32::new(99, 1);
-    let a = CachedEngine
+    let a = CachedEngine::default()
         .generate(&engine, ParamView::fresh(&params), &prompts, opts, &mut rng1)
         .unwrap();
     let mut rng2 = Pcg32::new(99, 1);
@@ -182,11 +182,11 @@ fn device_cached_engine_bitwise_matches_literal_cached() {
     let opts = SampleOpts { temperature: 0.7, greedy: false };
 
     let mut rng1 = Pcg32::new(99, 1);
-    let a = CachedEngine
+    let a = CachedEngine::default()
         .generate(&engine, ParamView::cached("p", 0, &params), &prompts, opts, &mut rng1)
         .unwrap();
     let mut rng2 = Pcg32::new(99, 1);
-    let b = DeviceCachedEngine
+    let b = DeviceCachedEngine::default()
         .generate(&engine, ParamView::cached("p", 0, &params), &prompts, opts, &mut rng2)
         .unwrap();
     assert_eq!(a.tokens, b.tokens, "sequences diverged");
@@ -242,18 +242,18 @@ fn device_kv_tier_moves_fewer_bytes_than_literal_cached() {
 
     // warm both paths (compile + param cache), then measure one round each
     let mut rng = Pcg32::new(1, 0);
-    CachedEngine.generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
+    CachedEngine::default().generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
     let mut rng = Pcg32::new(1, 0);
-    DeviceCachedEngine.generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
+    DeviceCachedEngine::default().generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
 
     engine.reset_stats();
     let mut rng = Pcg32::new(42, 3);
-    CachedEngine.generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
+    CachedEngine::default().generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
     let (lit_up, lit_down) = engine.transfer_totals();
 
     engine.reset_stats();
     let mut rng = Pcg32::new(42, 3);
-    DeviceCachedEngine.generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
+    DeviceCachedEngine::default().generate(&engine, pv, &prompts, opts, &mut rng).unwrap();
     let (dev_up, dev_down) = engine.transfer_totals();
 
     // the KV cache dwarfs everything else: the device tier must move
@@ -330,7 +330,7 @@ fn behaviour_logprobs_match_logprob_executable() {
         .map(|e| e.prompt.clone())
         .collect();
     let fused = FusedEngine::default();
-    let engines: [&dyn Generator; 3] = [&CachedEngine, &NaiveEngine, &fused];
+    let engines: [&dyn Generator; 3] = [&CachedEngine::default(), &NaiveEngine, &fused];
     for generator in engines {
         let mut rng = Pcg32::new(5, 0);
         let gen = generator
@@ -506,7 +506,7 @@ fn eos_forcing_terminates_generation_early() {
         examples.iter().map(|e| e.prompt.clone()).collect();
     let trained = state.params_host(&engine).unwrap().to_vec();
     let mut rng = Pcg32::new(1, 1);
-    let gen = CachedEngine
+    let gen = CachedEngine::default()
         .generate(
             &engine,
             ParamView::fresh(&trained),

@@ -293,6 +293,81 @@ fn worker_pool_cursors_partition_prompt_stream() {
 }
 
 #[test]
+fn admission_streams_partition_prompt_stream_without_drops_or_dups() {
+    // Continuous-engine analogue of the cursor partition above: worker w
+    // admits prompts one at a time from taskgen.admission(w * stride,
+    // stride, m * stride, k). Across M workers the admitted (index, dup)
+    // pairs must yield every index exactly k times (dups 0..k in order),
+    // with no cross-worker overlap and contiguous tiling of the stream —
+    // retirement order inside the pool cannot un-admit anything, so
+    // admission-side exactness is the whole no-drop/no-dup invariant.
+    prop_check("admission stream partition", 100, |rng| {
+        let m = 1 + rng.gen_usize(4);
+        let k = if rng.gen_bool(0.5) { 2 } else { 4 };
+        let n_prompts = 1 + rng.gen_usize(6);
+        let gen_batch = (n_prompts * k) as u64;
+        let stride = cursor_stride(gen_batch, k);
+        let rounds = 1 + rng.gen_usize(20);
+        let per_worker = rounds * n_prompts * k;
+        let taskgen = TaskGen::new(Task::Tldr, 16, 8, rng.next_u64());
+        let mut counts = std::collections::HashMap::<u64, usize>::new();
+        for w in 0..m {
+            let mut last: Option<(u64, usize)> = None;
+            for a in taskgen
+                .admission(w as u64 * stride, stride, stride * m as u64, k)
+                .take(per_worker)
+            {
+                // duplicates of an index arrive consecutively, dup 0..k
+                match last {
+                    Some((idx, dup)) if idx == a.index => {
+                        prop_assert!(
+                            a.dup == dup + 1,
+                            "dup order broke at index {idx} (w {w})"
+                        );
+                    }
+                    _ => {
+                        prop_assert!(
+                            a.dup == 0,
+                            "index {} began at dup {} (w {w})",
+                            a.index,
+                            a.dup
+                        );
+                        if let Some((idx, dup)) = last {
+                            prop_assert!(
+                                dup == k - 1,
+                                "index {idx} left early at dup {dup} (w {w})"
+                            );
+                        }
+                    }
+                }
+                last = Some((a.index, a.dup));
+                let c = counts.entry(a.index).or_insert(0);
+                *c += 1;
+                prop_assert!(
+                    *c <= k,
+                    "index {} admitted {} > k times",
+                    a.index,
+                    *c
+                );
+            }
+        }
+        let want = rounds as u64 * m as u64 * stride;
+        prop_assert!(
+            counts.len() as u64 == want,
+            "coverage {} != {want}",
+            counts.len()
+        );
+        prop_assert!(
+            counts.values().all(|&c| c == k),
+            "some index admitted fewer than k times"
+        );
+        let max = counts.keys().copied().max().unwrap();
+        prop_assert!(max + 1 == want, "stream has holes below {max}");
+        Ok(())
+    });
+}
+
+#[test]
 fn staleness_bound_is_monotone_in_queue_workers_and_epochs() {
     // The bound (K + M + 1)·T − 1 (proven for M=1, fair-scheduling for
     // M>1) must grow monotonically in every knob and reduce to the seed
