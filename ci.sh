@@ -36,14 +36,15 @@ if [[ "${1:-}" != "--fast" ]]; then
 fi
 cargo test -q
 
-echo "== invariant gates (staleness, pair gather, continuous) =="
+echo "== invariant gates (staleness, pair gather, continuous, faults) =="
 # the pipeline's staleness-bound tests, the pair-gather equivalence /
-# byte-counter tests, and the continuous-pool slot-lifecycle tests are
-# release-gating and already ran in the full `cargo test -q` above; here
-# just assert they still EXIST (cargo exits 0 on a zero-match filter, so
-# a rename/module move would otherwise drop the gate silently) — --list
-# doesn't re-run anything
-for filter in staleness bounded_queue pair_gather continuous; do
+# byte-counter tests, the continuous-pool slot-lifecycle tests, and the
+# fault-injection / checkpoint-resume tests are release-gating and
+# already ran in the full `cargo test -q` above; here just assert they
+# still EXIST (cargo exits 0 on a zero-match filter, so a rename/module
+# move would otherwise drop the gate silently) — --list doesn't re-run
+# anything
+for filter in staleness bounded_queue pair_gather continuous fault resume; do
   # capture first: grep -q on the pipe would EPIPE cargo under pipefail
   listing=$(cargo test -q "$filter" -- --list 2>/dev/null)
   echo "$listing" | grep -q ": test" || {

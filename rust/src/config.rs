@@ -148,6 +148,102 @@ impl fmt::Display for GenEngine {
     }
 }
 
+/// Failure mode a scripted fault injects (`--inject-fault ...,kind=`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker thread panics (exercises `catch_unwind` + respawn).
+    Panic,
+    /// The worker sleeps past `--stall-timeout-secs` (exercises the
+    /// heartbeat watchdog), then continues normally.
+    Stall,
+    /// The worker's generation call fails once with a synthetic engine
+    /// error (exercises the retry policy, or respawn when retries = 0).
+    EngineErr,
+}
+
+impl FaultKind {
+    pub fn from_name(s: &str) -> Result<FaultKind> {
+        Ok(match s {
+            "panic" => FaultKind::Panic,
+            "stall" => FaultKind::Stall,
+            "engine_err" => FaultKind::EngineErr,
+            _ => bail!("unknown fault kind '{s}' (panic|stall|engine_err)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Stall => "stall",
+            FaultKind::EngineErr => "engine_err",
+        }
+    }
+}
+
+/// One scripted fault for the supervision tests: worker `worker` fires
+/// `kind` when its local round counter reaches `round` — once per run,
+/// so a respawned replacement replaying the same round does not re-crash.
+/// Parsed from `--inject-fault worker=1,round=3,kind=panic`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub worker: usize,
+    pub round: u64,
+    pub kind: FaultKind,
+}
+
+impl FaultPlan {
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let (mut worker, mut round, mut kind) = (None, None, None);
+        for part in s.split(',') {
+            let Some((key, val)) = part.split_once('=') else {
+                bail!(
+                    "--inject-fault: expected key=value, got '{part}' \
+                     (worker=W,round=R,kind=panic|stall|engine_err)"
+                );
+            };
+            let val = val.trim();
+            match key.trim() {
+                "worker" => {
+                    worker = Some(val.parse::<usize>().map_err(|e| {
+                        anyhow::anyhow!("--inject-fault worker '{val}': {e}")
+                    })?)
+                }
+                "round" => {
+                    round = Some(val.parse::<u64>().map_err(|e| {
+                        anyhow::anyhow!("--inject-fault round '{val}': {e}")
+                    })?)
+                }
+                "kind" => kind = Some(FaultKind::from_name(val)?),
+                other => bail!(
+                    "--inject-fault: unknown key '{other}' \
+                     (worker|round|kind)"
+                ),
+            }
+        }
+        match (worker, round, kind) {
+            (Some(worker), Some(round), Some(kind)) => {
+                Ok(FaultPlan { worker, round, kind })
+            }
+            _ => bail!(
+                "--inject-fault needs all of worker=, round=, kind= \
+                 (got '{s}')"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "worker={},round={},kind={}",
+            self.worker,
+            self.round,
+            self.kind.name()
+        )
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     /// Generate-then-train on the same resources (paper Fig 2 top):
@@ -216,6 +312,31 @@ pub struct ExpConfig {
     /// once at least this many slots are free (batches admissions so a
     /// cohort's prefill is amortized over more rows).
     pub admit_min: usize,
+    /// Async mode (`--max-worker-restarts`): how many times a crashed
+    /// generation worker may be respawned on a fresh engine. The
+    /// replacement resumes the dead worker's exact prompt-partition
+    /// position, so the strided stream stays no-drop/no-dup.
+    pub max_worker_restarts: usize,
+    /// Async mode (`--engine-retries`): transparent re-attempts of a
+    /// worker's generation call on engine errors, with deterministic
+    /// jittered backoff (`runtime::retry`). 0 fails fast.
+    pub engine_retries: u32,
+    /// Async mode (`--stall-timeout-secs`): heartbeat watchdog threshold.
+    /// A worker with no progress beat for this long is flagged in metrics
+    /// (`stalled_workers`) — the case where measured staleness can exceed
+    /// the M>1 fair-scheduling bound.
+    pub stall_timeout_secs: f64,
+    /// Checkpoint the trainer every N optimizer steps
+    /// (`--checkpoint-every`, 0 = off) into
+    /// `<run_dir>/checkpoints/<label>/step_*` — params/m/v npy tensors
+    /// plus a JSON manifest of cursors, written atomically.
+    pub checkpoint_every: u64,
+    /// Restart from the newest checkpoint of this label (`--resume`).
+    /// Sync-mode resume reproduces the uninterrupted run bitwise.
+    pub resume: bool,
+    /// Deterministic fault injection for the supervision tests
+    /// (`--inject-fault worker=W,round=R,kind=panic|stall|engine_err`).
+    pub inject_fault: Option<FaultPlan>,
     pub lr: f32,
     pub temperature: f32,
     /// Reward for completions without EOS (paper Table 4: -1.0).
@@ -252,6 +373,12 @@ impl Default for ExpConfig {
             staleness_bound: 0,
             max_cohorts: 4,
             admit_min: 1,
+            max_worker_restarts: 2,
+            engine_retries: 2,
+            stall_timeout_secs: 30.0,
+            checkpoint_every: 0,
+            resume: false,
+            inject_fault: None,
             lr: 3e-5,
             temperature: 0.7,
             eos_penalty: -1.0,
@@ -296,6 +423,18 @@ impl ExpConfig {
             args.get_parse("staleness-bound", c.staleness_bound)?;
         c.max_cohorts = args.get_parse("max-cohorts", c.max_cohorts)?;
         c.admit_min = args.get_parse("admit-min", c.admit_min)?;
+        c.max_worker_restarts =
+            args.get_parse("max-worker-restarts", c.max_worker_restarts)?;
+        c.engine_retries =
+            args.get_parse("engine-retries", c.engine_retries)?;
+        c.stall_timeout_secs =
+            args.get_parse("stall-timeout-secs", c.stall_timeout_secs)?;
+        c.checkpoint_every =
+            args.get_parse("checkpoint-every", c.checkpoint_every)?;
+        c.resume = args.has_flag("resume");
+        if let Some(f) = args.get("inject-fault") {
+            c.inject_fault = Some(FaultPlan::parse(f)?);
+        }
         c.lr = args.get_parse("lr", c.lr)?;
         c.temperature = args.get_parse("temperature", c.temperature)?;
         c.seed = args.get_parse("seed", c.seed)?;
@@ -344,6 +483,45 @@ impl ExpConfig {
                  slot pool (use --gen-engine continuous)"
             );
         }
+        if !(self.stall_timeout_secs > 0.0) {
+            bail!("--stall-timeout-secs must be > 0");
+        }
+        if self.gen_workers > 64 {
+            bail!(
+                "--gen-workers is capped at 64 (lane ownership is a u64 \
+                 bitmask in the supervisor)"
+            );
+        }
+        if self.mode == Mode::Sync {
+            let d = ExpConfig::default();
+            if self.inject_fault.is_some() {
+                bail!(
+                    "--inject-fault targets the async worker pool; sync \
+                     mode generates inline (use --mode async)"
+                );
+            }
+            if self.max_worker_restarts != d.max_worker_restarts
+                || self.engine_retries != d.engine_retries
+                || self.stall_timeout_secs != d.stall_timeout_secs
+            {
+                bail!(
+                    "--max-worker-restarts/--engine-retries/\
+                     --stall-timeout-secs supervise the async worker pool; \
+                     sync mode generates inline (use --mode async)"
+                );
+            }
+        }
+        if let Some(fault) = &self.inject_fault {
+            if fault.worker >= self.gen_workers {
+                bail!(
+                    "--inject-fault worker={} but the pool has only {} \
+                     workers (0..{})",
+                    fault.worker,
+                    self.gen_workers,
+                    self.gen_workers
+                );
+            }
+        }
         Ok(())
     }
 
@@ -354,7 +532,12 @@ impl ExpConfig {
     /// Label used in logs and run directories. The generation engine and
     /// the async pool shape (workers M / queue depth K) only appear when
     /// they deviate from the production defaults, so existing
-    /// run/checkpoint directories keep their names.
+    /// run/checkpoint directories keep their names. Supervision and
+    /// checkpoint knobs (restarts, retries, stall timeout, checkpoint
+    /// cadence, fault injection, `--resume`) deliberately never alter the
+    /// label: they change *how* a run survives, not *what* it computes,
+    /// and `--resume` must re-find the same run directory the crashed
+    /// invocation was writing checkpoints under.
     pub fn label(&self) -> String {
         let gen = match self.gen_engine {
             GenEngine::Fused => String::new(),
@@ -502,5 +685,109 @@ mod tests {
         assert!(parse(&["t", "--max-cohorts", "2"]).is_err());
         assert!(parse(&["t", "--gen-engine", "device", "--admit-min", "4"])
             .is_err());
+    }
+
+    #[test]
+    fn fault_plan_parses_and_rejects_malformed() {
+        let f = FaultPlan::parse("worker=1,round=3,kind=panic").unwrap();
+        assert_eq!(
+            f,
+            FaultPlan { worker: 1, round: 3, kind: FaultKind::Panic }
+        );
+        // order-insensitive, whitespace-tolerant
+        let f = FaultPlan::parse("kind=engine_err, worker=0, round=2")
+            .unwrap();
+        assert_eq!(f.kind, FaultKind::EngineErr);
+        assert_eq!(format!("{f}"), "worker=0,round=2,kind=engine_err");
+        for bad in [
+            "worker=1,round=3",              // missing kind
+            "worker=1,round=3,kind=oom",     // unknown kind
+            "worker=x,round=3,kind=stall",   // bad number
+            "worker=1,round=3,kind=stall,x=1", // unknown key
+            "panic",                         // no key=value at all
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn supervision_knobs_parse_and_guard_mode() {
+        // defaults
+        let c = parse(&["t", "--mode", "async"]).unwrap();
+        assert_eq!(c.max_worker_restarts, 2);
+        assert_eq!(c.engine_retries, 2);
+        assert_eq!(c.stall_timeout_secs, 30.0);
+        assert_eq!(c.inject_fault, None);
+        // overrides
+        let c = parse(&[
+            "t", "--mode", "async", "--gen-workers", "2",
+            "--max-worker-restarts", "0", "--engine-retries", "5",
+            "--stall-timeout-secs", "0.5",
+            "--inject-fault", "worker=1,round=2,kind=stall",
+        ])
+        .unwrap();
+        assert_eq!(c.max_worker_restarts, 0);
+        assert_eq!(c.engine_retries, 5);
+        assert_eq!(c.stall_timeout_secs, 0.5);
+        assert_eq!(
+            c.inject_fault,
+            Some(FaultPlan {
+                worker: 1,
+                round: 2,
+                kind: FaultKind::Stall
+            })
+        );
+        // supervision knobs shape the async pool only
+        assert!(parse(&["t", "--max-worker-restarts", "1"]).is_err());
+        assert!(parse(&["t", "--engine-retries", "1"]).is_err());
+        assert!(parse(&["t", "--stall-timeout-secs", "5"]).is_err());
+        assert!(parse(&[
+            "t", "--inject-fault", "worker=0,round=1,kind=panic"
+        ])
+        .is_err());
+        // the fault target must exist in the pool
+        assert!(parse(&[
+            "t", "--mode", "async",
+            "--inject-fault", "worker=1,round=1,kind=panic",
+        ])
+        .is_err());
+        // degenerate watchdog threshold fails loudly
+        assert!(parse(&[
+            "t", "--mode", "async", "--stall-timeout-secs", "0"
+        ])
+        .is_err());
+        // lane ownership is a u64 bitmask
+        assert!(parse(&["t", "--mode", "async", "--gen-workers", "65"])
+            .is_err());
+    }
+
+    #[test]
+    fn checkpoint_knobs_parse_everywhere_and_stay_out_of_the_label() {
+        // valid in sync mode too: kill-and-resume must reproduce bitwise
+        let c = parse(&["t", "--checkpoint-every", "4"]).unwrap();
+        assert_eq!(c.checkpoint_every, 4);
+        assert!(!c.resume);
+        let v: Vec<String> =
+            ["t", "--checkpoint-every", "4", "--resume"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let args = Args::parse(&v, &["resume"]).unwrap();
+        let c = ExpConfig::from_args(&args).unwrap();
+        assert!(c.resume);
+        // none of the fault-tolerance knobs may rename the run dir:
+        // --resume has to re-find the crashed run's checkpoints
+        let base = parse(&["t", "--mode", "async", "--gen-workers", "2"])
+            .unwrap()
+            .label();
+        let tol = parse(&[
+            "t", "--mode", "async", "--gen-workers", "2",
+            "--checkpoint-every", "4", "--max-worker-restarts", "7",
+            "--engine-retries", "1", "--stall-timeout-secs", "1",
+            "--inject-fault", "worker=1,round=1,kind=panic",
+        ])
+        .unwrap()
+        .label();
+        assert_eq!(base, tol);
     }
 }

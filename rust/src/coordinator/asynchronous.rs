@@ -16,12 +16,16 @@
 
 use anyhow::Result;
 
+use super::checkpoint::Checkpoint;
 use super::pipeline::{self, RoundSource, WorkerPool};
 use super::RunOutput;
 use crate::config::ExpConfig;
 
-/// Run asynchronous RLHF with the worker pool described by
-/// `cfg.gen_workers` / `cfg.staleness_bound`.
+/// Run asynchronous RLHF with the supervised worker pool described by
+/// `cfg.gen_workers` / `cfg.staleness_bound` (restart, retry, watchdog
+/// and fault-injection knobs ride along in the config). A `--resume`
+/// restart re-enters each lane's prompt cursor under a fresh RNG epoch:
+/// exactly-once delivery, not bitwise replay.
 pub fn run(
     cfg: &ExpConfig,
     prep: &super::Prepared,
@@ -30,9 +34,9 @@ pub fn run(
     pipeline::run(
         cfg,
         prep,
-        |origin| {
+        |origin, resume: Option<&Checkpoint>| {
             let src: Box<dyn RoundSource> =
-                Box::new(WorkerPool::spawn(cfg, prep, origin)?);
+                Box::new(WorkerPool::spawn(cfg, prep, origin, resume)?);
             Ok(src)
         },
         verbose,

@@ -1,0 +1,413 @@
+//! Crash-safe checkpoint/resume for the streaming trainer loop.
+//!
+//! `--checkpoint-every N` snapshots, every N optimizer steps, everything a
+//! restarted process needs to continue the run as if it never died: the
+//! full optimizer triple (params / Adam m / Adam v, as `.npy` so Python
+//! can inspect them), the optimizer step, the trainer's staleness
+//! accumulators, and the round source's resumable position ([`SourceState`]:
+//! RNG cursor, per-lane prompt cursors, delivered-index skip lists). A
+//! snapshot is written to `<run_dir>/checkpoints/<label>/step_<N>/`
+//! **atomically** — staged into a dot-tmp sibling and `rename`d into place
+//! — so a crash mid-write can never leave a directory that `--resume`
+//! would half-trust; `load_latest` additionally ignores any leftover tmp
+//! staging.
+//!
+//! Sync-mode resume is **bitwise**: the inline source checkpoints only at
+//! refill boundaries (its generation RNG cursor + prompt cursor fully
+//! determine the future), so kill-and-resume reproduces the uninterrupted
+//! run's final parameters exactly (integration-tested). Async resume is
+//! exactly-once but not bitwise — worker RNG streams are re-derived under
+//! a fresh epoch (live worker threads cannot be snapshotted mid-call) and
+//! the trainer's lane accounts make regenerated rounds dedupe instead of
+//! double-train.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::npy;
+
+/// The trainer's running staleness accumulators — checkpointed so the
+/// end-of-run `mean_staleness`/`max_staleness` metas stay cumulative
+/// across a kill-and-resume instead of restarting at zero.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StalenessAccum {
+    pub sum: u64,
+    pub max: u64,
+    pub tok_sum: f64,
+    pub tok_max: u64,
+}
+
+/// A round source's resumable position. One shape serves both sources:
+/// the inline source is a single lane with a bitwise RNG cursor; a worker
+/// pool is M lanes with per-lane prompt cursors (the trainer-side
+/// *accepted* frontier, not the workers' run-ahead ledger — queued rounds
+/// lost in the crash regenerate and dedupe).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SourceState {
+    /// `"inline"` or `"pool"`; resume refuses a mode mismatch.
+    pub kind: String,
+    /// Generation RNG cursor ([`crate::util::rng::Pcg32::state`]) —
+    /// inline source only (worker threads own their streams).
+    pub rng: Option<(u64, u64)>,
+    /// Rounds the source has accounted so far (episode counting stays
+    /// cumulative across resume).
+    pub generated: u64,
+    /// Per-lane next prompt index: block start for round-synchronous
+    /// lanes, delivered frontier for continuous lanes.
+    pub cursors: Vec<u64>,
+    /// Per-lane prompt indices already delivered *above* the frontier
+    /// (continuous lanes retire out of admission order; resumed workers
+    /// skip these). Empty for round-synchronous lanes.
+    pub skip: Vec<Vec<u64>>,
+    /// Worker-pool respawn epoch: resumed pools derive worker RNG streams
+    /// past every stream this run has already consumed.
+    pub epoch: u64,
+}
+
+/// One complete snapshot of a run at an optimizer-step boundary.
+pub struct Checkpoint {
+    /// Trainer steps completed.
+    pub step: u64,
+    /// Optimizer version (publish counter; `step · updates_per_batch`).
+    pub version: u64,
+    /// `TrainState::step` (Adam bias-correction counter).
+    pub opt_step: u64,
+    pub staleness: StalenessAccum,
+    pub source: SourceState,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Checkpoint directory of one run: label-scoped under the run dir, so it
+/// never collides with the SFT/RM pretrain checkpoints that live directly
+/// in `<run_dir>/checkpoints/`.
+pub fn dir_for(run_dir: &Path, label: &str) -> PathBuf {
+    run_dir.join("checkpoints").join(label)
+}
+
+/// u64 → JSON. Decimal *string*, not a number: RNG states use the full
+/// u64 range and `Json` keeps numbers as f64, which is exact only to
+/// 2^53 — a silently-rounded cursor would resume a different stream.
+fn ju64(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Read back a [`ju64`]-encoded value (tolerating plain numbers for
+/// hand-edited manifests, where f64 exactness is the editor's problem).
+fn pu64(j: &Json, what: &str) -> Result<u64> {
+    match j {
+        Json::Str(s) => s
+            .parse::<u64>()
+            .with_context(|| format!("checkpoint field '{what}': bad u64 '{s}'")),
+        Json::Num(n) if *n >= 0.0 => Ok(*n as u64),
+        other => bail!("checkpoint field '{what}': expected u64, got {other}"),
+    }
+}
+
+impl Checkpoint {
+    fn manifest(&self) -> Json {
+        let s = &self.source;
+        Json::obj(vec![
+            ("step", ju64(self.step)),
+            ("version", ju64(self.version)),
+            ("opt_step", ju64(self.opt_step)),
+            (
+                "staleness",
+                Json::obj(vec![
+                    ("sum", ju64(self.staleness.sum)),
+                    ("max", ju64(self.staleness.max)),
+                    ("tok_sum", Json::Num(self.staleness.tok_sum)),
+                    ("tok_max", ju64(self.staleness.tok_max)),
+                ]),
+            ),
+            (
+                "source",
+                Json::obj(vec![
+                    ("kind", Json::str(&s.kind)),
+                    (
+                        "rng",
+                        match s.rng {
+                            Some((state, inc)) => {
+                                Json::Arr(vec![ju64(state), ju64(inc)])
+                            }
+                            None => Json::Null,
+                        },
+                    ),
+                    ("generated", ju64(s.generated)),
+                    (
+                        "cursors",
+                        Json::Arr(s.cursors.iter().map(|&c| ju64(c)).collect()),
+                    ),
+                    (
+                        "skip",
+                        Json::Arr(
+                            s.skip
+                                .iter()
+                                .map(|lane| {
+                                    Json::Arr(
+                                        lane.iter().map(|&i| ju64(i)).collect(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("epoch", ju64(s.epoch)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write this snapshot as `<dir>/step_<step>/` atomically: stage into
+    /// a `.tmp` sibling, fsync-free rename into place (a crash mid-write
+    /// leaves only the tmp staging, which loaders ignore). Returns the
+    /// final directory. Re-checkpointing the same step replaces it.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        let final_dir = dir.join(format!("step_{}", self.step));
+        let tmp = dir.join(format!(".tmp_step_{}", self.step));
+        let _ = fs::remove_dir_all(&tmp);
+        fs::create_dir_all(&tmp)
+            .with_context(|| format!("checkpoint: create {}", tmp.display()))?;
+        npy::write_f32(tmp.join("params.npy"), &[self.params.len()], &self.params)?;
+        npy::write_f32(tmp.join("m.npy"), &[self.m.len()], &self.m)?;
+        npy::write_f32(tmp.join("v.npy"), &[self.v.len()], &self.v)?;
+        fs::write(tmp.join("manifest.json"), self.manifest().to_string())?;
+        // the rename is the commit point
+        let _ = fs::remove_dir_all(&final_dir);
+        fs::rename(&tmp, &final_dir).with_context(|| {
+            format!("checkpoint: commit {}", final_dir.display())
+        })?;
+        Ok(final_dir)
+    }
+
+    /// Load one `step_<N>` directory.
+    pub fn load(step_dir: &Path) -> Result<Checkpoint> {
+        let text = fs::read_to_string(step_dir.join("manifest.json"))
+            .with_context(|| {
+                format!("checkpoint: read {}", step_dir.display())
+            })?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("checkpoint manifest: {e}"))?;
+        let read = |name: &str| -> Result<Vec<f32>> {
+            Ok(npy::read_f32(step_dir.join(name))
+                .with_context(|| format!("checkpoint: read {name}"))?
+                .data)
+        };
+        let (params, m, v) = (read("params.npy")?, read("m.npy")?, read("v.npy")?);
+        if m.len() != params.len() || v.len() != params.len() {
+            bail!(
+                "checkpoint {}: optimizer state sizes disagree \
+                 (params {}, m {}, v {})",
+                step_dir.display(),
+                params.len(),
+                m.len(),
+                v.len()
+            );
+        }
+        let st = j.req("staleness").map_err(|e| anyhow!("{e}"))?;
+        let staleness = StalenessAccum {
+            sum: pu64(st.req("sum").map_err(|e| anyhow!("{e}"))?, "staleness.sum")?,
+            max: pu64(st.req("max").map_err(|e| anyhow!("{e}"))?, "staleness.max")?,
+            tok_sum: st
+                .req("tok_sum")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_f64()
+                .ok_or_else(|| anyhow!("checkpoint: staleness.tok_sum"))?,
+            tok_max: pu64(
+                st.req("tok_max").map_err(|e| anyhow!("{e}"))?,
+                "staleness.tok_max",
+            )?,
+        };
+        let sj = j.req("source").map_err(|e| anyhow!("{e}"))?;
+        let rng = match sj.req("rng").map_err(|e| anyhow!("{e}"))? {
+            Json::Null => None,
+            Json::Arr(pair) if pair.len() == 2 => Some((
+                pu64(&pair[0], "source.rng[0]")?,
+                pu64(&pair[1], "source.rng[1]")?,
+            )),
+            other => bail!("checkpoint: source.rng malformed ({other})"),
+        };
+        let cursors = sj
+            .req("cursors")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("checkpoint: source.cursors"))?
+            .iter()
+            .map(|c| pu64(c, "source.cursors[]"))
+            .collect::<Result<Vec<_>>>()?;
+        let skip = sj
+            .req("skip")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("checkpoint: source.skip"))?
+            .iter()
+            .map(|lane| {
+                lane.as_arr()
+                    .ok_or_else(|| anyhow!("checkpoint: source.skip[]"))?
+                    .iter()
+                    .map(|i| pu64(i, "source.skip[][]"))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let source = SourceState {
+            kind: sj
+                .req("kind")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("checkpoint: source.kind"))?
+                .to_string(),
+            rng,
+            generated: pu64(
+                sj.req("generated").map_err(|e| anyhow!("{e}"))?,
+                "source.generated",
+            )?,
+            cursors,
+            skip,
+            epoch: pu64(sj.req("epoch").map_err(|e| anyhow!("{e}"))?, "source.epoch")?,
+        };
+        Ok(Checkpoint {
+            step: pu64(j.req("step").map_err(|e| anyhow!("{e}"))?, "step")?,
+            version: pu64(j.req("version").map_err(|e| anyhow!("{e}"))?, "version")?,
+            opt_step: pu64(j.req("opt_step").map_err(|e| anyhow!("{e}"))?, "opt_step")?,
+            staleness,
+            source,
+            params,
+            m,
+            v,
+        })
+    }
+
+    /// Newest committed snapshot under `dir`, or `None` if there are no
+    /// checkpoints (a missing directory is simply "none"). Tmp staging
+    /// left by a crash mid-save is skipped — only `rename`-committed
+    /// `step_<N>` directories count.
+    pub fn load_latest(dir: &Path) -> Result<Option<(u64, Checkpoint)>> {
+        let entries = match fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("checkpoint: scan {}", dir.display()))
+            }
+        };
+        // BTreeMap: deterministic pick of the numerically-largest step
+        let mut steps = BTreeMap::new();
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(n) = name
+                .to_str()
+                .and_then(|s| s.strip_prefix("step_"))
+                .and_then(|s| s.parse::<u64>().ok())
+            else {
+                continue; // tmp staging, pretrain npy files, strangers
+            };
+            steps.insert(n, entry.path());
+        }
+        match steps.into_iter().next_back() {
+            Some((n, path)) => Ok(Some((n, Checkpoint::load(&path)?))),
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join("async_rlhf_ckpt_test")
+            .join(name);
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(step: u64) -> Checkpoint {
+        Checkpoint {
+            step,
+            version: step * 2,
+            opt_step: step * 2,
+            staleness: StalenessAccum {
+                sum: 7,
+                max: 3,
+                tok_sum: 6.25,
+                tok_max: 4,
+            },
+            source: SourceState {
+                kind: "pool".into(),
+                // past 2^53: would corrupt silently through an f64
+                rng: Some((u64::MAX - 12345, (0x5c << 1) | 1)),
+                generated: step,
+                cursors: vec![2_000_000 + step, 2_000_004 + step],
+                skip: vec![vec![], vec![2_000_011, 2_000_013]],
+                epoch: 1,
+            },
+            params: vec![0.5, -1.5, 3.0],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.01, 0.02, 0.03],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything_including_full_u64_range() {
+        let dir = tmp_dir("roundtrip");
+        let c = sample(12);
+        let where_ = c.save(&dir).unwrap();
+        assert!(where_.ends_with("step_12"));
+        let back = Checkpoint::load(&where_).unwrap();
+        assert_eq!(back.step, 12);
+        assert_eq!(back.version, 24);
+        assert_eq!(back.opt_step, 24);
+        assert_eq!(back.staleness, c.staleness);
+        assert_eq!(back.source, c.source, "u64 RNG state must not round");
+        assert_eq!(back.params, c.params);
+        assert_eq!(back.m, c.m);
+        assert_eq!(back.v, c.v);
+    }
+
+    #[test]
+    fn load_latest_picks_numerically_largest_and_ignores_tmp() {
+        let dir = tmp_dir("latest");
+        assert!(Checkpoint::load_latest(&dir).unwrap().is_none());
+        for step in [2u64, 10, 9] {
+            sample(step).save(&dir).unwrap();
+        }
+        // a crash mid-save leaves tmp staging; it must be invisible
+        fs::create_dir_all(dir.join(".tmp_step_99")).unwrap();
+        fs::write(dir.join(".tmp_step_99/manifest.json"), "{garbage").unwrap();
+        // and the pretrain npy checkpoints share the parent dir's naming
+        // style, not ours — unrelated files are skipped too
+        fs::write(dir.join("dev_sft.npy"), b"not a checkpoint").unwrap();
+        let (n, c) = Checkpoint::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(n, 10, "10 > 9 numerically (not lexically)");
+        assert_eq!(c.step, 10);
+    }
+
+    #[test]
+    fn save_replaces_an_existing_step_snapshot() {
+        let dir = tmp_dir("replace");
+        sample(5).save(&dir).unwrap();
+        let mut c = sample(5);
+        c.params = vec![9.0, 9.0, 9.0];
+        c.save(&dir).unwrap();
+        let (_, back) = Checkpoint::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(back.params, vec![9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn missing_directory_is_none_but_corrupt_manifest_is_loud() {
+        let dir = tmp_dir("corrupt");
+        let step = dir.join("step_3");
+        fs::create_dir_all(&step).unwrap();
+        fs::write(step.join("manifest.json"), "{]").unwrap();
+        assert!(Checkpoint::load_latest(&dir).is_err());
+    }
+}

@@ -15,9 +15,13 @@
 //!   pipeline, kept for CLI compatibility (`--mode sync|async`).
 //! - [`trainer`]: shared round machinery (labelling, batch assembly,
 //!   fused train-step invocation, staleness accounting).
+//! - [`checkpoint`]: crash-safe snapshot/resume of the trainer loop
+//!   (`--checkpoint-every` / `--resume`): optimizer triple + RNG and
+//!   prompt cursors, written atomically at step boundaries.
 //! - [`pretrain`]: the SFT + proxy-RM pipeline that precedes RLHF.
 
 pub mod asynchronous;
+pub mod checkpoint;
 pub mod pipeline;
 pub mod pretrain;
 pub mod sync;

@@ -36,31 +36,53 @@
 //! multi-worker staleness is *measured and reported*, not hard-asserted.
 //! Per-config measurements land in `BENCH_staleness.json` via
 //! `benches/staleness.rs`.
+//!
+//! ## The failure model
+//!
+//! Worker pools are **supervised**: each seat's body runs under
+//! `catch_unwind` and reports a structured [`WorkerExit`]; the trainer,
+//! while waiting for rounds, reaps exits and heartbeats. A dead seat is
+//! respawned on a fresh engine up to `--max-worker-restarts` times — the
+//! replacement resumes the dead worker's exact prompt-partition position
+//! via the shared **lane ledger** (advanced only *after* a round is
+//! handed over, so a crash re-generates at-least-once and the trainer's
+//! [`LaneAccounts`] drop the duplicates: exactly-once into the
+//! optimizer). When restarts are exhausted, surviving workers inherit the
+//! orphaned lanes (cursor re-striding) — a pool degrades gracefully down
+//! to one worker before the run fails loudly. Transient engine faults
+//! retry with deterministic jittered backoff
+//! ([`crate::runtime::RetryPolicy`]); a seat silent past
+//! `--stall-timeout-secs` is flagged by the watchdog and surfaced in the
+//! run metas. `--inject-fault worker=W,round=R,kind=panic|stall|engine_err`
+//! scripts each failure deterministically for the integration tests.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use super::checkpoint::{self, Checkpoint, SourceState, StalenessAccum};
 use super::pretrain::RLHF_RANGE;
 use super::trainer::{
     assemble, batch_data_version, batch_token_versions, generate_round,
     generate_round_staged, round_metrics, rounds_per_batch, sample_opts,
     stage_and_label, staleness, train_on_batch, LabelScratch, LabelledRound,
-    Round, SourcedRound,
+    Round, SourcedRound, ROUND_ORIGIN,
 };
 use super::{Prepared, RunOutput};
-use crate::config::{ExpConfig, GenEngine};
-use crate::data::TaskGen;
+use crate::config::{ExpConfig, FaultKind, FaultPlan, GenEngine};
+use crate::data::{Task, TaskGen};
 use crate::gen::continuous::{
     AdmitSeq, Completed, DeviceBackend, Pool, PoolCfg, RoundAssembler,
 };
 use crate::gen::{GenBatch, Generator, SampleOpts};
 use crate::metrics::{Phase, RunLog, Timeline};
-use crate::runtime::{Engine, ParamView, TrainState};
+use crate::runtime::{Engine, ParamView, RetryPolicy, TrainState, RETRY_STREAM};
 use crate::util::rng::Pcg32;
 
 /// Prompts consumed by one generation round: the cursor stride. The
@@ -102,9 +124,17 @@ impl ParamSlot {
         }
     }
 
+    /// Poison-free lock. The slot's critical sections are pure pointer
+    /// swaps — they cannot leave the pair half-written — so a worker that
+    /// panicked *while holding the lock* (supervised and respawned) must
+    /// not take the whole pool down with a propagated `PoisonError`.
+    fn lock_latest(&self) -> std::sync::MutexGuard<'_, (u64, Arc<[f32]>)> {
+        self.latest.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Publish `params` as `version`: one pointer swap under the lock.
     pub fn publish(&self, version: u64, params: Arc<[f32]>) {
-        *self.latest.lock().unwrap() = (version, params);
+        *self.lock_latest() = (version, params);
         self.hint.store(version, Ordering::Release);
     }
 
@@ -113,11 +143,18 @@ impl ParamSlot {
         if self.hint.load(Ordering::Acquire) <= have {
             return None;
         }
-        let guard = self.latest.lock().unwrap();
+        let guard = self.lock_latest();
         if guard.0 <= have {
             return None;
         }
         Some((guard.0, guard.1.clone()))
+    }
+
+    /// The current publication unconditionally — what a freshly (re)spawned
+    /// worker initializes from.
+    pub fn latest(&self) -> (u64, Arc<[f32]>) {
+        let guard = self.lock_latest();
+        (guard.0, guard.1.clone())
     }
 }
 
@@ -160,6 +197,12 @@ pub trait RoundSource {
     /// inline sources read the live device buffer and need not.
     fn publish(&mut self, cx: TrainerCx<'_>) -> Result<()>;
 
+    /// The source's resumable position for a crash-safe checkpoint, or
+    /// `None` when the source is not at a clean boundary (e.g. the sync
+    /// N-ladder mid-refill, holding rounds a resumed process could not
+    /// reconstruct) — the trainer then retries at the next step.
+    fn snapshot(&self) -> Option<SourceState>;
+
     /// Tear down (join workers), contributing source metadata — e.g.
     /// per-worker generation accounting — to the run log.
     fn finish(self: Box<Self>, log: &mut RunLog) -> Result<()>;
@@ -169,29 +212,79 @@ pub trait RoundSource {
 /// pull `rounds_per_batch` rounds, stage + label them, assemble the
 /// algorithm-specific batch, take `updates_per_batch` optimizer steps,
 /// publish, log. `make_source` receives the shared timeline origin so
-/// worker gen-spans land on the trainer's clock.
+/// worker gen-spans land on the trainer's clock, plus the restored
+/// checkpoint (when `--resume`) so sources re-enter their exact stream
+/// position.
+///
+/// With `--checkpoint-every N`, every N-th step atomically snapshots the
+/// optimizer triple, staleness accumulators and the source's cursors into
+/// `<run_dir>/checkpoints/<label>/step_<n>/`; `--resume` restarts from
+/// the newest snapshot mid-stream (bitwise for the sync schedule).
 pub fn run<'p>(
     cfg: &ExpConfig,
     prep: &'p Prepared,
-    make_source: impl FnOnce(Instant) -> Result<Box<dyn RoundSource + 'p>>,
+    make_source: impl FnOnce(
+        Instant,
+        Option<&Checkpoint>,
+    ) -> Result<Box<dyn RoundSource + 'p>>,
     verbose: bool,
 ) -> Result<RunOutput> {
     let engine: &Engine = &prep.engine;
     let sft_params = prep.sft_params.clone();
     let mut timeline = Timeline::new();
-    let mut source = make_source(timeline.origin())?;
+    let ckpt_dir = checkpoint::dir_for(&cfg.run_dir, &cfg.label());
+    let restored = if cfg.resume {
+        match Checkpoint::load_latest(&ckpt_dir)? {
+            Some((n, c)) => {
+                if verbose {
+                    eprintln!(
+                        "[resume] continuing from step {n} ({})",
+                        ckpt_dir.display()
+                    );
+                }
+                Some(c)
+            }
+            None => bail!(
+                "--resume: no checkpoints under {} (was the run started \
+                 with --checkpoint-every?)",
+                ckpt_dir.display()
+            ),
+        }
+    } else {
+        None
+    };
+    let mut source = make_source(timeline.origin(), restored.as_ref())?;
     let mut log = RunLog::new();
     log.set_meta("label", cfg.label());
 
-    let mut state = TrainState::new(sft_params.clone());
+    let (mut state, mut step, mut version, mut accum) = match &restored {
+        Some(c) => {
+            log.set_meta("resumed_from_step", c.step);
+            (
+                TrainState::from_host(
+                    c.params.clone(),
+                    c.m.clone(),
+                    c.v.clone(),
+                    c.opt_step,
+                )?,
+                c.step,
+                c.version,
+                c.staleness.clone(),
+            )
+        }
+        None => (
+            TrainState::new(sft_params.clone()),
+            0,
+            0,
+            StalenessAccum::default(),
+        ),
+    };
+    drop(restored); // params/m/v are copied into the train state above
     let mut scratch = LabelScratch::default();
     let rpb = rounds_per_batch(cfg.k_samples);
-    let mut step = 0u64;
-    let mut version = 0u64;
-    let mut staleness_sum = 0u64;
-    let mut staleness_max = 0u64;
-    let mut staleness_tok_sum = 0.0f64;
-    let mut staleness_tok_max = 0u64;
+    // set when a checkpoint came due but the source wasn't at a clean
+    // boundary — carries the obligation to the next step
+    let mut ckpt_pending = false;
 
     let result = (|| -> Result<()> {
         while step < cfg.steps {
@@ -242,8 +335,8 @@ pub fn run<'p>(
             })?;
 
             let stale = staleness(version, batch_data_version(&rounds));
-            staleness_sum += stale;
-            staleness_max = staleness_max.max(stale);
+            accum.sum += stale;
+            accum.max = accum.max.max(stale);
             // per-token staleness: under the continuous engine a
             // sequence's tokens can span policy versions (weights swap
             // between decode steps), so the oldest-token and mean-token
@@ -254,13 +347,19 @@ pub fn run<'p>(
             let stale_tok_mean = ((version.saturating_sub(1)) as f64
                 - tok_mean)
                 .max(0.0);
-            staleness_tok_sum += stale_tok_mean;
-            staleness_tok_max = staleness_tok_max.max(stale_tok_max);
+            accum.tok_sum += stale_tok_mean;
+            accum.tok_max = accum.tok_max.max(stale_tok_max);
 
             let episodes = source.episodes();
             let labels = &rounds[0].labels;
             let mut row = round_metrics(labels);
-            let m = all_metrics.last().unwrap();
+            let m = all_metrics.last().ok_or_else(|| {
+                anyhow!(
+                    "train_on_batch returned no metrics at step {step} \
+                     (updates_per_batch = {})",
+                    cfg.updates_per_batch
+                )
+            })?;
             row.push(("loss", m[0]));
             row.push(("staleness", stale as f32));
             row.push(("staleness_tok_max", stale_tok_max as f32));
@@ -278,6 +377,37 @@ pub fn run<'p>(
                     m[0],
                 );
             }
+
+            if cfg.checkpoint_every > 0 {
+                ckpt_pending |= step % cfg.checkpoint_every == 0;
+                if ckpt_pending {
+                    if let Some(src) = source.snapshot() {
+                        timeline.record(Phase::Publish, || -> Result<()> {
+                            let opt_step = state.step;
+                            let (p, m, v) = state.host_mirrors(engine)?;
+                            Checkpoint {
+                                step,
+                                version,
+                                opt_step,
+                                staleness: accum.clone(),
+                                source: src,
+                                params: p.to_vec(),
+                                m: m.to_vec(),
+                                v: v.to_vec(),
+                            }
+                            .save(&ckpt_dir)?;
+                            Ok(())
+                        })?;
+                        ckpt_pending = false;
+                        if verbose {
+                            eprintln!(
+                                "[checkpoint] step {step} -> {}",
+                                ckpt_dir.join(format!("step_{step}")).display()
+                            );
+                        }
+                    }
+                }
+            }
         }
         Ok(())
     })();
@@ -291,14 +421,14 @@ pub fn run<'p>(
 
     log.set_meta(
         "mean_staleness",
-        format!("{:.3}", staleness_sum as f64 / cfg.steps.max(1) as f64),
+        format!("{:.3}", accum.sum as f64 / cfg.steps.max(1) as f64),
     );
-    log.set_meta("max_staleness", staleness_max);
+    log.set_meta("max_staleness", accum.max);
     log.set_meta(
         "mean_staleness_tok",
-        format!("{:.3}", staleness_tok_sum / cfg.steps.max(1) as f64),
+        format!("{:.3}", accum.tok_sum / cfg.steps.max(1) as f64),
     );
-    log.set_meta("max_staleness_tok", staleness_tok_max);
+    log.set_meta("max_staleness_tok", accum.tok_max);
 
     Ok(RunOutput {
         final_params: state.into_params(engine)?,
@@ -337,21 +467,50 @@ pub struct InlineSource<'p> {
 }
 
 impl<'p> InlineSource<'p> {
-    pub fn new(cfg: &ExpConfig, prep: &'p Prepared) -> InlineSource<'p> {
+    /// Build the synchronous source, optionally re-entering the exact
+    /// stream position of a restored checkpoint: the generation RNG
+    /// cursor and prompt cursor fully determine every future round, so a
+    /// resumed sync run is **bitwise** identical to one that never
+    /// stopped.
+    pub fn new(
+        cfg: &ExpConfig,
+        prep: &'p Prepared,
+        resume: Option<&Checkpoint>,
+    ) -> Result<InlineSource<'p>> {
         let gen_bs = prep.engine.manifest.config.gen_batch as u64;
-        InlineSource {
+        let (rng, cursor, generated) = match resume {
+            Some(c) => {
+                let s = &c.source;
+                if s.kind != "inline" {
+                    bail!(
+                        "--resume: checkpoint was written by a '{}' round \
+                         source but this run is synchronous (inline)",
+                        s.kind
+                    );
+                }
+                let (st, inc) = s.rng.ok_or_else(|| {
+                    anyhow!("--resume: inline checkpoint lacks an RNG cursor")
+                })?;
+                let cursor = *s.cursors.first().ok_or_else(|| {
+                    anyhow!("--resume: inline checkpoint lacks a prompt cursor")
+                })?;
+                (Pcg32::from_state(st, inc), cursor, s.generated)
+            }
+            None => (Pcg32::new(cfg.seed, 0x5c), RLHF_RANGE, 0),
+        };
+        Ok(InlineSource {
             generator: cfg.gen_engine.build(),
             taskgen: &prep.taskgen,
-            rng: Pcg32::new(cfg.seed, 0x5c),
+            rng,
             opts: sample_opts(cfg),
             k: cfg.k_samples,
             rounds_per_refill: cfg.n_minibatches * rounds_per_batch(cfg.k_samples),
-            cursor: RLHF_RANGE,
+            cursor,
             stride: cursor_stride(gen_bs, cfg.k_samples),
             gen_bs,
-            generated: 0,
+            generated,
             buffered: VecDeque::new(),
-        }
+        })
     }
 }
 
@@ -402,6 +561,23 @@ impl RoundSource for InlineSource<'_> {
         Ok(())
     }
 
+    fn snapshot(&self) -> Option<SourceState> {
+        if !self.buffered.is_empty() {
+            // mid-ladder: buffered rounds were generated by a policy a
+            // resumed process cannot reconstruct — wait for the window
+            // boundary (with n_minibatches = 1 every step is one)
+            return None;
+        }
+        Some(SourceState {
+            kind: "inline".into(),
+            rng: Some(self.rng.state()),
+            generated: self.generated,
+            cursors: vec![self.cursor],
+            skip: vec![],
+            epoch: 0,
+        })
+    }
+
     fn finish(self: Box<Self>, _log: &mut RunLog) -> Result<()> {
         Ok(())
     }
@@ -411,13 +587,223 @@ impl RoundSource for InlineSource<'_> {
 // WorkerPool: M generation workers, bounded round queue of depth K
 // ---------------------------------------------------------------------------
 
-/// One round crossing the worker → trainer queue.
+/// One round crossing the worker → trainer queue, tagged with the lane
+/// (prompt-partition stripe) it came from so the trainer's
+/// [`LaneAccounts`] can enforce exactly-once delivery across respawns.
 struct GenMsg {
     round: Round,
+    lane: usize,
+    /// Continuous engine only: the prompt indices retired into this round
+    /// (continuous lanes retire out of admission order, so block-cursor
+    /// accounting does not apply).
+    indices: Option<Vec<u64>>,
 }
 
-/// Per-worker generation accounting returned at join.
-type WorkerOut = Result<(f64, u64)>;
+/// Structured exit report of one worker seat: sent on every exit path —
+/// clean retirement, engine error, or caught panic.
+struct WorkerExit {
+    slot: usize,
+    outcome: Result<(f64, u64)>,
+}
+
+/// Supervisor-side control block of one worker seat: the lanes it owns
+/// (a bitmask — hence the 64-worker cap in config validation) and its
+/// last heartbeat, in milliseconds since the trainer timeline origin.
+struct SlotCtl {
+    lanes: AtomicU64,
+    beat_ms: AtomicU64,
+}
+
+fn beat(ctl: &SlotCtl, origin: Instant) {
+    ctl.beat_ms
+        .store(origin.elapsed().as_millis() as u64, Ordering::SeqCst);
+}
+
+/// Lane indices set in `mask`, ascending.
+fn lanes_of(mask: u64) -> impl Iterator<Item = usize> {
+    (0..64usize).filter(move |l| mask & (1u64 << l) != 0)
+}
+
+/// The lane a worker should generate for next: the one whose cursor is
+/// furthest behind (ties to the lowest lane), so an heir that inherited
+/// orphaned lanes round-robins them instead of starving one.
+fn pick_lane(mask: u64, ledger: &[AtomicU64]) -> usize {
+    lanes_of(mask)
+        .min_by_key(|&l| (ledger[l].load(Ordering::SeqCst), l))
+        .expect("worker scheduled with an empty lane mask")
+}
+
+/// Successor of `idx` in one lane's admission sequence (blocks of
+/// `stride` consecutive indices starting at `start`, hopping `hop`
+/// between blocks).
+fn lane_next(idx: u64, start: u64, stride: u64, hop: u64) -> u64 {
+    let rel = idx - start;
+    let (block, off) = (rel / hop, rel % hop);
+    debug_assert!(off < stride, "index off the lane's admission sequence");
+    if off + 1 < stride {
+        idx + 1
+    } else {
+        start + (block + 1) * hop
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+enum Accept {
+    Fresh,
+    Duplicate,
+}
+
+/// Trainer-side delivery accounting, per lane. The worker-side ledger
+/// advances only *after* a successful handover (at-least-once); these
+/// accounts turn that into exactly-once by dropping replays — and by
+/// failing loudly on a *hole*, which no recovery path can legally
+/// produce.
+struct LaneAccounts {
+    stride: u64,
+    hop: u64,
+    starts: Vec<u64>,
+    /// Next index the trainer is owed per lane: block start for
+    /// round-synchronous engines, delivered frontier for continuous.
+    expected: Vec<u64>,
+    /// Continuous engines: indices delivered above the frontier.
+    delivered: Vec<HashSet<u64>>,
+    duplicates: u64,
+}
+
+impl LaneAccounts {
+    fn new(starts: Vec<u64>, stride: u64, hop: u64) -> LaneAccounts {
+        let n = starts.len();
+        LaneAccounts {
+            stride,
+            hop,
+            expected: starts.clone(),
+            starts,
+            delivered: vec![HashSet::new(); n],
+            duplicates: 0,
+        }
+    }
+
+    fn resume(
+        starts: Vec<u64>,
+        stride: u64,
+        hop: u64,
+        cursors: &[u64],
+        skip: &[Vec<u64>],
+    ) -> LaneAccounts {
+        let mut a = LaneAccounts::new(starts, stride, hop);
+        a.expected = cursors.to_vec();
+        for (lane, s) in skip.iter().enumerate() {
+            a.delivered[lane] = s.iter().copied().collect();
+        }
+        a
+    }
+
+    fn accept(&mut self, msg: &GenMsg) -> Result<Accept> {
+        match &msg.indices {
+            Some(indices) => self.accept_indices(msg.lane, indices),
+            None => self.accept_block(msg.lane, msg.round.start_index),
+        }
+    }
+
+    /// Round-synchronous engines: a round is one whole block; the lane
+    /// cursor either matches (fresh), trails (replay after a respawn —
+    /// dropped), or was skipped (a lost round: loud failure).
+    fn accept_block(&mut self, lane: usize, start: u64) -> Result<Accept> {
+        let exp = self.expected[lane];
+        if start == exp {
+            self.expected[lane] = exp + self.hop;
+            Ok(Accept::Fresh)
+        } else if start < exp {
+            self.duplicates += 1;
+            Ok(Accept::Duplicate)
+        } else {
+            bail!(
+                "prompt partition violated: lane {lane} jumped from index \
+                 {exp} to {start} — a round was lost without recovery"
+            )
+        }
+    }
+
+    /// Continuous engines: a round is a set of retired prompt indices. A
+    /// respawned worker's skip set must make every round all-fresh or
+    /// all-replay; a mixed round means the skip set missed a delivery.
+    fn accept_indices(&mut self, lane: usize, indices: &[u64]) -> Result<Accept> {
+        let fresh = indices
+            .iter()
+            .filter(|&&i| {
+                i >= self.expected[lane] && !self.delivered[lane].contains(&i)
+            })
+            .count();
+        if fresh == 0 {
+            self.duplicates += 1;
+            return Ok(Accept::Duplicate);
+        }
+        if fresh < indices.len() {
+            bail!(
+                "continuous round on lane {lane} mixes {fresh} fresh and {} \
+                 replayed prompt indices — the respawn skip set missed a \
+                 delivery",
+                indices.len() - fresh
+            );
+        }
+        self.delivered[lane].extend(indices.iter().copied());
+        // advance the frontier across everything now contiguous
+        while self.delivered[lane].remove(&self.expected[lane]) {
+            self.expected[lane] = lane_next(
+                self.expected[lane],
+                self.starts[lane],
+                self.stride,
+                self.hop,
+            );
+        }
+        Ok(Accept::Fresh)
+    }
+}
+
+/// Everything needed to (re)spawn a worker seat, owned so replacement
+/// threads can be built mid-run without borrowing the config.
+#[derive(Clone)]
+struct SpawnCtx {
+    artifact_dir: PathBuf,
+    task: Task,
+    prompt_len: usize,
+    resp_len: usize,
+    seed: u64,
+    opts: SampleOpts,
+    k: usize,
+    gen_engine: GenEngine,
+    max_cohorts: usize,
+    admit_min: usize,
+    stride: u64,
+    hop: u64,
+    retries: u32,
+    stall_timeout: f64,
+    fault: Option<FaultPlan>,
+    origin: Instant,
+    max_restarts: usize,
+    continuous: bool,
+}
+
+/// The shared handles a worker seat runs against.
+#[derive(Clone)]
+struct SeatShared {
+    tx: mpsc::SyncSender<GenMsg>,
+    pslot: Arc<ParamSlot>,
+    stop: Arc<AtomicBool>,
+    ledger: Arc<Vec<AtomicU64>>,
+    ctl: Arc<Vec<SlotCtl>>,
+    fault_fired: Arc<AtomicBool>,
+    retry_count: Arc<AtomicU64>,
+}
 
 /// M generation worker threads, each owning its own PJRT backend (the
 /// `xla` crate's client is not `Send`, which conveniently mirrors the
@@ -443,120 +829,369 @@ type WorkerOut = Result<(f64, u64)>;
 /// is paid per publish, never per call).
 pub struct WorkerPool {
     rx: mpsc::Receiver<GenMsg>,
+    /// The pool's own sender clone: keeps the queue open for respawned
+    /// workers, and makes trainer-side `Disconnected` impossible mid-run.
+    tx: Option<mpsc::SyncSender<GenMsg>>,
+    exit_rx: mpsc::Receiver<WorkerExit>,
+    exit_tx: mpsc::Sender<WorkerExit>,
     slot: Arc<ParamSlot>,
     stop: Arc<AtomicBool>,
-    workers: Vec<JoinHandle<WorkerOut>>,
+    /// Per-lane next-cursor, advanced by workers *after* handover.
+    ledger: Arc<Vec<AtomicU64>>,
+    ctl: Arc<Vec<SlotCtl>>,
+    fault_fired: Arc<AtomicBool>,
+    retry_count: Arc<AtomicU64>,
+    ctx: SpawnCtx,
+    /// One seat per worker slot; `None` = dead (reaped or re-strided).
+    seats: Vec<Option<JoinHandle<()>>>,
+    /// Per-slot incarnation: respawns (and resume epochs) shift the
+    /// replacement's RNG streams so a replayed prompt block still samples
+    /// fresh tokens instead of re-walking the dead worker's stream.
+    incarnations: Vec<u64>,
+    restarts_used: Vec<usize>,
+    accounts: LaneAccounts,
+    /// Rounds accepted while draining a dead worker's queue, served
+    /// before new receives.
+    pending: VecDeque<GenMsg>,
+    /// Per-slot accumulated (gen_secs, rounds) across incarnations.
+    totals: Vec<(f64, u64)>,
+    worker_errors: Vec<String>,
+    worker_restarts: u64,
+    stalled_now: Vec<bool>,
+    ever_stalled: Vec<bool>,
     gen_bs: u64,
     received: u64,
+    /// Receive slice between supervision passes.
+    poll: Duration,
 }
 
 impl WorkerPool {
-    /// Spawn `cfg.gen_workers` workers over a queue of depth
+    /// Spawn `cfg.gen_workers` supervised workers over a queue of depth
     /// `cfg.staleness_bound`. `origin` is the trainer timeline's clock so
-    /// worker gen-spans are directly comparable.
+    /// worker gen-spans are directly comparable. With `resume`, lanes
+    /// re-enter the checkpoint's cursors, the param slot seeds from the
+    /// checkpoint's policy at its version, and worker RNG streams shift
+    /// to a fresh epoch (async resume is exactly-once, not bitwise —
+    /// live worker threads cannot be snapshotted mid-call).
     pub fn spawn(
         cfg: &ExpConfig,
         prep: &Prepared,
         origin: Instant,
+        resume: Option<&Checkpoint>,
     ) -> Result<WorkerPool> {
         let m = cfg.gen_workers.max(1);
+        assert!(m <= 64, "lane ownership is a u64 bitmask");
         let gen_bs = prep.engine.manifest.config.gen_batch as u64;
         let stride = cursor_stride(gen_bs, cfg.k_samples);
-        let (round_tx, round_rx) =
-            mpsc::sync_channel::<GenMsg>(cfg.staleness_bound);
-        // seeded with the SFT checkpoint at version 0
-        let slot =
-            Arc::new(ParamSlot::new(0, Arc::from(&prep.sft_params[..])));
-        let stop = Arc::new(AtomicBool::new(false));
+        let hop = stride * m as u64;
+        let continuous = cfg.gen_engine == GenEngine::Continuous;
+        let starts: Vec<u64> =
+            (0..m).map(|w| RLHF_RANGE + w as u64 * stride).collect();
 
-        let mut workers = Vec::with_capacity(m);
-        for w in 0..m {
-            let tx = round_tx.clone();
-            let stop = stop.clone();
-            let slot = slot.clone();
-            let artifact_dir = cfg.artifact_dir();
-            let init_params: Arc<[f32]> = Arc::from(&prep.sft_params[..]);
-            let taskgen = TaskGen::new(
-                prep.taskgen.task,
-                prep.taskgen.prompt_len,
-                prep.taskgen.resp_len,
-                cfg.seed,
-            );
-            let opts = sample_opts(cfg);
-            let k = cfg.k_samples;
-            let seed = cfg.seed;
-            let gen_engine = cfg.gen_engine;
-            let (max_cohorts, admit_min) = (cfg.max_cohorts, cfg.admit_min);
-            let start = RLHF_RANGE + w as u64 * stride;
-            let hop = stride * m as u64;
-            let handle = std::thread::Builder::new()
-                .name(format!("gen-worker-{w}"))
-                .spawn(move || -> Result<(f64, u64)> {
-                    // own engine, own PJRT client (separate "GPU");
-                    // worker 0 keeps the seed coordinator's RNG stream so
-                    // M=1 pools replay it bitwise
-                    let engine = Engine::load(&artifact_dir)?;
-                    let mut rng = Pcg32::new(seed, 0xa57c + w as u64);
-                    if gen_engine == GenEngine::Continuous {
-                        // slot-pool streaming: rounds are assembled from
-                        // retired sequences, not generated round-at-a-time
-                        return continuous_worker(
-                            &engine, &taskgen, &slot, &stop, &tx, init_params,
-                            k, opts, start, stride, hop, max_cohorts,
-                            admit_min, &mut rng, origin,
+        let (accounts, epoch0, received, init_version, init_params) =
+            match resume {
+                Some(c) => {
+                    let s = &c.source;
+                    if s.kind != "pool" {
+                        bail!(
+                            "--resume: checkpoint was written by a '{}' \
+                             round source but this run is async (worker \
+                             pool)",
+                            s.kind
                         );
                     }
-                    let generator = gen_engine.build();
-                    let mut params = init_params;
-                    let mut version = 0u64;
-                    let mut cursor = start;
-                    let mut gen_total = 0.0f64;
-                    let mut rounds_done = 0u64;
-                    while !stop.load(Ordering::Relaxed) {
-                        // pick up the freshest published policy
-                        // (Algorithm 1: "update generation model
-                        // θ <- θ_i"); the cached view below re-uploads to
-                        // device only on a version change
-                        if let Some((v, p)) = slot.fetch(version) {
-                            version = v;
-                            params = p;
-                        }
-                        let round = generate_round(
-                            &engine,
-                            generator.as_ref(),
-                            ParamView::cached("policy", version, &params),
-                            version,
-                            &taskgen,
-                            cursor,
-                            k,
-                            opts,
-                            &mut rng,
-                            origin,
-                        )?;
-                        cursor += hop;
-                        gen_total += round.gen_secs;
-                        rounds_done += 1;
-                        // blocks while K rounds are queued — the
-                        // staleness bound's back-pressure
-                        if tx.send(GenMsg { round }).is_err() {
-                            break;
-                        }
+                    if s.cursors.len() != m {
+                        bail!(
+                            "--resume: checkpoint has {} worker lanes but \
+                             --gen-workers is {m}",
+                            s.cursors.len()
+                        );
                     }
-                    Ok((gen_total, rounds_done))
+                    let skip: Vec<Vec<u64>> = if s.skip.len() == m {
+                        s.skip.clone()
+                    } else if s.skip.is_empty() {
+                        vec![Vec::new(); m]
+                    } else {
+                        bail!(
+                            "--resume: checkpoint has {} skip lists for {m} \
+                             lanes",
+                            s.skip.len()
+                        );
+                    };
+                    (
+                        LaneAccounts::resume(
+                            starts.clone(),
+                            stride,
+                            hop,
+                            &s.cursors,
+                            &skip,
+                        ),
+                        // past every RNG stream this run already consumed
+                        s.epoch + 1,
+                        s.generated,
+                        c.version,
+                        Arc::from(&c.params[..]),
+                    )
+                }
+                None => (
+                    LaneAccounts::new(starts, stride, hop),
+                    0,
+                    0,
+                    0,
+                    Arc::from(&prep.sft_params[..]),
+                ),
+            };
+
+        let (tx, rx) = mpsc::sync_channel::<GenMsg>(cfg.staleness_bound);
+        let (exit_tx, exit_rx) = mpsc::channel::<WorkerExit>();
+        let slot = Arc::new(ParamSlot::new(init_version, init_params));
+        let stop = Arc::new(AtomicBool::new(false));
+        let ledger: Arc<Vec<AtomicU64>> = Arc::new(
+            accounts.expected.iter().map(|&c| AtomicU64::new(c)).collect(),
+        );
+        let now_ms = origin.elapsed().as_millis() as u64;
+        let ctl: Arc<Vec<SlotCtl>> = Arc::new(
+            (0..m)
+                .map(|w| SlotCtl {
+                    lanes: AtomicU64::new(1u64 << w),
+                    beat_ms: AtomicU64::new(now_ms),
                 })
-                .map_err(|e| anyhow!("spawn gen-worker-{w}: {e}"))?;
-            workers.push(handle);
-        }
-        // trainer holds no sender: when every worker exits, recv errors
-        drop(round_tx);
-        Ok(WorkerPool {
-            rx: round_rx,
+                .collect(),
+        );
+        let ctx = SpawnCtx {
+            artifact_dir: cfg.artifact_dir(),
+            task: prep.taskgen.task,
+            prompt_len: prep.taskgen.prompt_len,
+            resp_len: prep.taskgen.resp_len,
+            seed: cfg.seed,
+            opts: sample_opts(cfg),
+            k: cfg.k_samples,
+            gen_engine: cfg.gen_engine,
+            max_cohorts: cfg.max_cohorts,
+            admit_min: cfg.admit_min,
+            stride,
+            hop,
+            retries: cfg.engine_retries,
+            stall_timeout: cfg.stall_timeout_secs,
+            fault: cfg.inject_fault,
+            origin,
+            max_restarts: cfg.max_worker_restarts,
+            continuous,
+        };
+        let poll = Duration::from_secs_f64(
+            (cfg.stall_timeout_secs / 4.0).clamp(0.010, 0.050),
+        );
+        let mut pool = WorkerPool {
+            rx,
+            tx: Some(tx),
+            exit_rx,
+            exit_tx,
             slot,
             stop,
-            workers,
+            ledger,
+            ctl,
+            fault_fired: Arc::new(AtomicBool::new(false)),
+            retry_count: Arc::new(AtomicU64::new(0)),
+            ctx,
+            seats: (0..m).map(|_| None).collect(),
+            incarnations: vec![epoch0; m],
+            restarts_used: vec![0; m],
+            accounts,
+            pending: VecDeque::new(),
+            totals: vec![(0.0, 0); m],
+            worker_errors: Vec::new(),
+            worker_restarts: 0,
+            stalled_now: vec![false; m],
+            ever_stalled: vec![false; m],
             gen_bs,
-            received: 0,
-        })
+            received,
+            poll,
+        };
+        for w in 0..m {
+            pool.spawn_seat(w)?;
+        }
+        Ok(pool)
+    }
+
+    /// The shared handles a seat thread runs against.
+    fn shared(&self) -> SeatShared {
+        SeatShared {
+            tx: self.tx.clone().expect("pool sender alive while spawning"),
+            pslot: self.slot.clone(),
+            stop: self.stop.clone(),
+            ledger: self.ledger.clone(),
+            ctl: self.ctl.clone(),
+            fault_fired: self.fault_fired.clone(),
+            retry_count: self.retry_count.clone(),
+        }
+    }
+
+    /// (Re)spawn seat `w` at its current incarnation. The body runs under
+    /// `catch_unwind`; every exit path reports a [`WorkerExit`].
+    fn spawn_seat(&mut self, w: usize) -> Result<()> {
+        let ctx = self.ctx.clone();
+        let sh = self.shared();
+        let exit_tx = self.exit_tx.clone();
+        let incarnation = self.incarnations[w];
+        // continuous lanes resume from the trainer-accepted frontier,
+        // skipping out-of-order deliveries above it
+        let resume = (
+            self.accounts.expected[w],
+            self.accounts.delivered[w].clone(),
+        );
+        beat(&self.ctl[w], self.ctx.origin);
+        let handle = std::thread::Builder::new()
+            .name(format!("gen-worker-{w}"))
+            .spawn(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if ctx.continuous {
+                        let (frontier, skip) = resume;
+                        seat_continuous(&ctx, &sh, w, incarnation, frontier, skip)
+                    } else {
+                        seat_rounds(&ctx, &sh, w, incarnation)
+                    }
+                }))
+                .unwrap_or_else(|p| {
+                    Err(anyhow!("panicked: {}", panic_message(p.as_ref())))
+                });
+                // best-effort: at teardown the receiver may already be gone
+                let _ = exit_tx.send(WorkerExit { slot: w, outcome });
+            })
+            .map_err(|e| anyhow!("spawn gen-worker-{w}: {e}"))?;
+        self.seats[w] = Some(handle);
+        Ok(())
+    }
+
+    /// Reap dead seats (respawn / re-stride / fail) and run the heartbeat
+    /// watchdog. Called from `next` between receive slices.
+    fn supervise(&mut self) -> Result<()> {
+        while let Ok(exit) = self.exit_rx.try_recv() {
+            let w = exit.slot;
+            if let Some(h) = self.seats[w].take() {
+                let _ = h.join();
+            }
+            match exit.outcome {
+                Ok((secs, rounds)) => {
+                    self.totals[w].0 += secs;
+                    self.totals[w].1 += rounds;
+                    // a clean exit is only legitimate at teardown or after
+                    // its lanes were re-strided away
+                    let retired = self.ctl[w].lanes.load(Ordering::SeqCst) == 0;
+                    if !self.stop.load(Ordering::SeqCst) && !retired {
+                        self.handle_death(
+                            w,
+                            anyhow!("exited cleanly mid-run (queue closed?)"),
+                        )?;
+                    }
+                }
+                Err(e) => self.handle_death(w, e)?,
+            }
+        }
+        let now_ms = self.ctx.origin.elapsed().as_millis() as u64;
+        for w in 0..self.seats.len() {
+            if self.seats[w].is_none() {
+                self.stalled_now[w] = false;
+                continue;
+            }
+            let age =
+                now_ms.saturating_sub(self.ctl[w].beat_ms.load(Ordering::SeqCst));
+            let stalled = age as f64 / 1000.0 > self.ctx.stall_timeout;
+            if stalled && !self.stalled_now[w] {
+                self.stalled_now[w] = true;
+                self.ever_stalled[w] = true;
+                eprintln!(
+                    "[supervisor] gen-worker-{w} silent for {:.1}s \
+                     (--stall-timeout-secs {:.1}) — flagged as stalled",
+                    age as f64 / 1000.0,
+                    self.ctx.stall_timeout
+                );
+            } else if !stalled && self.stalled_now[w] {
+                self.stalled_now[w] = false;
+                eprintln!("[supervisor] gen-worker-{w} resumed heartbeats");
+            }
+        }
+        Ok(())
+    }
+
+    /// Absorb every queued round into the accounts (fresh ones buffer in
+    /// `pending`). Must run before computing a respawn position: a round
+    /// sitting in the queue at worker death is not yet accounted, and a
+    /// replacement spawned without it would replay it as a partial
+    /// duplicate.
+    fn drain_queue(&mut self) -> Result<()> {
+        while let Ok(msg) = self.rx.try_recv() {
+            if let Accept::Fresh = self.accounts.accept(&msg)? {
+                self.pending.push_back(msg);
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_death(&mut self, w: usize, err: anyhow::Error) -> Result<()> {
+        self.drain_queue()?;
+        self.worker_errors.push(format!("gen-worker-{w}: {err:#}"));
+        let lanes = self.ctl[w].lanes.load(Ordering::SeqCst);
+        // the dead worker may have generated without completing the
+        // handover: rewind-proof the ledger to the accepted frontier
+        for l in lanes_of(lanes) {
+            self.ledger[l].fetch_max(self.accounts.expected[l], Ordering::SeqCst);
+        }
+        if self.restarts_used[w] < self.ctx.max_restarts {
+            self.restarts_used[w] += 1;
+            self.worker_restarts += 1;
+            self.incarnations[w] += 1;
+            eprintln!(
+                "[supervisor] gen-worker-{w} died: {err:#}; respawning on a \
+                 fresh engine (restart {}/{})",
+                self.restarts_used[w], self.ctx.max_restarts
+            );
+            return self.spawn_seat(w);
+        }
+        if self.ctx.continuous {
+            bail!(
+                "gen-worker-{w} is unrecoverable after {} restarts: {err:#}; \
+                 a continuous lane's in-flight sequences cannot be \
+                 re-strided onto a survivor",
+                self.ctx.max_restarts
+            );
+        }
+        let heir =
+            (0..self.seats.len()).find(|&h| h != w && self.seats[h].is_some());
+        match heir {
+            Some(h) => {
+                self.ctl[w].lanes.store(0, Ordering::SeqCst);
+                self.ctl[h].lanes.fetch_or(lanes, Ordering::SeqCst);
+                eprintln!(
+                    "[supervisor] gen-worker-{w} died with no restarts left: \
+                     {err:#}; re-striding its lanes ({lanes:#b}) onto \
+                     gen-worker-{h}"
+                );
+                Ok(())
+            }
+            None => bail!(
+                "gen-worker-{w} died with no restarts left and no surviving \
+                 workers: {err:#}"
+            ),
+        }
+    }
+
+    fn deliver(
+        &mut self,
+        msg: GenMsg,
+        timeline: &mut Timeline,
+        t_wait: f64,
+    ) -> SourcedRound {
+        let t_got = timeline.origin().elapsed().as_secs_f64();
+        timeline.push_span(Phase::Idle, t_wait, t_got);
+        timeline.push_span(
+            Phase::Generate,
+            msg.round.gen_span.0,
+            msg.round.gen_span.1,
+        );
+        self.received += 1;
+        // worker rounds crossed the thread boundary as host data: the
+        // trainer re-stages them (the async mode's one upload per round)
+        SourcedRound { round: msg.round, staged: None }
     }
 }
 
@@ -568,21 +1203,28 @@ impl RoundSource for WorkerPool {
     fn next(&mut self, cx: TrainerCx<'_>) -> Result<SourcedRound> {
         let TrainerCx { timeline, .. } = cx;
         let t_wait = timeline.origin().elapsed().as_secs_f64();
-        let msg = self
-            .rx
-            .recv()
-            .map_err(|_| anyhow!("generation workers died"))?;
-        let t_got = timeline.origin().elapsed().as_secs_f64();
-        timeline.push_span(Phase::Idle, t_wait, t_got);
-        timeline.push_span(
-            Phase::Generate,
-            msg.round.gen_span.0,
-            msg.round.gen_span.1,
-        );
-        self.received += 1;
-        // worker rounds crossed the thread boundary as host data: the
-        // trainer re-stages them (the async mode's one upload per round)
-        Ok(SourcedRound { round: msg.round, staged: None })
+        loop {
+            // rounds rescued from a dead worker's queue go first
+            if let Some(msg) = self.pending.pop_front() {
+                return Ok(self.deliver(msg, timeline, t_wait));
+            }
+            self.supervise()?;
+            match self.rx.recv_timeout(self.poll) {
+                Ok(msg) => match self.accounts.accept(&msg)? {
+                    Accept::Fresh => {
+                        return Ok(self.deliver(msg, timeline, t_wait))
+                    }
+                    // a respawned worker replaying its at-least-once
+                    // window: drop, it is already trained on
+                    Accept::Duplicate => continue,
+                },
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => bail!(
+                    "round queue disconnected while the pool holds a \
+                     sender — this is a bug"
+                ),
+            }
+        }
     }
 
     fn episodes(&self) -> u64 {
@@ -601,39 +1243,205 @@ impl RoundSource for WorkerPool {
         })
     }
 
+    fn snapshot(&self) -> Option<SourceState> {
+        // always at a clean boundary: cursors are the trainer-accepted
+        // frontier, and rounds in flight (or queued) simply regenerate
+        // after resume, where the accounts would dedupe them
+        let skip = if self.ctx.continuous {
+            self.accounts
+                .delivered
+                .iter()
+                .map(|s| {
+                    let mut v: Vec<u64> = s.iter().copied().collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect()
+        } else {
+            vec![Vec::new(); self.accounts.expected.len()]
+        };
+        Some(SourceState {
+            kind: "pool".into(),
+            rng: None,
+            generated: self.received,
+            cursors: self.accounts.expected.clone(),
+            skip,
+            epoch: self.incarnations.iter().copied().max().unwrap_or(0),
+        })
+    }
+
     fn finish(self: Box<Self>, log: &mut RunLog) -> Result<()> {
-        let pool = *self;
-        pool.stop.store(true, Ordering::Relaxed);
-        // release workers blocked in `send` so join cannot deadlock
+        let mut pool = *self;
+        pool.stop.store(true, Ordering::SeqCst);
+        // dropping the trainer's channel ends release workers blocked in
+        // `send`, so join cannot deadlock
+        drop(pool.tx.take());
         drop(pool.rx);
-        let mut gen_total = 0.0f64;
-        let mut rounds_total = 0u64;
-        let mut first_err = None;
-        for (w, handle) in pool.workers.into_iter().enumerate() {
-            let joined = handle
-                .join()
-                .map_err(|_| anyhow!("gen-worker-{w} panicked"))?;
-            match joined {
-                Ok((secs, rounds)) => {
-                    log.set_meta(&format!("gen_secs_w{w}"), format!("{secs:.3}"));
-                    log.set_meta(&format!("gen_rounds_w{w}"), rounds);
-                    gen_total += secs;
-                    rounds_total += rounds;
-                }
-                Err(e) => first_err = first_err.or(Some(e)),
+        for seat in pool.seats.iter_mut() {
+            if let Some(h) = seat.take() {
+                // seat bodies run under catch_unwind: join only fails if
+                // the exit-report send itself panicked
+                let _ = h.join();
             }
         }
-        if let Some(e) = first_err {
-            return Err(e);
+        // mid-run failures were already surfaced (and recovered or
+        // escalated) by `supervise`; teardown absorbs what remains into
+        // the run metas instead of failing a finished run
+        while let Ok(exit) = pool.exit_rx.try_recv() {
+            match exit.outcome {
+                Ok((secs, rounds)) => {
+                    pool.totals[exit.slot].0 += secs;
+                    pool.totals[exit.slot].1 += rounds;
+                }
+                Err(e) => pool
+                    .worker_errors
+                    .push(format!("gen-worker-{}: {e:#}", exit.slot)),
+            }
+        }
+        let mut gen_total = 0.0f64;
+        let mut rounds_total = 0u64;
+        for (w, (secs, rounds)) in pool.totals.iter().enumerate() {
+            log.set_meta(&format!("gen_secs_w{w}"), format!("{secs:.3}"));
+            log.set_meta(&format!("gen_rounds_w{w}"), rounds);
+            gen_total += secs;
+            rounds_total += rounds;
         }
         log.set_meta("gen_total_secs", format!("{gen_total:.3}"));
         log.set_meta("gen_rounds", rounds_total);
+        log.set_meta("worker_restarts", pool.worker_restarts);
+        log.set_meta(
+            "stalled_workers",
+            pool.ever_stalled.iter().filter(|&&b| b).count(),
+        );
+        log.set_meta("engine_retries", pool.retry_count.load(Ordering::SeqCst));
+        log.set_meta("dropped_duplicate_rounds", pool.accounts.duplicates);
+        if !pool.worker_errors.is_empty() {
+            log.set_meta("worker_errors", pool.worker_errors.join(" | "));
+        }
         Ok(())
     }
 }
 
-/// Streaming body of a continuous-engine generation worker: drive the
-/// slot pool one sweep at a time, re-reading the published policy slot
+/// Scripted-fault check at the top of a worker round: fires exactly once
+/// per run (`fault_fired`), so a respawned replacement does not re-fault.
+/// `Panic` and `Stall` act immediately; `EngineErr` arms the caller's
+/// next attempt-0 engine call to fail.
+fn maybe_inject(
+    ctx: &SpawnCtx,
+    sh: &SeatShared,
+    w: usize,
+    rounds_done: u64,
+    inject_err: &mut bool,
+) {
+    let Some(f) = &ctx.fault else { return };
+    if f.worker != w
+        || rounds_done != f.round
+        || sh.fault_fired.swap(true, Ordering::SeqCst)
+    {
+        return;
+    }
+    match f.kind {
+        FaultKind::Panic => panic!(
+            "injected fault: scripted panic in gen-worker-{w} at round {}",
+            f.round
+        ),
+        FaultKind::Stall => std::thread::sleep(Duration::from_secs_f64(
+            ctx.stall_timeout * 2.0,
+        )),
+        FaultKind::EngineErr => *inject_err = true,
+    }
+}
+
+/// Body of a round-synchronous worker seat (cached / device / naive
+/// generators): fetch the freshest policy, generate one round on the
+/// lane furthest behind, hand it over, advance the lane ledger.
+///
+/// Worker `w` at incarnation 0 keeps the seed coordinator's RNG stream
+/// (`0xa57c + w`) so M=1 pools replay the seed bitwise; respawns and
+/// resume epochs shift the stream so replayed prompts resample fresh.
+fn seat_rounds(
+    ctx: &SpawnCtx,
+    sh: &SeatShared,
+    w: usize,
+    incarnation: u64,
+) -> Result<(f64, u64)> {
+    // own engine, own PJRT client (separate "GPU")
+    let engine = Engine::load(&ctx.artifact_dir)?;
+    let taskgen = TaskGen::new(ctx.task, ctx.prompt_len, ctx.resp_len, ctx.seed);
+    let stream = w as u64 + (incarnation << 20);
+    let mut rng = Pcg32::new(ctx.seed, 0xa57c + stream);
+    let mut retry_rng = Pcg32::new(ctx.seed, RETRY_STREAM + stream);
+    let policy = RetryPolicy::new(ctx.retries);
+    let generator = ctx.gen_engine.build();
+    let (mut version, mut params) = sh.pslot.latest();
+    let mut gen_total = 0.0f64;
+    let mut rounds_done = 0u64;
+    let mut inject_err = false;
+    loop {
+        beat(&sh.ctl[w], ctx.origin);
+        if sh.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let mask = sh.ctl[w].lanes.load(Ordering::SeqCst);
+        if mask == 0 {
+            break; // lanes re-strided away: retire cleanly
+        }
+        // pick up the freshest published policy (Algorithm 1: "update
+        // generation model θ <- θ_i"); the cached view below re-uploads
+        // to device only on a version change
+        if let Some((v, p)) = sh.pslot.fetch(version) {
+            version = v;
+            params = p;
+        }
+        let lane = pick_lane(mask, &sh.ledger);
+        let cursor = sh.ledger[lane].load(Ordering::SeqCst);
+        maybe_inject(ctx, sh, w, rounds_done, &mut inject_err);
+        let round = policy.run(
+            &mut retry_rng,
+            |_| {
+                sh.retry_count.fetch_add(1, Ordering::SeqCst);
+                engine.note_retry(ROUND_ORIGIN);
+            },
+            |attempt| {
+                if inject_err && attempt == 0 {
+                    bail!(
+                        "injected fault: scripted engine error in \
+                         gen-worker-{w}"
+                    );
+                }
+                generate_round(
+                    &engine,
+                    generator.as_ref(),
+                    ParamView::cached("policy", version, &params),
+                    version,
+                    &taskgen,
+                    cursor,
+                    ctx.k,
+                    ctx.opts,
+                    &mut rng,
+                    ctx.origin,
+                )
+            },
+        )?;
+        inject_err = false;
+        gen_total += round.gen_secs;
+        beat(&sh.ctl[w], ctx.origin);
+        // blocks while K rounds are queued — the staleness bound's
+        // back-pressure
+        if sh.tx.send(GenMsg { round, lane, indices: None }).is_err() {
+            break;
+        }
+        rounds_done += 1;
+        // advance ONLY after the handover (at-least-once): a crash before
+        // this store regenerates the round; a crash after the send leaves
+        // a duplicate the trainer's accounts drop
+        sh.ledger[lane].store(cursor + ctx.hop, Ordering::SeqCst);
+    }
+    Ok((gen_total, rounds_done))
+}
+
+/// Streaming body of a continuous-engine worker seat: drive the slot
+/// pool one sweep at a time, re-reading the published policy slot
 /// *between decode steps* (PipelineRL's inflight weight swap — in-flight
 /// sequences keep their KV cache and finish under the new weights,
 /// stamping their remaining tokens with the new version), feeding retired
@@ -641,74 +1449,107 @@ impl RoundSource for WorkerPool {
 /// over the same bounded queue as the round-synchronous workers — the
 /// staleness back-pressure simply pauses the pool mid-flight while `send`
 /// blocks.
-#[allow(clippy::too_many_arguments)]
-fn continuous_worker(
-    engine: &Engine,
-    taskgen: &TaskGen,
-    slot: &ParamSlot,
-    stop: &AtomicBool,
-    tx: &mpsc::SyncSender<GenMsg>,
-    init_params: Arc<[f32]>,
-    k: usize,
-    opts: SampleOpts,
-    start: u64,
-    stride: u64,
-    hop: u64,
-    max_cohorts: usize,
-    admit_min: usize,
-    rng: &mut Pcg32,
-    origin: Instant,
+///
+/// A respawned incarnation re-enters the lane at the trainer-accepted
+/// `frontier`, skipping the out-of-order indices already delivered above
+/// it — the admission filter makes every post-respawn round all-fresh.
+fn seat_continuous(
+    ctx: &SpawnCtx,
+    sh: &SeatShared,
+    w: usize,
+    incarnation: u64,
+    frontier: u64,
+    skip: HashSet<u64>,
 ) -> Result<(f64, u64)> {
+    let engine = Engine::load(&ctx.artifact_dir)?;
+    let taskgen = TaskGen::new(ctx.task, ctx.prompt_len, ctx.resp_len, ctx.seed);
+    let stream = w as u64 + (incarnation << 20);
+    let mut rng = Pcg32::new(ctx.seed, 0xa57c + stream);
+    let mut retry_rng = Pcg32::new(ctx.seed, RETRY_STREAM + stream);
+    let policy = RetryPolicy::new(ctx.retries);
     let mcfg = engine.manifest.config.clone();
-    let mut backend = DeviceBackend::new(engine)?;
+    let mut backend = DeviceBackend::new(&engine)?;
     let mut pool = Pool::new(PoolCfg {
         slots: mcfg.gen_batch,
         prompt_len: mcfg.prompt_len,
         seq_len: mcfg.seq_len,
         vocab: mcfg.vocab,
-        max_cohorts,
-        admit_min,
+        max_cohorts: ctx.max_cohorts,
+        admit_min: ctx.admit_min,
     });
     // the same strided prompt partition the round-based workers walk
     // (worker w: blocks of `stride` indices, hopping M·stride, each
-    // index k times), consumed one prompt per freed slot
+    // index k times), consumed one prompt per freed slot — re-entered at
+    // the block holding the frontier, minus what was already delivered
+    let start = RLHF_RANGE + w as u64 * ctx.stride;
+    let base = start + ((frontier - start) / ctx.hop) * ctx.hop;
     let mut admission = taskgen
-        .admission(start, stride, hop, k)
+        .admission(base, ctx.stride, ctx.hop, ctx.k)
+        .filter(move |a| a.index >= frontier && !skip.contains(&a.index))
         .map(|a| AdmitSeq { index: a.index, dup: a.dup, prompt: a.prompt });
-    let mut assembler = RoundAssembler::new(mcfg.gen_batch, k);
-    let mut params = init_params;
-    let mut version = 0u64;
+    let mut assembler = RoundAssembler::new(mcfg.gen_batch, ctx.k);
+    let (mut version, mut params) = sh.pslot.latest();
     let mut gen_total = 0.0f64;
     let mut rounds_done = 0u64;
-    let mut t_round = origin.elapsed().as_secs_f64();
-    while !stop.load(Ordering::Relaxed) {
-        if let Some((v, p)) = slot.fetch(version) {
+    let mut inject_err = false;
+    let mut t_round = ctx.origin.elapsed().as_secs_f64();
+    loop {
+        beat(&sh.ctl[w], ctx.origin);
+        if sh.stop.load(Ordering::SeqCst)
+            || sh.ctl[w].lanes.load(Ordering::SeqCst) == 0
+        {
+            break;
+        }
+        if let Some((v, p)) = sh.pslot.fetch(version) {
             version = v;
             params = p;
         }
-        pool.step(
-            &mut backend,
-            ParamView::cached("policy", version, &params),
-            version,
-            &mut admission,
-            opts,
-            rng,
+        maybe_inject(ctx, sh, w, rounds_done, &mut inject_err);
+        policy.run(
+            &mut retry_rng,
+            |_| {
+                sh.retry_count.fetch_add(1, Ordering::SeqCst);
+                engine.note_retry(ROUND_ORIGIN);
+            },
+            |attempt| {
+                if inject_err && attempt == 0 {
+                    bail!(
+                        "injected fault: scripted engine error in \
+                         gen-worker-{w}"
+                    );
+                }
+                pool.step(
+                    &mut backend,
+                    ParamView::cached("policy", version, &params),
+                    version,
+                    &mut admission,
+                    ctx.opts,
+                    &mut rng,
+                )
+            },
         )?;
+        inject_err = false;
         for c in pool.drain_completed() {
             assembler.push(c);
         }
         while let Some(groups) = assembler.pop_round() {
-            let t_now = origin.elapsed().as_secs_f64();
-            let round = round_from_groups(groups, taskgen, (t_round, t_now));
+            let indices: Vec<u64> = groups.iter().map(|(i, _)| *i).collect();
+            let t_now = ctx.origin.elapsed().as_secs_f64();
+            let round = round_from_groups(groups, &taskgen, (t_round, t_now));
             gen_total += t_now - t_round;
             rounds_done += 1;
+            beat(&sh.ctl[w], ctx.origin);
             // blocks while K rounds are queued — the staleness bound's
             // back-pressure; in-flight sequences wait between sweeps
-            if tx.send(GenMsg { round }).is_err() {
+            if sh
+                .tx
+                .send(GenMsg { round, lane: w, indices: Some(indices) })
+                .is_err()
+            {
                 return Ok((gen_total, rounds_done));
             }
             // blocked-send time belongs to the queue, not generation
-            t_round = origin.elapsed().as_secs_f64();
+            t_round = ctx.origin.elapsed().as_secs_f64();
         }
     }
     Ok((gen_total, rounds_done))
@@ -771,12 +1612,13 @@ fn round_from_groups(
 #[cfg(test)]
 mod tests {
     use std::collections::VecDeque;
+    use std::sync::atomic::AtomicU64;
     use std::sync::Arc;
 
     use super::super::trainer::staleness;
     use super::{
-        cursor_stride, round_from_groups, staleness_bound_updates, Completed,
-        ParamSlot,
+        cursor_stride, lane_next, pick_lane, round_from_groups,
+        staleness_bound_updates, Accept, Completed, LaneAccounts, ParamSlot,
     };
     use crate::data::{Task, TaskGen};
 
@@ -830,6 +1672,90 @@ mod tests {
         assert_eq!(&p[..], &[5.0]);
         // and nothing newer than what it now has
         assert!(slot.fetch(5).is_none());
+    }
+
+    #[test]
+    fn param_slot_survives_a_panicked_lock_holder() {
+        // a supervised worker that dies while holding the slot lock
+        // poisons the mutex; the slot must keep serving (the critical
+        // sections are pure pointer swaps, never half-written)
+        let slot = Arc::new(ParamSlot::new(0, Arc::from(&[0.0f32][..])));
+        let s2 = slot.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = s2.latest.lock().unwrap();
+            panic!("die holding the param slot lock");
+        })
+        .join();
+        assert!(slot.latest.is_poisoned(), "test setup must poison the lock");
+        slot.publish(3, Arc::from(&[3.0f32][..]));
+        let (v, p) = slot.fetch(0).expect("publish visible despite poison");
+        assert_eq!((v, &p[..]), (3, &[3.0f32][..]));
+        assert_eq!(slot.latest().0, 3);
+    }
+
+    #[test]
+    fn pick_lane_prefers_the_lane_furthest_behind() {
+        let ledger: Vec<AtomicU64> =
+            [30u64, 10, 20].into_iter().map(AtomicU64::new).collect();
+        // owning all three lanes: the lowest cursor wins
+        assert_eq!(pick_lane(0b111, &ledger), 1);
+        // ownership masks restrict the choice
+        assert_eq!(pick_lane(0b101, &ledger), 2);
+        assert_eq!(pick_lane(0b001, &ledger), 0);
+        // ties go to the lowest lane
+        ledger[2].store(10, std::sync::atomic::Ordering::SeqCst);
+        assert_eq!(pick_lane(0b110, &ledger), 1);
+    }
+
+    #[test]
+    fn lane_next_walks_blocks_and_hops() {
+        // lane at start 100, blocks of 3, hop 12:
+        // 100 101 102 | 112 113 114 | 124 ...
+        assert_eq!(lane_next(100, 100, 3, 12), 101);
+        assert_eq!(lane_next(101, 100, 3, 12), 102);
+        assert_eq!(lane_next(102, 100, 3, 12), 112);
+        assert_eq!(lane_next(114, 100, 3, 12), 124);
+        // stride 1 (degenerate geometry): every step is a hop
+        assert_eq!(lane_next(100, 100, 1, 2), 102);
+    }
+
+    #[test]
+    fn lane_accounts_block_mode_dedupes_and_detects_holes() {
+        // two lanes, stride 4, hop 8: lane 0 blocks 0,8,16…, lane 1
+        // blocks 4,12,20…
+        let mut a = LaneAccounts::new(vec![0, 4], 4, 8);
+        assert!(matches!(a.accept_block(0, 0).unwrap(), Accept::Fresh));
+        assert!(matches!(a.accept_block(1, 4).unwrap(), Accept::Fresh));
+        // a respawned worker replaying its last handed-over block
+        assert!(matches!(a.accept_block(0, 0).unwrap(), Accept::Duplicate));
+        assert_eq!(a.duplicates, 1);
+        assert!(matches!(a.accept_block(0, 8).unwrap(), Accept::Fresh));
+        // a skipped block can only mean a lost round: loud failure
+        let err = a.accept_block(1, 20).unwrap_err().to_string();
+        assert!(err.contains("lane 1"), "{err}");
+        assert!(err.contains("12"), "names the expected index: {err}");
+    }
+
+    #[test]
+    fn lane_accounts_continuous_mode_advances_frontier_out_of_order() {
+        // one lane at start 0, stride 4, hop 4 (M=1): indices 0,1,2,3,4…
+        let mut a = LaneAccounts::new(vec![0], 4, 4);
+        // a round retires {1, 3} first (continuous retirement is
+        // completion-ordered): frontier stays at 0
+        assert!(matches!(a.accept_indices(0, &[1, 3]).unwrap(), Accept::Fresh));
+        assert_eq!(a.expected[0], 0);
+        assert_eq!(a.delivered[0].len(), 2);
+        // {0, 2} closes the gap: frontier sweeps to 4, sets drain
+        assert!(matches!(a.accept_indices(0, &[0, 2]).unwrap(), Accept::Fresh));
+        assert_eq!(a.expected[0], 4);
+        assert!(a.delivered[0].is_empty(), "frontier absorbed the set");
+        // full replay is dropped …
+        assert!(matches!(
+            a.accept_indices(0, &[1, 3]).unwrap(),
+            Accept::Duplicate
+        ));
+        // … but a mixed round means the respawn skip set was wrong
+        assert!(a.accept_indices(0, &[3, 4]).is_err());
     }
 
     #[test]

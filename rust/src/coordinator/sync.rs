@@ -13,12 +13,15 @@
 
 use anyhow::Result;
 
+use super::checkpoint::Checkpoint;
 use super::pipeline::{self, InlineSource, RoundSource};
 use super::RunOutput;
 use crate::config::ExpConfig;
 
 /// Run synchronous RLHF. The SFT checkpoint in `prep` is both the initial
-/// policy and the KL reference.
+/// policy and the KL reference. A `--resume` restart re-enters the inline
+/// source's RNG and prompt cursors exactly, so sync kill-and-resume is
+/// bitwise identical to an uninterrupted run.
 pub fn run<'p>(
     cfg: &ExpConfig,
     prep: &'p super::Prepared,
@@ -27,9 +30,9 @@ pub fn run<'p>(
     pipeline::run(
         cfg,
         prep,
-        |_origin| {
+        |_origin, resume: Option<&Checkpoint>| {
             let src: Box<dyn RoundSource + 'p> =
-                Box::new(InlineSource::new(cfg, prep));
+                Box::new(InlineSource::new(cfg, prep, resume)?);
             Ok(src)
         },
         verbose,

@@ -38,6 +38,22 @@ pub struct LadderPoint {
     /// Trainer idle seconds (waiting on the round queue).
     pub idle_secs: f64,
     pub wall_secs: f64,
+    /// Worker deaths recovered by the supervisor (run meta).
+    pub worker_restarts: u64,
+    /// Workers the heartbeat watchdog ever flagged (run meta) — the
+    /// observable behind the M>1 fair-scheduling caveat.
+    pub stalled_workers: u64,
+}
+
+/// Parse a numeric run meta, defaulting to 0 when absent (e.g. logs
+/// written before the supervision layer).
+fn meta_u64(r: &super::runner::VariantResult, key: &str) -> u64 {
+    r.out
+        .log
+        .meta
+        .get(key)
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0)
 }
 
 /// Run the ladder: every (K, M) in `ks` × `ms`, async mode, on a shared
@@ -73,6 +89,7 @@ pub fn sweep(
             let mean_staleness =
                 st.iter().sum::<u64>() as f64 / st.len().max(1) as f64;
             let bound = staleness_bound_updates(k, m, cfg.updates_per_batch);
+            let stalled_workers = meta_u64(&r, "stalled_workers");
             if max_staleness > bound {
                 if m == 1 {
                     anyhow::bail!(
@@ -82,7 +99,8 @@ pub fn sweep(
                 }
                 eprintln!(
                     "[staleness] WARN K={k} M={m}: {max_staleness} > \
-                     fair-scheduling bound {bound} (a worker stalled)"
+                     fair-scheduling bound {bound} ({stalled_workers} \
+                     worker(s) flagged stalled)"
                 );
             }
             points.push(LadderPoint {
@@ -95,6 +113,8 @@ pub fn sweep(
                 bound,
                 idle_secs: r.out.timeline.total(Phase::Idle),
                 wall_secs: r.out.timeline.wall(),
+                worker_restarts: meta_u64(&r, "worker_restarts"),
+                stalled_workers,
             });
         }
     }
@@ -115,6 +135,8 @@ fn rows(points: &[LadderPoint]) -> Vec<Vec<String>> {
                 format!("{}", p.bound),
                 format!("{:.2}", p.idle_secs),
                 format!("{:.1}", p.wall_secs),
+                format!("{}", p.worker_restarts),
+                format!("{}", p.stalled_workers),
             ]
         })
         .collect()
@@ -129,6 +151,8 @@ const HEADERS: &[&str] = &[
     "bound",
     "idle_s",
     "wall_s",
+    "restarts",
+    "stalled",
 ];
 
 /// Machine-readable dump for `BENCH_staleness.json`.
@@ -150,6 +174,8 @@ pub fn bench_json(model: &str, steps: u64, points: &[LadderPoint]) -> Json {
                 ),
                 ("idle_secs", Json::num(p.idle_secs)),
                 ("wall_secs", Json::num(p.wall_secs)),
+                ("worker_restarts", Json::num(p.worker_restarts as f64)),
+                ("stalled_workers", Json::num(p.stalled_workers as f64)),
             ])
         })
         .collect();

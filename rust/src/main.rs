@@ -13,6 +13,10 @@
 //!   async-rlhf train tldr_s --gen-engine device   # KV chained on-device
 //!   async-rlhf train tldr_s --mode async --gen-engine continuous \
 //!                           --max-cohorts 4 --admit-min 1  # slot pool
+//!   async-rlhf train tldr_s --checkpoint-every 8  # crash-safe snapshots
+//!   async-rlhf train tldr_s --checkpoint-every 8 --resume  # continue run
+//!   async-rlhf train tldr_s --mode async --gen-workers 2 \
+//!                           --inject-fault worker=1,round=3,kind=panic
 //!   async-rlhf exp fig3 --steps 64
 //!   async-rlhf exp staleness --steps 24           # K x M ladder
 //!   async-rlhf sim --gen 21 --train 33 --steps 233
@@ -28,7 +32,7 @@ use async_rlhf::runtime::{artifacts_root, Manifest};
 use async_rlhf::sim::{analyze, simulate_async, simulate_sync, StepCosts};
 use async_rlhf::util::args::Args;
 
-const BOOL_FLAGS: &[&str] = &["quiet", "naive", "greedy", "force"];
+const BOOL_FLAGS: &[&str] = &["quiet", "naive", "greedy", "force", "resume"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();

@@ -212,6 +212,10 @@ pub struct CallStats {
     pub total_secs: f64,
     pub bytes_up: u64,
     pub bytes_down: u64,
+    /// Engine-boundary retries charged to this origin (see
+    /// [`crate::runtime::retry::RetryPolicy`]). A retried call's
+    /// successful attempt still counts once under `calls`.
+    pub retries: u64,
 }
 
 struct ParamEntry {
@@ -804,6 +808,16 @@ impl Engine {
             .fold((0, 0), |(u, d), s| (u + s.bytes_up, d + s.bytes_down))
     }
 
+    /// Charge one engine-boundary retry to `origin` (the retry policy's
+    /// `on_retry` hook calls this between attempts).
+    pub fn note_retry(&self, origin: &str) {
+        self.stats
+            .borrow_mut()
+            .entry(origin.to_string())
+            .or_default()
+            .retries += 1;
+    }
+
     pub fn stats(&self) -> BTreeMap<String, CallStats> {
         self.stats.borrow().clone()
     }
@@ -968,6 +982,37 @@ impl TrainState {
             v: engine.upload_f32("train_state", &self.v)?,
         });
         Ok(())
+    }
+
+    /// Rebuild a state from checkpointed host mirrors — the exact bytes
+    /// [`TrainState::host_mirrors`] returned at the snapshot. The next
+    /// train step re-uploads the triple, so a resumed run continues
+    /// bitwise from the checkpoint (downloads and uploads are exact).
+    pub fn from_host(
+        params: Vec<f32>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        step: u64,
+    ) -> Result<TrainState> {
+        if m.len() != params.len() || v.len() != params.len() {
+            bail!(
+                "optimizer state size mismatch: params {} / m {} / v {}",
+                params.len(),
+                m.len(),
+                v.len()
+            );
+        }
+        Ok(TrainState { params, m, v, step, device: None, host_stale: false })
+    }
+
+    /// The full host triple `(params, m, v)`, synced from the device if
+    /// it is ahead — the checkpoint payload.
+    pub fn host_mirrors(
+        &mut self,
+        engine: &Engine,
+    ) -> Result<(&[f32], &[f32], &[f32])> {
+        self.sync_host(engine)?;
+        Ok((&self.params, &self.m, &self.v))
     }
 
     /// Refresh the host mirrors from the device triple (checkpoint/final

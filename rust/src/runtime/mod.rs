@@ -15,9 +15,11 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod retry;
 
 pub use engine::{
     metric, scalar_f32, scalar_i32, CallArg, CallStats, DeviceBuffer, Engine,
     HostTensor, ParamView, TrainState,
 };
+pub use retry::{RetryPolicy, RETRY_STREAM};
 pub use manifest::{artifacts_root, ArtifactSpec, DType, IoSpec, Manifest, ModelConfig};

@@ -1,0 +1,170 @@
+//! Retry with deterministic jittered backoff at the engine boundary.
+//!
+//! A transient PJRT fault (allocation hiccup, client glitch) inside one
+//! generation call must not kill an hours-long run. The supervision layer
+//! wraps the engine boundary in a [`RetryPolicy`]: up to `--engine-retries`
+//! re-attempts, sleeping an exponentially growing, *jittered* delay between
+//! them. The jitter is drawn from a dedicated [`Pcg32`] stream derived from
+//! the run seed ([`RETRY_STREAM`] + worker id), so a replayed run with the
+//! same scripted faults sleeps the same schedule — retries stay inside the
+//! determinism contract instead of outside it.
+//!
+//! Counters: the caller passes an `on_retry` hook; workers use it to bump
+//! their per-run retry tally and the engine's per-origin
+//! [`CallStats::retries`](crate::runtime::CallStats) counter.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Pcg32;
+
+/// RNG stream id for backoff jitter: `RETRY_STREAM + worker` keeps each
+/// worker's retry schedule independent of its sampling stream (a retry
+/// must not shift the tokens a healthy run would have sampled).
+pub const RETRY_STREAM: u64 = 0xbac0;
+
+/// Retry policy for one fallible engine-boundary call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first try (0 = fail fast, the pre-supervision
+    /// behaviour).
+    pub retries: u32,
+    /// Backoff before retry `a` is `base_delay · 2^a`, jittered into
+    /// `[½, 1)` of itself.
+    pub base_delay: Duration,
+}
+
+impl RetryPolicy {
+    pub fn new(retries: u32) -> RetryPolicy {
+        RetryPolicy { retries, base_delay: Duration::from_millis(50) }
+    }
+
+    /// The jittered delay before 0-based retry `attempt`. Deterministic in
+    /// (`rng` cursor, `attempt`): exponential growth capped at 2^16·base,
+    /// scaled by a uniform draw in [½, 1) so concurrent workers retrying
+    /// the same fault don't thundering-herd the backend in lockstep.
+    pub fn backoff(&self, attempt: u32, rng: &mut Pcg32) -> Duration {
+        let exp = self.base_delay.saturating_mul(1 << attempt.min(16));
+        exp.mul_f64(0.5 + 0.5 * rng.gen_f64())
+    }
+
+    /// Run `f`, re-attempting up to `self.retries` times on `Err`.
+    /// `on_retry(attempt)` fires before each backoff sleep (stat
+    /// counters / logging); the terminal error carries the give-up count.
+    pub fn run<T>(
+        &self,
+        rng: &mut Pcg32,
+        mut on_retry: impl FnMut(u32),
+        mut f: impl FnMut(u32) -> Result<T>,
+    ) -> Result<T> {
+        let mut attempt = 0u32;
+        loop {
+            match f(attempt) {
+                Ok(v) => return Ok(v),
+                Err(_) if attempt < self.retries => {
+                    on_retry(attempt);
+                    std::thread::sleep(self.backoff(attempt, rng));
+                    attempt += 1;
+                }
+                Err(e) if self.retries > 0 => {
+                    return Err(e).with_context(|| {
+                        format!("gave up after {} engine retries", self.retries)
+                    });
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    fn tiny(retries: u32) -> RetryPolicy {
+        // keep test sleeps in the microsecond range
+        RetryPolicy { retries, base_delay: Duration::from_micros(10) }
+    }
+
+    #[test]
+    fn first_success_needs_no_retry() {
+        let mut rng = Pcg32::new(1, RETRY_STREAM);
+        let mut retries = 0;
+        let out = tiny(3)
+            .run(&mut rng, |_| retries += 1, |_| Ok(7))
+            .unwrap();
+        assert_eq!(out, 7);
+        assert_eq!(retries, 0);
+    }
+
+    #[test]
+    fn transient_errors_are_retried_and_counted() {
+        let mut rng = Pcg32::new(1, RETRY_STREAM);
+        let mut retries = 0;
+        let mut failures_left = 2;
+        let out = tiny(3)
+            .run(
+                &mut rng,
+                |_| retries += 1,
+                |attempt| {
+                    if failures_left > 0 {
+                        failures_left -= 1;
+                        Err(anyhow!("transient"))
+                    } else {
+                        Ok(attempt)
+                    }
+                },
+            )
+            .unwrap();
+        assert_eq!(out, 2, "succeeded on the third attempt");
+        assert_eq!(retries, 2);
+    }
+
+    #[test]
+    fn gives_up_after_budget_with_descriptive_context() {
+        let mut rng = Pcg32::new(1, RETRY_STREAM);
+        let mut calls = 0;
+        let err = tiny(2)
+            .run(&mut rng, |_| {}, |_: u32| -> Result<()> {
+                calls += 1;
+                Err(anyhow!("persistent"))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 3, "1 attempt + 2 retries");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("gave up after 2 engine retries"), "{msg}");
+        assert!(msg.contains("persistent"), "{msg}");
+    }
+
+    #[test]
+    fn zero_retries_is_fail_fast_with_untouched_error() {
+        let mut rng = Pcg32::new(1, RETRY_STREAM);
+        let err = tiny(0)
+            .run(&mut rng, |_| {}, |_: u32| -> Result<()> {
+                Err(anyhow!("original"))
+            })
+            .unwrap_err();
+        assert_eq!(format!("{err:#}"), "original");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_jittered_and_exponential() {
+        let p = RetryPolicy::new(3);
+        let mut a = Pcg32::new(42, RETRY_STREAM + 1);
+        let mut b = Pcg32::new(42, RETRY_STREAM + 1);
+        for attempt in 0..4 {
+            let da = p.backoff(attempt, &mut a);
+            assert_eq!(da, p.backoff(attempt, &mut b), "same stream, same delay");
+            let full = p.base_delay * (1 << attempt);
+            assert!(da >= full / 2 && da < full, "attempt {attempt}: {da:?}");
+        }
+        // a different stream jitters differently
+        let mut c = Pcg32::new(42, RETRY_STREAM + 2);
+        let differs = (0..4).any(|n| {
+            p.backoff(n, &mut c) != p.backoff(n, &mut Pcg32::new(42, RETRY_STREAM + 1))
+        });
+        assert!(differs);
+    }
+}

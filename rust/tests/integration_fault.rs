@@ -1,0 +1,274 @@
+//! Fault-injection and checkpoint/resume integration tests on the dev
+//! artifact bundle.
+//!
+//! Each test scripts one failure mode through `--inject-fault` (the
+//! deterministic fault plan: a chosen worker fails at a chosen round in a
+//! chosen way) and asserts the supervision layer's contract: panics are
+//! recovered by respawn with no dropped or duplicated rounds, engine
+//! errors are retried at the boundary, stalls are flagged by the
+//! watchdog, unrecoverable pools fail loudly (never silently skip), and
+//! `--checkpoint-every` + `--resume` restarts a killed run — bitwise
+//! identically in sync mode.
+//!
+//! Requires `make artifacts` (skips, loudly, when artifacts/dev is
+//! absent — CI always builds artifacts first).
+
+use std::path::PathBuf;
+
+use async_rlhf::config::{ExpConfig, FaultKind, FaultPlan, Mode};
+use async_rlhf::coordinator;
+use async_rlhf::coordinator::pipeline::staleness_bound_updates;
+use async_rlhf::coordinator::trainer::rounds_per_batch;
+
+fn dev_dir() -> Option<PathBuf> {
+    let root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let dir = root.join("dev");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/dev missing — run `make artifacts`");
+        None
+    }
+}
+
+fn test_cfg(name: &str) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.model = "dev".into();
+    cfg.artifacts_root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    cfg.steps = 6;
+    cfg.sft_steps = 80;
+    cfg.rm_steps = 60;
+    cfg.eval_prompts = 32;
+    cfg.run_dir = std::env::temp_dir().join(format!("async_rlhf_test_{name}"));
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    cfg
+}
+
+fn meta_u64(out: &coordinator::RunOutput, key: &str) -> u64 {
+    out.log
+        .meta
+        .get(key)
+        .unwrap_or_else(|| panic!("meta '{key}' missing"))
+        .parse::<u64>()
+        .unwrap_or_else(|e| panic!("meta '{key}' not a count: {e}"))
+}
+
+/// Full-run episode count: every trained step consumed its rounds
+/// exactly once — the no-silent-skip check.
+fn expect_episodes(cfg: &ExpConfig, prep: &coordinator::Prepared) -> u64 {
+    cfg.steps
+        * rounds_per_batch(cfg.k_samples) as u64
+        * prep.engine.manifest.config.gen_batch as u64
+}
+
+#[test]
+fn fault_injected_worker_panic_recovers() {
+    // A scripted panic in the only worker: the supervisor must respawn it
+    // on a fresh engine, the replacement resumes the dead worker's exact
+    // prompt-partition position, and the run completes with full episode
+    // accounting and staleness still within the queue bound.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = test_cfg("fault_panic");
+    cfg.mode = Mode::Async;
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 0,
+        round: 2,
+        kind: FaultKind::Panic,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+
+    assert_eq!(meta_u64(&out, "worker_restarts"), 1);
+    assert_eq!(out.log.rows.len(), cfg.steps as usize);
+    assert_eq!(out.episodes, expect_episodes(&cfg, &prep));
+    // the lost in-flight round was regenerated, not skipped: staleness
+    // stays within the proven single-worker bound
+    let bound = staleness_bound_updates(
+        cfg.staleness_bound,
+        cfg.gen_workers,
+        cfg.updates_per_batch,
+    );
+    for row in &out.log.rows {
+        let stale = row.values["staleness"] as u64;
+        assert!(
+            stale <= bound,
+            "staleness {stale} escaped bound {bound} across a respawn"
+        );
+    }
+}
+
+#[test]
+fn fault_injected_engine_error_is_retried() {
+    // A scripted error at the engine boundary must be absorbed by the
+    // retry policy: the worker retries with backoff, never dies, and the
+    // retry is visible in the run meta.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = test_cfg("fault_engine_err");
+    cfg.mode = Mode::Async;
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 0,
+        round: 1,
+        kind: FaultKind::EngineErr,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+
+    assert_eq!(meta_u64(&out, "worker_restarts"), 0, "retry escalated");
+    assert!(meta_u64(&out, "engine_retries") >= 1, "retry not recorded");
+    assert_eq!(out.log.rows.len(), cfg.steps as usize);
+    assert_eq!(out.episodes, expect_episodes(&cfg, &prep));
+}
+
+#[test]
+fn fault_worker_unrecoverable_with_m1_fails_loudly() {
+    // One worker, zero restarts: the pool is unrecoverable, and the run
+    // must surface a descriptive error naming the dead worker — never
+    // hang on an empty queue or return a truncated log as success.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = test_cfg("fault_unrecoverable");
+    cfg.mode = Mode::Async;
+    cfg.max_worker_restarts = 0;
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 0,
+        round: 1,
+        kind: FaultKind::Panic,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let err = coordinator::run(&cfg, &prep, false).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("gen-worker-0"),
+        "error does not name the dead worker: {msg}"
+    );
+}
+
+#[test]
+fn fault_m2_dead_worker_lane_takeover() {
+    // Two workers, zero restarts, one dies: the survivor must inherit the
+    // orphaned lane via cursor re-striding and the run completes with
+    // every round delivered exactly once — a silently halved prompt
+    // stream would show up as an episode shortfall or a partition bail.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = test_cfg("fault_takeover");
+    cfg.mode = Mode::Async;
+    cfg.gen_workers = 2;
+    cfg.max_worker_restarts = 0;
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 1,
+        round: 1,
+        kind: FaultKind::Panic,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+
+    assert_eq!(meta_u64(&out, "worker_restarts"), 0);
+    assert_eq!(out.log.rows.len(), cfg.steps as usize);
+    assert_eq!(out.episodes, expect_episodes(&cfg, &prep));
+    let errs = out.log.meta.get("worker_errors").expect("death unrecorded");
+    assert!(
+        errs.contains("gen-worker-1"),
+        "worker_errors does not name the dead worker: {errs}"
+    );
+}
+
+#[test]
+fn fault_injected_stall_flags_watchdog() {
+    // A scripted stall (sleep past twice the timeout) must be flagged by
+    // the heartbeat watchdog — advisory, not fatal: the run completes and
+    // the stall is counted in the meta the staleness bench reports.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = test_cfg("fault_stall");
+    cfg.mode = Mode::Async;
+    cfg.stall_timeout_secs = 0.2;
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 0,
+        round: 1,
+        kind: FaultKind::Stall,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+
+    assert!(
+        meta_u64(&out, "stalled_workers") >= 1,
+        "watchdog missed a {}s stall at --stall-timeout-secs {}",
+        cfg.stall_timeout_secs * 2.0,
+        cfg.stall_timeout_secs
+    );
+    assert_eq!(meta_u64(&out, "worker_restarts"), 0, "stall was fatal");
+    assert_eq!(out.log.rows.len(), cfg.steps as usize);
+}
+
+#[test]
+fn resume_sync_matches_uninterrupted_bitwise() {
+    // Crash-safe resume in sync mode is bitwise: run A trains 6 steps,
+    // checkpointing at step 4; run B resumes from that snapshot and
+    // trains steps 5-6. Because the snapshot captures the optimizer
+    // triple, the RNG cursor and the prompt cursor exactly, B's final
+    // params must equal A's bit for bit.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = test_cfg("resume_sync");
+    cfg.mode = Mode::Sync;
+    cfg.checkpoint_every = 4;
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let full = coordinator::run(&cfg, &prep, false).unwrap();
+
+    let mut cfg2 = cfg.clone();
+    cfg2.resume = true;
+    let resumed = coordinator::run(&cfg2, &prep, false).unwrap();
+
+    assert_eq!(
+        resumed.log.meta.get("resumed_from_step").map(String::as_str),
+        Some("4"),
+        "resume did not pick up the step-4 snapshot"
+    );
+    assert_eq!(resumed.log.rows.len(), 2, "resume re-trained early steps");
+    assert_eq!(full.final_params.len(), resumed.final_params.len());
+    for (i, (a, b)) in full
+        .final_params
+        .iter()
+        .zip(&resumed.final_params)
+        .enumerate()
+    {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "param {i} diverged after resume: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn resume_async_completes_exactly_once() {
+    // Async resume is exactly-once, not bitwise (worker RNG re-enters
+    // under a fresh epoch): the resumed run must finish the remaining
+    // steps with the prompt partition intact — total episodes equal the
+    // uninterrupted count, and no partition bail fires.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = test_cfg("resume_async");
+    cfg.mode = Mode::Async;
+    cfg.steps = 5;
+    cfg.checkpoint_every = 2;
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let full = coordinator::run(&cfg, &prep, false).unwrap();
+    assert_eq!(full.episodes, expect_episodes(&cfg, &prep));
+
+    let mut cfg2 = cfg.clone();
+    cfg2.resume = true;
+    let resumed = coordinator::run(&cfg2, &prep, false).unwrap();
+
+    assert_eq!(
+        resumed.log.meta.get("resumed_from_step").map(String::as_str),
+        Some("4"),
+        "resume did not pick up the step-4 snapshot"
+    );
+    assert_eq!(resumed.log.rows.len(), 1, "resume re-trained early steps");
+    assert_eq!(
+        resumed.episodes,
+        expect_episodes(&cfg, &prep),
+        "resumed run dropped or duplicated rounds"
+    );
+}

@@ -367,6 +367,219 @@ fn admission_streams_partition_prompt_stream_without_drops_or_dups() {
     });
 }
 
+/// Trainer-side model of the supervisor's lane-ledger protocol
+/// (`pipeline::LaneAccounts` in block mode): lane `l` starts at
+/// `l * stride`, each accepted block covers `stride` prompts and advances
+/// the lane's frontier by `hop = M * stride`. A replayed block (start
+/// below the frontier) is dropped and counted; a block past the frontier
+/// is a lost round — the loud failure the real trainer bails with.
+struct LaneModel {
+    stride: u64,
+    hop: u64,
+    expected: Vec<u64>,
+    seen: std::collections::HashSet<u64>,
+    dups: u64,
+}
+
+impl LaneModel {
+    fn new(m: usize, stride: u64) -> Self {
+        LaneModel {
+            stride,
+            hop: stride * m as u64,
+            expected: (0..m as u64).map(|l| l * stride).collect(),
+            seen: std::collections::HashSet::new(),
+            dups: 0,
+        }
+    }
+
+    /// Ok(true) = fresh block accepted, Ok(false) = duplicate dropped.
+    fn accept(&mut self, lane: usize, start: u64) -> Result<bool, String> {
+        if start < self.expected[lane] {
+            self.dups += 1;
+            return Ok(false);
+        }
+        if start > self.expected[lane] {
+            return Err(format!(
+                "lane {lane} jumped {} -> {start}: a round was lost",
+                self.expected[lane]
+            ));
+        }
+        for i in start..start + self.stride {
+            if !self.seen.insert(i) {
+                return Err(format!("prompt {i} trained twice"));
+            }
+        }
+        self.expected[lane] += self.hop;
+        Ok(true)
+    }
+}
+
+#[test]
+fn worker_respawn_resumes_exact_partition_position() {
+    // Supervised-restart invariant: the ledger cursor is advanced only
+    // AFTER a round is sent (at-least-once); on a death the supervisor
+    // drains the queue into the accounts, then repairs the ledger to the
+    // accounts' frontier before respawning, so the replacement re-enters
+    // the lane at the exact next block. Whatever the kill schedule —
+    // death before the send (regenerate, no drop) or between send and
+    // ledger store (drain + repair, no duplicate) — the accepted blocks
+    // must tile the lane contiguously.
+    prop_check("respawn resumes partition", 200, |rng| {
+        let m = 1 + rng.gen_usize(4);
+        let stride = 1 + rng.gen_usize(4) as u64;
+        let rounds_per_lane = 2 + rng.gen_usize(10) as u64;
+        let mut model = LaneModel::new(m, stride);
+        let mut ledger: Vec<u64> =
+            (0..m as u64).map(|l| l * stride).collect();
+        for lane in 0..m {
+            let mut accepted = 0u64;
+            while accepted < rounds_per_lane {
+                let cursor = ledger[lane];
+                match rng.gen_usize(4) {
+                    // death before the send: nothing delivered, nothing
+                    // advanced — the respawn regenerates from `cursor`
+                    0 => {}
+                    // death between send and ledger store: the queued
+                    // round is drained into the accounts, then the
+                    // supervisor repairs ledger = max(ledger, expected)
+                    1 => {
+                        if model.accept(lane, cursor)? {
+                            accepted += 1;
+                        }
+                        ledger[lane] = ledger[lane].max(model.expected[lane]);
+                    }
+                    // healthy round: send, then advance the ledger; with
+                    // a retry-ambiguity replay on top (same block sent
+                    // twice) the trainer must drop the second copy
+                    _ => {
+                        if model.accept(lane, cursor)? {
+                            accepted += 1;
+                        }
+                        ledger[lane] += model.hop;
+                        if rng.gen_bool(0.2) {
+                            prop_assert!(
+                                !model.accept(lane, cursor)?,
+                                "replayed block at {cursor} was not dropped"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // every lane sits exactly rounds_per_lane blocks past its start,
+        // and the union of accepted prompts has no holes inside any lane
+        for lane in 0..m {
+            let want = lane as u64 * stride + rounds_per_lane * model.hop;
+            prop_assert!(
+                model.expected[lane] == want,
+                "lane {lane} frontier {} != {want}",
+                model.expected[lane]
+            );
+        }
+        prop_assert!(
+            model.seen.len() as u64 == m as u64 * rounds_per_lane * stride,
+            "coverage {} != {}",
+            model.seen.len(),
+            m as u64 * rounds_per_lane * stride
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn lane_takeover_restripes_orphans_without_drops_or_dups() {
+    // Graceful-degradation invariant: when a worker exhausts its restart
+    // budget, its lanes are re-strided onto a survivor, which interleaves
+    // the inherited lane with its own by always generating for the lane
+    // furthest behind (the supervisor's `pick_lane`). However many
+    // workers die and whenever they die, the survivors must keep tiling
+    // every lane's arithmetic partition — no orphaned block is skipped,
+    // none is generated twice.
+    prop_check("lane takeover partition", 200, |rng| {
+        let m = 2 + rng.gen_usize(5);
+        let stride = 1 + rng.gen_usize(4) as u64;
+        let rounds_per_lane = 2 + rng.gen_usize(8) as u64;
+        let total = m as u64 * rounds_per_lane;
+        let mut model = LaneModel::new(m, stride);
+        let mut ledger: Vec<u64> =
+            (0..m as u64).map(|l| l * stride).collect();
+        // owned[w] = lanes worker w currently serves (starts with its own)
+        let mut owned: Vec<Vec<usize>> = (0..m).map(|w| vec![w]).collect();
+        let mut alive = vec![true; m];
+        let mut accepted = 0u64;
+        while accepted < total {
+            let live: Vec<usize> =
+                (0..m).filter(|&w| alive[w]).collect();
+            // maybe kill one (always keep a survivor); with probability
+            // 1/2 the victim dies in the send/store window, leaving a
+            // drained round for the supervisor to account before repair
+            if live.len() > 1 && rng.gen_bool(0.2) {
+                let d = live[rng.gen_usize(live.len())];
+                if rng.gen_bool(0.5) {
+                    if let Some(&l) = owned[d].first() {
+                        if model.expected[l]
+                            < l as u64 * stride + rounds_per_lane * model.hop
+                            && model.accept(l, ledger[l])?
+                        {
+                            accepted += 1;
+                        }
+                        ledger[l] = ledger[l].max(model.expected[l]);
+                    }
+                }
+                alive[d] = false;
+                let orphans = std::mem::take(&mut owned[d]);
+                let heir = *live.iter().find(|&&w| w != d).unwrap();
+                // ledger repair precedes the hand-off, as in handle_death
+                for &l in &orphans {
+                    ledger[l] = ledger[l].max(model.expected[l]);
+                }
+                owned[heir].extend(orphans);
+                continue;
+            }
+            // a random live worker serves its furthest-behind lane
+            let w = live[rng.gen_usize(live.len())];
+            let lane = owned[w]
+                .iter()
+                .copied()
+                .min_by_key(|&l| (ledger[l], l))
+                .unwrap();
+            if model.expected[lane]
+                >= lane as u64 * stride + rounds_per_lane * model.hop
+            {
+                // this lane met its quota; a real worker would keep
+                // striding, the model just stops feeding it
+                if owned.iter().flatten().all(|&l| {
+                    model.expected[l]
+                        >= l as u64 * stride + rounds_per_lane * model.hop
+                }) {
+                    break;
+                }
+                continue;
+            }
+            if model.accept(lane, ledger[lane])? {
+                accepted += 1;
+            }
+            ledger[lane] += model.hop;
+        }
+        prop_assert!(
+            model.seen.len() as u64 == total * stride,
+            "coverage {} != {} (dups dropped: {})",
+            model.seen.len(),
+            total * stride,
+            model.dups
+        );
+        for lane in 0..m {
+            let want = lane as u64 * stride + rounds_per_lane * model.hop;
+            prop_assert!(
+                model.expected[lane] == want,
+                "lane {lane} frontier {} != {want}",
+                model.expected[lane]
+            );
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn staleness_bound_is_monotone_in_queue_workers_and_epochs() {
     // The bound (K + M + 1)·T − 1 (proven for M=1, fair-scheduling for
