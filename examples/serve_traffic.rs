@@ -1,0 +1,106 @@
+//! Serve-while-training on a replayed traffic trace: live sessions as
+//! the prompt stream (ROADMAP "Serving front-end").
+//!
+//! A deterministic load generator replays multi-turn sessions onto the
+//! continuous slot pool; completed turns stream back into the trainer
+//! as Online DPO rounds, and every decode sweep reads the latest
+//! published params. The run's length comes from the trace, not
+//! `--steps`. Afterwards the example prints the serving telemetry
+//! (TTFT / time-to-retire percentiles, served-params staleness, slot
+//! occupancy vs the fixed-round counterfactual) and the usual
+//! win-rate/KL eval against the SFT baseline.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example serve_traffic          # tldr_s, 32 sessions
+//! ASYNC_RLHF_SESSIONS=64 ASYNC_RLHF_RATE=2.0 \
+//!     cargo run --release --example serve_traffic
+//! ```
+//!
+//! Geometry note: `sessions * turns * k` must tile into whole
+//! `gen_batch` rounds (`serve::derive_steps` rejects anything else
+//! loudly) — with tldr_s's gen_batch 32 and k 2, 32 sessions x 2 turns
+//! is exactly 4 optimizer steps.
+
+use async_rlhf::config::{Algo, ExpConfig, GenEngine, Mode};
+use async_rlhf::coordinator;
+use async_rlhf::eval::evaluate;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let model =
+        std::env::var("ASYNC_RLHF_MODEL").unwrap_or_else(|_| "tldr_s".into());
+    let sessions: u64 = env_or("ASYNC_RLHF_SESSIONS", 32);
+    let turns: u64 = env_or("ASYNC_RLHF_TURNS", 2);
+    let rate: f64 = env_or("ASYNC_RLHF_RATE", 1.0);
+
+    let cfg = ExpConfig {
+        model: model.clone(),
+        algo: Algo::Dpo,
+        mode: Mode::Serve,
+        gen_engine: GenEngine::Continuous,
+        serve_sessions: sessions,
+        serve_turns: turns,
+        arrival_rate: rate,
+        eval_prompts: 128,
+        run_dir: "runs/serve_traffic_example".into(),
+        ..ExpConfig::default()
+    };
+
+    println!(
+        "== serve-while-training ({model}, {sessions} sessions x {turns} \
+         turns, rate {rate}/sweep) =="
+    );
+    let prep = coordinator::prepare(&cfg, true)?;
+    let out = coordinator::run(&cfg, &prep, true)?;
+
+    println!(
+        "\nserved {} sessions x {} turns over {} worker(s):",
+        sessions, turns, cfg.gen_workers
+    );
+    for key in [
+        "serve_requests",
+        "serve_tokens",
+        "serve_ttft_p50",
+        "serve_ttft_p99",
+        "serve_retire_p50",
+        "serve_retire_p99",
+        "serve_lag_p50",
+        "serve_lag_p99",
+        "serve_lag_max",
+        "serve_occupancy",
+        "serve_occupancy_round_tier",
+    ] {
+        if let Some(v) = out.log.meta.get(key) {
+            println!("  {key:<26} {v}");
+        }
+    }
+
+    let ev = evaluate(
+        &prep.engine,
+        &out.final_params,
+        &prep.sft_params,
+        &prep.taskgen,
+        cfg.eval_prompts,
+        cfg.temperature,
+        cfg.seed,
+    )?;
+    println!(
+        "\ntrained on the traffic: win-rate {:.1}%  kl-ppl {:.4}  \
+         wall {:.1}s for {} episodes",
+        ev.win_rate * 100.0,
+        ev.kl_ppl,
+        out.timeline.wall(),
+        out.episodes
+    );
+    let dir = cfg.run_dir.join(cfg.label());
+    out.log.save(&dir, "serve")?;
+    println!("curves: {}/serve.csv", dir.display());
+    Ok(())
+}

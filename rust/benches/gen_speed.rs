@@ -30,7 +30,7 @@ use async_rlhf::gen::{
     naive::NaiveEngine, Generator, SampleOpts,
 };
 use async_rlhf::runtime::{Engine, ParamView};
-use async_rlhf::util::bench::{artifact_dir_or_skip, bench};
+use async_rlhf::util::bench::{artifact_dir_or_skip, bench, pct};
 use async_rlhf::util::json::Json;
 use async_rlhf::util::rng::Pcg32;
 
@@ -72,15 +72,6 @@ impl Acc {
     fn calls_per_sweep(&self) -> f64 {
         self.calls as f64 / self.sweeps.max(1) as f64
     }
-}
-
-fn pct(samples: &mut [u64], q: f64) -> f64 {
-    if samples.is_empty() {
-        return 0.0;
-    }
-    samples.sort_unstable();
-    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
-    samples[idx] as f64
 }
 
 /// One continuous-pool run: admit a sequential prompt stream into the

@@ -1,0 +1,314 @@
+//! Bench: serve-while-training — the session front-end over the
+//! continuous slot pool.
+//!
+//! Two tiers per scale, both driving the same deterministic
+//! traffic-replay trace through [`ServeMux`] on the device-KV backend:
+//!
+//! - **replay** (training off): fixed params at version 0 — the pure
+//!   serving ceiling. Reports request throughput, tokens/sec, slot
+//!   occupancy and p50/p99 TTFT / time-to-retire (sweep units).
+//! - **trained** (training clock on): a synthetic publish clock advances
+//!   the served params version every `PUBLISH_EVERY` sweeps, exactly the
+//!   cadence a concurrent trainer's `ParamSlot` publishes at. On top of
+//!   the replay columns this tier reports the served-params staleness
+//!   distribution: per-completion lag = publish version at retirement −
+//!   oldest version any of its tokens sampled under (p50/p99/max).
+//!
+//! The summary also prices the fixed-round counterfactual: serving the
+//! same turns in fixed gen_batch rounds would hold every slot for the
+//! full `resp_len` sweeps per round — continuous serving occupancy must
+//! match or beat that tier. Results are dumped to `BENCH_serving.json`
+//! (override with `ASYNC_RLHF_BENCH_OUT`).
+//! `cargo bench --bench serving`.
+
+use std::collections::HashSet;
+
+use async_rlhf::data::{Task, TaskGen};
+use async_rlhf::gen::continuous::{ContinuousEngine, DeviceBackend, PoolCfg};
+use async_rlhf::gen::SampleOpts;
+use async_rlhf::runtime::{Engine, ParamView};
+use async_rlhf::serve::frontend::{run_replay, ServeMux};
+use async_rlhf::serve::session::SessionBoard;
+use async_rlhf::serve::traffic::{TrafficCfg, TrafficGen};
+use async_rlhf::util::bench::{artifact_dir_or_skip, bench, pct};
+use async_rlhf::util::json::Json;
+use async_rlhf::util::rng::Pcg32;
+
+const SESSIONS: u64 = 8;
+const TURNS: u64 = 2;
+const ARRIVAL_RATE: f64 = 0.5;
+const K: usize = 2;
+/// Trained tier: sweeps between synthetic trainer publishes.
+const PUBLISH_EVERY: u64 = 8;
+/// Loud-failure bound on a single trace (see `run_replay`).
+const MAX_SWEEPS: u64 = 200_000;
+
+/// Accumulators across the timed iterations of one tier.
+#[derive(Default)]
+struct Acc {
+    requests: u64,
+    tokens: u64,
+    slot_steps: u64,
+    ttft: Vec<u64>,
+    retire: Vec<u64>,
+    /// Served-params staleness samples (trained tier only).
+    lag: Vec<u64>,
+}
+
+struct TierResult {
+    tier: &'static str,
+    mean_secs: f64,
+    req_per_sec: f64,
+    tok_per_sec: f64,
+    occupancy: f64,
+    p50_ttft: f64,
+    p99_ttft: f64,
+    p50_retire: f64,
+    p99_retire: f64,
+    p50_lag: f64,
+    p99_lag: f64,
+    max_lag: f64,
+}
+
+fn traffic(seed: u64) -> TrafficGen {
+    TrafficGen::new(TrafficCfg {
+        sessions: SESSIONS,
+        turns: TURNS,
+        arrival_rate: ARRIVAL_RATE,
+        seed,
+    })
+}
+
+/// One trained-tier trace: drive the mux to completion while the publish
+/// clock ticks, folding latency + staleness samples into `acc`.
+fn run_trained(
+    engine: &Engine,
+    params: &[f32],
+    taskgen: &TaskGen,
+    pool: PoolCfg,
+    opts: SampleOpts,
+    seed: u64,
+    acc: &mut Acc,
+) {
+    let slots = pool.slots as u64;
+    let mut backend = DeviceBackend::new(engine).expect("device backend");
+    let tr = traffic(seed);
+    let board = SessionBoard::new(&tr, K, 0, 1, &HashSet::new())
+        .expect("session board");
+    let mut mux = ServeMux::new(pool, board);
+    let mut rng = Pcg32::new(seed, 0x5e7e);
+    while !mux.is_done() {
+        assert!(
+            mux.sweep() < MAX_SWEEPS,
+            "trained tier stalled: sessions {:?} incomplete",
+            mux.board().incomplete()
+        );
+        let version = mux.sweep() / PUBLISH_EVERY;
+        let pv = ParamView::cached("bench_serve", version, params);
+        let events = mux
+            .step(&mut backend, taskgen, pv, version, opts, &mut rng)
+            .expect("mux sweep");
+        for (c, ev) in events {
+            acc.ttft.push(ev.ttft);
+            acc.retire.push(ev.retire);
+            acc.lag.push(version.saturating_sub(c.version_min));
+            if ev.turn_done {
+                acc.requests += 1;
+            }
+        }
+    }
+    let st = mux.stats();
+    acc.tokens += st.tokens;
+    acc.slot_steps += slots * st.sweeps;
+}
+
+fn tier_result(tier: &'static str, mean_secs: f64, iters: usize, acc: &mut Acc) -> TierResult {
+    let span = (mean_secs * iters as f64).max(1e-12);
+    TierResult {
+        tier,
+        mean_secs,
+        req_per_sec: acc.requests as f64 / span,
+        tok_per_sec: acc.tokens as f64 / span,
+        occupancy: acc.tokens as f64 / acc.slot_steps.max(1) as f64,
+        p50_ttft: pct(&mut acc.ttft, 0.50),
+        p99_ttft: pct(&mut acc.ttft, 0.99),
+        p50_retire: pct(&mut acc.retire, 0.50),
+        p99_retire: pct(&mut acc.retire, 0.99),
+        p50_lag: pct(&mut acc.lag, 0.50),
+        p99_lag: pct(&mut acc.lag, 0.99),
+        max_lag: acc.lag.iter().copied().max().unwrap_or(0) as f64,
+    }
+}
+
+fn main() {
+    println!("== serving: session front-end over the continuous slot pool ==");
+    let mut models = Vec::new();
+    for model in ["tldr_s", "tldr_m", "tldr_l"] {
+        let Some(dir) = artifact_dir_or_skip(model) else {
+            continue;
+        };
+        let engine = Engine::load(&dir).expect("load engine");
+        if !ContinuousEngine::supported(&engine) {
+            println!(
+                "SKIP {model}: bundle lacks prefill_dev/decode_dev \
+                 (rebuild artifacts)"
+            );
+            continue;
+        }
+        let cfg = engine.manifest.config.clone();
+        let params = engine.init_policy().expect("init params");
+        let taskgen = TaskGen::new(
+            Task::from_name(&cfg.task).unwrap(),
+            cfg.prompt_len,
+            cfg.resp_len,
+            42,
+        );
+        let pool = PoolCfg {
+            slots: cfg.gen_batch,
+            prompt_len: cfg.prompt_len,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            max_cohorts: 4,
+            admit_min: 1,
+        };
+        let opts = SampleOpts { temperature: 0.7, greedy: false };
+        let pv = ParamView::cached("bench_serve", 0, &params);
+
+        // warm the executables + settle the untuple capability outside
+        // the measurement
+        let mut backend = DeviceBackend::new(&engine).expect("device backend");
+        run_replay(
+            &mut backend, &taskgen, &traffic(0), pool, K, opts, pv, 0,
+            MAX_SWEEPS,
+        )
+        .expect("warm replay");
+        drop(backend);
+        if engine.client_untuples() != Some(true) {
+            println!("SKIP {model}: PJRT client returns root tuples");
+            continue;
+        }
+
+        let mut results: Vec<TierResult> = Vec::new();
+
+        // --- replay tier: training off, fixed params ---
+        let mut acc = Acc::default();
+        let mut seed = 0u64;
+        let r = bench(&format!("{model}/replay"), 0, 5, || {
+            seed += 1;
+            let mut backend =
+                DeviceBackend::new(&engine).expect("device backend");
+            let rep = run_replay(
+                &mut backend, &taskgen, &traffic(seed), pool, K, opts, pv,
+                seed, MAX_SWEEPS,
+            )
+            .expect("replay drains");
+            acc.requests += rep.requests;
+            acc.tokens += rep.tokens;
+            acc.slot_steps += pool.slots as u64 * rep.stats.sweeps;
+            acc.ttft.extend(rep.ttft);
+            acc.retire.extend(rep.retire);
+        });
+        results.push(tier_result("replay", r.mean() as f64, r.iters, &mut acc));
+
+        // --- trained tier: publish clock advances the served version ---
+        let mut acc = Acc::default();
+        let mut seed = 100u64;
+        let r = bench(&format!("{model}/trained"), 0, 5, || {
+            seed += 1;
+            run_trained(&engine, &params, &taskgen, pool, opts, seed, &mut acc);
+        });
+        let trained_toks = acc.tokens;
+        let trained_reqs = acc.requests;
+        results.push(tier_result("trained", r.mean() as f64, r.iters, &mut acc));
+
+        println!("\n{model} ({} params):", engine.manifest.param_count);
+        println!(
+            "  {:<8} {:>9}  {:>7}  {:>8}  {:>6}  {:>10}  {:>12}  {:>14}",
+            "tier", "mean_s", "req/s", "tok/s", "occup", "ttft p50/99",
+            "retire p50/99", "lag p50/99/max"
+        );
+        for t in &results {
+            println!(
+                "  {:<8} {:>9.4}  {:>7.1}  {:>8.0}  {:>6.3}  {:>4.0} /{:>4.0}  \
+                 {:>5.0} /{:>5.0}  {:>4.0} /{:>4.0} /{:>4.0}",
+                t.tier,
+                t.mean_secs,
+                t.req_per_sec,
+                t.tok_per_sec,
+                t.occupancy,
+                t.p50_ttft,
+                t.p99_ttft,
+                t.p50_retire,
+                t.p99_retire,
+                t.p50_lag,
+                t.p99_lag,
+                t.max_lag,
+            );
+        }
+
+        // fixed-round counterfactual: the same turns served in fixed
+        // gen_batch rounds hold every slot resp_len sweeps per round
+        let candidates = trained_reqs * K as u64;
+        let rounds = candidates.div_ceil(cfg.gen_batch as u64);
+        let fixed_slot_steps =
+            rounds * cfg.resp_len as u64 * cfg.gen_batch as u64;
+        let occ_fixed = trained_toks as f64 / fixed_slot_steps.max(1) as f64;
+        let occ_cont = results[1].occupancy;
+        println!(
+            "  serving occupancy {:.3} vs fixed-round tier {:.3} [{}]",
+            occ_cont,
+            occ_fixed,
+            if occ_cont >= occ_fixed { "OK" } else { "REGRESSION" }
+        );
+        models.push((model, engine.manifest.param_count, results, occ_fixed));
+    }
+
+    // --- machine-readable dump for the perf trajectory ---
+    let report = Json::obj(vec![(
+        "models",
+        Json::Obj(
+            models
+                .iter()
+                .map(|(model, params, results, occ_fixed)| {
+                    (
+                        model.to_string(),
+                        Json::obj(vec![
+                            ("param_count", Json::num(*params as f64)),
+                            ("occupancy_fixed_round", Json::num(*occ_fixed)),
+                            (
+                                "tiers",
+                                Json::Obj(
+                                    results
+                                        .iter()
+                                        .map(|t| {
+                                            (
+                                                t.tier.to_string(),
+                                                Json::obj(vec![
+                                                    ("mean_secs", Json::num(t.mean_secs)),
+                                                    ("req_per_sec", Json::num(t.req_per_sec)),
+                                                    ("tok_per_sec", Json::num(t.tok_per_sec)),
+                                                    ("occupancy", Json::num(t.occupancy)),
+                                                    ("p50_ttft", Json::num(t.p50_ttft)),
+                                                    ("p99_ttft", Json::num(t.p99_ttft)),
+                                                    ("p50_retire", Json::num(t.p50_retire)),
+                                                    ("p99_retire", Json::num(t.p99_retire)),
+                                                    ("p50_lag", Json::num(t.p50_lag)),
+                                                    ("p99_lag", Json::num(t.p99_lag)),
+                                                    ("max_lag", Json::num(t.max_lag)),
+                                                ]),
+                                            )
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        ),
+    )]);
+    let out_path = std::env::var("ASYNC_RLHF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_serving.json".into());
+    std::fs::write(&out_path, report.to_string()).expect("write bench json");
+    println!("wrote {out_path}");
+}

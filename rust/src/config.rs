@@ -254,6 +254,14 @@ pub enum Mode {
     /// `staleness_bound` (K). The defaults M=1, K=0 are the paper's
     /// Cleanba-style one-step off-policy coordinator.
     Async,
+    /// Serve-while-training: the async pipeline with live session
+    /// traffic as the prompt stream. Each worker multiplexes a
+    /// deterministic traffic replay (`serve_sessions` / `serve_turns` /
+    /// `arrival_rate`) onto its continuous slot pool and the completed
+    /// turns assemble into training rounds. Requires
+    /// `--gen-engine continuous`; the run's length is the trace's, not
+    /// `--steps`.
+    Serve,
 }
 
 impl Mode {
@@ -261,7 +269,8 @@ impl Mode {
         Ok(match s {
             "sync" => Mode::Sync,
             "async" => Mode::Async,
-            _ => bail!("unknown mode '{s}' (sync|async)"),
+            "serve" => Mode::Serve,
+            _ => bail!("unknown mode '{s}' (sync|async|serve)"),
         })
     }
 
@@ -269,6 +278,7 @@ impl Mode {
         match self {
             Mode::Sync => "sync",
             Mode::Async => "async",
+            Mode::Serve => "serve",
         }
     }
 }
@@ -337,6 +347,16 @@ pub struct ExpConfig {
     /// Deterministic fault injection for the supervision tests
     /// (`--inject-fault worker=W,round=R,kind=panic|stall|engine_err`).
     pub inject_fault: Option<FaultPlan>,
+    /// Serve mode (`--serve-sessions`): sessions in the traffic trace.
+    /// Must divide evenly over `gen_workers` — sessions partition
+    /// statically across serving seats and never migrate.
+    pub serve_sessions: u64,
+    /// Serve mode (`--serve-turns`): turns per session. Every session
+    /// runs the same count so the round geometry stays exact.
+    pub serve_turns: u64,
+    /// Serve mode (`--arrival-rate`): mean session arrivals per pool
+    /// sweep; also the mean think-rate between a session's turns.
+    pub arrival_rate: f64,
     pub lr: f32,
     pub temperature: f32,
     /// Reward for completions without EOS (paper Table 4: -1.0).
@@ -379,6 +399,9 @@ impl Default for ExpConfig {
             checkpoint_every: 0,
             resume: false,
             inject_fault: None,
+            serve_sessions: 8,
+            serve_turns: 2,
+            arrival_rate: 0.5,
             lr: 3e-5,
             temperature: 0.7,
             eos_penalty: -1.0,
@@ -396,7 +419,14 @@ impl Default for ExpConfig {
 impl ExpConfig {
     /// Parse CLI options on top of the defaults.
     pub fn from_args(args: &Args) -> Result<ExpConfig> {
-        let mut c = ExpConfig::default();
+        ExpConfig::from_args_with(args, ExpConfig::default())
+    }
+
+    /// Parse CLI options on top of `base` — subcommands that preset a
+    /// mode (e.g. `serve`) start from their own defaults and still honor
+    /// every explicit flag.
+    pub fn from_args_with(args: &Args, base: ExpConfig) -> Result<ExpConfig> {
+        let mut c = base;
         if let Some(m) = args.positional.first() {
             c.model = m.clone();
         }
@@ -435,6 +465,9 @@ impl ExpConfig {
         if let Some(f) = args.get("inject-fault") {
             c.inject_fault = Some(FaultPlan::parse(f)?);
         }
+        c.serve_sessions = args.get_parse("serve-sessions", c.serve_sessions)?;
+        c.serve_turns = args.get_parse("serve-turns", c.serve_turns)?;
+        c.arrival_rate = args.get_parse("arrival-rate", c.arrival_rate)?;
         c.lr = args.get_parse("lr", c.lr)?;
         c.temperature = args.get_parse("temperature", c.temperature)?;
         c.seed = args.get_parse("seed", c.seed)?;
@@ -455,10 +488,10 @@ impl ExpConfig {
         if self.k_samples != 2 && self.k_samples != 4 {
             bail!("k must be 2 or 4 (gen_batch geometry)");
         }
-        if self.mode == Mode::Async && self.n_minibatches != 1 {
+        if self.mode != Mode::Sync && self.n_minibatches != 1 {
             bail!(
-                "async mode streams rounds (N=1); use sync mode to sweep \
-                 the N-minibatch ladder, --staleness-bound to sweep K"
+                "async/serve modes stream rounds (N=1); use sync mode to \
+                 sweep the N-minibatch ladder, --staleness-bound to sweep K"
             );
         }
         if self.gen_workers == 0 {
@@ -522,6 +555,45 @@ impl ExpConfig {
                 );
             }
         }
+        if self.serve_sessions == 0 || self.serve_turns == 0 {
+            bail!("--serve-sessions and --serve-turns must be >= 1");
+        }
+        if !(self.arrival_rate > 0.0) {
+            bail!("--arrival-rate must be > 0");
+        }
+        let d = ExpConfig::default();
+        if self.mode != Mode::Serve
+            && (self.serve_sessions != d.serve_sessions
+                || self.serve_turns != d.serve_turns
+                || self.arrival_rate != d.arrival_rate)
+        {
+            bail!(
+                "--serve-sessions/--serve-turns/--arrival-rate shape the \
+                 serving traffic trace (use --mode serve)"
+            );
+        }
+        if self.mode == Mode::Serve {
+            if self.gen_engine != GenEngine::Continuous {
+                bail!(
+                    "serve mode multiplexes sessions onto the continuous \
+                     slot pool (use --gen-engine continuous)"
+                );
+            }
+            if self.checkpoint_every != 0 || self.resume {
+                bail!(
+                    "serve mode is not checkpointable: sessions in flight \
+                     cannot be snapshotted (drop --checkpoint-every/--resume)"
+                );
+            }
+            if self.serve_sessions % self.gen_workers as u64 != 0 {
+                bail!(
+                    "--serve-sessions {} must divide evenly over {} workers \
+                     (sessions partition statically; they never migrate)",
+                    self.serve_sessions,
+                    self.gen_workers
+                );
+            }
+        }
         Ok(())
     }
 
@@ -553,8 +625,19 @@ impl ExpConfig {
         } else {
             format!("_c{}a{}", self.max_cohorts, self.admit_min)
         };
+        let d = ExpConfig::default();
+        let serve = if (self.serve_sessions, self.serve_turns, self.arrival_rate)
+            == (d.serve_sessions, d.serve_turns, d.arrival_rate)
+        {
+            String::new()
+        } else {
+            format!(
+                "_v{}x{}r{}",
+                self.serve_sessions, self.serve_turns, self.arrival_rate
+            )
+        };
         format!(
-            "{}_{}_{}{pool}{gen}{admit}_n{}_t{}_k{}_s{}",
+            "{}_{}_{}{pool}{gen}{admit}{serve}_n{}_t{}_k{}_s{}",
             self.model,
             self.algo,
             self.mode.name(),
@@ -759,6 +842,70 @@ mod tests {
         // lane ownership is a u64 bitmask
         assert!(parse(&["t", "--mode", "async", "--gen-workers", "65"])
             .is_err());
+    }
+
+    #[test]
+    fn serving_knobs_parse_validate_and_label() {
+        // serve mode needs the continuous engine
+        assert!(parse(&["t", "--mode", "serve"]).is_err());
+        let c = parse(&["t", "--mode", "serve", "--gen-engine", "continuous"])
+            .unwrap();
+        assert_eq!(c.mode, Mode::Serve);
+        assert_eq!(
+            (c.serve_sessions, c.serve_turns, c.arrival_rate),
+            (8, 2, 0.5)
+        );
+        assert!(c.label().contains("_serve"), "label: {}", c.label());
+        // defaults stay out of the label; overrides name the run dir
+        assert!(!c.label().contains("_v8x2"), "label: {}", c.label());
+        let c = parse(&[
+            "t", "--mode", "serve", "--gen-engine", "continuous",
+            "--serve-sessions", "16", "--serve-turns", "3",
+            "--arrival-rate", "0.25",
+        ])
+        .unwrap();
+        assert_eq!(
+            (c.serve_sessions, c.serve_turns, c.arrival_rate),
+            (16, 3, 0.25)
+        );
+        assert!(c.label().contains("_v16x3r0.25"), "label: {}", c.label());
+        // degenerate traffic shapes fail loudly (the --admit-min pattern)
+        for bad in [
+            vec!["t", "--mode", "serve", "--gen-engine", "continuous",
+                 "--serve-sessions", "0"],
+            vec!["t", "--mode", "serve", "--gen-engine", "continuous",
+                 "--serve-turns", "0"],
+            vec!["t", "--mode", "serve", "--gen-engine", "continuous",
+                 "--arrival-rate", "0"],
+        ] {
+            assert!(parse(&bad).is_err(), "accepted {bad:?}");
+        }
+        // the knobs are meaningless outside serve mode
+        assert!(parse(&["t", "--serve-sessions", "4"]).is_err());
+        assert!(parse(&["t", "--mode", "async", "--serve-turns", "3"])
+            .is_err());
+        // sessions must tile the worker partition
+        assert!(parse(&[
+            "t", "--mode", "serve", "--gen-engine", "continuous",
+            "--gen-workers", "3",
+        ])
+        .is_err());
+        assert!(parse(&[
+            "t", "--mode", "serve", "--gen-engine", "continuous",
+            "--gen-workers", "2",
+        ])
+        .is_ok());
+        // in-flight sessions cannot be snapshotted
+        assert!(parse(&[
+            "t", "--mode", "serve", "--gen-engine", "continuous",
+            "--checkpoint-every", "4",
+        ])
+        .is_err());
+        // streaming modes are N=1 (same contract as async)
+        assert!(parse(&[
+            "t", "--mode", "serve", "--gen-engine", "continuous", "--n", "2",
+        ])
+        .is_err());
     }
 
     #[test]

@@ -113,5 +113,6 @@ pub fn run(cfg: &ExpConfig, prep: &Prepared, verbose: bool) -> Result<RunOutput>
     match cfg.mode {
         Mode::Sync => sync::run(cfg, prep, verbose),
         Mode::Async => asynchronous::run(cfg, prep, verbose),
+        Mode::Serve => crate::serve::run(cfg, prep, verbose),
     }
 }

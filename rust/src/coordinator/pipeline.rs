@@ -78,11 +78,16 @@ use super::{Prepared, RunOutput};
 use crate::config::{ExpConfig, FaultKind, FaultPlan, GenEngine};
 use crate::data::{Task, TaskGen};
 use crate::gen::continuous::{
-    AdmitSeq, Completed, DeviceBackend, Pool, PoolCfg, RoundAssembler,
+    AdmitSeq, Completed, DeviceBackend, Pool, PoolCfg, PoolStats,
+    RoundAssembler,
 };
 use crate::gen::{GenBatch, Generator, SampleOpts};
 use crate::metrics::{Phase, RunLog, Timeline};
 use crate::runtime::{Engine, ParamView, RetryPolicy, TrainState, RETRY_STREAM};
+use crate::serve::frontend::ServeMux;
+use crate::serve::session::SessionBoard;
+use crate::serve::traffic::{turn_uid, uid_session_turn, TrafficCfg, TrafficGen};
+use crate::util::bench::pct;
 use crate::util::rng::Pcg32;
 
 /// Prompts consumed by one generation round: the cursor stride. The
@@ -546,7 +551,12 @@ impl RoundSource for InlineSource<'_> {
                 self.buffered.push_back(round);
             }
         }
-        Ok(self.buffered.pop_front().expect("refill yields >= 1 round"))
+        self.buffered.pop_front().ok_or_else(|| {
+            anyhow!(
+                "inline refill produced no rounds (rounds_per_refill = {})",
+                self.rounds_per_refill
+            )
+        })
     }
 
     fn episodes(&self) -> u64 {
@@ -627,10 +637,15 @@ fn lanes_of(mask: u64) -> impl Iterator<Item = usize> {
 /// The lane a worker should generate for next: the one whose cursor is
 /// furthest behind (ties to the lowest lane), so an heir that inherited
 /// orphaned lanes round-robins them instead of starving one.
-fn pick_lane(mask: u64, ledger: &[AtomicU64]) -> usize {
+fn pick_lane(mask: u64, ledger: &[AtomicU64]) -> Result<usize> {
     lanes_of(mask)
         .min_by_key(|&l| (ledger[l].load(Ordering::SeqCst), l))
-        .expect("worker scheduled with an empty lane mask")
+        .ok_or_else(|| {
+            anyhow!(
+                "worker scheduled with an empty lane mask ({mask:#b}) — \
+                 supervision should have retired this seat"
+            )
+        })
 }
 
 /// Successor of `idx` in one lane's admission sequence (blocks of
@@ -1014,23 +1029,29 @@ impl WorkerPool {
     }
 
     /// The shared handles a seat thread runs against.
-    fn shared(&self) -> SeatShared {
-        SeatShared {
-            tx: self.tx.clone().expect("pool sender alive while spawning"),
+    fn shared(&self) -> Result<SeatShared> {
+        let tx = self.tx.clone().ok_or_else(|| {
+            anyhow!(
+                "worker pool queue already torn down while (re)spawning a \
+                 seat — finish() ran before supervision stopped"
+            )
+        })?;
+        Ok(SeatShared {
+            tx,
             pslot: self.slot.clone(),
             stop: self.stop.clone(),
             ledger: self.ledger.clone(),
             ctl: self.ctl.clone(),
             fault_fired: self.fault_fired.clone(),
             retry_count: self.retry_count.clone(),
-        }
+        })
     }
 
     /// (Re)spawn seat `w` at its current incarnation. The body runs under
     /// `catch_unwind`; every exit path reports a [`WorkerExit`].
     fn spawn_seat(&mut self, w: usize) -> Result<()> {
         let ctx = self.ctx.clone();
-        let sh = self.shared();
+        let sh = self.shared()?;
         let exit_tx = self.exit_tx.clone();
         let incarnation = self.incarnations[w];
         // continuous lanes resume from the trainer-accepted frontier,
@@ -1393,7 +1414,7 @@ fn seat_rounds(
             version = v;
             params = p;
         }
-        let lane = pick_lane(mask, &sh.ledger);
+        let lane = pick_lane(mask, &sh.ledger)?;
         let cursor = sh.ledger[lane].load(Ordering::SeqCst);
         maybe_inject(ctx, sh, w, rounds_done, &mut inject_err);
         let round = policy.run(
@@ -1609,18 +1630,748 @@ fn round_from_groups(
     }
 }
 
+// ---------------------------------------------------------------------------
+// SessionSource: served traffic as the prompt stream (serve-while-training)
+// ---------------------------------------------------------------------------
+
+/// Serving-side telemetry accumulated across all worker seats: latency
+/// samples per retired candidate, served-params staleness lags, and the
+/// occupancy numerator/denominator. Folded into the run metas at finish.
+#[derive(Default)]
+struct ServeTelemetry {
+    /// Time-to-first-token per candidate, sweep units.
+    ttft: Vec<u64>,
+    /// Time-to-retire per candidate, sweep units.
+    retire: Vec<u64>,
+    /// Served-params staleness per candidate: publish version at
+    /// retirement minus the oldest version any of its tokens sampled
+    /// under — the "how stale was the reply" distribution.
+    lag: Vec<u64>,
+    /// Turns completed (user-visible requests).
+    requests: u64,
+    /// Response tokens emitted across all candidates.
+    tokens: u64,
+    /// Occupancy denominator: pool slots × sampling sweeps.
+    slot_sweeps: u64,
+    /// Mux sweeps elapsed (includes idle arrival gaps).
+    mux_sweeps: u64,
+}
+
+/// Seat-side flush of one mux's pool accounting into the shared
+/// telemetry — called on every seat exit path.
+fn flush_serve_stats(
+    telemetry: &Arc<Mutex<ServeTelemetry>>,
+    stats: PoolStats,
+    slots: usize,
+    mux_sweeps: u64,
+) {
+    let mut t = telemetry.lock().unwrap_or_else(PoisonError::into_inner);
+    t.tokens += stats.tokens;
+    t.slot_sweeps += stats.sweeps * slots as u64;
+    t.mux_sweeps += mux_sweeps;
+}
+
+/// The shape of one serve run, shared by the supervisor and its seats.
+#[derive(Clone)]
+struct ServeCtx {
+    base: SpawnCtx,
+    sessions: u64,
+    turns: u64,
+    arrival_rate: f64,
+    /// Worker count — the session partition stride.
+    workers: u64,
+}
+
+/// The shared handles a serving seat runs against: the worker-pool set
+/// plus the telemetry sink and the per-seat "partition fully served"
+/// flags (a serving seat retires itself when its sessions drain, which
+/// the supervisor must distinguish from a mid-run death).
+#[derive(Clone)]
+struct ServeShared {
+    base: SeatShared,
+    telemetry: Arc<Mutex<ServeTelemetry>>,
+    done: Arc<Vec<AtomicBool>>,
+}
+
+/// Exactly-once accounting for served rounds. Where [`LaneAccounts`]
+/// tracks lane cursors, this tracks the set of delivered turn uids — and
+/// enforces the session-order invariant: within a session, turn `t`
+/// cannot deliver before turn `t − 1` (the board gates turn `t` on turn
+/// `t − 1`'s completion, so a violation means a turn was dropped).
+struct SessionAccounts {
+    turns: u64,
+    delivered: HashSet<u64>,
+    duplicates: u64,
+}
+
+impl SessionAccounts {
+    fn new(turns: u64) -> SessionAccounts {
+        SessionAccounts { turns, delivered: HashSet::new(), duplicates: 0 }
+    }
+
+    fn accept(&mut self, msg: &GenMsg) -> Result<Accept> {
+        let Some(uids) = &msg.indices else {
+            bail!("served round carries no session uids — this is a bug");
+        };
+        let fresh =
+            uids.iter().filter(|&&u| !self.delivered.contains(&u)).count();
+        if fresh == 0 {
+            self.duplicates += 1;
+            return Ok(Accept::Duplicate);
+        }
+        if fresh < uids.len() {
+            let sessions: Vec<u64> = uids
+                .iter()
+                .map(|&u| uid_session_turn(u, self.turns).0)
+                .collect();
+            bail!(
+                "served round mixes {fresh} fresh and {} replayed turns \
+                 (sessions {sessions:?}) — the respawn skip set missed a \
+                 delivery",
+                uids.len() - fresh
+            );
+        }
+        for &u in uids {
+            let (session, turn) = uid_session_turn(u, self.turns);
+            // in-message predecessors were inserted just above, so a
+            // round carrying consecutive turns of one session is legal
+            if turn > 0 && !self.delivered.contains(&(u - 1)) {
+                bail!(
+                    "serving session {session}: turn {turn} delivered \
+                     before turn {} — a turn was dropped",
+                    turn - 1
+                );
+            }
+            self.delivered.insert(u);
+        }
+        Ok(Accept::Fresh)
+    }
+}
+
+/// Serve-while-training: M serving seats, each multiplexing its static
+/// partition of the traffic trace (`session % M == w`) onto its own
+/// continuous slot pool, with completed turns assembled into training
+/// rounds — live traffic IS the prompt stream.
+///
+/// Structure mirrors [`WorkerPool`] (supervised seats, bounded round
+/// queue, latest-wins [`ParamSlot`], heartbeat watchdog, scripted fault
+/// injection) with three deltas:
+///
+/// - rounds carry **session turn uids** instead of lane cursors;
+///   [`SessionAccounts`] extends the trainer's dedup/hole checks to them
+///   (a respawned seat rebuilds its schedule from the delivered set, so
+///   every post-respawn round is all-fresh);
+/// - seats **retire themselves** when their partition is fully served —
+///   the run's length is the traffic's, not a step budget;
+/// - sessions never migrate between seats: when a seat exhausts its
+///   restarts the run fails loudly **naming the sessions** that can no
+///   longer complete (silently dropping a turn is the one forbidden
+///   outcome).
+pub struct SessionSource {
+    rx: mpsc::Receiver<GenMsg>,
+    tx: Option<mpsc::SyncSender<GenMsg>>,
+    exit_rx: mpsc::Receiver<WorkerExit>,
+    exit_tx: mpsc::Sender<WorkerExit>,
+    slot: Arc<ParamSlot>,
+    stop: Arc<AtomicBool>,
+    /// Unused by serving seats (sessions, not lanes) but part of the
+    /// shared seat handle; kept empty.
+    ledger: Arc<Vec<AtomicU64>>,
+    ctl: Arc<Vec<SlotCtl>>,
+    fault_fired: Arc<AtomicBool>,
+    retry_count: Arc<AtomicU64>,
+    telemetry: Arc<Mutex<ServeTelemetry>>,
+    done: Arc<Vec<AtomicBool>>,
+    ctx: ServeCtx,
+    seats: Vec<Option<JoinHandle<()>>>,
+    incarnations: Vec<u64>,
+    restarts_used: Vec<usize>,
+    accounts: SessionAccounts,
+    pending: VecDeque<GenMsg>,
+    totals: Vec<(f64, u64)>,
+    worker_errors: Vec<String>,
+    worker_restarts: u64,
+    stalled_now: Vec<bool>,
+    ever_stalled: Vec<bool>,
+    gen_bs: u64,
+    received: u64,
+    /// Round-tier counterfactual occupancy accounting: had each
+    /// delivered round been generated as a fixed round, it would have
+    /// held all B slots for its longest completion's sweeps.
+    fixed_tokens: u64,
+    fixed_slot_sweeps: u64,
+    poll: Duration,
+}
+
+impl SessionSource {
+    pub fn spawn(
+        cfg: &ExpConfig,
+        prep: &Prepared,
+        origin: Instant,
+        resume: Option<&Checkpoint>,
+    ) -> Result<SessionSource> {
+        if resume.is_some() {
+            bail!(
+                "serve mode is not checkpointable (sessions in flight \
+                 cannot be snapshotted); run without --resume"
+            );
+        }
+        if cfg.gen_engine != GenEngine::Continuous {
+            bail!(
+                "serve mode needs the continuous engine (got {:?})",
+                cfg.gen_engine
+            );
+        }
+        let m = cfg.gen_workers.max(1);
+        assert!(m <= 64, "config validation caps gen_workers at 64");
+        if cfg.serve_sessions % m as u64 != 0 {
+            bail!(
+                "--serve-sessions {} must divide evenly over {m} workers \
+                 (sessions partition statically; they never migrate)",
+                cfg.serve_sessions
+            );
+        }
+        let gen_bs = prep.engine.manifest.config.gen_batch as u64;
+        let stride = cursor_stride(gen_bs, cfg.k_samples);
+        let ctx = ServeCtx {
+            base: SpawnCtx {
+                artifact_dir: cfg.artifact_dir(),
+                task: prep.taskgen.task,
+                prompt_len: prep.taskgen.prompt_len,
+                resp_len: prep.taskgen.resp_len,
+                seed: cfg.seed,
+                opts: sample_opts(cfg),
+                k: cfg.k_samples,
+                gen_engine: cfg.gen_engine,
+                max_cohorts: cfg.max_cohorts,
+                admit_min: cfg.admit_min,
+                stride,
+                hop: stride * m as u64,
+                retries: cfg.engine_retries,
+                stall_timeout: cfg.stall_timeout_secs,
+                fault: cfg.inject_fault,
+                origin,
+                max_restarts: cfg.max_worker_restarts,
+                continuous: true,
+            },
+            sessions: cfg.serve_sessions,
+            turns: cfg.serve_turns,
+            arrival_rate: cfg.arrival_rate,
+            workers: m as u64,
+        };
+        let (tx, rx) = mpsc::sync_channel::<GenMsg>(cfg.staleness_bound);
+        let (exit_tx, exit_rx) = mpsc::channel::<WorkerExit>();
+        let now_ms = origin.elapsed().as_millis() as u64;
+        let mut source = SessionSource {
+            rx,
+            tx: Some(tx),
+            exit_rx,
+            exit_tx,
+            slot: Arc::new(ParamSlot::new(0, Arc::from(&prep.sft_params[..]))),
+            stop: Arc::new(AtomicBool::new(false)),
+            ledger: Arc::new(Vec::new()),
+            ctl: Arc::new(
+                (0..m)
+                    .map(|w| SlotCtl {
+                        lanes: AtomicU64::new(1u64 << w),
+                        beat_ms: AtomicU64::new(now_ms),
+                    })
+                    .collect(),
+            ),
+            fault_fired: Arc::new(AtomicBool::new(false)),
+            retry_count: Arc::new(AtomicU64::new(0)),
+            telemetry: Arc::new(Mutex::new(ServeTelemetry::default())),
+            done: Arc::new((0..m).map(|_| AtomicBool::new(false)).collect()),
+            ctx,
+            seats: (0..m).map(|_| None).collect(),
+            incarnations: vec![0; m],
+            restarts_used: vec![0; m],
+            accounts: SessionAccounts::new(cfg.serve_turns),
+            pending: VecDeque::new(),
+            totals: vec![(0.0, 0); m],
+            worker_errors: Vec::new(),
+            worker_restarts: 0,
+            stalled_now: vec![false; m],
+            ever_stalled: vec![false; m],
+            gen_bs,
+            received: 0,
+            fixed_tokens: 0,
+            fixed_slot_sweeps: 0,
+            poll: Duration::from_secs_f64(
+                (cfg.stall_timeout_secs / 4.0).clamp(0.010, 0.050),
+            ),
+        };
+        for w in 0..m {
+            source.spawn_seat(w)?;
+        }
+        Ok(source)
+    }
+
+    fn shared(&self) -> Result<ServeShared> {
+        let tx = self.tx.clone().ok_or_else(|| {
+            anyhow!(
+                "serve queue already torn down while (re)spawning a seat — \
+                 finish() ran before supervision stopped"
+            )
+        })?;
+        Ok(ServeShared {
+            base: SeatShared {
+                tx,
+                pslot: self.slot.clone(),
+                stop: self.stop.clone(),
+                ledger: self.ledger.clone(),
+                ctl: self.ctl.clone(),
+                fault_fired: self.fault_fired.clone(),
+                retry_count: self.retry_count.clone(),
+            },
+            telemetry: self.telemetry.clone(),
+            done: self.done.clone(),
+        })
+    }
+
+    /// (Re)spawn serving seat `w`. A replacement rebuilds its session
+    /// schedule from the trainer-accepted delivered set: already-trained
+    /// turns are skipped, lost in-flight turns regenerate.
+    fn spawn_seat(&mut self, w: usize) -> Result<()> {
+        let ctx = self.ctx.clone();
+        let sh = self.shared()?;
+        let exit_tx = self.exit_tx.clone();
+        let incarnation = self.incarnations[w];
+        let skip = self.accounts.delivered.clone();
+        beat(&self.ctl[w], self.ctx.base.origin);
+        let handle = std::thread::Builder::new()
+            .name(format!("gen-worker-{w}"))
+            .spawn(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    seat_serve(&ctx, &sh, w, incarnation, skip)
+                }))
+                .unwrap_or_else(|p| {
+                    Err(anyhow!("panicked: {}", panic_message(p.as_ref())))
+                });
+                let _ = exit_tx.send(WorkerExit { slot: w, outcome });
+            })
+            .map_err(|e| anyhow!("spawn gen-worker-{w}: {e}"))?;
+        self.seats[w] = Some(handle);
+        Ok(())
+    }
+
+    /// Reap exits and heartbeat the watchdog — the [`WorkerPool`] loop
+    /// with "partition served" as the legitimate clean-exit reason.
+    fn supervise(&mut self) -> Result<()> {
+        while let Ok(exit) = self.exit_rx.try_recv() {
+            let w = exit.slot;
+            if let Some(h) = self.seats[w].take() {
+                let _ = h.join();
+            }
+            match exit.outcome {
+                Ok((secs, rounds)) => {
+                    self.totals[w].0 += secs;
+                    self.totals[w].1 += rounds;
+                    let served = self.done[w].load(Ordering::SeqCst);
+                    if !self.stop.load(Ordering::SeqCst) && !served {
+                        self.handle_death(
+                            w,
+                            anyhow!("exited cleanly mid-serve (queue closed?)"),
+                        )?;
+                    }
+                }
+                Err(e) => self.handle_death(w, e)?,
+            }
+        }
+        let now_ms = self.ctx.base.origin.elapsed().as_millis() as u64;
+        for w in 0..self.seats.len() {
+            if self.seats[w].is_none() || self.done[w].load(Ordering::SeqCst) {
+                self.stalled_now[w] = false;
+                continue;
+            }
+            let age = now_ms
+                .saturating_sub(self.ctl[w].beat_ms.load(Ordering::SeqCst));
+            let stalled = age as f64 / 1000.0 > self.ctx.base.stall_timeout;
+            if stalled && !self.stalled_now[w] {
+                self.stalled_now[w] = true;
+                self.ever_stalled[w] = true;
+                eprintln!(
+                    "[supervisor] gen-worker-{w} silent for {:.1}s \
+                     (--stall-timeout-secs {:.1}) — flagged as stalled",
+                    age as f64 / 1000.0,
+                    self.ctx.base.stall_timeout
+                );
+            } else if !stalled && self.stalled_now[w] {
+                self.stalled_now[w] = false;
+                eprintln!("[supervisor] gen-worker-{w} resumed heartbeats");
+            }
+        }
+        Ok(())
+    }
+
+    /// Absorb queued rounds into the accounts before computing a respawn
+    /// skip set — a round in the queue at seat death is not yet
+    /// delivered, and a replacement spawned without it would regenerate
+    /// it into a duplicate.
+    fn drain_queue(&mut self) -> Result<()> {
+        while let Ok(msg) = self.rx.try_recv() {
+            if let Accept::Fresh = self.accounts.accept(&msg)? {
+                self.pending.push_back(msg);
+            }
+        }
+        Ok(())
+    }
+
+    /// Sessions in `w`'s partition with undelivered turns — the loud
+    /// failure payload.
+    fn incomplete_sessions(&self, w: usize) -> Vec<u64> {
+        (w as u64..self.ctx.sessions)
+            .step_by(self.ctx.workers as usize)
+            .filter(|&s| {
+                (0..self.ctx.turns).any(|t| {
+                    !self
+                        .accounts
+                        .delivered
+                        .contains(&turn_uid(s, t, self.ctx.turns))
+                })
+            })
+            .collect()
+    }
+
+    fn handle_death(&mut self, w: usize, err: anyhow::Error) -> Result<()> {
+        self.drain_queue()?;
+        self.worker_errors.push(format!("gen-worker-{w}: {err:#}"));
+        if self.restarts_used[w] < self.ctx.base.max_restarts {
+            self.restarts_used[w] += 1;
+            self.worker_restarts += 1;
+            self.incarnations[w] += 1;
+            eprintln!(
+                "[supervisor] gen-worker-{w} died: {err:#}; respawning on a \
+                 fresh engine (restart {}/{}) — resuming its sessions past \
+                 the delivered turns",
+                self.restarts_used[w], self.ctx.base.max_restarts
+            );
+            return self.spawn_seat(w);
+        }
+        // sessions never migrate: their turn chains live in the dead
+        // seat's traffic partition, so the run fails naming them rather
+        // than silently dropping their remaining turns
+        bail!(
+            "gen-worker-{w} is unrecoverable after {} restarts: {err:#}; \
+             serving sessions {:?} cannot complete their turns",
+            self.ctx.base.max_restarts,
+            self.incomplete_sessions(w)
+        );
+    }
+
+    fn deliver(
+        &mut self,
+        msg: GenMsg,
+        timeline: &mut Timeline,
+        t_wait: f64,
+    ) -> SourcedRound {
+        let t_got = timeline.origin().elapsed().as_secs_f64();
+        timeline.push_span(Phase::Idle, t_wait, t_got);
+        timeline.push_span(
+            Phase::Generate,
+            msg.round.gen_span.0,
+            msg.round.gen_span.1,
+        );
+        self.received += 1;
+        // round-tier counterfactual: a fixed round holds every slot for
+        // its slowest row's sweeps
+        self.fixed_tokens += msg
+            .round
+            .gen
+            .resp_mask
+            .iter()
+            .map(|row| row.iter().filter(|&&m| m == 1.0).count() as u64)
+            .sum::<u64>();
+        self.fixed_slot_sweeps += msg.round.gen.steps as u64 * self.gen_bs;
+        SourcedRound { round: msg.round, staged: None }
+    }
+}
+
+impl RoundSource for SessionSource {
+    fn label(&self) -> &'static str {
+        "serve"
+    }
+
+    fn next(&mut self, cx: TrainerCx<'_>) -> Result<SourcedRound> {
+        let TrainerCx { timeline, .. } = cx;
+        let t_wait = timeline.origin().elapsed().as_secs_f64();
+        loop {
+            if let Some(msg) = self.pending.pop_front() {
+                return Ok(self.deliver(msg, timeline, t_wait));
+            }
+            self.supervise()?;
+            match self.rx.recv_timeout(self.poll) {
+                Ok(msg) => match self.accounts.accept(&msg)? {
+                    Accept::Fresh => {
+                        return Ok(self.deliver(msg, timeline, t_wait))
+                    }
+                    Accept::Duplicate => continue,
+                },
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => bail!(
+                    "served round queue disconnected while the source holds \
+                     a sender — this is a bug"
+                ),
+            }
+        }
+    }
+
+    fn episodes(&self) -> u64 {
+        self.received * self.gen_bs
+    }
+
+    fn publish(&mut self, cx: TrainerCx<'_>) -> Result<()> {
+        let TrainerCx { engine, state, version, timeline } = cx;
+        timeline.record(Phase::Publish, || -> Result<()> {
+            let host = state.params_host(engine)?;
+            self.slot.publish(version, Arc::from(host));
+            Ok(())
+        })
+    }
+
+    fn snapshot(&self) -> Option<SourceState> {
+        // serve runs are bounded by their traffic trace, not resumable
+        // from a mid-trace cursor; config validation rejects
+        // --checkpoint-every in serve mode
+        None
+    }
+
+    fn finish(self: Box<Self>, log: &mut RunLog) -> Result<()> {
+        let mut src = *self;
+        src.stop.store(true, Ordering::SeqCst);
+        drop(src.tx.take());
+        drop(src.rx);
+        for seat in src.seats.iter_mut() {
+            if let Some(h) = seat.take() {
+                let _ = h.join();
+            }
+        }
+        while let Ok(exit) = src.exit_rx.try_recv() {
+            match exit.outcome {
+                Ok((secs, rounds)) => {
+                    src.totals[exit.slot].0 += secs;
+                    src.totals[exit.slot].1 += rounds;
+                }
+                Err(e) => src
+                    .worker_errors
+                    .push(format!("gen-worker-{}: {e:#}", exit.slot)),
+            }
+        }
+        let mut gen_total = 0.0f64;
+        let mut rounds_total = 0u64;
+        for (w, (secs, rounds)) in src.totals.iter().enumerate() {
+            log.set_meta(&format!("gen_secs_w{w}"), format!("{secs:.3}"));
+            log.set_meta(&format!("gen_rounds_w{w}"), rounds);
+            gen_total += secs;
+            rounds_total += rounds;
+        }
+        log.set_meta("gen_total_secs", format!("{gen_total:.3}"));
+        log.set_meta("gen_rounds", rounds_total);
+        log.set_meta("worker_restarts", src.worker_restarts);
+        log.set_meta(
+            "stalled_workers",
+            src.ever_stalled.iter().filter(|&&b| b).count(),
+        );
+        log.set_meta("engine_retries", src.retry_count.load(Ordering::SeqCst));
+        log.set_meta("dropped_duplicate_rounds", src.accounts.duplicates);
+        if !src.worker_errors.is_empty() {
+            log.set_meta("worker_errors", src.worker_errors.join(" | "));
+        }
+        // serving telemetry: latency percentiles, staleness lags,
+        // occupancy vs the fixed-round counterfactual
+        let mut t = std::mem::take(
+            &mut *src.telemetry.lock().unwrap_or_else(PoisonError::into_inner),
+        );
+        log.set_meta("serve_sessions", src.ctx.sessions);
+        log.set_meta("serve_turns", src.ctx.turns);
+        log.set_meta("serve_requests", t.requests);
+        log.set_meta("serve_tokens", t.tokens);
+        log.set_meta("serve_mux_sweeps", t.mux_sweeps);
+        log.set_meta(
+            "serve_ttft_p50",
+            format!("{:.3}", pct(&mut t.ttft, 0.50)),
+        );
+        log.set_meta(
+            "serve_ttft_p99",
+            format!("{:.3}", pct(&mut t.ttft, 0.99)),
+        );
+        log.set_meta(
+            "serve_retire_p50",
+            format!("{:.3}", pct(&mut t.retire, 0.50)),
+        );
+        log.set_meta(
+            "serve_retire_p99",
+            format!("{:.3}", pct(&mut t.retire, 0.99)),
+        );
+        log.set_meta("serve_lag_p50", format!("{:.3}", pct(&mut t.lag, 0.50)));
+        log.set_meta("serve_lag_p99", format!("{:.3}", pct(&mut t.lag, 0.99)));
+        log.set_meta(
+            "serve_lag_max",
+            t.lag.iter().copied().max().unwrap_or(0),
+        );
+        log.set_meta(
+            "serve_occupancy",
+            format!(
+                "{:.4}",
+                t.tokens as f64 / t.slot_sweeps.max(1) as f64
+            ),
+        );
+        log.set_meta(
+            "serve_occupancy_round_tier",
+            format!(
+                "{:.4}",
+                src.fixed_tokens as f64 / src.fixed_slot_sweeps.max(1) as f64
+            ),
+        );
+        Ok(())
+    }
+}
+
+/// Body of one serving seat: drive the [`ServeMux`] one sweep at a time
+/// — traffic clock, admission, decode, retirement routing — re-reading
+/// the published policy slot between sweeps (the inflight weight swap,
+/// exactly as [`seat_continuous`]), pushing latency/lag samples into the
+/// shared telemetry, assembling completed turns into training rounds,
+/// and retiring itself once its session partition is fully served.
+fn seat_serve(
+    ctx: &ServeCtx,
+    sh: &ServeShared,
+    w: usize,
+    incarnation: u64,
+    skip: HashSet<u64>,
+) -> Result<(f64, u64)> {
+    let base = &ctx.base;
+    let sb = &sh.base;
+    let engine = Engine::load(&base.artifact_dir)?;
+    let taskgen =
+        TaskGen::new(base.task, base.prompt_len, base.resp_len, base.seed);
+    let stream = w as u64 + (incarnation << 20);
+    let mut rng = Pcg32::new(base.seed, 0xa57c + stream);
+    let mut retry_rng = Pcg32::new(base.seed, RETRY_STREAM + stream);
+    let policy = RetryPolicy::new(base.retries);
+    let mcfg = engine.manifest.config.clone();
+    let mut backend = DeviceBackend::new(&engine)?;
+    let traffic = TrafficGen::new(TrafficCfg {
+        sessions: ctx.sessions,
+        turns: ctx.turns,
+        arrival_rate: ctx.arrival_rate,
+        seed: base.seed,
+    });
+    let board =
+        SessionBoard::new(&traffic, base.k, w as u64, ctx.workers, &skip)?;
+    let mut mux = ServeMux::new(
+        PoolCfg {
+            slots: mcfg.gen_batch,
+            prompt_len: mcfg.prompt_len,
+            seq_len: mcfg.seq_len,
+            vocab: mcfg.vocab,
+            max_cohorts: base.max_cohorts,
+            admit_min: base.admit_min,
+        },
+        board,
+    );
+    let mut assembler = RoundAssembler::new(mcfg.gen_batch, base.k);
+    let (mut version, mut params) = sb.pslot.latest();
+    let mut gen_total = 0.0f64;
+    let mut rounds_done = 0u64;
+    let mut inject_err = false;
+    let mut t_round = base.origin.elapsed().as_secs_f64();
+    loop {
+        beat(&sb.ctl[w], base.origin);
+        if sb.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if mux.is_done() && assembler.buffered() == 0 {
+            // partition fully served and every round handed over
+            sh.done[w].store(true, Ordering::SeqCst);
+            break;
+        }
+        if let Some((v, p)) = sb.pslot.fetch(version) {
+            version = v;
+            params = p;
+        }
+        maybe_inject(base, sb, w, rounds_done, &mut inject_err);
+        let events = policy.run(
+            &mut retry_rng,
+            |_| {
+                sb.retry_count.fetch_add(1, Ordering::SeqCst);
+                engine.note_retry(ROUND_ORIGIN);
+            },
+            |attempt| {
+                if inject_err && attempt == 0 {
+                    bail!(
+                        "injected fault: scripted engine error in \
+                         gen-worker-{w}"
+                    );
+                }
+                mux.step(
+                    &mut backend,
+                    &taskgen,
+                    ParamView::cached("policy", version, &params),
+                    version,
+                    base.opts,
+                    &mut rng,
+                )
+            },
+        )?;
+        inject_err = false;
+        if !events.is_empty() {
+            let mut t =
+                sh.telemetry.lock().unwrap_or_else(PoisonError::into_inner);
+            for (c, ev) in &events {
+                t.ttft.push(ev.ttft);
+                t.retire.push(ev.retire);
+                t.lag.push(version.saturating_sub(c.version_min));
+                if ev.turn_done {
+                    t.requests += 1;
+                }
+            }
+        }
+        for (c, _) in events {
+            assembler.push(c);
+        }
+        while let Some(groups) = assembler.pop_round() {
+            let uids: Vec<u64> = groups.iter().map(|(i, _)| *i).collect();
+            let t_now = base.origin.elapsed().as_secs_f64();
+            let round = round_from_groups(groups, &taskgen, (t_round, t_now));
+            gen_total += t_now - t_round;
+            rounds_done += 1;
+            beat(&sb.ctl[w], base.origin);
+            if sb
+                .tx
+                .send(GenMsg { round, lane: w, indices: Some(uids) })
+                .is_err()
+            {
+                flush_serve_stats(
+                    &sh.telemetry,
+                    mux.stats(),
+                    mcfg.gen_batch,
+                    mux.sweep(),
+                );
+                return Ok((gen_total, rounds_done));
+            }
+            t_round = base.origin.elapsed().as_secs_f64();
+        }
+    }
+    flush_serve_stats(&sh.telemetry, mux.stats(), mcfg.gen_batch, mux.sweep());
+    Ok((gen_total, rounds_done))
+}
+
 #[cfg(test)]
 mod tests {
     use std::collections::VecDeque;
     use std::sync::atomic::AtomicU64;
     use std::sync::Arc;
 
-    use super::super::trainer::staleness;
+    use super::super::trainer::{staleness, Round};
     use super::{
         cursor_stride, lane_next, pick_lane, round_from_groups,
-        staleness_bound_updates, Accept, Completed, LaneAccounts, ParamSlot,
+        staleness_bound_updates, Accept, Completed, GenMsg, LaneAccounts,
+        ParamSlot, SessionAccounts,
     };
     use crate::data::{Task, TaskGen};
+    use crate::gen::GenBatch;
+    use crate::serve::traffic::turn_uid;
 
     #[test]
     fn continuous_round_aggregates_token_version_provenance() {
@@ -1698,13 +2449,16 @@ mod tests {
         let ledger: Vec<AtomicU64> =
             [30u64, 10, 20].into_iter().map(AtomicU64::new).collect();
         // owning all three lanes: the lowest cursor wins
-        assert_eq!(pick_lane(0b111, &ledger), 1);
+        assert_eq!(pick_lane(0b111, &ledger).unwrap(), 1);
         // ownership masks restrict the choice
-        assert_eq!(pick_lane(0b101, &ledger), 2);
-        assert_eq!(pick_lane(0b001, &ledger), 0);
+        assert_eq!(pick_lane(0b101, &ledger).unwrap(), 2);
+        assert_eq!(pick_lane(0b001, &ledger).unwrap(), 0);
         // ties go to the lowest lane
         ledger[2].store(10, std::sync::atomic::Ordering::SeqCst);
-        assert_eq!(pick_lane(0b110, &ledger), 1);
+        assert_eq!(pick_lane(0b110, &ledger).unwrap(), 1);
+        // an empty mask is a supervision bug, surfaced as an error rather
+        // than a panic on the worker seat
+        assert!(pick_lane(0, &ledger).is_err());
     }
 
     #[test]
@@ -1764,6 +2518,91 @@ mod tests {
         let slot = ParamSlot::new(1, big.clone());
         let (_, p) = slot.fetch(0).unwrap();
         assert!(Arc::ptr_eq(&p, &big), "fetch must share, not copy");
+    }
+
+    /// A served round carrying only the fields [`SessionAccounts`] reads.
+    fn serve_msg(uids: &[u64]) -> GenMsg {
+        GenMsg {
+            round: Round {
+                gen: GenBatch {
+                    tokens: vec![],
+                    resp_mask: vec![],
+                    blp: vec![],
+                    terminated: vec![],
+                    steps: 0,
+                },
+                examples: vec![],
+                start_index: 0,
+                params_version: 0,
+                tok_version_min: 0,
+                tok_version_mean: 0.0,
+                gen_secs: 0.0,
+                gen_span: (0.0, 0.0),
+            },
+            lane: 0,
+            indices: Some(uids.to_vec()),
+        }
+    }
+
+    #[test]
+    fn serving_accounts_dedupe_replayed_rounds() {
+        let turns = 2u64;
+        let mut a = SessionAccounts::new(turns);
+        let r0: Vec<u64> =
+            (0..4).map(|s| turn_uid(s, 0, turns)).collect();
+        assert!(matches!(a.accept(&serve_msg(&r0)).unwrap(), Accept::Fresh));
+        // a respawned seat replaying the same turns: dropped, counted
+        assert!(matches!(
+            a.accept(&serve_msg(&r0)).unwrap(),
+            Accept::Duplicate
+        ));
+        assert_eq!(a.duplicates, 1);
+        // the next turn of each session is fresh again
+        let r1: Vec<u64> =
+            (0..4).map(|s| turn_uid(s, 1, turns)).collect();
+        assert!(matches!(a.accept(&serve_msg(&r1)).unwrap(), Accept::Fresh));
+    }
+
+    #[test]
+    fn serving_accounts_reject_mixed_and_missing_uids() {
+        let turns = 2u64;
+        let mut a = SessionAccounts::new(turns);
+        let r0: Vec<u64> =
+            (0..4).map(|s| turn_uid(s, 0, turns)).collect();
+        a.accept(&serve_msg(&r0)).unwrap();
+        // half replayed, half fresh: the respawn skip set missed a
+        // delivery — loud failure naming the sessions
+        let mixed =
+            vec![turn_uid(0, 0, turns), turn_uid(4, 0, turns)];
+        let err = a.accept(&serve_msg(&mixed)).unwrap_err().to_string();
+        assert!(err.contains("mixes"), "{err}");
+        assert!(err.contains("skip set"), "{err}");
+        // a served round must carry session uids at all
+        let mut no_uids = serve_msg(&[]);
+        no_uids.indices = None;
+        assert!(a.accept(&no_uids).is_err());
+    }
+
+    #[test]
+    fn serving_accounts_fail_loudly_on_a_dropped_turn() {
+        let turns = 3u64;
+        let mut a = SessionAccounts::new(turns);
+        // turn 1 of session 2 arriving before its turn 0 means the board
+        // dropped a turn: the session-order invariant is violated
+        let err = a
+            .accept(&serve_msg(&[turn_uid(2, 1, turns)]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("session 2"), "{err}");
+        assert!(err.contains("turn 1"), "{err}");
+        // consecutive turns of one session inside one round are legal
+        // (in-message predecessors count as delivered)
+        let chain =
+            vec![turn_uid(0, 0, turns), turn_uid(0, 1, turns)];
+        assert!(matches!(
+            a.accept(&serve_msg(&chain)).unwrap(),
+            Accept::Fresh
+        ));
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub mod gen;
 pub mod metrics;
 pub mod reward;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tokenizer;
 pub mod util;

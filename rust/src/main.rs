@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   info   <model>          — show a config's manifest summary
 //!   train  <model> [...]    — run one RLHF experiment (sync or async)
+//!   serve  <model> [...]    — serve-while-training: session traffic as the
+//!                             prompt stream over the continuous slot pool
 //!   exp    <id> [...]       — regenerate a paper figure/table (see DESIGN.md §6)
 //!   sim    [...]            — clock-simulate sync vs async schedules
 //!   config show <model>     — print baked hyperparameters (paper Tables 4-7, 10)
@@ -17,6 +19,8 @@
 //!   async-rlhf train tldr_s --checkpoint-every 8 --resume  # continue run
 //!   async-rlhf train tldr_s --mode async --gen-workers 2 \
 //!                           --inject-fault worker=1,round=3,kind=panic
+//!   async-rlhf serve tldr_s --serve-sessions 16 --serve-turns 2 \
+//!                           --arrival-rate 0.5  # traffic-replay serving
 //!   async-rlhf exp fig3 --steps 64
 //!   async-rlhf exp staleness --steps 24           # K x M ladder
 //!   async-rlhf sim --gen 21 --train 33 --steps 233
@@ -47,6 +51,7 @@ fn run(argv: &[String]) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
         Some("pretrain") => cmd_pretrain(&args),
         Some("exp") => experiments::run(&args),
         Some("sim") => cmd_sim(&args),
@@ -60,7 +65,7 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 fn usage() -> &'static str {
-    "usage: async-rlhf <info|train|exp|sim|config> [options]\n\
+    "usage: async-rlhf <info|train|serve|exp|sim|config> [options]\n\
      run `async-rlhf exp list` for the paper figure/table index"
 }
 
@@ -141,6 +146,62 @@ fn cmd_train(args: &Args) -> Result<()> {
     if task == Task::Math {
         println!("pass@1 : {:.1}%", result.pass1 * 100.0);
     }
+    Ok(())
+}
+
+/// Serve-while-training: `train` with serve-mode defaults (continuous
+/// engine, live session traffic as the prompt stream) plus a serving
+/// telemetry summary. The run's length is the traffic trace's, not
+/// `--steps`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use async_rlhf::config::{GenEngine, Mode};
+    let base = ExpConfig {
+        mode: Mode::Serve,
+        gen_engine: GenEngine::Continuous,
+        ..ExpConfig::default()
+    };
+    let cfg = ExpConfig::from_args_with(args, base)?;
+    if cfg.mode != Mode::Serve {
+        bail!(
+            "the serve subcommand runs --mode serve; use `train` for \
+             sync/async runs"
+        );
+    }
+    let verbose = !args.has_flag("quiet");
+    let prep = coordinator::prepare(&cfg, verbose)?;
+
+    eprintln!("[serve] {}", cfg.label());
+    let out = coordinator::run(&cfg, &prep, verbose)?;
+
+    println!(
+        "served : {} sessions x {} turns over {} workers",
+        cfg.serve_sessions, cfg.serve_turns, cfg.gen_workers
+    );
+    for key in [
+        "serve_requests",
+        "serve_tokens",
+        "serve_ttft_p50",
+        "serve_ttft_p99",
+        "serve_retire_p50",
+        "serve_retire_p99",
+        "serve_lag_p50",
+        "serve_lag_p99",
+        "serve_lag_max",
+        "serve_occupancy",
+        "serve_occupancy_round_tier",
+    ] {
+        if let Some(v) = out.log.meta.get(key) {
+            println!("  {key:<26} {v}");
+        }
+    }
+    println!(
+        "wall   : {:.1}s for {} episodes",
+        out.timeline.wall(),
+        out.episodes
+    );
+    let run_dir = cfg.run_dir.join(cfg.label());
+    out.log.save(&run_dir, "serve")?;
+    println!("logs   : {}", run_dir.display());
     Ok(())
 }
 

@@ -586,7 +586,12 @@ impl Engine {
         let (bufs, bytes_up) = self.resolve_args(name, spec, args)?;
         let key = self.ensure_compiled(name)?;
         let execs = self.executables.borrow();
-        let exe = execs.get(&key).unwrap();
+        let exe = execs.get(&key).ok_or_else(|| {
+            anyhow!(
+                "{name}: executable '{key}' vanished from the cache after \
+                 compilation — this is a bug"
+            )
+        })?;
         let mut results = exe.execute_b(&bufs)?;
         if results.is_empty() {
             bail!("{name}: empty execution result");
@@ -925,7 +930,12 @@ impl TrainState {
         if engine.manifest.artifact(artifact)?.untupled {
             self.ensure_device(engine)?;
             let (params, m, v, metrics) = {
-                let dev = self.device.as_ref().unwrap();
+                let dev = self.device.as_ref().ok_or_else(|| {
+                    anyhow!(
+                        "{artifact}: optimizer triple not device-resident \
+                         after ensure_device — this is a bug"
+                    )
+                })?;
                 let mut args: Vec<CallArg> = Vec::with_capacity(batch.len() + 5);
                 args.push(CallArg::Device(&dev.params));
                 args.push(CallArg::Device(&dev.m));
@@ -939,9 +949,14 @@ impl TrainState {
                 }
                 let metrics = engine.download(&out[3])?.into_f32()?;
                 out.truncate(3);
-                let v = out.pop().unwrap();
-                let m = out.pop().unwrap();
-                let params = out.pop().unwrap();
+                let (Some(v), Some(m), Some(params)) =
+                    (out.pop(), out.pop(), out.pop())
+                else {
+                    bail!(
+                        "{artifact}: optimizer-triple outputs vanished \
+                         after the arity check — this is a bug"
+                    );
+                };
                 (params, m, v, metrics)
             };
             self.device = Some(DeviceOptState { params, m, v });
@@ -964,10 +979,18 @@ impl TrainState {
             if out.len() != 4 {
                 bail!("{artifact}: expected 4 outputs, got {}", out.len());
             }
-            let metrics = out.pop().unwrap().into_f32()?;
-            self.v = out.pop().unwrap().into_f32()?;
-            self.m = out.pop().unwrap().into_f32()?;
-            self.params = out.pop().unwrap().into_f32()?;
+            let mut take = |what: &'static str| {
+                out.pop().ok_or_else(|| {
+                    anyhow!(
+                        "{artifact}: missing {what} output after the arity \
+                         check — this is a bug"
+                    )
+                })
+            };
+            let metrics = take("metrics")?.into_f32()?;
+            self.v = take("v")?.into_f32()?;
+            self.m = take("m")?.into_f32()?;
+            self.params = take("params")?.into_f32()?;
             Ok(metrics)
         }
     }

@@ -1,0 +1,141 @@
+//! Serving front-end over the continuous slot pool — serve-while-training.
+//!
+//! The paper's separation of generation from learning means the two can
+//! share one generation substrate: this module puts a *session serving*
+//! face on the continuous engine's cohort pool and feeds the completed
+//! traffic straight back into the trainer, so live traffic IS the prompt
+//! stream (OpenRLHF's agent-deployment pattern over PipelineRL's inflight
+//! weight swapping).
+//!
+//! - [`traffic`]: deterministic traffic replay — arrival sweeps, per-turn
+//!   think delays and prompt uids, all pure in the run's seed.
+//! - [`session`]: the session board — multi-turn state machines gating
+//!   admission (a turn only queues after its predecessor completes plus a
+//!   think delay) and accounting every retirement back to its session.
+//! - [`frontend`]: the mux gluing a board to a slot [`Pool`] one sweep at
+//!   a time, plus [`frontend::run_replay`] for training-off replay runs.
+//!
+//! The training loop closes in `coordinator::pipeline::SessionSource`:
+//! M serving seats (one per `--gen-workers`, sessions partitioned
+//! statically `session % M == w`) each run a mux against the latest
+//! published [`ParamSlot`] params and hand assembled rounds to the one
+//! trainer loop, which extends its exactly-once dedup/hole accounting to
+//! the served turn uids. [`run`] is the mode entry point behind
+//! `--mode serve` / the `serve` subcommand.
+//!
+//! [`Pool`]: crate::gen::continuous::Pool
+//! [`ParamSlot`]: crate::coordinator::pipeline::ParamSlot
+
+pub mod frontend;
+pub mod session;
+pub mod traffic;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExpConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::pipeline::{self, RoundSource, SessionSource};
+use crate::coordinator::trainer::rounds_per_batch;
+use crate::coordinator::{Prepared, RunOutput};
+
+/// Optimizer steps a serve run takes: the traffic trace's, not
+/// `--steps`. Every turn yields `k` candidates (one assembler group), a
+/// round is `gen_batch / k` groups, and a batch is `rounds_per_batch`
+/// rounds — so the geometry must tile exactly or the tail of the trace
+/// would sit in an assembler forever. Bails with the arithmetic spelled
+/// out rather than hanging.
+pub fn derive_steps(cfg: &ExpConfig, gen_batch: u64) -> Result<u64> {
+    let k = cfg.k_samples as u64;
+    let m = cfg.gen_workers.max(1) as u64;
+    let groups_per_round = gen_batch / k;
+    let per_worker_turns = (cfg.serve_sessions / m) * cfg.serve_turns;
+    if per_worker_turns % groups_per_round != 0 {
+        bail!(
+            "serve geometry does not tile: each worker serves {} turns \
+             ({} sessions / {m} workers x {} turns) but a round needs \
+             {groups_per_round} turns (gen_batch {gen_batch} / k {k}) — \
+             the trace tail would never assemble into a round",
+            per_worker_turns,
+            cfg.serve_sessions,
+            cfg.serve_turns
+        );
+    }
+    let total_rounds = (cfg.serve_sessions * cfg.serve_turns) / groups_per_round;
+    let rpb = rounds_per_batch(cfg.k_samples) as u64;
+    if total_rounds % rpb != 0 {
+        bail!(
+            "serve geometry does not tile: the trace assembles \
+             {total_rounds} rounds but a training batch consumes {rpb} — \
+             the last rounds would never train"
+        );
+    }
+    Ok(total_rounds / rpb)
+}
+
+/// Run serve-while-training: the unified [`pipeline`] trainer loop fed by
+/// a [`SessionSource`] — M supervised serving seats multiplexing the
+/// deterministic traffic trace onto their slot pools, with every
+/// completed turn trained on exactly once.
+pub fn run(
+    cfg: &ExpConfig,
+    prep: &Prepared,
+    verbose: bool,
+) -> Result<RunOutput> {
+    let gen_batch = prep.engine.manifest.config.gen_batch as u64;
+    let mut run_cfg = cfg.clone();
+    run_cfg.steps = derive_steps(cfg, gen_batch)?;
+    if verbose {
+        eprintln!(
+            "[serve] {} sessions x {} turns over {} workers -> {} steps",
+            cfg.serve_sessions,
+            cfg.serve_turns,
+            cfg.gen_workers,
+            run_cfg.steps
+        );
+    }
+    pipeline::run(
+        &run_cfg,
+        prep,
+        |origin, resume: Option<&Checkpoint>| {
+            let src: Box<dyn RoundSource> =
+                Box::new(SessionSource::spawn(&run_cfg, prep, origin, resume)?);
+            Ok(src)
+        },
+        verbose,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GenEngine, Mode};
+
+    fn serve_cfg(sessions: u64, turns: u64, workers: usize) -> ExpConfig {
+        ExpConfig {
+            mode: Mode::Serve,
+            gen_engine: GenEngine::Continuous,
+            serve_sessions: sessions,
+            serve_turns: turns,
+            gen_workers: workers,
+            ..ExpConfig::default()
+        }
+    }
+
+    #[test]
+    fn serving_steps_derive_from_the_trace() {
+        // gen_batch 8, k 2 -> 4 turns per round; k=2 -> 1 round per batch
+        let cfg = serve_cfg(8, 2, 1);
+        assert_eq!(derive_steps(&cfg, 8).unwrap(), 4);
+        // two workers: 4 sessions x 2 turns each = 8 turns per worker
+        let cfg = serve_cfg(8, 2, 2);
+        assert_eq!(derive_steps(&cfg, 8).unwrap(), 4);
+    }
+
+    #[test]
+    fn serving_steps_reject_nontiling_geometry() {
+        // 3 turns per worker does not tile 4-turn rounds
+        let cfg = serve_cfg(3, 1, 1);
+        let err = derive_steps(&cfg, 8).unwrap_err().to_string();
+        assert!(err.contains("does not tile"), "err: {err}");
+    }
+}

@@ -1,0 +1,466 @@
+//! Per-session state for the serving front-end.
+//!
+//! A [`SessionBoard`] owns a worker's partition of the traffic trace
+//! (`session % stride == lane`) and runs each session through a strict
+//! turn chain: a turn becomes *admittable* at its arrival/think sweep,
+//! its `k` candidate completions are queued for the slot pool, and the
+//! next turn opens only once all `k` retire — so a respawned worker can
+//! recompute the whole schedule from (trace, delivered-set) alone, with
+//! no in-flight state to recover.
+//!
+//! The board is deliberately pool-agnostic: it never touches a backend.
+//! [`SessionBoard::admission`] exposes the queued candidates as the same
+//! `AdmitSeq` stream `TaskGen::admission` produces for the training
+//! workers, and [`SessionBoard::on_completed`] consumes retirements and
+//! converts them into latency samples ([`CompletionEvent`]) plus served
+//! transcripts ([`TurnRecord`]). Every error path names the session id —
+//! a dropped or duplicated turn must fail loudly, never silently.
+
+use std::collections::{HashSet, VecDeque};
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+use super::traffic::{turn_uid, uid_session_turn, TrafficGen};
+use crate::data::TaskGen;
+use crate::gen::continuous::{AdmitSeq, Completed};
+
+/// Lifecycle of one session's *current* turn.
+#[derive(Debug, Clone, PartialEq)]
+enum Turn {
+    /// Waiting for the arrival / think sweep before candidates queue.
+    Waiting { ready_at: u64 },
+    /// Candidates queued/in-flight; `outstanding` yet to retire.
+    InFlight { outstanding: usize },
+    /// All turns of the session completed.
+    Done,
+}
+
+struct SessionState {
+    id: u64,
+    /// Turn currently being waited for or served.
+    turn: u64,
+    phase: Turn,
+    /// Sweep the current turn's candidates were queued (latency epoch:
+    /// time-to-first-token and time-to-retire count from here, so slot
+    /// queueing delay is part of the measurement).
+    ready_sweep: u64,
+    /// Think delays for turns 1.. (copied from the trace so the board is
+    /// self-contained after construction).
+    thinks: Vec<u64>,
+    /// Candidate 0's reply, stashed until the turn completes.
+    reply: Option<(Vec<i32>, bool)>,
+}
+
+/// One completed served turn: what the session was actually shown
+/// (candidate 0 of the `k` sampled — the remaining candidates exist for
+/// the trainer's pairwise objective, not the user).
+#[derive(Debug, Clone)]
+pub struct TurnRecord {
+    pub session: u64,
+    pub turn: u64,
+    pub uid: u64,
+    /// Response tokens of candidate 0, EOS included when terminated.
+    pub reply: Vec<i32>,
+    pub terminated: bool,
+}
+
+/// Latency accounting for one retired candidate, in sweep units (sweeps
+/// are the pool's clock, so these are deterministic at equal seeds; the
+/// bench converts to wall time via the measured mean sweep duration).
+#[derive(Debug, Clone, Copy)]
+pub struct CompletionEvent {
+    pub session: u64,
+    pub turn: u64,
+    /// Sweeps from turn-ready to this candidate's first sampled token
+    /// (slot queueing + prefill).
+    pub ttft: u64,
+    /// Sweeps from turn-ready to retirement.
+    pub retire: u64,
+    /// This retirement completed the turn (all `k` candidates done).
+    pub turn_done: bool,
+}
+
+/// A worker's view of the traffic trace: session scheduling, admission
+/// queueing, completion accounting and the served transcript.
+pub struct SessionBoard {
+    turns: u64,
+    k: usize,
+    sessions: Vec<SessionState>,
+    /// Queued admission candidates `(uid, dup)` in deterministic
+    /// (sweep, session-id, dup) order.
+    queue: VecDeque<(u64, usize)>,
+    records: Vec<TurnRecord>,
+}
+
+impl SessionBoard {
+    /// Board over the sessions this worker owns (`session % stride ==
+    /// lane`). `delivered` is the set of turn uids already accepted into
+    /// training rounds (the respawn skip set): those turns are not
+    /// regenerated — each session resumes at its first undelivered turn.
+    /// Because turns complete (and thus deliver) in order, the delivered
+    /// set must be a per-session prefix; a hole means the exactly-once
+    /// contract was already broken and the board refuses to start.
+    pub fn new(
+        traffic: &TrafficGen,
+        k: usize,
+        lane: u64,
+        stride: u64,
+        delivered: &HashSet<u64>,
+    ) -> Result<SessionBoard> {
+        assert!(k >= 1);
+        assert!(stride >= 1 && lane < stride);
+        let cfg = traffic.cfg();
+        let mut sessions = Vec::new();
+        for s in (lane..cfg.sessions).step_by(stride as usize) {
+            let resumed = (0..cfg.turns)
+                .take_while(|&t| delivered.contains(&traffic.uid(s, t)))
+                .count() as u64;
+            if let Some(t) = (resumed..cfg.turns)
+                .find(|&t| delivered.contains(&traffic.uid(s, t)))
+            {
+                bail!(
+                    "serving session {s}: delivered turns have a hole — \
+                     turn {t} was delivered but turn {resumed} was not \
+                     (exactly-once accounting violated)"
+                );
+            }
+            let phase = if resumed == cfg.turns {
+                Turn::Done
+            } else if resumed == 0 {
+                Turn::Waiting { ready_at: traffic.arrival(s) }
+            } else {
+                // resume clock restarts at sweep 0; the think delay still
+                // gates the turn so the schedule stays deterministic in
+                // (trace, delivered-set)
+                Turn::Waiting { ready_at: traffic.think(s, resumed) }
+            };
+            sessions.push(SessionState {
+                id: s,
+                turn: resumed,
+                phase,
+                ready_sweep: 0,
+                thinks: (1..cfg.turns).map(|t| traffic.think(s, t)).collect(),
+                reply: None,
+            });
+        }
+        Ok(SessionBoard {
+            turns: cfg.turns,
+            k,
+            sessions,
+            queue: VecDeque::new(),
+            records: Vec::new(),
+        })
+    }
+
+    /// Advance the clock: queue the candidates of every turn whose
+    /// arrival / think delay has elapsed. Sessions are scanned in id
+    /// order, so the queue order is deterministic.
+    pub fn on_sweep(&mut self, sweep: u64) {
+        for s in &mut self.sessions {
+            if let Turn::Waiting { ready_at } = s.phase {
+                if ready_at <= sweep {
+                    s.phase = Turn::InFlight { outstanding: self.k };
+                    s.ready_sweep = sweep;
+                    let uid = turn_uid(s.id, s.turn, self.turns);
+                    for dup in 0..self.k {
+                        self.queue.push_back((uid, dup));
+                    }
+                }
+            }
+        }
+    }
+
+    /// The queued candidates as a slot-pool admission stream; prompts are
+    /// regenerated from the pure example stream at the turn's uid, same
+    /// as `TaskGen::admission` does for lane cursors.
+    pub fn admission<'a>(&'a mut self, gen: &'a TaskGen) -> BoardAdmission<'a> {
+        BoardAdmission { queue: &mut self.queue, gen }
+    }
+
+    /// Account one retirement back to its session. Errors name the
+    /// session: a completion for an unowned session, a non-current turn
+    /// or an over-delivered candidate means the mux dropped or duplicated
+    /// a turn.
+    pub fn on_completed(
+        &mut self,
+        c: &Completed,
+        sweep: u64,
+    ) -> Result<CompletionEvent> {
+        let (session, turn) = uid_session_turn(c.index, self.turns);
+        let Some(s) = self.sessions.iter_mut().find(|s| s.id == session)
+        else {
+            bail!(
+                "serving session {session}: completion (uid {}) routed to \
+                 a worker that does not own it",
+                c.index
+            );
+        };
+        if s.turn != turn {
+            bail!(
+                "serving session {session}: completion for turn {turn} \
+                 while turn {} is current — a turn was dropped or replayed",
+                s.turn
+            );
+        }
+        let Turn::InFlight { outstanding } = &mut s.phase else {
+            bail!(
+                "serving session {session}: completion for turn {turn} \
+                 which is not in flight (phase {:?})",
+                s.phase
+            );
+        };
+        if c.dup == 0 {
+            let reply: Vec<i32> = c
+                .tokens
+                .iter()
+                .zip(&c.resp_mask)
+                .filter(|(_, &m)| m == 1.0)
+                .map(|(&t, _)| t)
+                .collect();
+            s.reply = Some((reply, c.terminated));
+        }
+        *outstanding -= 1;
+        let turn_done = *outstanding == 0;
+        let first_token = (sweep + 1).saturating_sub(c.steps as u64);
+        let ev = CompletionEvent {
+            session,
+            turn,
+            ttft: first_token.saturating_sub(s.ready_sweep),
+            retire: sweep.saturating_sub(s.ready_sweep),
+            turn_done,
+        };
+        if turn_done {
+            let Some((reply, terminated)) = s.reply.take() else {
+                bail!(
+                    "serving session {session}: turn {turn} completed \
+                     without its candidate 0 (admission bug)"
+                );
+            };
+            self.records.push(TurnRecord {
+                session,
+                turn,
+                uid: c.index,
+                reply,
+                terminated,
+            });
+            s.turn += 1;
+            s.phase = if s.turn == self.turns {
+                Turn::Done
+            } else {
+                Turn::Waiting {
+                    ready_at: sweep + s.thinks[(s.turn - 1) as usize],
+                }
+            };
+        }
+        Ok(ev)
+    }
+
+    /// Every owned session has completed all its turns.
+    pub fn all_done(&self) -> bool {
+        self.sessions.iter().all(|s| s.phase == Turn::Done)
+    }
+
+    /// Ids of sessions with turns still to serve — the loud-failure
+    /// payload when a worker cannot make progress.
+    pub fn incomplete(&self) -> Vec<u64> {
+        self.sessions
+            .iter()
+            .filter(|s| s.phase != Turn::Done)
+            .map(|s| s.id)
+            .collect()
+    }
+
+    /// Candidates queued but not yet admitted.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Turns completed by this board incarnation.
+    pub fn records(&self) -> &[TurnRecord] {
+        &self.records
+    }
+
+    /// The served transcript, rendered deterministically (sorted by
+    /// (session, turn)) for byte-identical comparison across runs.
+    pub fn transcript(&self) -> String {
+        let mut recs: Vec<&TurnRecord> = self.records.iter().collect();
+        recs.sort_by_key(|r| (r.session, r.turn));
+        let mut out = String::new();
+        for r in recs {
+            let _ = writeln!(
+                out,
+                "session {} turn {} uid {} term {} reply {:?}",
+                r.session, r.turn, r.uid, r.terminated, r.reply
+            );
+        }
+        out
+    }
+}
+
+/// Iterator behind [`SessionBoard::admission`]: drains the candidate
+/// queue into `AdmitSeq`s. Finite (unlike `TaskGen::admission`): the pool
+/// admits whatever is queued and leaves its remaining slots free.
+pub struct BoardAdmission<'a> {
+    queue: &'a mut VecDeque<(u64, usize)>,
+    gen: &'a TaskGen,
+}
+
+impl Iterator for BoardAdmission<'_> {
+    type Item = AdmitSeq;
+
+    fn next(&mut self) -> Option<AdmitSeq> {
+        let (uid, dup) = self.queue.pop_front()?;
+        Some(AdmitSeq { index: uid, dup, prompt: self.gen.example(uid).prompt })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Task;
+    use crate::serve::traffic::TrafficCfg;
+
+    fn traffic(sessions: u64, turns: u64) -> TrafficGen {
+        TrafficGen::new(TrafficCfg {
+            sessions,
+            turns,
+            arrival_rate: 0.5,
+            seed: 42,
+        })
+    }
+
+    fn completed(uid: u64, dup: usize, steps: usize) -> Completed {
+        let s = 8;
+        let mut resp_mask = vec![0.0; s];
+        let mut tokens = vec![0; s];
+        for i in 2..2 + steps {
+            resp_mask[i] = 1.0;
+            tokens[i] = 7;
+        }
+        Completed {
+            index: uid,
+            dup,
+            tokens,
+            resp_mask,
+            blp: vec![0.0; s],
+            terminated: true,
+            steps,
+            version_min: 0,
+            version_max: 0,
+            version_sum: 0.0,
+        }
+    }
+
+    #[test]
+    fn serving_board_turn_chain_gates_on_completion_and_think() {
+        let t = traffic(1, 2);
+        let mut b =
+            SessionBoard::new(&t, 2, 0, 1, &HashSet::new()).unwrap();
+        let arrive = t.arrival(0);
+        b.on_sweep(arrive - 1);
+        assert_eq!(b.queued(), 0, "turn 0 not admittable before arrival");
+        b.on_sweep(arrive);
+        assert_eq!(b.queued(), 2, "k candidates queue at arrival");
+        let uid = t.uid(0, 0);
+        let gen = TaskGen::new(Task::Tldr, 24, 12, 42);
+        let admitted: Vec<AdmitSeq> = b.admission(&gen).collect();
+        assert_eq!(admitted.len(), 2);
+        assert!(admitted.iter().all(|a| a.index == uid));
+        assert_eq!(admitted[0].prompt, gen.example(uid).prompt);
+        // turn 1 stays gated until BOTH candidates retire + think elapses
+        let done_sweep = arrive + 3;
+        let ev = b.on_completed(&completed(uid, 0, 2), done_sweep).unwrap();
+        assert!(!ev.turn_done);
+        b.on_sweep(done_sweep + 1000);
+        assert_eq!(b.queued(), 0, "turn 1 gated on turn 0 completion");
+        let ev = b.on_completed(&completed(uid, 1, 3), done_sweep).unwrap();
+        assert!(ev.turn_done);
+        assert_eq!(ev.retire, 3);
+        let think = t.think(0, 1);
+        b.on_sweep(done_sweep + think - 1);
+        assert_eq!(b.queued(), 0, "think delay not yet elapsed");
+        b.on_sweep(done_sweep + think);
+        assert_eq!(b.queued(), 2, "turn 1 opens after the think delay");
+        assert!(!b.all_done());
+        assert_eq!(b.incomplete(), vec![0]);
+    }
+
+    #[test]
+    fn serving_board_latency_counts_from_turn_ready() {
+        let t = traffic(1, 1);
+        let mut b =
+            SessionBoard::new(&t, 1, 0, 1, &HashSet::new()).unwrap();
+        let arrive = t.arrival(0);
+        b.on_sweep(arrive);
+        let uid = t.uid(0, 0);
+        // retired at arrive+5 after holding a slot for 3 sweeps: first
+        // token sampled at arrive+3 → ttft 3, retire 5
+        let ev = b.on_completed(&completed(uid, 0, 3), arrive + 5).unwrap();
+        assert_eq!(ev.ttft, 3);
+        assert_eq!(ev.retire, 5);
+        assert!(ev.turn_done);
+        assert!(b.all_done());
+        assert_eq!(b.records().len(), 1);
+        assert_eq!(b.records()[0].reply, vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn serving_board_partitions_sessions_by_lane() {
+        let t = traffic(6, 1);
+        let b0 = SessionBoard::new(&t, 2, 0, 2, &HashSet::new()).unwrap();
+        let b1 = SessionBoard::new(&t, 2, 1, 2, &HashSet::new()).unwrap();
+        assert_eq!(b0.incomplete(), vec![0, 2, 4]);
+        assert_eq!(b1.incomplete(), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn serving_board_rejects_unowned_and_stale_completions() {
+        let t = traffic(4, 2);
+        let mut b =
+            SessionBoard::new(&t, 1, 0, 2, &HashSet::new()).unwrap();
+        // session 1 belongs to lane 1
+        let err = b
+            .on_completed(&completed(t.uid(1, 0), 0, 1), 10)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("session 1"), "error must name the session: {err}");
+        // session 0 turn 1 while turn 0 is current
+        let err = b
+            .on_completed(&completed(t.uid(0, 1), 0, 1), 10)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("session 0") && err.contains("turn 1"), "{err}");
+    }
+
+    #[test]
+    fn serving_board_resumes_past_delivered_prefix_and_rejects_holes() {
+        let t = traffic(2, 3);
+        // session 0 delivered turns 0..2; session 1 nothing
+        let delivered: HashSet<u64> = [t.uid(0, 0), t.uid(0, 1)].into();
+        let mut b = SessionBoard::new(&t, 1, 0, 1, &delivered).unwrap();
+        b.on_sweep(u64::MAX);
+        let gen = TaskGen::new(Task::Tldr, 24, 12, 42);
+        let uids: Vec<u64> =
+            b.admission(&gen).map(|a| a.index).collect();
+        assert!(uids.contains(&t.uid(0, 2)), "session 0 resumes at turn 2");
+        assert!(uids.contains(&t.uid(1, 0)), "session 1 starts fresh");
+        assert!(!uids.contains(&t.uid(0, 0)), "delivered turns not replayed");
+        // a hole in the delivered set is an accounting violation
+        let hole: HashSet<u64> = [t.uid(0, 2)].into();
+        let err = SessionBoard::new(&t, 1, 0, 1, &hole)
+            .err()
+            .expect("a delivered-set hole must be rejected")
+            .to_string();
+        assert!(err.contains("session 0") && err.contains("hole"), "{err}");
+    }
+
+    #[test]
+    fn serving_board_fully_delivered_partition_is_done() {
+        let t = traffic(1, 2);
+        let delivered: HashSet<u64> = [t.uid(0, 0), t.uid(0, 1)].into();
+        let b = SessionBoard::new(&t, 2, 0, 1, &delivered).unwrap();
+        assert!(b.all_done());
+        assert!(b.incomplete().is_empty());
+    }
+}

@@ -1,0 +1,184 @@
+//! Deterministic traffic replay: the load generator behind the serving
+//! front-end.
+//!
+//! Serving is only reproducible if the *traffic* is: arrival times, turn
+//! counts and prompt content must all be pure functions of the run's
+//! config seed. This module precomputes a replay trace — per-session
+//! arrival sweeps (exponential inter-arrival gaps, a Poisson-ish open
+//! arrival process in pool-sweep units) and per-turn think delays — from
+//! dedicated [`Pcg32`] streams, so two runs at equal seeds see
+//! byte-identical traffic and the serving integration tests can assert
+//! bitwise-equal transcripts.
+//!
+//! Prompt content rides the same discipline for free: every (session,
+//! turn) pair maps to a unique prompt-stream uid in [`SERVE_RANGE`]
+//! (disjoint from the SFT / RM / RLHF / eval index ranges), and
+//! `TaskGen::example(uid)` is pure in (seed, uid) — so the uid doubles as
+//! the exactly-once accounting key *and* regenerates the served prompt
+//! (plus its gold meta) wherever the round is consumed, exactly like the
+//! round workers' lane cursors.
+
+use crate::util::rng::Pcg32;
+
+/// Prompt-stream index range owned by the serving front-end. Train /
+/// eval ranges top out at `EVAL_RANGE` (10M) plus a few thousand lane
+/// hops; served uids live far above so the exactly-once partition over
+/// prompt indices extends across training and serving.
+pub const SERVE_RANGE: u64 = 500_000_000;
+
+/// RNG stream of the shared arrival process.
+const ARRIVAL_STREAM: u64 = 0x7a11;
+/// Base RNG stream of the per-session think-time processes.
+const THINK_STREAM: u64 = 0x7a12_0000;
+
+/// Traffic shape: how many sessions arrive, how many turns each runs,
+/// and how fast they come.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficCfg {
+    pub sessions: u64,
+    /// Turns per session (every session runs the same count; per-session
+    /// variety comes from arrival/think randomness, not ragged lengths,
+    /// so round geometry stays exact).
+    pub turns: u64,
+    /// Mean session arrivals per pool sweep; also sets the think-time
+    /// mean (`1 / rate` sweeps) between a session's turns.
+    pub arrival_rate: f64,
+    pub seed: u64,
+}
+
+/// The precomputed replay trace. Pure in [`TrafficCfg`]: equal configs
+/// produce identical traces, and a respawned worker rebuilds the exact
+/// schedule its predecessor was serving.
+pub struct TrafficGen {
+    cfg: TrafficCfg,
+    /// Sweep at which session `s`'s first turn becomes admittable.
+    arrivals: Vec<u64>,
+    /// `thinks[s][t-1]`: delay between session `s` completing turn `t-1`
+    /// and turn `t` becoming admittable.
+    thinks: Vec<Vec<u64>>,
+}
+
+impl TrafficGen {
+    pub fn new(cfg: TrafficCfg) -> TrafficGen {
+        assert!(cfg.sessions >= 1, "traffic needs at least one session");
+        assert!(cfg.turns >= 1, "sessions need at least one turn");
+        assert!(cfg.arrival_rate > 0.0, "arrival rate must be positive");
+        let mut arr = Pcg32::new(cfg.seed, ARRIVAL_STREAM);
+        let mut at = 0u64;
+        let arrivals = (0..cfg.sessions)
+            .map(|_| {
+                at += exp_gap(&mut arr, cfg.arrival_rate);
+                at
+            })
+            .collect();
+        let thinks = (0..cfg.sessions)
+            .map(|s| {
+                let mut rng = Pcg32::new(cfg.seed, THINK_STREAM + s);
+                (1..cfg.turns)
+                    .map(|_| exp_gap(&mut rng, cfg.arrival_rate))
+                    .collect()
+            })
+            .collect();
+        TrafficGen { cfg, arrivals, thinks }
+    }
+
+    pub fn cfg(&self) -> TrafficCfg {
+        self.cfg
+    }
+
+    /// Sweep at which `session`'s first turn becomes admittable.
+    pub fn arrival(&self, session: u64) -> u64 {
+        self.arrivals[session as usize]
+    }
+
+    /// Think delay before `turn` (>= 1) of `session`, counted from the
+    /// sweep its previous turn completed.
+    pub fn think(&self, session: u64, turn: u64) -> u64 {
+        debug_assert!(turn >= 1, "turn 0 is gated by arrival, not think");
+        self.thinks[session as usize][(turn - 1) as usize]
+    }
+
+    /// Prompt-stream uid of (`session`, `turn`) under this trace's shape.
+    pub fn uid(&self, session: u64, turn: u64) -> u64 {
+        turn_uid(session, turn, self.cfg.turns)
+    }
+}
+
+/// Encode (session, turn) as a prompt-stream uid: the accounting key the
+/// served rounds carry in place of lane cursors.
+pub fn turn_uid(session: u64, turn: u64, turns: u64) -> u64 {
+    debug_assert!(turn < turns, "turn {turn} out of range {turns}");
+    SERVE_RANGE + session * turns + turn
+}
+
+/// Decode a served uid back to (session, turn).
+pub fn uid_session_turn(uid: u64, turns: u64) -> (u64, u64) {
+    debug_assert!(uid >= SERVE_RANGE, "uid {uid} below SERVE_RANGE");
+    let off = uid - SERVE_RANGE;
+    (off / turns, off % turns)
+}
+
+/// One exponential inter-arrival gap in whole sweeps (mean `1 / rate`),
+/// floored at 1 so time always advances.
+fn exp_gap(rng: &mut Pcg32, rate: f64) -> u64 {
+    let u = rng.gen_f64();
+    let gap = -(1.0 - u).ln() / rate;
+    (gap.ceil() as u64).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> TrafficCfg {
+        TrafficCfg { sessions: 6, turns: 3, arrival_rate: 0.5, seed }
+    }
+
+    #[test]
+    fn serving_traffic_is_deterministic_at_equal_seeds() {
+        let a = TrafficGen::new(cfg(42));
+        let b = TrafficGen::new(cfg(42));
+        for s in 0..6 {
+            assert_eq!(a.arrival(s), b.arrival(s));
+            for t in 1..3 {
+                assert_eq!(a.think(s, t), b.think(s, t));
+            }
+        }
+    }
+
+    #[test]
+    fn serving_traffic_seeds_differ() {
+        let a = TrafficGen::new(cfg(1));
+        let b = TrafficGen::new(cfg(2));
+        let same = (0..6).filter(|&s| a.arrival(s) == b.arrival(s)).count();
+        assert!(same < 6, "seed change must move the arrival process");
+    }
+
+    #[test]
+    fn serving_arrivals_are_strictly_increasing() {
+        let g = TrafficGen::new(cfg(7));
+        for s in 1..6 {
+            assert!(g.arrival(s) > g.arrival(s - 1), "gaps floored at 1");
+        }
+        assert!(g.arrival(0) >= 1);
+    }
+
+    #[test]
+    fn serving_uid_roundtrip_and_range_disjointness() {
+        let turns = 5u64;
+        for session in [0u64, 1, 99, 10_000] {
+            for turn in 0..turns {
+                let uid = turn_uid(session, turn, turns);
+                assert_eq!(uid_session_turn(uid, turns), (session, turn));
+                // above every train/eval index range (EVAL_RANGE = 10M)
+                assert!(uid >= SERVE_RANGE && SERVE_RANGE > 10_000_000);
+            }
+        }
+        // adjacent sessions never collide
+        assert_eq!(
+            turn_uid(3, turns - 1, turns) + 1,
+            turn_uid(4, 0, turns),
+            "uid blocks tile the range without gaps or overlap"
+        );
+    }
+}

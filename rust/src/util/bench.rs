@@ -57,6 +57,19 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     r
 }
 
+/// Nearest-rank percentile over integer samples (retire steps, latency
+/// sweeps): `q` in [0, 1]. Sorts in place; empty input reports 0. One
+/// shared implementation for the gen-speed and serving benches plus the
+/// serving run metas.
+pub fn pct(samples: &mut [u64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_unstable();
+    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+    samples[idx] as f64
+}
+
 /// Shared bench preamble: resolve the artifacts root and skip politely when
 /// a config is missing (benches must not fail on fresh checkouts).
 pub fn artifact_dir_or_skip(model: &str) -> Option<std::path::PathBuf> {
@@ -69,5 +82,39 @@ pub fn artifact_dir_or_skip(model: &str) -> Option<std::path::PathBuf> {
     } else {
         println!("SKIP bench: artifacts/{model} missing (run `make artifacts`)");
         None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::pct;
+
+    #[test]
+    fn pct_singleton_is_the_sample() {
+        let mut s = [7u64];
+        assert_eq!(pct(&mut s, 0.0), 7.0);
+        assert_eq!(pct(&mut s, 0.5), 7.0);
+        assert_eq!(pct(&mut s, 1.0), 7.0);
+    }
+
+    #[test]
+    fn pct_odd_length_median_is_the_middle() {
+        let mut s = [5u64, 1, 9, 3, 7]; // sorted: 1 3 5 7 9
+        assert_eq!(pct(&mut s, 0.5), 5.0);
+        assert_eq!(pct(&mut s, 0.0), 1.0);
+        assert_eq!(pct(&mut s, 1.0), 9.0);
+    }
+
+    #[test]
+    fn pct_even_length_uses_nearest_rank() {
+        let mut s = [4u64, 2, 8, 6]; // sorted: 2 4 6 8
+        // (len-1) * 0.5 = 1.5 rounds to rank 2
+        assert_eq!(pct(&mut s, 0.5), 6.0);
+        assert_eq!(pct(&mut s, 0.99), 8.0);
+    }
+
+    #[test]
+    fn pct_empty_reports_zero() {
+        assert_eq!(pct(&mut [], 0.5), 0.0);
     }
 }

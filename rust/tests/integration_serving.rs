@@ -1,0 +1,272 @@
+//! Serve-while-training integration tests on the dev artifact bundle.
+//!
+//! The acceptance contract for the serving front-end, end to end on real
+//! compiled artifacts: (a) with training disabled, traffic replay is
+//! bitwise-deterministic at equal seeds; (b) with training on, round
+//! staleness stays within the pipeline bound and serving occupancy
+//! matches or beats the fixed-round counterfactual under a saturating
+//! trace; (c) the exactly-once prompt/session partition survives an
+//! injected worker death — respawn completes every turn exactly once,
+//! and an unrecoverable seat fails loudly naming the sessions that can
+//! no longer complete.
+//!
+//! Requires `make artifacts` (skips, loudly, when artifacts/dev is
+//! absent — CI always builds artifacts first).
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use async_rlhf::config::{ExpConfig, FaultKind, FaultPlan, GenEngine, Mode};
+use async_rlhf::coordinator;
+use async_rlhf::coordinator::pipeline::staleness_bound_updates;
+use async_rlhf::data::{Task, TaskGen};
+use async_rlhf::gen::continuous::{DeviceBackend, PoolCfg};
+use async_rlhf::gen::SampleOpts;
+use async_rlhf::runtime::{Engine, ParamView};
+use async_rlhf::serve::frontend::{run_replay, ServeReport};
+use async_rlhf::serve::traffic::{TrafficCfg, TrafficGen};
+
+fn dev_dir() -> Option<PathBuf> {
+    let root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let dir = root.join("dev");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/dev missing — run `make artifacts`");
+        None
+    }
+}
+
+/// A serve-mode config whose trace tiles the dev geometry exactly
+/// (gen_batch 8, k 2 -> 4 turns per round; 8 sessions x 2 turns = 4
+/// rounds = 4 steps at one round per batch).
+fn serve_cfg(name: &str) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.model = "dev".into();
+    cfg.artifacts_root = std::env::var("ASYNC_RLHF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    cfg.mode = Mode::Serve;
+    cfg.gen_engine = GenEngine::Continuous;
+    cfg.serve_sessions = 8;
+    cfg.serve_turns = 2;
+    // saturating arrivals: the whole trace is ready almost immediately,
+    // so the pool runs full and the occupancy comparison is meaningful
+    cfg.arrival_rate = 8.0;
+    cfg.sft_steps = 80;
+    cfg.rm_steps = 60;
+    cfg.eval_prompts = 32;
+    cfg.run_dir = std::env::temp_dir().join(format!("async_rlhf_test_{name}"));
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    cfg
+}
+
+fn meta_u64(out: &coordinator::RunOutput, key: &str) -> u64 {
+    out.log
+        .meta
+        .get(key)
+        .unwrap_or_else(|| panic!("meta '{key}' missing"))
+        .parse::<u64>()
+        .unwrap_or_else(|e| panic!("meta '{key}' not a count: {e}"))
+}
+
+fn meta_f64(out: &coordinator::RunOutput, key: &str) -> f64 {
+    out.log
+        .meta
+        .get(key)
+        .unwrap_or_else(|| panic!("meta '{key}' missing"))
+        .parse::<f64>()
+        .unwrap_or_else(|e| panic!("meta '{key}' not a number: {e}"))
+}
+
+/// One training-disabled replay of a 4-session trace on the device
+/// backend at fixed params.
+fn device_replay(engine: &Engine, params: &[f32], seed: u64) -> ServeReport {
+    let mcfg = &engine.manifest.config;
+    let taskgen = TaskGen::new(
+        Task::from_name(&mcfg.task).unwrap(),
+        mcfg.prompt_len,
+        mcfg.resp_len,
+        seed,
+    );
+    let traffic = TrafficGen::new(TrafficCfg {
+        sessions: 4,
+        turns: 2,
+        arrival_rate: 0.5,
+        seed,
+    });
+    let mut backend = DeviceBackend::new(engine).expect("device backend");
+    run_replay(
+        &mut backend,
+        &taskgen,
+        &traffic,
+        PoolCfg {
+            slots: mcfg.gen_batch,
+            prompt_len: mcfg.prompt_len,
+            seq_len: mcfg.seq_len,
+            vocab: mcfg.vocab,
+            max_cohorts: 4,
+            admit_min: 1,
+        },
+        2,
+        SampleOpts { temperature: 0.7, greedy: false },
+        ParamView::cached("serve_test", 0, params),
+        seed,
+        100_000,
+    )
+    .expect("replay drains")
+}
+
+#[test]
+fn serving_replay_is_bitwise_deterministic_on_device() {
+    // Training disabled, equal seeds: the served completions — and the
+    // whole latency trace — must be byte-identical across runs. This is
+    // the device-backed face of the scripted-backend determinism test.
+    let Some(dir) = dev_dir() else { return };
+    let engine = Engine::load(&dir).expect("load dev engine");
+    let params = engine.init_policy().expect("init params");
+
+    let a = device_replay(&engine, &params, 42);
+    let b = device_replay(&engine, &params, 42);
+    assert!(!a.transcript.is_empty());
+    assert_eq!(a.transcript, b.transcript, "equal seeds must replay");
+    assert_eq!(a.sweeps, b.sweeps);
+    assert_eq!(a.ttft, b.ttft);
+    assert_eq!(a.retire, b.retire);
+    assert_eq!(a.requests, 4 * 2, "every (session, turn) served once");
+
+    // and the seed moves the trace: different arrivals, different runs
+    let c = device_replay(&engine, &params, 7);
+    assert!(
+        c.transcript != a.transcript || c.sweeps != a.sweeps,
+        "seed change must move the served trace"
+    );
+}
+
+#[test]
+fn serving_while_training_bounds_staleness_and_occupancy() {
+    // The full closed loop: live traffic is the prompt stream, the
+    // trainer consumes assembled rounds, and every decode sweep reads
+    // the latest published params. Round staleness must stay within the
+    // pipeline's queue bound, and continuous serving must not be less
+    // slot-efficient than the fixed-round counterfactual it replaces.
+    let Some(_dir) = dev_dir() else { return };
+    let cfg = serve_cfg("serve_train");
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+
+    // trace-derived length: 8 sessions x 2 turns / (8/2) groups = 4
+    // rounds = 4 steps; every turn's k candidates trained exactly once
+    assert_eq!(out.log.rows.len(), 4, "steps must come from the trace");
+    assert_eq!(out.episodes, 4 * 8, "turns trained exactly once");
+    assert_eq!(meta_u64(&out, "serve_requests"), 8 * 2);
+    assert_eq!(meta_u64(&out, "dropped_duplicate_rounds"), 0);
+    assert!(meta_u64(&out, "serve_tokens") > 0);
+
+    let bound = staleness_bound_updates(
+        cfg.staleness_bound,
+        cfg.gen_workers,
+        cfg.updates_per_batch,
+    );
+    for row in &out.log.rows {
+        let stale = row.values["staleness"] as u64;
+        assert!(
+            stale <= bound,
+            "served-round staleness {stale} escaped bound {bound}"
+        );
+    }
+    // per-candidate lag telemetry exists and respects the same bound
+    assert!(meta_f64(&out, "serve_lag_max") as u64 <= bound);
+
+    let occ = meta_f64(&out, "serve_occupancy");
+    let fixed = meta_f64(&out, "serve_occupancy_round_tier");
+    assert!(occ > 0.0 && fixed > 0.0, "occupancy telemetry missing");
+    assert!(
+        occ >= fixed,
+        "continuous serving occupancy {occ:.4} fell below the \
+         fixed-round tier {fixed:.4}"
+    );
+}
+
+#[test]
+fn serving_fault_injected_seat_panic_completes_exactly_once() {
+    // A scripted panic kills serving seat 0 mid-trace. The supervisor
+    // must respawn it with the delivered-turn skip set; the replacement
+    // re-serves only the lost in-flight turns, and the trainer's session
+    // accounting ends with every turn trained exactly once — no holes,
+    // no double-trained rounds.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = serve_cfg("serve_fault");
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 0,
+        round: 1,
+        kind: FaultKind::Panic,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+
+    assert_eq!(meta_u64(&out, "worker_restarts"), 1);
+    assert_eq!(out.log.rows.len(), 4);
+    assert_eq!(out.episodes, 4 * 8, "a turn was dropped or double-trained");
+    // retired-but-undelivered turns regenerate after the respawn, so the
+    // served count may exceed the trace — never undershoot it
+    assert!(meta_u64(&out, "serve_requests") >= 8 * 2);
+    let errs = out.log.meta.get("worker_errors").expect("death unrecorded");
+    assert!(
+        errs.contains("gen-worker-0"),
+        "worker_errors does not name the dead seat: {errs}"
+    );
+}
+
+#[test]
+fn serving_unrecoverable_seat_fails_naming_its_sessions() {
+    // Zero restarts: the dead seat's session partition can never
+    // complete (sessions do not migrate), so the run must fail loudly
+    // naming the seat and its stranded sessions — never hang waiting on
+    // turns that will not come, never return a truncated log as success.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = serve_cfg("serve_unrecoverable");
+    cfg.max_worker_restarts = 0;
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 0,
+        round: 1,
+        kind: FaultKind::Panic,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let err = coordinator::run(&cfg, &prep, false).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("gen-worker-0"),
+        "error does not name the dead seat: {msg}"
+    );
+    assert!(
+        msg.contains("serving sessions"),
+        "error does not name the stranded sessions: {msg}"
+    );
+}
+
+#[test]
+fn serving_respawn_skip_set_excludes_delivered_turns() {
+    // The respawn contract at the unit seam: a replacement seat's board
+    // built from the delivered-turn set schedules only what is left.
+    use async_rlhf::serve::session::SessionBoard;
+    use async_rlhf::serve::traffic::turn_uid;
+
+    let traffic = TrafficGen::new(TrafficCfg {
+        sessions: 4,
+        turns: 2,
+        arrival_rate: 8.0,
+        seed: 42,
+    });
+    // turn 0 of sessions 0 and 2 already trained before the death
+    let delivered: HashSet<u64> =
+        [turn_uid(0, 0, 2), turn_uid(2, 0, 2)].into_iter().collect();
+    let board = SessionBoard::new(&traffic, 2, 0, 1, &delivered)
+        .expect("board with skip set");
+    assert!(!board.all_done(), "turn 1s are still owed");
+    // sessions with their turn 0 delivered resume at turn 1; the rest
+    // start from the top — nothing is re-served, nothing is skipped
+    assert_eq!(board.incomplete(), vec![0, 1, 2, 3]);
+}
