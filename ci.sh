@@ -6,9 +6,9 @@
 #
 # Runs from the repo root; the crate lives under rust/. Benches emit
 # machine-readable perf snapshots (BENCH_hot_path.json, BENCH_gen_speed.json,
-# BENCH_staleness.json, BENCH_serving.json) when artifacts are present —
-# build them first with `python -m compile.aot` if you want the perf
-# trajectory recorded.
+# BENCH_staleness.json, BENCH_serving.json, BENCH_shard_scale.json) when
+# artifacts are present — build them first with `python -m compile.aot`
+# if you want the perf trajectory recorded.
 
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -37,15 +37,16 @@ if [[ "${1:-}" != "--fast" ]]; then
 fi
 cargo test -q
 
-echo "== invariant gates (staleness, pair gather, continuous, faults, serving) =="
+echo "== invariant gates (staleness, pair gather, continuous, faults, serving, shard) =="
 # the pipeline's staleness-bound tests, the pair-gather equivalence /
 # byte-counter tests, the continuous-pool slot-lifecycle tests, the
-# fault-injection / checkpoint-resume tests, and the serving front-end
-# tests are release-gating and already ran in the full `cargo test -q`
+# fault-injection / checkpoint-resume tests, the serving front-end
+# tests, and the sharded-trainer equivalence/bound tests are
+# release-gating and already ran in the full `cargo test -q`
 # above; here just assert they still EXIST (cargo exits 0 on a
 # zero-match filter, so a rename/module move would otherwise drop the
 # gate silently) — --list doesn't re-run anything
-for filter in staleness bounded_queue pair_gather continuous fault resume serving; do
+for filter in staleness bounded_queue pair_gather continuous fault resume serving shard; do
   # capture first: grep -q on the pipe would EPIPE cargo under pipefail
   listing=$(cargo test -q "$filter" -- --list 2>/dev/null)
   echo "$listing" | grep -q ": test" || {

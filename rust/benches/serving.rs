@@ -9,7 +9,7 @@
 //!   occupancy and p50/p99 TTFT / time-to-retire (sweep units).
 //! - **trained** (training clock on): a synthetic publish clock advances
 //!   the served params version every `PUBLISH_EVERY` sweeps, exactly the
-//!   cadence a concurrent trainer's `ParamSlot` publishes at. On top of
+//!   cadence a concurrent trainer's `ParamBus` publishes at. On top of
 //!   the replay columns this tier reports the served-params staleness
 //!   distribution: per-completion lag = publish version at retirement −
 //!   oldest version any of its tokens sampled under (p50/p99/max).

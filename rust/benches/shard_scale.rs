@@ -1,0 +1,162 @@
+//! Bench: shard scale — trainer data-parallel width S × pipeline mode.
+//!
+//! Runs the full RLHF loop at S ∈ {1, 2, 4} trainer shards under each
+//! pipeline mode (sync, async, serve) on the same prepared artifact and
+//! reports the headline round-train throughput: steps/sec over wall
+//! clock plus the train- and publish-phase seconds from the trainer
+//! timeline, alongside episode count and measured max staleness vs the
+//! sharded bound's fan-out term. Combos whose train-batch geometry does
+//! not tile across S (batch dim % S != 0) are skipped with a printed
+//! note — the shard pool refuses them loudly rather than padding.
+//!
+//! Results are dumped to `BENCH_shard_scale.json` (override the path
+//! with `ASYNC_RLHF_BENCH_OUT`; pick the artifact with
+//! `ASYNC_RLHF_BENCH_MODEL`). `cargo bench --bench shard_scale`.
+
+use async_rlhf::config::{ExpConfig, GenEngine, Mode};
+use async_rlhf::coordinator;
+use async_rlhf::gen::continuous::ContinuousEngine;
+use async_rlhf::metrics::Phase;
+use async_rlhf::util::bench::artifact_dir_or_skip;
+use async_rlhf::util::json::Json;
+
+const SHARDS: [usize; 3] = [1, 2, 4];
+const MODES: [(Mode, &str); 3] = [
+    (Mode::Sync, "sync"),
+    (Mode::Async, "async"),
+    (Mode::Serve, "serve"),
+];
+
+struct Point {
+    mode: &'static str,
+    shards: usize,
+    label: String,
+    steps: u64,
+    episodes: u64,
+    wall_secs: f64,
+    steps_per_sec: f64,
+    train_secs: f64,
+    publish_secs: f64,
+    max_staleness: f64,
+}
+
+fn main() {
+    println!("== shard scale: trainer shards S x pipeline mode ==");
+    let model = std::env::var("ASYNC_RLHF_BENCH_MODEL")
+        .unwrap_or_else(|_| "tldr_s".into());
+    let Some(_) = artifact_dir_or_skip(&model) else {
+        return;
+    };
+
+    let base = ExpConfig {
+        model: model.clone(),
+        steps: 8,
+        sft_steps: 60,
+        rm_steps: 40,
+        eval_prompts: 32,
+        run_dir: std::env::temp_dir().join("async_rlhf_bench_shard_scale"),
+        ..ExpConfig::default()
+    };
+    let prep = coordinator::prepare(&base, false).expect("prepare");
+    let serve_ok = ContinuousEngine::supported(&prep.engine);
+
+    let mut points: Vec<Point> = Vec::new();
+    for (mode, mode_name) in MODES {
+        if mode == Mode::Serve && !serve_ok {
+            println!(
+                "SKIP serve: bundle lacks prefill_dev/decode_dev \
+                 (rebuild artifacts)"
+            );
+            continue;
+        }
+        for shards in SHARDS {
+            let mut cfg = base.clone();
+            cfg.mode = mode;
+            cfg.trainer_shards = shards;
+            if mode == Mode::Serve {
+                // serve multiplexes sessions onto the continuous slot pool
+                cfg.gen_engine = GenEngine::Continuous;
+            }
+            let label = cfg.label();
+            let out = match coordinator::run(&cfg, &prep, false) {
+                Ok(out) => out,
+                // non-tiling geometry (batch dim % S != 0) is the one
+                // expected refusal; anything else should still surface
+                Err(e) => {
+                    println!("SKIP {label}: {e:#}");
+                    continue;
+                }
+            };
+            let totals = out.timeline.totals();
+            let wall = out.timeline.wall().max(1e-12);
+            let max_staleness = out
+                .log
+                .series("staleness")
+                .iter()
+                .map(|&(_, v)| v as f64)
+                .fold(0.0, f64::max);
+            points.push(Point {
+                mode: mode_name,
+                shards,
+                label,
+                steps: cfg.steps,
+                episodes: out.episodes,
+                wall_secs: wall,
+                steps_per_sec: cfg.steps as f64 / wall,
+                train_secs: *totals.get(&Phase::Train).unwrap_or(&0.0),
+                publish_secs: *totals.get(&Phase::Publish).unwrap_or(&0.0),
+                max_staleness,
+            });
+        }
+    }
+
+    println!(
+        "{:>6} {:>3} {:>6} {:>9} {:>9} {:>9} {:>10} {:>10}",
+        "mode", "S", "steps", "wall_s", "steps/s", "train_s", "publish_s",
+        "max_stale"
+    );
+    for p in &points {
+        println!(
+            "{:>6} {:>3} {:>6} {:>9.2} {:>9.3} {:>9.2} {:>10.3} {:>10.0}",
+            p.mode,
+            p.shards,
+            p.steps,
+            p.wall_secs,
+            p.steps_per_sec,
+            p.train_secs,
+            p.publish_secs,
+            p.max_staleness,
+        );
+    }
+
+    // --- machine-readable dump for the perf trajectory ---
+    let report = Json::obj(vec![
+        ("model", Json::str(&model)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("mode", Json::str(p.mode)),
+                            ("shards", Json::num(p.shards as f64)),
+                            ("label", Json::str(&p.label)),
+                            ("steps", Json::num(p.steps as f64)),
+                            ("episodes", Json::num(p.episodes as f64)),
+                            ("wall_secs", Json::num(p.wall_secs)),
+                            ("steps_per_sec", Json::num(p.steps_per_sec)),
+                            ("train_secs", Json::num(p.train_secs)),
+                            ("publish_secs", Json::num(p.publish_secs)),
+                            ("max_staleness", Json::num(p.max_staleness)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out_path = std::env::var("ASYNC_RLHF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_shard_scale.json".into());
+    std::fs::write(&out_path, report.to_string()).expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -307,6 +307,13 @@ pub struct ExpConfig {
     /// owning their own engine, partitioning the prompt stream. Ignored
     /// in sync mode (generation runs inline on the trainer).
     pub gen_workers: usize,
+    /// Data-parallel trainer shards S (`--trainer-shards`): threads each
+    /// owning their own engine and training a disjoint 1/S slice of every
+    /// batch, combined per step by a deterministic tree all-reduce
+    /// (`runtime::reduce`). S=1 (default) is the unsharded trainer,
+    /// bitwise. Publication fans out to S extra `ParamBus` seats, adding
+    /// S-1 to the worst-case staleness bound (`coordinator::pipeline`).
+    pub trainer_shards: usize,
     /// Async round-queue depth K (`--staleness-bound`): up to K rounds
     /// may sit queued between generation and training, so training data
     /// is at most K+1 policy versions stale (at the default
@@ -390,6 +397,7 @@ impl Default for ExpConfig {
             updates_per_batch: 1,
             k_samples: 2,
             gen_workers: 1,
+            trainer_shards: 1,
             staleness_bound: 0,
             max_cohorts: 4,
             admit_min: 1,
@@ -449,6 +457,8 @@ impl ExpConfig {
         c.updates_per_batch = args.get_parse("t", c.updates_per_batch)?;
         c.k_samples = args.get_parse("k", c.k_samples)?;
         c.gen_workers = args.get_parse("gen-workers", c.gen_workers)?;
+        c.trainer_shards =
+            args.get_parse("trainer-shards", c.trainer_shards)?;
         c.staleness_bound =
             args.get_parse("staleness-bound", c.staleness_bound)?;
         c.max_cohorts = args.get_parse("max-cohorts", c.max_cohorts)?;
@@ -519,11 +529,8 @@ impl ExpConfig {
         if !(self.stall_timeout_secs > 0.0) {
             bail!("--stall-timeout-secs must be > 0");
         }
-        if self.gen_workers > 64 {
-            bail!(
-                "--gen-workers is capped at 64 (lane ownership is a u64 \
-                 bitmask in the supervisor)"
-            );
+        if self.trainer_shards == 0 {
+            bail!("--trainer-shards must be >= 1 (1 = unsharded)");
         }
         if self.mode == Mode::Sync {
             let d = ExpConfig::default();
@@ -620,6 +627,13 @@ impl ExpConfig {
         } else {
             format!("_w{}q{}", self.gen_workers, self.staleness_bound)
         };
+        // `d` (data-parallel), not `s`: the label's trailing _s segment
+        // is the seed
+        let shards = if self.trainer_shards == 1 {
+            String::new()
+        } else {
+            format!("_d{}", self.trainer_shards)
+        };
         let admit = if (self.max_cohorts, self.admit_min) == (4, 1) {
             String::new()
         } else {
@@ -637,7 +651,7 @@ impl ExpConfig {
             )
         };
         format!(
-            "{}_{}_{}{pool}{gen}{admit}{serve}_n{}_t{}_k{}_s{}",
+            "{}_{}_{}{pool}{shards}{gen}{admit}{serve}_n{}_t{}_k{}_s{}",
             self.model,
             self.algo,
             self.mode.name(),
@@ -839,9 +853,35 @@ mod tests {
             "t", "--mode", "async", "--stall-timeout-secs", "0"
         ])
         .is_err());
-        // lane ownership is a u64 bitmask
+        // the supervisor's lane bitset grows with the pool: worker
+        // counts past the old u64-bitmask cap of 64 are legal now
         assert!(parse(&["t", "--mode", "async", "--gen-workers", "65"])
-            .is_err());
+            .is_ok());
+    }
+
+    #[test]
+    fn trainer_shard_knob_parses_validates_and_labels() {
+        // default: unsharded, and the label stays untouched (existing
+        // run/checkpoint directories keep their names) — an explicit
+        // S=1 must name the same run directory as the default
+        let c = parse(&["t"]).unwrap();
+        assert_eq!(c.trainer_shards, 1);
+        assert!(!c.label().contains("_d1"), "label: {}", c.label());
+        let explicit = parse(&["t", "--trainer-shards", "1"]).unwrap();
+        assert_eq!(explicit.label(), c.label());
+        // sharding is mode-orthogonal: it shapes the trainer, not the
+        // round source
+        let c = parse(&["t", "--trainer-shards", "4"]).unwrap();
+        assert_eq!(c.trainer_shards, 4);
+        assert!(c.label().contains("_d4_"), "label: {}", c.label());
+        let c = parse(&[
+            "t", "--mode", "async", "--trainer-shards", "2",
+            "--gen-workers", "2",
+        ])
+        .unwrap();
+        assert!(c.label().contains("_w2q0_d2_"), "label: {}", c.label());
+        // S=0 is meaningless
+        assert!(parse(&["t", "--trainer-shards", "0"]).is_err());
     }
 
     #[test]

@@ -6,13 +6,19 @@
 //!   and logs — identically for every schedule. Sources:
 //!   [`pipeline::InlineSource`] (generate on the trainer's engine — the
 //!   synchronous schedule, with the §3.2 N-minibatch ladder) and
-//!   [`pipeline::WorkerPool`] (M generation worker threads behind a
+//!   [`pool::WorkerPool`] (M generation worker threads behind a
 //!   **bounded** round queue of depth K — with one worker, queue depth
 //!   K ⇒ training data is at most K+1 policy versions stale at the
 //!   default one update per batch; K=0 is a rendezvous handover, the
 //!   paper's Cleanba one-step coordinator of §3.5/Algorithm 1).
-//! - [`sync`] / [`asynchronous`]: thin mode constructors over the
-//!   pipeline, kept for CLI compatibility (`--mode sync|async`).
+//!   [`run`] dispatches `--mode sync|async|serve` straight onto these
+//!   sources — the schedules differ only in who feeds the loop.
+//! - [`pool`]: the supervised generation worker pool (seat supervision,
+//!   lane ledger, heartbeat watchdog, fault injection) behind the async
+//!   schedule and reused by serve's session seats.
+//! - [`shard`]: data-parallel trainer shards (`--trainer-shards S`) —
+//!   each rank trains its slice of every batch on its own PJRT client,
+//!   combined by a deterministic tree all-reduce.
 //! - [`trainer`]: shared round machinery (labelling, batch assembly,
 //!   fused train-step invocation, staleness accounting).
 //! - [`checkpoint`]: crash-safe snapshot/resume of the trainer loop
@@ -20,11 +26,11 @@
 //!   prompt cursors, written atomically at step boundaries.
 //! - [`pretrain`]: the SFT + proxy-RM pipeline that precedes RLHF.
 
-pub mod asynchronous;
 pub mod checkpoint;
 pub mod pipeline;
+pub mod pool;
 pub mod pretrain;
-pub mod sync;
+pub mod shard;
 pub mod trainer;
 
 use anyhow::Result;
@@ -108,11 +114,41 @@ pub fn prepare(cfg: &ExpConfig, verbose: bool) -> Result<Prepared> {
     Ok(Prepared { engine, taskgen, sft_params, rm_params, cross_rm: None })
 }
 
-/// Dispatch an RLHF run by mode.
+/// Dispatch an RLHF run by mode: every schedule is the one
+/// [`pipeline::run`] trainer loop fed by a mode-specific
+/// [`pipeline::RoundSource`] (PR 3's thin per-mode constructor modules
+/// collapsed into this match once the sources converged).
 pub fn run(cfg: &ExpConfig, prep: &Prepared, verbose: bool) -> Result<RunOutput> {
     match cfg.mode {
-        Mode::Sync => sync::run(cfg, prep, verbose),
-        Mode::Async => asynchronous::run(cfg, prep, verbose),
+        // synchronous (paper Fig 2 top): generate on the trainer's own
+        // engine via the §3.2 N-minibatch ladder; a `--resume` restart
+        // re-enters the inline RNG and prompt cursors exactly, so sync
+        // kill-and-resume is bitwise identical to an uninterrupted run
+        Mode::Sync => pipeline::run(
+            cfg,
+            prep,
+            |_origin, resume, _bus| {
+                let src: Box<dyn pipeline::RoundSource> =
+                    Box::new(pipeline::InlineSource::new(cfg, prep, resume)?);
+                Ok(src)
+            },
+            verbose,
+        ),
+        // asynchronous (paper Fig 2 bottom, Algorithm 1): a supervised
+        // worker pool behind a bounded round queue; a `--resume` restart
+        // re-enters each lane's cursor under a fresh RNG epoch —
+        // exactly-once delivery, not bitwise replay
+        Mode::Async => pipeline::run(
+            cfg,
+            prep,
+            |origin, resume, bus| {
+                let src: Box<dyn pipeline::RoundSource> = Box::new(
+                    pool::WorkerPool::spawn(cfg, prep, origin, resume, bus.clone())?,
+                );
+                Ok(src)
+            },
+            verbose,
+        ),
         Mode::Serve => crate::serve::run(cfg, prep, verbose),
     }
 }

@@ -12,10 +12,35 @@
 //!   including the §3.2 N-minibatch off-policy ladder. Generation reads
 //!   the trainer's live device parameters ([`TrainState::param_view`]),
 //!   so the policy never leaves the device.
-//! - [`WorkerPool`] runs M generation worker threads, each owning its
-//!   own `Engine`/PJRT backend, feeding a **bounded** round queue of
-//!   depth K. `M = 1, K = 0` is a rendezvous handover — exactly the
-//!   Cleanba one-step off-policy coordinator of paper §3.5/Algorithm 1.
+//! - [`super::pool::WorkerPool`] runs M generation worker threads, each
+//!   owning its own `Engine`/PJRT backend, feeding a **bounded** round
+//!   queue of depth K. `M = 1, K = 0` is a rendezvous handover — exactly
+//!   the Cleanba one-step off-policy coordinator of paper §3.5/Algorithm
+//!   1. (The pool, its supervision and the lane ledger live in
+//!   `coordinator/pool.rs`; [`SessionSource`] below reuses its seat
+//!   plumbing for serve-while-training.)
+//!
+//! ## Publication: the [`ParamBus`] fan-out
+//!
+//! After every optimizer step the trainer loop publishes the new policy
+//! to a [`ParamBus`]: one latest-wins [`ParamSlot`] per subscriber seat
+//! (gen/serve workers first, then trainer shards), so a publish is
+//! S + M pointer swaps — the params are downloaded to host once and the
+//! `Arc` fans out; no subscriber ever copies them. Subscribers poll
+//! their own seat, so a slow reader never contends with the rest.
+//!
+//! ## Sharded training
+//!
+//! `--trainer-shards S` (S > 1) runs S trainer engines, each owning its
+//! own PJRT client and device-resident param/optimizer cache
+//! ([`super::shard::ShardPool`]). Every train batch is split into S
+//! disjoint row slices (tiled back to the compiled batch shape — the
+//! AOT artifacts are fixed-shape); after the per-shard updates a
+//! deterministic tree all-reduce ([`crate::runtime::reduce`]) averages
+//! params, Adam moments and metric vectors in fixed rank order, so the
+//! result is bitwise-reproducible at any S. The S=1 path does not
+//! construct a shard pool at all and is bitwise-identical to the
+//! unsharded trainer.
 //!
 //! ## The staleness invariant
 //!
@@ -37,16 +62,25 @@
 //! Per-config measurements land in `BENCH_staleness.json` via
 //! `benches/staleness.rs`.
 //!
+//! Sharded publish re-derives the bound: the S shard seats receive a
+//! publish as S separate pointer swaps, so in an adversarial schedule a
+//! subscriber can observe a publish up to S − 1 update units after the
+//! first seat did — [`staleness_bound_sharded`] adds that `+ (S − 1)`
+//! fan-out term. The real trainer barriers all shards *before* each
+//! publish (lag 0), so measured staleness stays within the unsharded
+//! bound; the fan-out term is proven tight in the discrete-model test
+//! (`tests/integration_shard.rs`).
+//!
 //! ## The failure model
 //!
 //! Worker pools are **supervised**: each seat's body runs under
-//! `catch_unwind` and reports a structured [`WorkerExit`]; the trainer,
-//! while waiting for rounds, reaps exits and heartbeats. A dead seat is
+//! `catch_unwind` and reports a structured exit; the trainer, while
+//! waiting for rounds, reaps exits and heartbeats. A dead seat is
 //! respawned on a fresh engine up to `--max-worker-restarts` times — the
 //! replacement resumes the dead worker's exact prompt-partition position
 //! via the shared **lane ledger** (advanced only *after* a round is
 //! handed over, so a crash re-generates at-least-once and the trainer's
-//! [`LaneAccounts`] drop the duplicates: exactly-once into the
+//! lane accounts drop the duplicates: exactly-once into the
 //! optimizer). When restarts are exhausted, surviving workers inherit the
 //! orphaned lanes (cursor re-striding) — a pool degrades gracefully down
 //! to one worker before the run fails loudly. Transient engine faults
@@ -58,7 +92,6 @@
 
 use std::collections::{HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
@@ -67,27 +100,30 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::checkpoint::{self, Checkpoint, SourceState, StalenessAccum};
+use super::pool::{
+    beat, maybe_inject, panic_message, round_from_groups, Accept, GenMsg,
+    SeatShared, SlotCtl, SpawnCtx, WorkerExit,
+};
 use super::pretrain::RLHF_RANGE;
+use super::shard::ShardPool;
 use super::trainer::{
-    assemble, batch_data_version, batch_token_versions, generate_round,
+    assemble, batch_data_version, batch_token_versions,
     generate_round_staged, round_metrics, rounds_per_batch, sample_opts,
     stage_and_label, staleness, train_on_batch, LabelScratch, LabelledRound,
-    Round, SourcedRound, ROUND_ORIGIN,
+    SourcedRound, ROUND_ORIGIN,
 };
 use super::{Prepared, RunOutput};
-use crate::config::{ExpConfig, FaultKind, FaultPlan, GenEngine};
-use crate::data::{Task, TaskGen};
-use crate::gen::continuous::{
-    AdmitSeq, Completed, DeviceBackend, Pool, PoolCfg, PoolStats,
-    RoundAssembler,
-};
-use crate::gen::{GenBatch, Generator, SampleOpts};
+use crate::config::{ExpConfig, GenEngine, Mode};
+use crate::data::TaskGen;
+use crate::gen::continuous::{DeviceBackend, PoolCfg, PoolStats, RoundAssembler};
+use crate::gen::{Generator, SampleOpts};
 use crate::metrics::{Phase, RunLog, Timeline};
 use crate::runtime::{Engine, ParamView, RetryPolicy, TrainState, RETRY_STREAM};
 use crate::serve::frontend::ServeMux;
 use crate::serve::session::SessionBoard;
 use crate::serve::traffic::{turn_uid, uid_session_turn, TrafficCfg, TrafficGen};
 use crate::util::bench::pct;
+use crate::util::bitset::AtomicBitSet;
 use crate::util::rng::Pcg32;
 
 /// Prompts consumed by one generation round: the cursor stride. The
@@ -109,6 +145,26 @@ pub fn cursor_stride(gen_batch: u64, k: usize) -> u64 {
 pub fn staleness_bound_updates(k_bound: usize, m: usize, t: usize) -> u64 {
     assert!(m >= 1 && t >= 1, "worker pools have m >= 1 and t >= 1");
     ((k_bound + m + 1) * t) as u64 - 1
+}
+
+/// [`staleness_bound_updates`] re-derived for sharded publish. A publish
+/// is S pointer swaps across the shard seats of the [`ParamBus`], not one
+/// atomic broadcast: in an adversarial schedule a subscriber's seat can
+/// be the *last* swapped while other seats already carried the next
+/// publications, so the freshest version it has seen trails the freshest
+/// published by up to `S − 1` update units — the fan-out term. For S = 1
+/// the term vanishes and the bound reduces exactly to the unsharded one.
+/// (The real trainer barriers every shard before the loop publishes, so
+/// measured staleness also satisfies the tighter unsharded bound; this
+/// is the schedule-free guarantee.)
+pub fn staleness_bound_sharded(
+    k_bound: usize,
+    m: usize,
+    t: usize,
+    s: usize,
+) -> u64 {
+    assert!(s >= 1, "shard counts are >= 1");
+    staleness_bound_updates(k_bound, m, t) + (s as u64 - 1)
 }
 
 /// Latest-wins published-policy slot. The trainer overwrites, workers
@@ -163,6 +219,57 @@ impl ParamSlot {
     }
 }
 
+/// Versioned publish fan-out: one latest-wins [`ParamSlot`] per
+/// subscriber seat. Seats `[0, M)` belong to the generation / serving
+/// workers, seats `[M, M + S)` to the trainer shards; the trainer loop
+/// publishes by swapping the same `Arc` into every seat (S + M pointer
+/// moves, one host download, zero broadcast copies), and each subscriber
+/// polls only its own seat — no reader ever contends with another.
+///
+/// Each seat individually is torn-read-free and monotone (the
+/// [`ParamSlot`] lock covers the version/params pair); across seats a
+/// publish is *not* atomic, which is exactly the `+ (S − 1)` fan-out
+/// term of [`staleness_bound_sharded`].
+pub struct ParamBus {
+    seats: Box<[ParamSlot]>,
+}
+
+impl ParamBus {
+    /// A bus of `seats` subscriber seats, every one seeded with the same
+    /// initial publication (SFT params at version 0, or the checkpoint's
+    /// policy at its version under `--resume`).
+    pub fn new(seats: usize, version: u64, params: Arc<[f32]>) -> ParamBus {
+        assert!(seats >= 1, "a param bus needs at least one subscriber");
+        ParamBus {
+            seats: (0..seats)
+                .map(|_| ParamSlot::new(version, params.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn seats(&self) -> usize {
+        self.seats.len()
+    }
+
+    /// Publish `params` as `version` to every seat: one pointer swap per
+    /// seat, sharing a single `Arc`.
+    pub fn publish(&self, version: u64, params: Arc<[f32]>) {
+        for seat in self.seats.iter() {
+            seat.publish(version, params.clone());
+        }
+    }
+
+    /// The freshest publication on `seat` newer than `have`, if any.
+    pub fn fetch(&self, seat: usize, have: u64) -> Option<(u64, Arc<[f32]>)> {
+        self.seats[seat].fetch(have)
+    }
+
+    /// `seat`'s current publication unconditionally.
+    pub fn latest(&self, seat: usize) -> (u64, Arc<[f32]>) {
+        self.seats[seat].latest()
+    }
+}
+
 /// What the trainer loop exposes to its round source on every call: the
 /// trainer's engine and optimizer state (inline generation reads the live
 /// device parameters, worker pools snapshot them at publish), the current
@@ -197,11 +304,6 @@ pub trait RoundSource {
     /// handover (in-flight worker rounds are not yet episodes).
     fn episodes(&self) -> u64;
 
-    /// Called once after every optimizer step, with `cx.version` already
-    /// bumped. Worker pools snapshot and publish the new policy here;
-    /// inline sources read the live device buffer and need not.
-    fn publish(&mut self, cx: TrainerCx<'_>) -> Result<()>;
-
     /// The source's resumable position for a crash-safe checkpoint, or
     /// `None` when the source is not at a clean boundary (e.g. the sync
     /// N-ladder mid-refill, holding rounds a resumed process could not
@@ -216,10 +318,17 @@ pub trait RoundSource {
 /// The single RLHF trainer loop, written once against [`RoundSource`]:
 /// pull `rounds_per_batch` rounds, stage + label them, assemble the
 /// algorithm-specific batch, take `updates_per_batch` optimizer steps,
-/// publish, log. `make_source` receives the shared timeline origin so
-/// worker gen-spans land on the trainer's clock, plus the restored
-/// checkpoint (when `--resume`) so sources re-enter their exact stream
-/// position.
+/// publish the new policy on the [`ParamBus`], log. `make_source`
+/// receives the shared timeline origin so worker gen-spans land on the
+/// trainer's clock, the restored checkpoint (when `--resume`) so sources
+/// re-enter their exact stream position, and the bus (already seeded)
+/// for worker seats to subscribe to.
+///
+/// The loop owns publication: after every optimizer step the new params
+/// are downloaded to host once and fanned out to every subscriber seat —
+/// worker seats `[0, M)` plus shard seats `[M, M + S)`. Runs with no
+/// subscribers (synchronous, unsharded) skip the download entirely,
+/// exactly as before.
 ///
 /// With `--checkpoint-every N`, every N-th step atomically snapshots the
 /// optimizer triple, staleness accumulators and the source's cursors into
@@ -231,6 +340,7 @@ pub fn run<'p>(
     make_source: impl FnOnce(
         Instant,
         Option<&Checkpoint>,
+        &Arc<ParamBus>,
     ) -> Result<Box<dyn RoundSource + 'p>>,
     verbose: bool,
 ) -> Result<RunOutput> {
@@ -258,7 +368,27 @@ pub fn run<'p>(
     } else {
         None
     };
-    let mut source = make_source(timeline.origin(), restored.as_ref())?;
+    // seat layout: worker seats [0, M) — none in sync mode, where
+    // generation reads the live device params — then shard seats
+    // [M, M + S). The bus always exists (seeded exactly as the worker
+    // pool's param slot used to be); whether anything is *published* to
+    // it is gated on there being a subscriber.
+    let worker_seats = match cfg.mode {
+        Mode::Sync => 0,
+        _ => cfg.gen_workers.max(1),
+    };
+    let shard_count = cfg.trainer_shards.max(1);
+    let (init_version, init_params): (u64, Arc<[f32]>) = match &restored {
+        Some(c) => (c.version, Arc::from(&c.params[..])),
+        None => (0, Arc::from(&sft_params[..])),
+    };
+    let bus = Arc::new(ParamBus::new(
+        worker_seats + shard_count,
+        init_version,
+        init_params,
+    ));
+    let publish_active = worker_seats > 0 || shard_count > 1;
+    let mut source = make_source(timeline.origin(), restored.as_ref(), &bus)?;
     let mut log = RunLog::new();
     log.set_meta("label", cfg.label());
 
@@ -290,6 +420,22 @@ pub fn run<'p>(
     // set when a checkpoint came due but the source wasn't at a clean
     // boundary — carries the obligation to the next step
     let mut ckpt_pending = false;
+    // S > 1: spin up the data-parallel trainer shards (their own PJRT
+    // clients, subscribing to bus seats [M, M + S)); S = 1 keeps the
+    // unsharded path bitwise-untouched
+    let mut shards = if shard_count > 1 {
+        log.set_meta("trainer_shards", shard_count);
+        Some(ShardPool::spawn(
+            cfg.artifact_dir(),
+            engine,
+            cfg.algo.artifact(),
+            shard_count,
+            bus.clone(),
+            worker_seats,
+        )?)
+    } else {
+        None
+    };
 
     let result = (|| -> Result<()> {
         while step < cfg.steps {
@@ -316,28 +462,49 @@ pub fn run<'p>(
                         &mut scratch,
                     )
                 })?;
-                rounds.push(LabelledRound { round: sr.round, labels, resident });
+                rounds.push(LabelledRound {
+                    round: sr.round,
+                    labels,
+                    // sharded training consumes host batch slices (each
+                    // shard re-uploads its slice to its own device), so
+                    // the main engine's staged buffers are dropped to
+                    // force the bitwise-identical host assembly path
+                    resident: if shards.is_some() { None } else { resident },
+                });
             }
 
             let batch = assemble(engine, cfg.algo, &rounds, cfg.k_samples)?;
             let all_metrics = timeline.record(Phase::Train, || {
-                train_on_batch(
-                    engine,
-                    &mut state,
-                    &batch,
-                    cfg.lr,
-                    cfg.updates_per_batch,
-                )
+                match shards.as_mut() {
+                    Some(sp) => sp.train(
+                        engine,
+                        &mut state,
+                        &batch,
+                        cfg.lr,
+                        cfg.updates_per_batch,
+                        version,
+                    ),
+                    None => train_on_batch(
+                        engine,
+                        &mut state,
+                        &batch,
+                        cfg.lr,
+                        cfg.updates_per_batch,
+                    ),
+                }
             })?;
             version += cfg.updates_per_batch as u64;
             step += 1;
 
-            source.publish(TrainerCx {
-                engine,
-                state: &mut state,
-                version,
-                timeline: &mut timeline,
-            })?;
+            if publish_active {
+                // device -> host once, then one latest-wins pointer swap
+                // per subscriber seat (S + M swaps, zero copies)
+                timeline.record(Phase::Publish, || -> Result<()> {
+                    let host = state.params_host(engine)?;
+                    bus.publish(version, Arc::from(host));
+                    Ok(())
+                })?;
+            }
 
             let stale = staleness(version, batch_data_version(&rounds));
             accum.sum += stale;
@@ -418,11 +585,17 @@ pub fn run<'p>(
     })();
 
     // tear the source down whether or not the loop succeeded (a worker
-    // blocked in `send` must be released before join)
+    // blocked in `send` must be released before join); shard threads are
+    // torn down the same way — dropping the job senders unblocks them
     let episodes = source.episodes();
     let finish = source.finish(&mut log);
+    let shard_finish = match shards.take() {
+        Some(sp) => sp.finish(),
+        None => Ok(()),
+    };
     result?;
     finish?;
+    shard_finish?;
 
     log.set_meta(
         "mean_staleness",
@@ -565,12 +738,6 @@ impl RoundSource for InlineSource<'_> {
         self.generated * self.gen_bs
     }
 
-    fn publish(&mut self, _cx: TrainerCx<'_>) -> Result<()> {
-        // generation reads the trainer's live device parameters directly;
-        // there is nothing to move
-        Ok(())
-    }
-
     fn snapshot(&self) -> Option<SourceState> {
         if !self.buffered.is_empty() {
             // mid-ladder: buffered rounds were generated by a policy a
@@ -590,1043 +757,6 @@ impl RoundSource for InlineSource<'_> {
 
     fn finish(self: Box<Self>, _log: &mut RunLog) -> Result<()> {
         Ok(())
-    }
-}
-
-// ---------------------------------------------------------------------------
-// WorkerPool: M generation workers, bounded round queue of depth K
-// ---------------------------------------------------------------------------
-
-/// One round crossing the worker → trainer queue, tagged with the lane
-/// (prompt-partition stripe) it came from so the trainer's
-/// [`LaneAccounts`] can enforce exactly-once delivery across respawns.
-struct GenMsg {
-    round: Round,
-    lane: usize,
-    /// Continuous engine only: the prompt indices retired into this round
-    /// (continuous lanes retire out of admission order, so block-cursor
-    /// accounting does not apply).
-    indices: Option<Vec<u64>>,
-}
-
-/// Structured exit report of one worker seat: sent on every exit path —
-/// clean retirement, engine error, or caught panic.
-struct WorkerExit {
-    slot: usize,
-    outcome: Result<(f64, u64)>,
-}
-
-/// Supervisor-side control block of one worker seat: the lanes it owns
-/// (a bitmask — hence the 64-worker cap in config validation) and its
-/// last heartbeat, in milliseconds since the trainer timeline origin.
-struct SlotCtl {
-    lanes: AtomicU64,
-    beat_ms: AtomicU64,
-}
-
-fn beat(ctl: &SlotCtl, origin: Instant) {
-    ctl.beat_ms
-        .store(origin.elapsed().as_millis() as u64, Ordering::SeqCst);
-}
-
-/// Lane indices set in `mask`, ascending.
-fn lanes_of(mask: u64) -> impl Iterator<Item = usize> {
-    (0..64usize).filter(move |l| mask & (1u64 << l) != 0)
-}
-
-/// The lane a worker should generate for next: the one whose cursor is
-/// furthest behind (ties to the lowest lane), so an heir that inherited
-/// orphaned lanes round-robins them instead of starving one.
-fn pick_lane(mask: u64, ledger: &[AtomicU64]) -> Result<usize> {
-    lanes_of(mask)
-        .min_by_key(|&l| (ledger[l].load(Ordering::SeqCst), l))
-        .ok_or_else(|| {
-            anyhow!(
-                "worker scheduled with an empty lane mask ({mask:#b}) — \
-                 supervision should have retired this seat"
-            )
-        })
-}
-
-/// Successor of `idx` in one lane's admission sequence (blocks of
-/// `stride` consecutive indices starting at `start`, hopping `hop`
-/// between blocks).
-fn lane_next(idx: u64, start: u64, stride: u64, hop: u64) -> u64 {
-    let rel = idx - start;
-    let (block, off) = (rel / hop, rel % hop);
-    debug_assert!(off < stride, "index off the lane's admission sequence");
-    if off + 1 < stride {
-        idx + 1
-    } else {
-        start + (block + 1) * hop
-    }
-}
-
-fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
-}
-
-enum Accept {
-    Fresh,
-    Duplicate,
-}
-
-/// Trainer-side delivery accounting, per lane. The worker-side ledger
-/// advances only *after* a successful handover (at-least-once); these
-/// accounts turn that into exactly-once by dropping replays — and by
-/// failing loudly on a *hole*, which no recovery path can legally
-/// produce.
-struct LaneAccounts {
-    stride: u64,
-    hop: u64,
-    starts: Vec<u64>,
-    /// Next index the trainer is owed per lane: block start for
-    /// round-synchronous engines, delivered frontier for continuous.
-    expected: Vec<u64>,
-    /// Continuous engines: indices delivered above the frontier.
-    delivered: Vec<HashSet<u64>>,
-    duplicates: u64,
-}
-
-impl LaneAccounts {
-    fn new(starts: Vec<u64>, stride: u64, hop: u64) -> LaneAccounts {
-        let n = starts.len();
-        LaneAccounts {
-            stride,
-            hop,
-            expected: starts.clone(),
-            starts,
-            delivered: vec![HashSet::new(); n],
-            duplicates: 0,
-        }
-    }
-
-    fn resume(
-        starts: Vec<u64>,
-        stride: u64,
-        hop: u64,
-        cursors: &[u64],
-        skip: &[Vec<u64>],
-    ) -> LaneAccounts {
-        let mut a = LaneAccounts::new(starts, stride, hop);
-        a.expected = cursors.to_vec();
-        for (lane, s) in skip.iter().enumerate() {
-            a.delivered[lane] = s.iter().copied().collect();
-        }
-        a
-    }
-
-    fn accept(&mut self, msg: &GenMsg) -> Result<Accept> {
-        match &msg.indices {
-            Some(indices) => self.accept_indices(msg.lane, indices),
-            None => self.accept_block(msg.lane, msg.round.start_index),
-        }
-    }
-
-    /// Round-synchronous engines: a round is one whole block; the lane
-    /// cursor either matches (fresh), trails (replay after a respawn —
-    /// dropped), or was skipped (a lost round: loud failure).
-    fn accept_block(&mut self, lane: usize, start: u64) -> Result<Accept> {
-        let exp = self.expected[lane];
-        if start == exp {
-            self.expected[lane] = exp + self.hop;
-            Ok(Accept::Fresh)
-        } else if start < exp {
-            self.duplicates += 1;
-            Ok(Accept::Duplicate)
-        } else {
-            bail!(
-                "prompt partition violated: lane {lane} jumped from index \
-                 {exp} to {start} — a round was lost without recovery"
-            )
-        }
-    }
-
-    /// Continuous engines: a round is a set of retired prompt indices. A
-    /// respawned worker's skip set must make every round all-fresh or
-    /// all-replay; a mixed round means the skip set missed a delivery.
-    fn accept_indices(&mut self, lane: usize, indices: &[u64]) -> Result<Accept> {
-        let fresh = indices
-            .iter()
-            .filter(|&&i| {
-                i >= self.expected[lane] && !self.delivered[lane].contains(&i)
-            })
-            .count();
-        if fresh == 0 {
-            self.duplicates += 1;
-            return Ok(Accept::Duplicate);
-        }
-        if fresh < indices.len() {
-            bail!(
-                "continuous round on lane {lane} mixes {fresh} fresh and {} \
-                 replayed prompt indices — the respawn skip set missed a \
-                 delivery",
-                indices.len() - fresh
-            );
-        }
-        self.delivered[lane].extend(indices.iter().copied());
-        // advance the frontier across everything now contiguous
-        while self.delivered[lane].remove(&self.expected[lane]) {
-            self.expected[lane] = lane_next(
-                self.expected[lane],
-                self.starts[lane],
-                self.stride,
-                self.hop,
-            );
-        }
-        Ok(Accept::Fresh)
-    }
-}
-
-/// Everything needed to (re)spawn a worker seat, owned so replacement
-/// threads can be built mid-run without borrowing the config.
-#[derive(Clone)]
-struct SpawnCtx {
-    artifact_dir: PathBuf,
-    task: Task,
-    prompt_len: usize,
-    resp_len: usize,
-    seed: u64,
-    opts: SampleOpts,
-    k: usize,
-    gen_engine: GenEngine,
-    max_cohorts: usize,
-    admit_min: usize,
-    stride: u64,
-    hop: u64,
-    retries: u32,
-    stall_timeout: f64,
-    fault: Option<FaultPlan>,
-    origin: Instant,
-    max_restarts: usize,
-    continuous: bool,
-}
-
-/// The shared handles a worker seat runs against.
-#[derive(Clone)]
-struct SeatShared {
-    tx: mpsc::SyncSender<GenMsg>,
-    pslot: Arc<ParamSlot>,
-    stop: Arc<AtomicBool>,
-    ledger: Arc<Vec<AtomicU64>>,
-    ctl: Arc<Vec<SlotCtl>>,
-    fault_fired: Arc<AtomicBool>,
-    retry_count: Arc<AtomicU64>,
-}
-
-/// M generation worker threads, each owning its own PJRT backend (the
-/// `xla` crate's client is not `Send`, which conveniently mirrors the
-/// paper's separate generation/training processes), feeding the trainer
-/// over a bounded queue of depth K:
-///
-/// - each **worker** pulls the freshest published policy, generates one
-///   round, and hands it over `send`, which blocks while the queue is
-///   full — that back-pressure is the staleness guarantee;
-/// - the **trainer** pops rounds; with K = 0 the queue is a rendezvous
-///   and `M = 1, K = 0` reproduces the seed Cleanba coordinator exactly
-///   (θ_{t+1} updated with data from θ_t, paper §3.5).
-///
-/// Workers partition the prompt stream by striding: worker `w` starts at
-/// `RLHF_RANGE + w·stride` and hops `M·stride` per round, so pools of any
-/// width consume disjoint, contiguously-tiling prompt ranges.
-///
-/// Parameter publication is a latest-wins [`ParamSlot`]: the trainer
-/// downloads its device-resident params once per publish, snapshots them
-/// into an `Arc`, and the swap itself is a pointer move — workers clone
-/// the `Arc`, not the parameters, and re-upload to their device only when
-/// the version actually changed (the A.2 "passing policy parameters" cost
-/// is paid per publish, never per call).
-pub struct WorkerPool {
-    rx: mpsc::Receiver<GenMsg>,
-    /// The pool's own sender clone: keeps the queue open for respawned
-    /// workers, and makes trainer-side `Disconnected` impossible mid-run.
-    tx: Option<mpsc::SyncSender<GenMsg>>,
-    exit_rx: mpsc::Receiver<WorkerExit>,
-    exit_tx: mpsc::Sender<WorkerExit>,
-    slot: Arc<ParamSlot>,
-    stop: Arc<AtomicBool>,
-    /// Per-lane next-cursor, advanced by workers *after* handover.
-    ledger: Arc<Vec<AtomicU64>>,
-    ctl: Arc<Vec<SlotCtl>>,
-    fault_fired: Arc<AtomicBool>,
-    retry_count: Arc<AtomicU64>,
-    ctx: SpawnCtx,
-    /// One seat per worker slot; `None` = dead (reaped or re-strided).
-    seats: Vec<Option<JoinHandle<()>>>,
-    /// Per-slot incarnation: respawns (and resume epochs) shift the
-    /// replacement's RNG streams so a replayed prompt block still samples
-    /// fresh tokens instead of re-walking the dead worker's stream.
-    incarnations: Vec<u64>,
-    restarts_used: Vec<usize>,
-    accounts: LaneAccounts,
-    /// Rounds accepted while draining a dead worker's queue, served
-    /// before new receives.
-    pending: VecDeque<GenMsg>,
-    /// Per-slot accumulated (gen_secs, rounds) across incarnations.
-    totals: Vec<(f64, u64)>,
-    worker_errors: Vec<String>,
-    worker_restarts: u64,
-    stalled_now: Vec<bool>,
-    ever_stalled: Vec<bool>,
-    gen_bs: u64,
-    received: u64,
-    /// Receive slice between supervision passes.
-    poll: Duration,
-}
-
-impl WorkerPool {
-    /// Spawn `cfg.gen_workers` supervised workers over a queue of depth
-    /// `cfg.staleness_bound`. `origin` is the trainer timeline's clock so
-    /// worker gen-spans are directly comparable. With `resume`, lanes
-    /// re-enter the checkpoint's cursors, the param slot seeds from the
-    /// checkpoint's policy at its version, and worker RNG streams shift
-    /// to a fresh epoch (async resume is exactly-once, not bitwise —
-    /// live worker threads cannot be snapshotted mid-call).
-    pub fn spawn(
-        cfg: &ExpConfig,
-        prep: &Prepared,
-        origin: Instant,
-        resume: Option<&Checkpoint>,
-    ) -> Result<WorkerPool> {
-        let m = cfg.gen_workers.max(1);
-        assert!(m <= 64, "lane ownership is a u64 bitmask");
-        let gen_bs = prep.engine.manifest.config.gen_batch as u64;
-        let stride = cursor_stride(gen_bs, cfg.k_samples);
-        let hop = stride * m as u64;
-        let continuous = cfg.gen_engine == GenEngine::Continuous;
-        let starts: Vec<u64> =
-            (0..m).map(|w| RLHF_RANGE + w as u64 * stride).collect();
-
-        let (accounts, epoch0, received, init_version, init_params) =
-            match resume {
-                Some(c) => {
-                    let s = &c.source;
-                    if s.kind != "pool" {
-                        bail!(
-                            "--resume: checkpoint was written by a '{}' \
-                             round source but this run is async (worker \
-                             pool)",
-                            s.kind
-                        );
-                    }
-                    if s.cursors.len() != m {
-                        bail!(
-                            "--resume: checkpoint has {} worker lanes but \
-                             --gen-workers is {m}",
-                            s.cursors.len()
-                        );
-                    }
-                    let skip: Vec<Vec<u64>> = if s.skip.len() == m {
-                        s.skip.clone()
-                    } else if s.skip.is_empty() {
-                        vec![Vec::new(); m]
-                    } else {
-                        bail!(
-                            "--resume: checkpoint has {} skip lists for {m} \
-                             lanes",
-                            s.skip.len()
-                        );
-                    };
-                    (
-                        LaneAccounts::resume(
-                            starts.clone(),
-                            stride,
-                            hop,
-                            &s.cursors,
-                            &skip,
-                        ),
-                        // past every RNG stream this run already consumed
-                        s.epoch + 1,
-                        s.generated,
-                        c.version,
-                        Arc::from(&c.params[..]),
-                    )
-                }
-                None => (
-                    LaneAccounts::new(starts, stride, hop),
-                    0,
-                    0,
-                    0,
-                    Arc::from(&prep.sft_params[..]),
-                ),
-            };
-
-        let (tx, rx) = mpsc::sync_channel::<GenMsg>(cfg.staleness_bound);
-        let (exit_tx, exit_rx) = mpsc::channel::<WorkerExit>();
-        let slot = Arc::new(ParamSlot::new(init_version, init_params));
-        let stop = Arc::new(AtomicBool::new(false));
-        let ledger: Arc<Vec<AtomicU64>> = Arc::new(
-            accounts.expected.iter().map(|&c| AtomicU64::new(c)).collect(),
-        );
-        let now_ms = origin.elapsed().as_millis() as u64;
-        let ctl: Arc<Vec<SlotCtl>> = Arc::new(
-            (0..m)
-                .map(|w| SlotCtl {
-                    lanes: AtomicU64::new(1u64 << w),
-                    beat_ms: AtomicU64::new(now_ms),
-                })
-                .collect(),
-        );
-        let ctx = SpawnCtx {
-            artifact_dir: cfg.artifact_dir(),
-            task: prep.taskgen.task,
-            prompt_len: prep.taskgen.prompt_len,
-            resp_len: prep.taskgen.resp_len,
-            seed: cfg.seed,
-            opts: sample_opts(cfg),
-            k: cfg.k_samples,
-            gen_engine: cfg.gen_engine,
-            max_cohorts: cfg.max_cohorts,
-            admit_min: cfg.admit_min,
-            stride,
-            hop,
-            retries: cfg.engine_retries,
-            stall_timeout: cfg.stall_timeout_secs,
-            fault: cfg.inject_fault,
-            origin,
-            max_restarts: cfg.max_worker_restarts,
-            continuous,
-        };
-        let poll = Duration::from_secs_f64(
-            (cfg.stall_timeout_secs / 4.0).clamp(0.010, 0.050),
-        );
-        let mut pool = WorkerPool {
-            rx,
-            tx: Some(tx),
-            exit_rx,
-            exit_tx,
-            slot,
-            stop,
-            ledger,
-            ctl,
-            fault_fired: Arc::new(AtomicBool::new(false)),
-            retry_count: Arc::new(AtomicU64::new(0)),
-            ctx,
-            seats: (0..m).map(|_| None).collect(),
-            incarnations: vec![epoch0; m],
-            restarts_used: vec![0; m],
-            accounts,
-            pending: VecDeque::new(),
-            totals: vec![(0.0, 0); m],
-            worker_errors: Vec::new(),
-            worker_restarts: 0,
-            stalled_now: vec![false; m],
-            ever_stalled: vec![false; m],
-            gen_bs,
-            received,
-            poll,
-        };
-        for w in 0..m {
-            pool.spawn_seat(w)?;
-        }
-        Ok(pool)
-    }
-
-    /// The shared handles a seat thread runs against.
-    fn shared(&self) -> Result<SeatShared> {
-        let tx = self.tx.clone().ok_or_else(|| {
-            anyhow!(
-                "worker pool queue already torn down while (re)spawning a \
-                 seat — finish() ran before supervision stopped"
-            )
-        })?;
-        Ok(SeatShared {
-            tx,
-            pslot: self.slot.clone(),
-            stop: self.stop.clone(),
-            ledger: self.ledger.clone(),
-            ctl: self.ctl.clone(),
-            fault_fired: self.fault_fired.clone(),
-            retry_count: self.retry_count.clone(),
-        })
-    }
-
-    /// (Re)spawn seat `w` at its current incarnation. The body runs under
-    /// `catch_unwind`; every exit path reports a [`WorkerExit`].
-    fn spawn_seat(&mut self, w: usize) -> Result<()> {
-        let ctx = self.ctx.clone();
-        let sh = self.shared()?;
-        let exit_tx = self.exit_tx.clone();
-        let incarnation = self.incarnations[w];
-        // continuous lanes resume from the trainer-accepted frontier,
-        // skipping out-of-order deliveries above it
-        let resume = (
-            self.accounts.expected[w],
-            self.accounts.delivered[w].clone(),
-        );
-        beat(&self.ctl[w], self.ctx.origin);
-        let handle = std::thread::Builder::new()
-            .name(format!("gen-worker-{w}"))
-            .spawn(move || {
-                let outcome = catch_unwind(AssertUnwindSafe(|| {
-                    if ctx.continuous {
-                        let (frontier, skip) = resume;
-                        seat_continuous(&ctx, &sh, w, incarnation, frontier, skip)
-                    } else {
-                        seat_rounds(&ctx, &sh, w, incarnation)
-                    }
-                }))
-                .unwrap_or_else(|p| {
-                    Err(anyhow!("panicked: {}", panic_message(p.as_ref())))
-                });
-                // best-effort: at teardown the receiver may already be gone
-                let _ = exit_tx.send(WorkerExit { slot: w, outcome });
-            })
-            .map_err(|e| anyhow!("spawn gen-worker-{w}: {e}"))?;
-        self.seats[w] = Some(handle);
-        Ok(())
-    }
-
-    /// Reap dead seats (respawn / re-stride / fail) and run the heartbeat
-    /// watchdog. Called from `next` between receive slices.
-    fn supervise(&mut self) -> Result<()> {
-        while let Ok(exit) = self.exit_rx.try_recv() {
-            let w = exit.slot;
-            if let Some(h) = self.seats[w].take() {
-                let _ = h.join();
-            }
-            match exit.outcome {
-                Ok((secs, rounds)) => {
-                    self.totals[w].0 += secs;
-                    self.totals[w].1 += rounds;
-                    // a clean exit is only legitimate at teardown or after
-                    // its lanes were re-strided away
-                    let retired = self.ctl[w].lanes.load(Ordering::SeqCst) == 0;
-                    if !self.stop.load(Ordering::SeqCst) && !retired {
-                        self.handle_death(
-                            w,
-                            anyhow!("exited cleanly mid-run (queue closed?)"),
-                        )?;
-                    }
-                }
-                Err(e) => self.handle_death(w, e)?,
-            }
-        }
-        let now_ms = self.ctx.origin.elapsed().as_millis() as u64;
-        for w in 0..self.seats.len() {
-            if self.seats[w].is_none() {
-                self.stalled_now[w] = false;
-                continue;
-            }
-            let age =
-                now_ms.saturating_sub(self.ctl[w].beat_ms.load(Ordering::SeqCst));
-            let stalled = age as f64 / 1000.0 > self.ctx.stall_timeout;
-            if stalled && !self.stalled_now[w] {
-                self.stalled_now[w] = true;
-                self.ever_stalled[w] = true;
-                eprintln!(
-                    "[supervisor] gen-worker-{w} silent for {:.1}s \
-                     (--stall-timeout-secs {:.1}) — flagged as stalled",
-                    age as f64 / 1000.0,
-                    self.ctx.stall_timeout
-                );
-            } else if !stalled && self.stalled_now[w] {
-                self.stalled_now[w] = false;
-                eprintln!("[supervisor] gen-worker-{w} resumed heartbeats");
-            }
-        }
-        Ok(())
-    }
-
-    /// Absorb every queued round into the accounts (fresh ones buffer in
-    /// `pending`). Must run before computing a respawn position: a round
-    /// sitting in the queue at worker death is not yet accounted, and a
-    /// replacement spawned without it would replay it as a partial
-    /// duplicate.
-    fn drain_queue(&mut self) -> Result<()> {
-        while let Ok(msg) = self.rx.try_recv() {
-            if let Accept::Fresh = self.accounts.accept(&msg)? {
-                self.pending.push_back(msg);
-            }
-        }
-        Ok(())
-    }
-
-    fn handle_death(&mut self, w: usize, err: anyhow::Error) -> Result<()> {
-        self.drain_queue()?;
-        self.worker_errors.push(format!("gen-worker-{w}: {err:#}"));
-        let lanes = self.ctl[w].lanes.load(Ordering::SeqCst);
-        // the dead worker may have generated without completing the
-        // handover: rewind-proof the ledger to the accepted frontier
-        for l in lanes_of(lanes) {
-            self.ledger[l].fetch_max(self.accounts.expected[l], Ordering::SeqCst);
-        }
-        if self.restarts_used[w] < self.ctx.max_restarts {
-            self.restarts_used[w] += 1;
-            self.worker_restarts += 1;
-            self.incarnations[w] += 1;
-            eprintln!(
-                "[supervisor] gen-worker-{w} died: {err:#}; respawning on a \
-                 fresh engine (restart {}/{})",
-                self.restarts_used[w], self.ctx.max_restarts
-            );
-            return self.spawn_seat(w);
-        }
-        if self.ctx.continuous {
-            bail!(
-                "gen-worker-{w} is unrecoverable after {} restarts: {err:#}; \
-                 a continuous lane's in-flight sequences cannot be \
-                 re-strided onto a survivor",
-                self.ctx.max_restarts
-            );
-        }
-        let heir =
-            (0..self.seats.len()).find(|&h| h != w && self.seats[h].is_some());
-        match heir {
-            Some(h) => {
-                self.ctl[w].lanes.store(0, Ordering::SeqCst);
-                self.ctl[h].lanes.fetch_or(lanes, Ordering::SeqCst);
-                eprintln!(
-                    "[supervisor] gen-worker-{w} died with no restarts left: \
-                     {err:#}; re-striding its lanes ({lanes:#b}) onto \
-                     gen-worker-{h}"
-                );
-                Ok(())
-            }
-            None => bail!(
-                "gen-worker-{w} died with no restarts left and no surviving \
-                 workers: {err:#}"
-            ),
-        }
-    }
-
-    fn deliver(
-        &mut self,
-        msg: GenMsg,
-        timeline: &mut Timeline,
-        t_wait: f64,
-    ) -> SourcedRound {
-        let t_got = timeline.origin().elapsed().as_secs_f64();
-        timeline.push_span(Phase::Idle, t_wait, t_got);
-        timeline.push_span(
-            Phase::Generate,
-            msg.round.gen_span.0,
-            msg.round.gen_span.1,
-        );
-        self.received += 1;
-        // worker rounds crossed the thread boundary as host data: the
-        // trainer re-stages them (the async mode's one upload per round)
-        SourcedRound { round: msg.round, staged: None }
-    }
-}
-
-impl RoundSource for WorkerPool {
-    fn label(&self) -> &'static str {
-        "async"
-    }
-
-    fn next(&mut self, cx: TrainerCx<'_>) -> Result<SourcedRound> {
-        let TrainerCx { timeline, .. } = cx;
-        let t_wait = timeline.origin().elapsed().as_secs_f64();
-        loop {
-            // rounds rescued from a dead worker's queue go first
-            if let Some(msg) = self.pending.pop_front() {
-                return Ok(self.deliver(msg, timeline, t_wait));
-            }
-            self.supervise()?;
-            match self.rx.recv_timeout(self.poll) {
-                Ok(msg) => match self.accounts.accept(&msg)? {
-                    Accept::Fresh => {
-                        return Ok(self.deliver(msg, timeline, t_wait))
-                    }
-                    // a respawned worker replaying its at-least-once
-                    // window: drop, it is already trained on
-                    Accept::Duplicate => continue,
-                },
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => bail!(
-                    "round queue disconnected while the pool holds a \
-                     sender — this is a bug"
-                ),
-            }
-        }
-    }
-
-    fn episodes(&self) -> u64 {
-        // counted at handover: rounds still in flight inside a worker
-        // (or queued) are not episodes yet
-        self.received * self.gen_bs
-    }
-
-    fn publish(&mut self, cx: TrainerCx<'_>) -> Result<()> {
-        let TrainerCx { engine, state, version, timeline } = cx;
-        // device -> host once per publish, then a latest-wins pointer swap
-        timeline.record(Phase::Publish, || -> Result<()> {
-            let host = state.params_host(engine)?;
-            self.slot.publish(version, Arc::from(host));
-            Ok(())
-        })
-    }
-
-    fn snapshot(&self) -> Option<SourceState> {
-        // always at a clean boundary: cursors are the trainer-accepted
-        // frontier, and rounds in flight (or queued) simply regenerate
-        // after resume, where the accounts would dedupe them
-        let skip = if self.ctx.continuous {
-            self.accounts
-                .delivered
-                .iter()
-                .map(|s| {
-                    let mut v: Vec<u64> = s.iter().copied().collect();
-                    v.sort_unstable();
-                    v
-                })
-                .collect()
-        } else {
-            vec![Vec::new(); self.accounts.expected.len()]
-        };
-        Some(SourceState {
-            kind: "pool".into(),
-            rng: None,
-            generated: self.received,
-            cursors: self.accounts.expected.clone(),
-            skip,
-            epoch: self.incarnations.iter().copied().max().unwrap_or(0),
-        })
-    }
-
-    fn finish(self: Box<Self>, log: &mut RunLog) -> Result<()> {
-        let mut pool = *self;
-        pool.stop.store(true, Ordering::SeqCst);
-        // dropping the trainer's channel ends release workers blocked in
-        // `send`, so join cannot deadlock
-        drop(pool.tx.take());
-        drop(pool.rx);
-        for seat in pool.seats.iter_mut() {
-            if let Some(h) = seat.take() {
-                // seat bodies run under catch_unwind: join only fails if
-                // the exit-report send itself panicked
-                let _ = h.join();
-            }
-        }
-        // mid-run failures were already surfaced (and recovered or
-        // escalated) by `supervise`; teardown absorbs what remains into
-        // the run metas instead of failing a finished run
-        while let Ok(exit) = pool.exit_rx.try_recv() {
-            match exit.outcome {
-                Ok((secs, rounds)) => {
-                    pool.totals[exit.slot].0 += secs;
-                    pool.totals[exit.slot].1 += rounds;
-                }
-                Err(e) => pool
-                    .worker_errors
-                    .push(format!("gen-worker-{}: {e:#}", exit.slot)),
-            }
-        }
-        let mut gen_total = 0.0f64;
-        let mut rounds_total = 0u64;
-        for (w, (secs, rounds)) in pool.totals.iter().enumerate() {
-            log.set_meta(&format!("gen_secs_w{w}"), format!("{secs:.3}"));
-            log.set_meta(&format!("gen_rounds_w{w}"), rounds);
-            gen_total += secs;
-            rounds_total += rounds;
-        }
-        log.set_meta("gen_total_secs", format!("{gen_total:.3}"));
-        log.set_meta("gen_rounds", rounds_total);
-        log.set_meta("worker_restarts", pool.worker_restarts);
-        log.set_meta(
-            "stalled_workers",
-            pool.ever_stalled.iter().filter(|&&b| b).count(),
-        );
-        log.set_meta("engine_retries", pool.retry_count.load(Ordering::SeqCst));
-        log.set_meta("dropped_duplicate_rounds", pool.accounts.duplicates);
-        if !pool.worker_errors.is_empty() {
-            log.set_meta("worker_errors", pool.worker_errors.join(" | "));
-        }
-        Ok(())
-    }
-}
-
-/// Scripted-fault check at the top of a worker round: fires exactly once
-/// per run (`fault_fired`), so a respawned replacement does not re-fault.
-/// `Panic` and `Stall` act immediately; `EngineErr` arms the caller's
-/// next attempt-0 engine call to fail.
-fn maybe_inject(
-    ctx: &SpawnCtx,
-    sh: &SeatShared,
-    w: usize,
-    rounds_done: u64,
-    inject_err: &mut bool,
-) {
-    let Some(f) = &ctx.fault else { return };
-    if f.worker != w
-        || rounds_done != f.round
-        || sh.fault_fired.swap(true, Ordering::SeqCst)
-    {
-        return;
-    }
-    match f.kind {
-        FaultKind::Panic => panic!(
-            "injected fault: scripted panic in gen-worker-{w} at round {}",
-            f.round
-        ),
-        FaultKind::Stall => std::thread::sleep(Duration::from_secs_f64(
-            ctx.stall_timeout * 2.0,
-        )),
-        FaultKind::EngineErr => *inject_err = true,
-    }
-}
-
-/// Body of a round-synchronous worker seat (cached / device / naive
-/// generators): fetch the freshest policy, generate one round on the
-/// lane furthest behind, hand it over, advance the lane ledger.
-///
-/// Worker `w` at incarnation 0 keeps the seed coordinator's RNG stream
-/// (`0xa57c + w`) so M=1 pools replay the seed bitwise; respawns and
-/// resume epochs shift the stream so replayed prompts resample fresh.
-fn seat_rounds(
-    ctx: &SpawnCtx,
-    sh: &SeatShared,
-    w: usize,
-    incarnation: u64,
-) -> Result<(f64, u64)> {
-    // own engine, own PJRT client (separate "GPU")
-    let engine = Engine::load(&ctx.artifact_dir)?;
-    let taskgen = TaskGen::new(ctx.task, ctx.prompt_len, ctx.resp_len, ctx.seed);
-    let stream = w as u64 + (incarnation << 20);
-    let mut rng = Pcg32::new(ctx.seed, 0xa57c + stream);
-    let mut retry_rng = Pcg32::new(ctx.seed, RETRY_STREAM + stream);
-    let policy = RetryPolicy::new(ctx.retries);
-    let generator = ctx.gen_engine.build();
-    let (mut version, mut params) = sh.pslot.latest();
-    let mut gen_total = 0.0f64;
-    let mut rounds_done = 0u64;
-    let mut inject_err = false;
-    loop {
-        beat(&sh.ctl[w], ctx.origin);
-        if sh.stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let mask = sh.ctl[w].lanes.load(Ordering::SeqCst);
-        if mask == 0 {
-            break; // lanes re-strided away: retire cleanly
-        }
-        // pick up the freshest published policy (Algorithm 1: "update
-        // generation model θ <- θ_i"); the cached view below re-uploads
-        // to device only on a version change
-        if let Some((v, p)) = sh.pslot.fetch(version) {
-            version = v;
-            params = p;
-        }
-        let lane = pick_lane(mask, &sh.ledger)?;
-        let cursor = sh.ledger[lane].load(Ordering::SeqCst);
-        maybe_inject(ctx, sh, w, rounds_done, &mut inject_err);
-        let round = policy.run(
-            &mut retry_rng,
-            |_| {
-                sh.retry_count.fetch_add(1, Ordering::SeqCst);
-                engine.note_retry(ROUND_ORIGIN);
-            },
-            |attempt| {
-                if inject_err && attempt == 0 {
-                    bail!(
-                        "injected fault: scripted engine error in \
-                         gen-worker-{w}"
-                    );
-                }
-                generate_round(
-                    &engine,
-                    generator.as_ref(),
-                    ParamView::cached("policy", version, &params),
-                    version,
-                    &taskgen,
-                    cursor,
-                    ctx.k,
-                    ctx.opts,
-                    &mut rng,
-                    ctx.origin,
-                )
-            },
-        )?;
-        inject_err = false;
-        gen_total += round.gen_secs;
-        beat(&sh.ctl[w], ctx.origin);
-        // blocks while K rounds are queued — the staleness bound's
-        // back-pressure
-        if sh.tx.send(GenMsg { round, lane, indices: None }).is_err() {
-            break;
-        }
-        rounds_done += 1;
-        // advance ONLY after the handover (at-least-once): a crash before
-        // this store regenerates the round; a crash after the send leaves
-        // a duplicate the trainer's accounts drop
-        sh.ledger[lane].store(cursor + ctx.hop, Ordering::SeqCst);
-    }
-    Ok((gen_total, rounds_done))
-}
-
-/// Streaming body of a continuous-engine worker seat: drive the slot
-/// pool one sweep at a time, re-reading the published policy slot
-/// *between decode steps* (PipelineRL's inflight weight swap — in-flight
-/// sequences keep their KV cache and finish under the new weights,
-/// stamping their remaining tokens with the new version), feeding retired
-/// sequences through a [`RoundAssembler`] and handing assembled rounds
-/// over the same bounded queue as the round-synchronous workers — the
-/// staleness back-pressure simply pauses the pool mid-flight while `send`
-/// blocks.
-///
-/// A respawned incarnation re-enters the lane at the trainer-accepted
-/// `frontier`, skipping the out-of-order indices already delivered above
-/// it — the admission filter makes every post-respawn round all-fresh.
-fn seat_continuous(
-    ctx: &SpawnCtx,
-    sh: &SeatShared,
-    w: usize,
-    incarnation: u64,
-    frontier: u64,
-    skip: HashSet<u64>,
-) -> Result<(f64, u64)> {
-    let engine = Engine::load(&ctx.artifact_dir)?;
-    let taskgen = TaskGen::new(ctx.task, ctx.prompt_len, ctx.resp_len, ctx.seed);
-    let stream = w as u64 + (incarnation << 20);
-    let mut rng = Pcg32::new(ctx.seed, 0xa57c + stream);
-    let mut retry_rng = Pcg32::new(ctx.seed, RETRY_STREAM + stream);
-    let policy = RetryPolicy::new(ctx.retries);
-    let mcfg = engine.manifest.config.clone();
-    let mut backend = DeviceBackend::new(&engine)?;
-    let mut pool = Pool::new(PoolCfg {
-        slots: mcfg.gen_batch,
-        prompt_len: mcfg.prompt_len,
-        seq_len: mcfg.seq_len,
-        vocab: mcfg.vocab,
-        max_cohorts: ctx.max_cohorts,
-        admit_min: ctx.admit_min,
-    });
-    // the same strided prompt partition the round-based workers walk
-    // (worker w: blocks of `stride` indices, hopping M·stride, each
-    // index k times), consumed one prompt per freed slot — re-entered at
-    // the block holding the frontier, minus what was already delivered
-    let start = RLHF_RANGE + w as u64 * ctx.stride;
-    let base = start + ((frontier - start) / ctx.hop) * ctx.hop;
-    let mut admission = taskgen
-        .admission(base, ctx.stride, ctx.hop, ctx.k)
-        .filter(move |a| a.index >= frontier && !skip.contains(&a.index))
-        .map(|a| AdmitSeq { index: a.index, dup: a.dup, prompt: a.prompt });
-    let mut assembler = RoundAssembler::new(mcfg.gen_batch, ctx.k);
-    let (mut version, mut params) = sh.pslot.latest();
-    let mut gen_total = 0.0f64;
-    let mut rounds_done = 0u64;
-    let mut inject_err = false;
-    let mut t_round = ctx.origin.elapsed().as_secs_f64();
-    loop {
-        beat(&sh.ctl[w], ctx.origin);
-        if sh.stop.load(Ordering::SeqCst)
-            || sh.ctl[w].lanes.load(Ordering::SeqCst) == 0
-        {
-            break;
-        }
-        if let Some((v, p)) = sh.pslot.fetch(version) {
-            version = v;
-            params = p;
-        }
-        maybe_inject(ctx, sh, w, rounds_done, &mut inject_err);
-        policy.run(
-            &mut retry_rng,
-            |_| {
-                sh.retry_count.fetch_add(1, Ordering::SeqCst);
-                engine.note_retry(ROUND_ORIGIN);
-            },
-            |attempt| {
-                if inject_err && attempt == 0 {
-                    bail!(
-                        "injected fault: scripted engine error in \
-                         gen-worker-{w}"
-                    );
-                }
-                pool.step(
-                    &mut backend,
-                    ParamView::cached("policy", version, &params),
-                    version,
-                    &mut admission,
-                    ctx.opts,
-                    &mut rng,
-                )
-            },
-        )?;
-        inject_err = false;
-        for c in pool.drain_completed() {
-            assembler.push(c);
-        }
-        while let Some(groups) = assembler.pop_round() {
-            let indices: Vec<u64> = groups.iter().map(|(i, _)| *i).collect();
-            let t_now = ctx.origin.elapsed().as_secs_f64();
-            let round = round_from_groups(groups, &taskgen, (t_round, t_now));
-            gen_total += t_now - t_round;
-            rounds_done += 1;
-            beat(&sh.ctl[w], ctx.origin);
-            // blocks while K rounds are queued — the staleness bound's
-            // back-pressure; in-flight sequences wait between sweeps
-            if sh
-                .tx
-                .send(GenMsg { round, lane: w, indices: Some(indices) })
-                .is_err()
-            {
-                return Ok((gen_total, rounds_done));
-            }
-            // blocked-send time belongs to the queue, not generation
-            t_round = ctx.origin.elapsed().as_secs_f64();
-        }
-    }
-    Ok((gen_total, rounds_done))
-}
-
-/// Assemble a trainer [`Round`] from `gen_batch / k` retired prompt
-/// groups (each `k` completions, in dup order) — the continuous engine's
-/// counterpart of `generate_round`'s fixed-round output. Examples are
-/// regenerated from the pure task stream by index; per-token version
-/// provenance aggregates into the round's staleness fields.
-fn round_from_groups(
-    groups: Vec<(u64, Vec<Completed>)>,
-    taskgen: &TaskGen,
-    span: (f64, f64),
-) -> Round {
-    let n: usize = groups.iter().map(|(_, g)| g.len()).sum();
-    let mut tokens = Vec::with_capacity(n);
-    let mut resp_mask = Vec::with_capacity(n);
-    let mut blp = Vec::with_capacity(n);
-    let mut terminated = Vec::with_capacity(n);
-    let mut examples = Vec::with_capacity(groups.len());
-    let start_index = groups.first().map(|(i, _)| *i).unwrap_or(0);
-    let mut steps_max = 0usize;
-    let mut ver_min = u64::MAX;
-    let mut ver_max = 0u64;
-    let mut ver_sum = 0.0f64;
-    let mut tok_count = 0u64;
-    for (index, group) in groups {
-        examples.push(taskgen.example(index));
-        for c in group {
-            steps_max = steps_max.max(c.steps);
-            ver_min = ver_min.min(c.version_min);
-            ver_max = ver_max.max(c.version_max);
-            ver_sum += c.version_sum;
-            tok_count += c.steps as u64;
-            tokens.push(c.tokens);
-            resp_mask.push(c.resp_mask);
-            blp.push(c.blp);
-            terminated.push(c.terminated);
-        }
-    }
-    Round {
-        gen: GenBatch { tokens, resp_mask, blp, terminated, steps: steps_max },
-        examples,
-        start_index,
-        // newest token version: keeps the per-round staleness bound's
-        // "freshest data age" meaning under version mixing
-        params_version: ver_max,
-        tok_version_min: ver_min.min(ver_max),
-        tok_version_mean: if tok_count > 0 {
-            ver_sum / tok_count as f64
-        } else {
-            ver_max as f64
-        },
-        gen_secs: span.1 - span.0,
-        gen_span: span,
     }
 }
 
@@ -1754,8 +884,8 @@ impl SessionAccounts {
 /// rounds — live traffic IS the prompt stream.
 ///
 /// Structure mirrors [`WorkerPool`] (supervised seats, bounded round
-/// queue, latest-wins [`ParamSlot`], heartbeat watchdog, scripted fault
-/// injection) with three deltas:
+/// queue, a latest-wins [`ParamBus`] seat each, heartbeat watchdog,
+/// scripted fault injection) with three deltas:
 ///
 /// - rounds carry **session turn uids** instead of lane cursors;
 ///   [`SessionAccounts`] extends the trainer's dedup/hole checks to them
@@ -1772,7 +902,7 @@ pub struct SessionSource {
     tx: Option<mpsc::SyncSender<GenMsg>>,
     exit_rx: mpsc::Receiver<WorkerExit>,
     exit_tx: mpsc::Sender<WorkerExit>,
-    slot: Arc<ParamSlot>,
+    bus: Arc<ParamBus>,
     stop: Arc<AtomicBool>,
     /// Unused by serving seats (sessions, not lanes) but part of the
     /// shared seat handle; kept empty.
@@ -1809,6 +939,7 @@ impl SessionSource {
         prep: &Prepared,
         origin: Instant,
         resume: Option<&Checkpoint>,
+        bus: Arc<ParamBus>,
     ) -> Result<SessionSource> {
         if resume.is_some() {
             bail!(
@@ -1823,7 +954,6 @@ impl SessionSource {
             );
         }
         let m = cfg.gen_workers.max(1);
-        assert!(m <= 64, "config validation caps gen_workers at 64");
         if cfg.serve_sessions % m as u64 != 0 {
             bail!(
                 "--serve-sessions {} must divide evenly over {m} workers \
@@ -1867,13 +997,13 @@ impl SessionSource {
             tx: Some(tx),
             exit_rx,
             exit_tx,
-            slot: Arc::new(ParamSlot::new(0, Arc::from(&prep.sft_params[..]))),
+            bus,
             stop: Arc::new(AtomicBool::new(false)),
             ledger: Arc::new(Vec::new()),
             ctl: Arc::new(
                 (0..m)
                     .map(|w| SlotCtl {
-                        lanes: AtomicU64::new(1u64 << w),
+                        lanes: AtomicBitSet::single(w, m),
                         beat_ms: AtomicU64::new(now_ms),
                     })
                     .collect(),
@@ -1917,7 +1047,7 @@ impl SessionSource {
         Ok(ServeShared {
             base: SeatShared {
                 tx,
-                pslot: self.slot.clone(),
+                bus: self.bus.clone(),
                 stop: self.stop.clone(),
                 ledger: self.ledger.clone(),
                 ctl: self.ctl.clone(),
@@ -2120,15 +1250,6 @@ impl RoundSource for SessionSource {
         self.received * self.gen_bs
     }
 
-    fn publish(&mut self, cx: TrainerCx<'_>) -> Result<()> {
-        let TrainerCx { engine, state, version, timeline } = cx;
-        timeline.record(Phase::Publish, || -> Result<()> {
-            let host = state.params_host(engine)?;
-            self.slot.publish(version, Arc::from(host));
-            Ok(())
-        })
-    }
-
     fn snapshot(&self) -> Option<SourceState> {
         // serve runs are bounded by their traffic trace, not resumable
         // from a mid-trace cursor; config validation rejects
@@ -2271,7 +1392,7 @@ fn seat_serve(
         board,
     );
     let mut assembler = RoundAssembler::new(mcfg.gen_batch, base.k);
-    let (mut version, mut params) = sb.pslot.latest();
+    let (mut version, mut params) = sb.bus.latest(w);
     let mut gen_total = 0.0f64;
     let mut rounds_done = 0u64;
     let mut inject_err = false;
@@ -2286,7 +1407,7 @@ fn seat_serve(
             sh.done[w].store(true, Ordering::SeqCst);
             break;
         }
-        if let Some((v, p)) = sb.pslot.fetch(version) {
+        if let Some((v, p)) = sb.bus.fetch(w, version) {
             version = v;
             params = p;
         }
@@ -2360,55 +1481,16 @@ fn seat_serve(
 #[cfg(test)]
 mod tests {
     use std::collections::VecDeque;
-    use std::sync::atomic::AtomicU64;
     use std::sync::Arc;
 
+    use super::super::pool::{Accept, GenMsg};
     use super::super::trainer::{staleness, Round};
     use super::{
-        cursor_stride, lane_next, pick_lane, round_from_groups,
-        staleness_bound_updates, Accept, Completed, GenMsg, LaneAccounts,
-        ParamSlot, SessionAccounts,
+        cursor_stride, staleness_bound_sharded, staleness_bound_updates,
+        ParamBus, ParamSlot, SessionAccounts,
     };
-    use crate::data::{Task, TaskGen};
     use crate::gen::GenBatch;
     use crate::serve::traffic::turn_uid;
-
-    #[test]
-    fn continuous_round_aggregates_token_version_provenance() {
-        let tg = TaskGen::new(Task::Tldr, 8, 4, 1);
-        let mk = |index: u64, dup: usize, vmin: u64, vmax: u64, sum: f64| {
-            Completed {
-                index,
-                dup,
-                tokens: vec![0; 12],
-                resp_mask: vec![0.0; 12],
-                blp: vec![0.0; 12],
-                terminated: true,
-                steps: 2,
-                version_min: vmin,
-                version_max: vmax,
-                version_sum: sum,
-            }
-        };
-        // two prompt groups of k=2, tokens spanning versions 0..=4
-        let groups = vec![
-            (5u64, vec![mk(5, 0, 0, 2, 2.0), mk(5, 1, 1, 3, 4.0)]),
-            (9u64, vec![mk(9, 0, 2, 4, 6.0), mk(9, 1, 2, 2, 4.0)]),
-        ];
-        let round = round_from_groups(groups, &tg, (1.0, 3.5));
-        // per-round anchor = NEWEST token version (freshest data age);
-        // per-token fields carry the oldest and the mean
-        assert_eq!(round.params_version, 4);
-        assert_eq!(round.tok_version_min, 0);
-        let expect_mean = (2.0 + 4.0 + 6.0 + 4.0) / 8.0;
-        assert!((round.tok_version_mean - expect_mean).abs() < 1e-12);
-        assert_eq!(round.start_index, 5);
-        assert_eq!(round.gen.tokens.len(), 4, "k rows per prompt group");
-        assert_eq!(round.examples.len(), 2, "one example per prompt");
-        assert_eq!(round.examples[1].prompt, tg.example(9).prompt);
-        assert_eq!(round.gen.steps, 2);
-        assert!((round.gen_secs - 2.5).abs() < 1e-12);
-    }
 
     #[test]
     fn param_slot_is_latest_wins() {
@@ -2445,79 +1527,70 @@ mod tests {
     }
 
     #[test]
-    fn pick_lane_prefers_the_lane_furthest_behind() {
-        let ledger: Vec<AtomicU64> =
-            [30u64, 10, 20].into_iter().map(AtomicU64::new).collect();
-        // owning all three lanes: the lowest cursor wins
-        assert_eq!(pick_lane(0b111, &ledger).unwrap(), 1);
-        // ownership masks restrict the choice
-        assert_eq!(pick_lane(0b101, &ledger).unwrap(), 2);
-        assert_eq!(pick_lane(0b001, &ledger).unwrap(), 0);
-        // ties go to the lowest lane
-        ledger[2].store(10, std::sync::atomic::Ordering::SeqCst);
-        assert_eq!(pick_lane(0b110, &ledger).unwrap(), 1);
-        // an empty mask is a supervision bug, surfaced as an error rather
-        // than a panic on the worker seat
-        assert!(pick_lane(0, &ledger).is_err());
-    }
-
-    #[test]
-    fn lane_next_walks_blocks_and_hops() {
-        // lane at start 100, blocks of 3, hop 12:
-        // 100 101 102 | 112 113 114 | 124 ...
-        assert_eq!(lane_next(100, 100, 3, 12), 101);
-        assert_eq!(lane_next(101, 100, 3, 12), 102);
-        assert_eq!(lane_next(102, 100, 3, 12), 112);
-        assert_eq!(lane_next(114, 100, 3, 12), 124);
-        // stride 1 (degenerate geometry): every step is a hop
-        assert_eq!(lane_next(100, 100, 1, 2), 102);
-    }
-
-    #[test]
-    fn lane_accounts_block_mode_dedupes_and_detects_holes() {
-        // two lanes, stride 4, hop 8: lane 0 blocks 0,8,16…, lane 1
-        // blocks 4,12,20…
-        let mut a = LaneAccounts::new(vec![0, 4], 4, 8);
-        assert!(matches!(a.accept_block(0, 0).unwrap(), Accept::Fresh));
-        assert!(matches!(a.accept_block(1, 4).unwrap(), Accept::Fresh));
-        // a respawned worker replaying its last handed-over block
-        assert!(matches!(a.accept_block(0, 0).unwrap(), Accept::Duplicate));
-        assert_eq!(a.duplicates, 1);
-        assert!(matches!(a.accept_block(0, 8).unwrap(), Accept::Fresh));
-        // a skipped block can only mean a lost round: loud failure
-        let err = a.accept_block(1, 20).unwrap_err().to_string();
-        assert!(err.contains("lane 1"), "{err}");
-        assert!(err.contains("12"), "names the expected index: {err}");
-    }
-
-    #[test]
-    fn lane_accounts_continuous_mode_advances_frontier_out_of_order() {
-        // one lane at start 0, stride 4, hop 4 (M=1): indices 0,1,2,3,4…
-        let mut a = LaneAccounts::new(vec![0], 4, 4);
-        // a round retires {1, 3} first (continuous retirement is
-        // completion-ordered): frontier stays at 0
-        assert!(matches!(a.accept_indices(0, &[1, 3]).unwrap(), Accept::Fresh));
-        assert_eq!(a.expected[0], 0);
-        assert_eq!(a.delivered[0].len(), 2);
-        // {0, 2} closes the gap: frontier sweeps to 4, sets drain
-        assert!(matches!(a.accept_indices(0, &[0, 2]).unwrap(), Accept::Fresh));
-        assert_eq!(a.expected[0], 4);
-        assert!(a.delivered[0].is_empty(), "frontier absorbed the set");
-        // full replay is dropped …
-        assert!(matches!(
-            a.accept_indices(0, &[1, 3]).unwrap(),
-            Accept::Duplicate
-        ));
-        // … but a mixed round means the respawn skip set was wrong
-        assert!(a.accept_indices(0, &[3, 4]).is_err());
-    }
-
-    #[test]
     fn param_slot_fetch_is_cheap_pointer_clone() {
         let big: Arc<[f32]> = Arc::from(vec![1.0f32; 1024].into_boxed_slice());
         let slot = ParamSlot::new(1, big.clone());
         let (_, p) = slot.fetch(0).unwrap();
         assert!(Arc::ptr_eq(&p, &big), "fetch must share, not copy");
+    }
+
+    #[test]
+    fn param_bus_publish_fans_out_to_every_seat() {
+        let bus = ParamBus::new(3, 0, Arc::from(&[0.0f32][..]));
+        assert_eq!(bus.seats(), 3);
+        for seat in 0..3 {
+            let (v, p) = bus.latest(seat);
+            assert_eq!((v, &p[..]), (0, &[0.0f32][..]), "seeded seat {seat}");
+        }
+        bus.publish(7, Arc::from(&[7.0f32][..]));
+        for seat in 0..3 {
+            let (v, p) = bus.fetch(seat, 0).expect("publish visible");
+            assert_eq!((v, &p[..]), (7, &[7.0f32][..]), "seat {seat}");
+        }
+    }
+
+    #[test]
+    fn param_bus_seats_fetch_independently() {
+        // one seat consuming a publish must not mark it consumed for the
+        // others — each subscriber tracks its own `have` version
+        let bus = ParamBus::new(2, 0, Arc::from(&[0.0f32][..]));
+        bus.publish(1, Arc::from(&[1.0f32][..]));
+        assert_eq!(bus.fetch(0, 0).expect("seat 0 sees v1").0, 1);
+        assert_eq!(bus.fetch(1, 0).expect("seat 1 still sees v1").0, 1);
+        assert!(bus.fetch(0, 1).is_none(), "nothing newer than v1");
+    }
+
+    #[test]
+    fn param_bus_publish_shares_one_allocation_across_seats() {
+        // fan-out is S + M pointer swaps, never a broadcast copy: every
+        // seat must hand back the SAME Arc allocation
+        let big: Arc<[f32]> = Arc::from(vec![2.0f32; 4096].into_boxed_slice());
+        let bus = ParamBus::new(4, 0, Arc::from(&[0.0f32][..]));
+        bus.publish(1, big.clone());
+        for seat in 0..4 {
+            let (_, p) = bus.latest(seat);
+            assert!(Arc::ptr_eq(&p, &big), "seat {seat} must share, not copy");
+        }
+    }
+
+    #[test]
+    fn sharded_staleness_bound_adds_the_fan_out_term() {
+        // S = 1 reduces exactly to the unsharded bound — no penalty for
+        // running the sharded code path at one shard
+        for (k, m, t) in [(0, 1, 1), (2, 3, 2), (4, 1, 3)] {
+            assert_eq!(
+                staleness_bound_sharded(k, m, t, 1),
+                staleness_bound_updates(k, m, t)
+            );
+        }
+        // every extra shard seat can lag the publish front by one more
+        // update unit: bound grows by exactly S - 1
+        for s in 1..6usize {
+            assert_eq!(
+                staleness_bound_sharded(2, 2, 2, s),
+                staleness_bound_updates(2, 2, 2) + (s as u64 - 1)
+            );
+        }
     }
 
     /// A served round carrying only the fields [`SessionAccounts`] reads.

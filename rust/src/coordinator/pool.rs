@@ -1,0 +1,1184 @@
+//! WorkerPool: M supervised generation workers feeding the trainer over
+//! a bounded round queue of depth K — the asynchronous end of the
+//! [`RoundSource`] design space (paper §3.5/Algorithm 1).
+//!
+//! Split out of `pipeline.rs` as a pure code move: the trainer loop and
+//! the [`ParamBus`] publication cell live there; this module owns the
+//! worker seats, their supervision (respawn / lane re-striding /
+//! heartbeat watchdog), and the lane ledger that makes crash recovery
+//! exactly-once. The serve-while-training [`SessionSource`] in
+//! `pipeline.rs` reuses the seat plumbing defined here ([`SpawnCtx`],
+//! [`SeatShared`], fault injection, exit reports).
+//!
+//! [`SessionSource`]: super::pipeline::SessionSource
+
+use std::collections::{HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::checkpoint::{Checkpoint, SourceState};
+use super::pipeline::{cursor_stride, ParamBus, RoundSource, TrainerCx};
+use super::pretrain::RLHF_RANGE;
+use super::trainer::{
+    generate_round, sample_opts, Round, SourcedRound, ROUND_ORIGIN,
+};
+use super::Prepared;
+use crate::config::{ExpConfig, FaultKind, FaultPlan, GenEngine};
+use crate::data::{Task, TaskGen};
+use crate::gen::continuous::{
+    AdmitSeq, Completed, DeviceBackend, Pool, PoolCfg, RoundAssembler,
+};
+use crate::gen::{GenBatch, SampleOpts};
+use crate::metrics::{Phase, RunLog, Timeline};
+use crate::runtime::{Engine, ParamView, RetryPolicy, RETRY_STREAM};
+use crate::util::bitset::{AtomicBitSet, BitSet};
+use crate::util::rng::Pcg32;
+
+/// One round crossing the worker → trainer queue, tagged with the lane
+/// (prompt-partition stripe) it came from so the trainer's
+/// [`LaneAccounts`] can enforce exactly-once delivery across respawns.
+pub(crate) struct GenMsg {
+    pub(crate) round: Round,
+    pub(crate) lane: usize,
+    /// Continuous engine only: the prompt indices retired into this round
+    /// (continuous lanes retire out of admission order, so block-cursor
+    /// accounting does not apply).
+    pub(crate) indices: Option<Vec<u64>>,
+}
+
+/// Structured exit report of one worker seat: sent on every exit path —
+/// clean retirement, engine error, or caught panic.
+pub(crate) struct WorkerExit {
+    pub(crate) slot: usize,
+    pub(crate) outcome: Result<(f64, u64)>,
+}
+
+/// Supervisor-side control block of one worker seat: the lanes it owns
+/// (a word-array bitset, so pools are no longer capped at 64 seats) and
+/// its last heartbeat, in milliseconds since the trainer timeline origin.
+pub(crate) struct SlotCtl {
+    pub(crate) lanes: AtomicBitSet,
+    pub(crate) beat_ms: AtomicU64,
+}
+
+pub(crate) fn beat(ctl: &SlotCtl, origin: Instant) {
+    ctl.beat_ms
+        .store(origin.elapsed().as_millis() as u64, Ordering::SeqCst);
+}
+
+/// The lane a worker should generate for next: the one whose cursor is
+/// furthest behind (ties to the lowest lane), so an heir that inherited
+/// orphaned lanes round-robins them instead of starving one.
+fn pick_lane(mask: &BitSet, ledger: &[AtomicU64]) -> Result<usize> {
+    mask.ones()
+        .min_by_key(|&l| (ledger[l].load(Ordering::SeqCst), l))
+        .ok_or_else(|| {
+            anyhow!(
+                "worker scheduled with an empty lane mask — supervision \
+                 should have retired this seat"
+            )
+        })
+}
+
+/// Successor of `idx` in one lane's admission sequence (blocks of
+/// `stride` consecutive indices starting at `start`, hopping `hop`
+/// between blocks).
+fn lane_next(idx: u64, start: u64, stride: u64, hop: u64) -> u64 {
+    let rel = idx - start;
+    let (block, off) = (rel / hop, rel % hop);
+    debug_assert!(off < stride, "index off the lane's admission sequence");
+    if off + 1 < stride {
+        idx + 1
+    } else {
+        start + (block + 1) * hop
+    }
+}
+
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+pub(crate) enum Accept {
+    Fresh,
+    Duplicate,
+}
+
+/// Trainer-side delivery accounting, per lane. The worker-side ledger
+/// advances only *after* a successful handover (at-least-once); these
+/// accounts turn that into exactly-once by dropping replays — and by
+/// failing loudly on a *hole*, which no recovery path can legally
+/// produce.
+struct LaneAccounts {
+    stride: u64,
+    hop: u64,
+    starts: Vec<u64>,
+    /// Next index the trainer is owed per lane: block start for
+    /// round-synchronous engines, delivered frontier for continuous.
+    expected: Vec<u64>,
+    /// Continuous engines: indices delivered above the frontier.
+    delivered: Vec<HashSet<u64>>,
+    duplicates: u64,
+}
+
+impl LaneAccounts {
+    fn new(starts: Vec<u64>, stride: u64, hop: u64) -> LaneAccounts {
+        let n = starts.len();
+        LaneAccounts {
+            stride,
+            hop,
+            expected: starts.clone(),
+            starts,
+            delivered: vec![HashSet::new(); n],
+            duplicates: 0,
+        }
+    }
+
+    fn resume(
+        starts: Vec<u64>,
+        stride: u64,
+        hop: u64,
+        cursors: &[u64],
+        skip: &[Vec<u64>],
+    ) -> LaneAccounts {
+        let mut a = LaneAccounts::new(starts, stride, hop);
+        a.expected = cursors.to_vec();
+        for (lane, s) in skip.iter().enumerate() {
+            a.delivered[lane] = s.iter().copied().collect();
+        }
+        a
+    }
+
+    fn accept(&mut self, msg: &GenMsg) -> Result<Accept> {
+        match &msg.indices {
+            Some(indices) => self.accept_indices(msg.lane, indices),
+            None => self.accept_block(msg.lane, msg.round.start_index),
+        }
+    }
+
+    /// Round-synchronous engines: a round is one whole block; the lane
+    /// cursor either matches (fresh), trails (replay after a respawn —
+    /// dropped), or was skipped (a lost round: loud failure).
+    fn accept_block(&mut self, lane: usize, start: u64) -> Result<Accept> {
+        let exp = self.expected[lane];
+        if start == exp {
+            self.expected[lane] = exp + self.hop;
+            Ok(Accept::Fresh)
+        } else if start < exp {
+            self.duplicates += 1;
+            Ok(Accept::Duplicate)
+        } else {
+            bail!(
+                "prompt partition violated: lane {lane} jumped from index \
+                 {exp} to {start} — a round was lost without recovery"
+            )
+        }
+    }
+
+    /// Continuous engines: a round is a set of retired prompt indices. A
+    /// respawned worker's skip set must make every round all-fresh or
+    /// all-replay; a mixed round means the skip set missed a delivery.
+    fn accept_indices(&mut self, lane: usize, indices: &[u64]) -> Result<Accept> {
+        let fresh = indices
+            .iter()
+            .filter(|&&i| {
+                i >= self.expected[lane] && !self.delivered[lane].contains(&i)
+            })
+            .count();
+        if fresh == 0 {
+            self.duplicates += 1;
+            return Ok(Accept::Duplicate);
+        }
+        if fresh < indices.len() {
+            bail!(
+                "continuous round on lane {lane} mixes {fresh} fresh and {} \
+                 replayed prompt indices — the respawn skip set missed a \
+                 delivery",
+                indices.len() - fresh
+            );
+        }
+        self.delivered[lane].extend(indices.iter().copied());
+        // advance the frontier across everything now contiguous
+        while self.delivered[lane].remove(&self.expected[lane]) {
+            self.expected[lane] = lane_next(
+                self.expected[lane],
+                self.starts[lane],
+                self.stride,
+                self.hop,
+            );
+        }
+        Ok(Accept::Fresh)
+    }
+}
+
+/// Everything needed to (re)spawn a worker seat, owned so replacement
+/// threads can be built mid-run without borrowing the config.
+#[derive(Clone)]
+pub(crate) struct SpawnCtx {
+    pub(crate) artifact_dir: PathBuf,
+    pub(crate) task: Task,
+    pub(crate) prompt_len: usize,
+    pub(crate) resp_len: usize,
+    pub(crate) seed: u64,
+    pub(crate) opts: SampleOpts,
+    pub(crate) k: usize,
+    pub(crate) gen_engine: GenEngine,
+    pub(crate) max_cohorts: usize,
+    pub(crate) admit_min: usize,
+    pub(crate) stride: u64,
+    pub(crate) hop: u64,
+    pub(crate) retries: u32,
+    pub(crate) stall_timeout: f64,
+    pub(crate) fault: Option<FaultPlan>,
+    pub(crate) origin: Instant,
+    pub(crate) max_restarts: usize,
+    pub(crate) continuous: bool,
+}
+
+/// The shared handles a worker seat runs against. Seat `w` reads the
+/// published policy from its own [`ParamBus`] seat `w` — the fan-out
+/// gives every subscriber a private latest-wins cell, so one slow reader
+/// never contends with the rest of the pool.
+#[derive(Clone)]
+pub(crate) struct SeatShared {
+    pub(crate) tx: mpsc::SyncSender<GenMsg>,
+    pub(crate) bus: Arc<ParamBus>,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) ledger: Arc<Vec<AtomicU64>>,
+    pub(crate) ctl: Arc<Vec<SlotCtl>>,
+    pub(crate) fault_fired: Arc<AtomicBool>,
+    pub(crate) retry_count: Arc<AtomicU64>,
+}
+
+/// M generation worker threads, each owning its own PJRT backend (the
+/// `xla` crate's client is not `Send`, which conveniently mirrors the
+/// paper's separate generation/training processes), feeding the trainer
+/// over a bounded queue of depth K:
+///
+/// - each **worker** pulls the freshest published policy, generates one
+///   round, and hands it over `send`, which blocks while the queue is
+///   full — that back-pressure is the staleness guarantee;
+/// - the **trainer** pops rounds; with K = 0 the queue is a rendezvous
+///   and `M = 1, K = 0` reproduces the seed Cleanba coordinator exactly
+///   (θ_{t+1} updated with data from θ_t, paper §3.5).
+///
+/// Workers partition the prompt stream by striding: worker `w` starts at
+/// `RLHF_RANGE + w·stride` and hops `M·stride` per round, so pools of any
+/// width consume disjoint, contiguously-tiling prompt ranges.
+///
+/// Parameter publication is a latest-wins seat on the shared
+/// [`ParamBus`]: the trainer loop downloads its device-resident params
+/// once per publish, snapshots them into an `Arc`, and fans the pointer
+/// out to every subscriber seat — workers clone the `Arc`, not the
+/// parameters, and re-upload to their device only when the version
+/// actually changed (the A.2 "passing policy parameters" cost is paid
+/// per publish, never per call).
+pub struct WorkerPool {
+    rx: mpsc::Receiver<GenMsg>,
+    /// The pool's own sender clone: keeps the queue open for respawned
+    /// workers, and makes trainer-side `Disconnected` impossible mid-run.
+    tx: Option<mpsc::SyncSender<GenMsg>>,
+    exit_rx: mpsc::Receiver<WorkerExit>,
+    exit_tx: mpsc::Sender<WorkerExit>,
+    bus: Arc<ParamBus>,
+    stop: Arc<AtomicBool>,
+    /// Per-lane next-cursor, advanced by workers *after* handover.
+    ledger: Arc<Vec<AtomicU64>>,
+    ctl: Arc<Vec<SlotCtl>>,
+    fault_fired: Arc<AtomicBool>,
+    retry_count: Arc<AtomicU64>,
+    ctx: SpawnCtx,
+    /// One seat per worker slot; `None` = dead (reaped or re-strided).
+    seats: Vec<Option<JoinHandle<()>>>,
+    /// Per-slot incarnation: respawns (and resume epochs) shift the
+    /// replacement's RNG streams so a replayed prompt block still samples
+    /// fresh tokens instead of re-walking the dead worker's stream.
+    incarnations: Vec<u64>,
+    restarts_used: Vec<usize>,
+    accounts: LaneAccounts,
+    /// Rounds accepted while draining a dead worker's queue, served
+    /// before new receives.
+    pending: VecDeque<GenMsg>,
+    /// Per-slot accumulated (gen_secs, rounds) across incarnations.
+    totals: Vec<(f64, u64)>,
+    worker_errors: Vec<String>,
+    worker_restarts: u64,
+    stalled_now: Vec<bool>,
+    ever_stalled: Vec<bool>,
+    gen_bs: u64,
+    received: u64,
+    /// Receive slice between supervision passes.
+    poll: Duration,
+}
+
+impl WorkerPool {
+    /// Spawn `cfg.gen_workers` supervised workers over a queue of depth
+    /// `cfg.staleness_bound`. `origin` is the trainer timeline's clock so
+    /// worker gen-spans are directly comparable; `bus` is the trainer
+    /// loop's publish fan-out, already seeded (from the checkpoint's
+    /// policy at its version under `--resume`, else the SFT params at
+    /// version 0) — worker `w` subscribes to bus seat `w`. With `resume`,
+    /// lanes re-enter the checkpoint's cursors and worker RNG streams
+    /// shift to a fresh epoch (async resume is exactly-once, not bitwise
+    /// — live worker threads cannot be snapshotted mid-call).
+    pub fn spawn(
+        cfg: &ExpConfig,
+        prep: &Prepared,
+        origin: Instant,
+        resume: Option<&Checkpoint>,
+        bus: Arc<ParamBus>,
+    ) -> Result<WorkerPool> {
+        let m = cfg.gen_workers.max(1);
+        let gen_bs = prep.engine.manifest.config.gen_batch as u64;
+        let stride = cursor_stride(gen_bs, cfg.k_samples);
+        let hop = stride * m as u64;
+        let continuous = cfg.gen_engine == GenEngine::Continuous;
+        let starts: Vec<u64> =
+            (0..m).map(|w| RLHF_RANGE + w as u64 * stride).collect();
+
+        let (accounts, epoch0, received) = match resume {
+            Some(c) => {
+                let s = &c.source;
+                if s.kind != "pool" {
+                    bail!(
+                        "--resume: checkpoint was written by a '{}' round \
+                         source but this run is async (worker pool)",
+                        s.kind
+                    );
+                }
+                if s.cursors.len() != m {
+                    bail!(
+                        "--resume: checkpoint has {} worker lanes but \
+                         --gen-workers is {m}",
+                        s.cursors.len()
+                    );
+                }
+                let skip: Vec<Vec<u64>> = if s.skip.len() == m {
+                    s.skip.clone()
+                } else if s.skip.is_empty() {
+                    vec![Vec::new(); m]
+                } else {
+                    bail!(
+                        "--resume: checkpoint has {} skip lists for {m} \
+                         lanes",
+                        s.skip.len()
+                    );
+                };
+                (
+                    LaneAccounts::resume(
+                        starts.clone(),
+                        stride,
+                        hop,
+                        &s.cursors,
+                        &skip,
+                    ),
+                    // past every RNG stream this run already consumed
+                    s.epoch + 1,
+                    s.generated,
+                )
+            }
+            None => (LaneAccounts::new(starts, stride, hop), 0, 0),
+        };
+
+        let (tx, rx) = mpsc::sync_channel::<GenMsg>(cfg.staleness_bound);
+        let (exit_tx, exit_rx) = mpsc::channel::<WorkerExit>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let ledger: Arc<Vec<AtomicU64>> = Arc::new(
+            accounts.expected.iter().map(|&c| AtomicU64::new(c)).collect(),
+        );
+        let now_ms = origin.elapsed().as_millis() as u64;
+        let ctl: Arc<Vec<SlotCtl>> = Arc::new(
+            (0..m)
+                .map(|w| SlotCtl {
+                    lanes: AtomicBitSet::single(w, m),
+                    beat_ms: AtomicU64::new(now_ms),
+                })
+                .collect(),
+        );
+        let ctx = SpawnCtx {
+            artifact_dir: cfg.artifact_dir(),
+            task: prep.taskgen.task,
+            prompt_len: prep.taskgen.prompt_len,
+            resp_len: prep.taskgen.resp_len,
+            seed: cfg.seed,
+            opts: sample_opts(cfg),
+            k: cfg.k_samples,
+            gen_engine: cfg.gen_engine,
+            max_cohorts: cfg.max_cohorts,
+            admit_min: cfg.admit_min,
+            stride,
+            hop,
+            retries: cfg.engine_retries,
+            stall_timeout: cfg.stall_timeout_secs,
+            fault: cfg.inject_fault,
+            origin,
+            max_restarts: cfg.max_worker_restarts,
+            continuous,
+        };
+        let poll = Duration::from_secs_f64(
+            (cfg.stall_timeout_secs / 4.0).clamp(0.010, 0.050),
+        );
+        let mut pool = WorkerPool {
+            rx,
+            tx: Some(tx),
+            exit_rx,
+            exit_tx,
+            bus,
+            stop,
+            ledger,
+            ctl,
+            fault_fired: Arc::new(AtomicBool::new(false)),
+            retry_count: Arc::new(AtomicU64::new(0)),
+            ctx,
+            seats: (0..m).map(|_| None).collect(),
+            incarnations: vec![epoch0; m],
+            restarts_used: vec![0; m],
+            accounts,
+            pending: VecDeque::new(),
+            totals: vec![(0.0, 0); m],
+            worker_errors: Vec::new(),
+            worker_restarts: 0,
+            stalled_now: vec![false; m],
+            ever_stalled: vec![false; m],
+            gen_bs,
+            received,
+            poll,
+        };
+        for w in 0..m {
+            pool.spawn_seat(w)?;
+        }
+        Ok(pool)
+    }
+
+    /// The shared handles a seat thread runs against.
+    fn shared(&self) -> Result<SeatShared> {
+        let tx = self.tx.clone().ok_or_else(|| {
+            anyhow!(
+                "worker pool queue already torn down while (re)spawning a \
+                 seat — finish() ran before supervision stopped"
+            )
+        })?;
+        Ok(SeatShared {
+            tx,
+            bus: self.bus.clone(),
+            stop: self.stop.clone(),
+            ledger: self.ledger.clone(),
+            ctl: self.ctl.clone(),
+            fault_fired: self.fault_fired.clone(),
+            retry_count: self.retry_count.clone(),
+        })
+    }
+
+    /// (Re)spawn seat `w` at its current incarnation. The body runs under
+    /// `catch_unwind`; every exit path reports a [`WorkerExit`].
+    fn spawn_seat(&mut self, w: usize) -> Result<()> {
+        let ctx = self.ctx.clone();
+        let sh = self.shared()?;
+        let exit_tx = self.exit_tx.clone();
+        let incarnation = self.incarnations[w];
+        // continuous lanes resume from the trainer-accepted frontier,
+        // skipping out-of-order deliveries above it
+        let resume = (
+            self.accounts.expected[w],
+            self.accounts.delivered[w].clone(),
+        );
+        beat(&self.ctl[w], self.ctx.origin);
+        let handle = std::thread::Builder::new()
+            .name(format!("gen-worker-{w}"))
+            .spawn(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if ctx.continuous {
+                        let (frontier, skip) = resume;
+                        seat_continuous(&ctx, &sh, w, incarnation, frontier, skip)
+                    } else {
+                        seat_rounds(&ctx, &sh, w, incarnation)
+                    }
+                }))
+                .unwrap_or_else(|p| {
+                    Err(anyhow!("panicked: {}", panic_message(p.as_ref())))
+                });
+                // best-effort: at teardown the receiver may already be gone
+                let _ = exit_tx.send(WorkerExit { slot: w, outcome });
+            })
+            .map_err(|e| anyhow!("spawn gen-worker-{w}: {e}"))?;
+        self.seats[w] = Some(handle);
+        Ok(())
+    }
+
+    /// Reap dead seats (respawn / re-stride / fail) and run the heartbeat
+    /// watchdog. Called from `next` between receive slices.
+    fn supervise(&mut self) -> Result<()> {
+        while let Ok(exit) = self.exit_rx.try_recv() {
+            let w = exit.slot;
+            if let Some(h) = self.seats[w].take() {
+                let _ = h.join();
+            }
+            match exit.outcome {
+                Ok((secs, rounds)) => {
+                    self.totals[w].0 += secs;
+                    self.totals[w].1 += rounds;
+                    // a clean exit is only legitimate at teardown or after
+                    // its lanes were re-strided away
+                    let retired = self.ctl[w].lanes.is_empty();
+                    if !self.stop.load(Ordering::SeqCst) && !retired {
+                        self.handle_death(
+                            w,
+                            anyhow!("exited cleanly mid-run (queue closed?)"),
+                        )?;
+                    }
+                }
+                Err(e) => self.handle_death(w, e)?,
+            }
+        }
+        let now_ms = self.ctx.origin.elapsed().as_millis() as u64;
+        for w in 0..self.seats.len() {
+            if self.seats[w].is_none() {
+                self.stalled_now[w] = false;
+                continue;
+            }
+            let age =
+                now_ms.saturating_sub(self.ctl[w].beat_ms.load(Ordering::SeqCst));
+            let stalled = age as f64 / 1000.0 > self.ctx.stall_timeout;
+            if stalled && !self.stalled_now[w] {
+                self.stalled_now[w] = true;
+                self.ever_stalled[w] = true;
+                eprintln!(
+                    "[supervisor] gen-worker-{w} silent for {:.1}s \
+                     (--stall-timeout-secs {:.1}) — flagged as stalled",
+                    age as f64 / 1000.0,
+                    self.ctx.stall_timeout
+                );
+            } else if !stalled && self.stalled_now[w] {
+                self.stalled_now[w] = false;
+                eprintln!("[supervisor] gen-worker-{w} resumed heartbeats");
+            }
+        }
+        Ok(())
+    }
+
+    /// Absorb every queued round into the accounts (fresh ones buffer in
+    /// `pending`). Must run before computing a respawn position: a round
+    /// sitting in the queue at worker death is not yet accounted, and a
+    /// replacement spawned without it would replay it as a partial
+    /// duplicate.
+    fn drain_queue(&mut self) -> Result<()> {
+        while let Ok(msg) = self.rx.try_recv() {
+            if let Accept::Fresh = self.accounts.accept(&msg)? {
+                self.pending.push_back(msg);
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_death(&mut self, w: usize, err: anyhow::Error) -> Result<()> {
+        self.drain_queue()?;
+        self.worker_errors.push(format!("gen-worker-{w}: {err:#}"));
+        let lanes = self.ctl[w].lanes.snapshot();
+        // the dead worker may have generated without completing the
+        // handover: rewind-proof the ledger to the accepted frontier
+        for l in lanes.ones() {
+            self.ledger[l].fetch_max(self.accounts.expected[l], Ordering::SeqCst);
+        }
+        if self.restarts_used[w] < self.ctx.max_restarts {
+            self.restarts_used[w] += 1;
+            self.worker_restarts += 1;
+            self.incarnations[w] += 1;
+            eprintln!(
+                "[supervisor] gen-worker-{w} died: {err:#}; respawning on a \
+                 fresh engine (restart {}/{})",
+                self.restarts_used[w], self.ctx.max_restarts
+            );
+            return self.spawn_seat(w);
+        }
+        if self.ctx.continuous {
+            bail!(
+                "gen-worker-{w} is unrecoverable after {} restarts: {err:#}; \
+                 a continuous lane's in-flight sequences cannot be \
+                 re-strided onto a survivor",
+                self.ctx.max_restarts
+            );
+        }
+        let heir =
+            (0..self.seats.len()).find(|&h| h != w && self.seats[h].is_some());
+        match heir {
+            Some(h) => {
+                self.ctl[w].lanes.clear();
+                self.ctl[h].lanes.merge(&lanes);
+                eprintln!(
+                    "[supervisor] gen-worker-{w} died with no restarts left: \
+                     {err:#}; re-striding its lanes {lanes} onto \
+                     gen-worker-{h}"
+                );
+                Ok(())
+            }
+            None => bail!(
+                "gen-worker-{w} died with no restarts left and no surviving \
+                 workers: {err:#}"
+            ),
+        }
+    }
+
+    fn deliver(
+        &mut self,
+        msg: GenMsg,
+        timeline: &mut Timeline,
+        t_wait: f64,
+    ) -> SourcedRound {
+        let t_got = timeline.origin().elapsed().as_secs_f64();
+        timeline.push_span(Phase::Idle, t_wait, t_got);
+        timeline.push_span(
+            Phase::Generate,
+            msg.round.gen_span.0,
+            msg.round.gen_span.1,
+        );
+        self.received += 1;
+        // worker rounds crossed the thread boundary as host data: the
+        // trainer re-stages them (the async mode's one upload per round)
+        SourcedRound { round: msg.round, staged: None }
+    }
+}
+
+impl RoundSource for WorkerPool {
+    fn label(&self) -> &'static str {
+        "async"
+    }
+
+    fn next(&mut self, cx: TrainerCx<'_>) -> Result<SourcedRound> {
+        let TrainerCx { timeline, .. } = cx;
+        let t_wait = timeline.origin().elapsed().as_secs_f64();
+        loop {
+            // rounds rescued from a dead worker's queue go first
+            if let Some(msg) = self.pending.pop_front() {
+                return Ok(self.deliver(msg, timeline, t_wait));
+            }
+            self.supervise()?;
+            match self.rx.recv_timeout(self.poll) {
+                Ok(msg) => match self.accounts.accept(&msg)? {
+                    Accept::Fresh => {
+                        return Ok(self.deliver(msg, timeline, t_wait))
+                    }
+                    // a respawned worker replaying its at-least-once
+                    // window: drop, it is already trained on
+                    Accept::Duplicate => continue,
+                },
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => bail!(
+                    "round queue disconnected while the pool holds a \
+                     sender — this is a bug"
+                ),
+            }
+        }
+    }
+
+    fn episodes(&self) -> u64 {
+        // counted at handover: rounds still in flight inside a worker
+        // (or queued) are not episodes yet
+        self.received * self.gen_bs
+    }
+
+    fn snapshot(&self) -> Option<SourceState> {
+        // always at a clean boundary: cursors are the trainer-accepted
+        // frontier, and rounds in flight (or queued) simply regenerate
+        // after resume, where the accounts would dedupe them
+        let skip = if self.ctx.continuous {
+            self.accounts
+                .delivered
+                .iter()
+                .map(|s| {
+                    let mut v: Vec<u64> = s.iter().copied().collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect()
+        } else {
+            vec![Vec::new(); self.accounts.expected.len()]
+        };
+        Some(SourceState {
+            kind: "pool".into(),
+            rng: None,
+            generated: self.received,
+            cursors: self.accounts.expected.clone(),
+            skip,
+            epoch: self.incarnations.iter().copied().max().unwrap_or(0),
+        })
+    }
+
+    fn finish(self: Box<Self>, log: &mut RunLog) -> Result<()> {
+        let mut pool = *self;
+        pool.stop.store(true, Ordering::SeqCst);
+        // dropping the trainer's channel ends release workers blocked in
+        // `send`, so join cannot deadlock
+        drop(pool.tx.take());
+        drop(pool.rx);
+        for seat in pool.seats.iter_mut() {
+            if let Some(h) = seat.take() {
+                // seat bodies run under catch_unwind: join only fails if
+                // the exit-report send itself panicked
+                let _ = h.join();
+            }
+        }
+        // mid-run failures were already surfaced (and recovered or
+        // escalated) by `supervise`; teardown absorbs what remains into
+        // the run metas instead of failing a finished run
+        while let Ok(exit) = pool.exit_rx.try_recv() {
+            match exit.outcome {
+                Ok((secs, rounds)) => {
+                    pool.totals[exit.slot].0 += secs;
+                    pool.totals[exit.slot].1 += rounds;
+                }
+                Err(e) => pool
+                    .worker_errors
+                    .push(format!("gen-worker-{}: {e:#}", exit.slot)),
+            }
+        }
+        let mut gen_total = 0.0f64;
+        let mut rounds_total = 0u64;
+        for (w, (secs, rounds)) in pool.totals.iter().enumerate() {
+            log.set_meta(&format!("gen_secs_w{w}"), format!("{secs:.3}"));
+            log.set_meta(&format!("gen_rounds_w{w}"), rounds);
+            gen_total += secs;
+            rounds_total += rounds;
+        }
+        log.set_meta("gen_total_secs", format!("{gen_total:.3}"));
+        log.set_meta("gen_rounds", rounds_total);
+        log.set_meta("worker_restarts", pool.worker_restarts);
+        log.set_meta(
+            "stalled_workers",
+            pool.ever_stalled.iter().filter(|&&b| b).count(),
+        );
+        log.set_meta("engine_retries", pool.retry_count.load(Ordering::SeqCst));
+        log.set_meta("dropped_duplicate_rounds", pool.accounts.duplicates);
+        if !pool.worker_errors.is_empty() {
+            log.set_meta("worker_errors", pool.worker_errors.join(" | "));
+        }
+        Ok(())
+    }
+}
+
+/// Scripted-fault check at the top of a worker round: fires exactly once
+/// per run (`fault_fired`), so a respawned replacement does not re-fault.
+/// `Panic` and `Stall` act immediately; `EngineErr` arms the caller's
+/// next attempt-0 engine call to fail.
+pub(crate) fn maybe_inject(
+    ctx: &SpawnCtx,
+    sh: &SeatShared,
+    w: usize,
+    rounds_done: u64,
+    inject_err: &mut bool,
+) {
+    let Some(f) = &ctx.fault else { return };
+    if f.worker != w
+        || rounds_done != f.round
+        || sh.fault_fired.swap(true, Ordering::SeqCst)
+    {
+        return;
+    }
+    match f.kind {
+        FaultKind::Panic => panic!(
+            "injected fault: scripted panic in gen-worker-{w} at round {}",
+            f.round
+        ),
+        FaultKind::Stall => std::thread::sleep(Duration::from_secs_f64(
+            ctx.stall_timeout * 2.0,
+        )),
+        FaultKind::EngineErr => *inject_err = true,
+    }
+}
+
+/// Body of a round-synchronous worker seat (cached / device / naive
+/// generators): fetch the freshest policy, generate one round on the
+/// lane furthest behind, hand it over, advance the lane ledger.
+///
+/// Worker `w` at incarnation 0 keeps the seed coordinator's RNG stream
+/// (`0xa57c + w`) so M=1 pools replay the seed bitwise; respawns and
+/// resume epochs shift the stream so replayed prompts resample fresh.
+fn seat_rounds(
+    ctx: &SpawnCtx,
+    sh: &SeatShared,
+    w: usize,
+    incarnation: u64,
+) -> Result<(f64, u64)> {
+    // own engine, own PJRT client (separate "GPU")
+    let engine = Engine::load(&ctx.artifact_dir)?;
+    let taskgen = TaskGen::new(ctx.task, ctx.prompt_len, ctx.resp_len, ctx.seed);
+    let stream = w as u64 + (incarnation << 20);
+    let mut rng = Pcg32::new(ctx.seed, 0xa57c + stream);
+    let mut retry_rng = Pcg32::new(ctx.seed, RETRY_STREAM + stream);
+    let policy = RetryPolicy::new(ctx.retries);
+    let generator = ctx.gen_engine.build();
+    let (mut version, mut params) = sh.bus.latest(w);
+    let mut gen_total = 0.0f64;
+    let mut rounds_done = 0u64;
+    let mut inject_err = false;
+    loop {
+        beat(&sh.ctl[w], ctx.origin);
+        if sh.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let mask = sh.ctl[w].lanes.snapshot();
+        if mask.is_empty() {
+            break; // lanes re-strided away: retire cleanly
+        }
+        // pick up the freshest published policy (Algorithm 1: "update
+        // generation model θ <- θ_i"); the cached view below re-uploads
+        // to device only on a version change
+        if let Some((v, p)) = sh.bus.fetch(w, version) {
+            version = v;
+            params = p;
+        }
+        let lane = pick_lane(&mask, &sh.ledger)?;
+        let cursor = sh.ledger[lane].load(Ordering::SeqCst);
+        maybe_inject(ctx, sh, w, rounds_done, &mut inject_err);
+        let round = policy.run(
+            &mut retry_rng,
+            |_| {
+                sh.retry_count.fetch_add(1, Ordering::SeqCst);
+                engine.note_retry(ROUND_ORIGIN);
+            },
+            |attempt| {
+                if inject_err && attempt == 0 {
+                    bail!(
+                        "injected fault: scripted engine error in \
+                         gen-worker-{w}"
+                    );
+                }
+                generate_round(
+                    &engine,
+                    generator.as_ref(),
+                    ParamView::cached("policy", version, &params),
+                    version,
+                    &taskgen,
+                    cursor,
+                    ctx.k,
+                    ctx.opts,
+                    &mut rng,
+                    ctx.origin,
+                )
+            },
+        )?;
+        inject_err = false;
+        gen_total += round.gen_secs;
+        beat(&sh.ctl[w], ctx.origin);
+        // blocks while K rounds are queued — the staleness bound's
+        // back-pressure
+        if sh.tx.send(GenMsg { round, lane, indices: None }).is_err() {
+            break;
+        }
+        rounds_done += 1;
+        // advance ONLY after the handover (at-least-once): a crash before
+        // this store regenerates the round; a crash after the send leaves
+        // a duplicate the trainer's accounts drop
+        sh.ledger[lane].store(cursor + ctx.hop, Ordering::SeqCst);
+    }
+    Ok((gen_total, rounds_done))
+}
+
+/// Streaming body of a continuous-engine worker seat: drive the slot
+/// pool one sweep at a time, re-reading the published policy slot
+/// *between decode steps* (PipelineRL's inflight weight swap — in-flight
+/// sequences keep their KV cache and finish under the new weights,
+/// stamping their remaining tokens with the new version), feeding retired
+/// sequences through a [`RoundAssembler`] and handing assembled rounds
+/// over the same bounded queue as the round-synchronous workers — the
+/// staleness back-pressure simply pauses the pool mid-flight while `send`
+/// blocks.
+///
+/// A respawned incarnation re-enters the lane at the trainer-accepted
+/// `frontier`, skipping the out-of-order indices already delivered above
+/// it — the admission filter makes every post-respawn round all-fresh.
+fn seat_continuous(
+    ctx: &SpawnCtx,
+    sh: &SeatShared,
+    w: usize,
+    incarnation: u64,
+    frontier: u64,
+    skip: HashSet<u64>,
+) -> Result<(f64, u64)> {
+    let engine = Engine::load(&ctx.artifact_dir)?;
+    let taskgen = TaskGen::new(ctx.task, ctx.prompt_len, ctx.resp_len, ctx.seed);
+    let stream = w as u64 + (incarnation << 20);
+    let mut rng = Pcg32::new(ctx.seed, 0xa57c + stream);
+    let mut retry_rng = Pcg32::new(ctx.seed, RETRY_STREAM + stream);
+    let policy = RetryPolicy::new(ctx.retries);
+    let mcfg = engine.manifest.config.clone();
+    let mut backend = DeviceBackend::new(&engine)?;
+    let mut pool = Pool::new(PoolCfg {
+        slots: mcfg.gen_batch,
+        prompt_len: mcfg.prompt_len,
+        seq_len: mcfg.seq_len,
+        vocab: mcfg.vocab,
+        max_cohorts: ctx.max_cohorts,
+        admit_min: ctx.admit_min,
+    });
+    // the same strided prompt partition the round-based workers walk
+    // (worker w: blocks of `stride` indices, hopping M·stride, each
+    // index k times), consumed one prompt per freed slot — re-entered at
+    // the block holding the frontier, minus what was already delivered
+    let start = RLHF_RANGE + w as u64 * ctx.stride;
+    let base = start + ((frontier - start) / ctx.hop) * ctx.hop;
+    let mut admission = taskgen
+        .admission(base, ctx.stride, ctx.hop, ctx.k)
+        .filter(move |a| a.index >= frontier && !skip.contains(&a.index))
+        .map(|a| AdmitSeq { index: a.index, dup: a.dup, prompt: a.prompt });
+    let mut assembler = RoundAssembler::new(mcfg.gen_batch, ctx.k);
+    let (mut version, mut params) = sh.bus.latest(w);
+    let mut gen_total = 0.0f64;
+    let mut rounds_done = 0u64;
+    let mut inject_err = false;
+    let mut t_round = ctx.origin.elapsed().as_secs_f64();
+    loop {
+        beat(&sh.ctl[w], ctx.origin);
+        if sh.stop.load(Ordering::SeqCst) || sh.ctl[w].lanes.is_empty() {
+            break;
+        }
+        if let Some((v, p)) = sh.bus.fetch(w, version) {
+            version = v;
+            params = p;
+        }
+        maybe_inject(ctx, sh, w, rounds_done, &mut inject_err);
+        policy.run(
+            &mut retry_rng,
+            |_| {
+                sh.retry_count.fetch_add(1, Ordering::SeqCst);
+                engine.note_retry(ROUND_ORIGIN);
+            },
+            |attempt| {
+                if inject_err && attempt == 0 {
+                    bail!(
+                        "injected fault: scripted engine error in \
+                         gen-worker-{w}"
+                    );
+                }
+                pool.step(
+                    &mut backend,
+                    ParamView::cached("policy", version, &params),
+                    version,
+                    &mut admission,
+                    ctx.opts,
+                    &mut rng,
+                )
+            },
+        )?;
+        inject_err = false;
+        for c in pool.drain_completed() {
+            assembler.push(c);
+        }
+        while let Some(groups) = assembler.pop_round() {
+            let indices: Vec<u64> = groups.iter().map(|(i, _)| *i).collect();
+            let t_now = ctx.origin.elapsed().as_secs_f64();
+            let round = round_from_groups(groups, &taskgen, (t_round, t_now));
+            gen_total += t_now - t_round;
+            rounds_done += 1;
+            beat(&sh.ctl[w], ctx.origin);
+            // blocks while K rounds are queued — the staleness bound's
+            // back-pressure; in-flight sequences wait between sweeps
+            if sh
+                .tx
+                .send(GenMsg { round, lane: w, indices: Some(indices) })
+                .is_err()
+            {
+                return Ok((gen_total, rounds_done));
+            }
+            // blocked-send time belongs to the queue, not generation
+            t_round = ctx.origin.elapsed().as_secs_f64();
+        }
+    }
+    Ok((gen_total, rounds_done))
+}
+
+/// Assemble a trainer [`Round`] from `gen_batch / k` retired prompt
+/// groups (each `k` completions, in dup order) — the continuous engine's
+/// counterpart of `generate_round`'s fixed-round output. Examples are
+/// regenerated from the pure task stream by index; per-token version
+/// provenance aggregates into the round's staleness fields.
+pub(crate) fn round_from_groups(
+    groups: Vec<(u64, Vec<Completed>)>,
+    taskgen: &TaskGen,
+    span: (f64, f64),
+) -> Round {
+    let n: usize = groups.iter().map(|(_, g)| g.len()).sum();
+    let mut tokens = Vec::with_capacity(n);
+    let mut resp_mask = Vec::with_capacity(n);
+    let mut blp = Vec::with_capacity(n);
+    let mut terminated = Vec::with_capacity(n);
+    let mut examples = Vec::with_capacity(groups.len());
+    let start_index = groups.first().map(|(i, _)| *i).unwrap_or(0);
+    let mut steps_max = 0usize;
+    let mut ver_min = u64::MAX;
+    let mut ver_max = 0u64;
+    let mut ver_sum = 0.0f64;
+    let mut tok_count = 0u64;
+    for (index, group) in groups {
+        examples.push(taskgen.example(index));
+        for c in group {
+            steps_max = steps_max.max(c.steps);
+            ver_min = ver_min.min(c.version_min);
+            ver_max = ver_max.max(c.version_max);
+            ver_sum += c.version_sum;
+            tok_count += c.steps as u64;
+            tokens.push(c.tokens);
+            resp_mask.push(c.resp_mask);
+            blp.push(c.blp);
+            terminated.push(c.terminated);
+        }
+    }
+    Round {
+        gen: GenBatch { tokens, resp_mask, blp, terminated, steps: steps_max },
+        examples,
+        start_index,
+        // newest token version: keeps the per-round staleness bound's
+        // "freshest data age" meaning under version mixing
+        params_version: ver_max,
+        tok_version_min: ver_min.min(ver_max),
+        tok_version_mean: if tok_count > 0 {
+            ver_sum / tok_count as f64
+        } else {
+            ver_max as f64
+        },
+        gen_secs: span.1 - span.0,
+        gen_span: span,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::AtomicU64;
+
+    use super::{lane_next, pick_lane, round_from_groups, Accept, LaneAccounts};
+    use crate::data::{Task, TaskGen};
+    use crate::gen::continuous::Completed;
+    use crate::util::bitset::BitSet;
+
+    #[test]
+    fn continuous_round_aggregates_token_version_provenance() {
+        let tg = TaskGen::new(Task::Tldr, 8, 4, 1);
+        let mk = |index: u64, dup: usize, vmin: u64, vmax: u64, sum: f64| {
+            Completed {
+                index,
+                dup,
+                tokens: vec![0; 12],
+                resp_mask: vec![0.0; 12],
+                blp: vec![0.0; 12],
+                terminated: true,
+                steps: 2,
+                version_min: vmin,
+                version_max: vmax,
+                version_sum: sum,
+            }
+        };
+        // two prompt groups of k=2, tokens spanning versions 0..=4
+        let groups = vec![
+            (5u64, vec![mk(5, 0, 0, 2, 2.0), mk(5, 1, 1, 3, 4.0)]),
+            (9u64, vec![mk(9, 0, 2, 4, 6.0), mk(9, 1, 2, 2, 4.0)]),
+        ];
+        let round = round_from_groups(groups, &tg, (1.0, 3.5));
+        // per-round anchor = NEWEST token version (freshest data age);
+        // per-token fields carry the oldest and the mean
+        assert_eq!(round.params_version, 4);
+        assert_eq!(round.tok_version_min, 0);
+        let expect_mean = (2.0 + 4.0 + 6.0 + 4.0) / 8.0;
+        assert!((round.tok_version_mean - expect_mean).abs() < 1e-12);
+        assert_eq!(round.start_index, 5);
+        assert_eq!(round.gen.tokens.len(), 4, "k rows per prompt group");
+        assert_eq!(round.examples.len(), 2, "one example per prompt");
+        assert_eq!(round.examples[1].prompt, tg.example(9).prompt);
+        assert_eq!(round.gen.steps, 2);
+        assert!((round.gen_secs - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pick_lane_prefers_the_lane_furthest_behind() {
+        let ledger: Vec<AtomicU64> =
+            [30u64, 10, 20].into_iter().map(AtomicU64::new).collect();
+        // owning all three lanes: the lowest cursor wins
+        assert_eq!(pick_lane(&BitSet::from_mask(0b111), &ledger).unwrap(), 1);
+        // ownership masks restrict the choice
+        assert_eq!(pick_lane(&BitSet::from_mask(0b101), &ledger).unwrap(), 2);
+        assert_eq!(pick_lane(&BitSet::from_mask(0b001), &ledger).unwrap(), 0);
+        // ties go to the lowest lane
+        ledger[2].store(10, std::sync::atomic::Ordering::SeqCst);
+        assert_eq!(pick_lane(&BitSet::from_mask(0b110), &ledger).unwrap(), 1);
+        // an empty mask is a supervision bug, surfaced as an error rather
+        // than a panic on the worker seat
+        assert!(pick_lane(&BitSet::from_mask(0), &ledger).is_err());
+    }
+
+    #[test]
+    fn pick_lane_shard_scale_pools_reach_lanes_past_64() {
+        // regression for the lifted 64-seat cap: a ledger of 80 lanes,
+        // with the heir owning lanes on both sides of the word boundary
+        let ledger: Vec<AtomicU64> =
+            (0..80u64).map(|l| AtomicU64::new(1000 - l)).collect();
+        let mut mask = BitSet::new(80);
+        mask.set(3);
+        mask.set(77); // cursor 1000 - 77 = 923: furthest behind
+        assert_eq!(pick_lane(&mask, &ledger).unwrap(), 77);
+        assert_eq!(
+            pick_lane(&BitSet::single(70, 80), &ledger).unwrap(),
+            70,
+            "a single lane above 64 must be schedulable"
+        );
+    }
+
+    #[test]
+    fn lane_next_walks_blocks_and_hops() {
+        // lane at start 100, blocks of 3, hop 12:
+        // 100 101 102 | 112 113 114 | 124 ...
+        assert_eq!(lane_next(100, 100, 3, 12), 101);
+        assert_eq!(lane_next(101, 100, 3, 12), 102);
+        assert_eq!(lane_next(102, 100, 3, 12), 112);
+        assert_eq!(lane_next(114, 100, 3, 12), 124);
+        // stride 1 (degenerate geometry): every step is a hop
+        assert_eq!(lane_next(100, 100, 1, 2), 102);
+    }
+
+    #[test]
+    fn lane_accounts_block_mode_dedupes_and_detects_holes() {
+        // two lanes, stride 4, hop 8: lane 0 blocks 0,8,16…, lane 1
+        // blocks 4,12,20…
+        let mut a = LaneAccounts::new(vec![0, 4], 4, 8);
+        assert!(matches!(a.accept_block(0, 0).unwrap(), Accept::Fresh));
+        assert!(matches!(a.accept_block(1, 4).unwrap(), Accept::Fresh));
+        // a respawned worker replaying its last handed-over block
+        assert!(matches!(a.accept_block(0, 0).unwrap(), Accept::Duplicate));
+        assert_eq!(a.duplicates, 1);
+        assert!(matches!(a.accept_block(0, 8).unwrap(), Accept::Fresh));
+        // a skipped block can only mean a lost round: loud failure
+        let err = a.accept_block(1, 20).unwrap_err().to_string();
+        assert!(err.contains("lane 1"), "{err}");
+        assert!(err.contains("12"), "names the expected index: {err}");
+    }
+
+    #[test]
+    fn lane_accounts_continuous_mode_advances_frontier_out_of_order() {
+        // one lane at start 0, stride 4, hop 4 (M=1): indices 0,1,2,3,4…
+        let mut a = LaneAccounts::new(vec![0], 4, 4);
+        // a round retires {1, 3} first (continuous retirement is
+        // completion-ordered): frontier stays at 0
+        assert!(matches!(a.accept_indices(0, &[1, 3]).unwrap(), Accept::Fresh));
+        assert_eq!(a.expected[0], 0);
+        assert_eq!(a.delivered[0].len(), 2);
+        // {0, 2} closes the gap: frontier sweeps to 4, sets drain
+        assert!(matches!(a.accept_indices(0, &[0, 2]).unwrap(), Accept::Fresh));
+        assert_eq!(a.expected[0], 4);
+        assert!(a.delivered[0].is_empty(), "frontier absorbed the set");
+        // full replay is dropped …
+        assert!(matches!(
+            a.accept_indices(0, &[1, 3]).unwrap(),
+            Accept::Duplicate
+        ));
+        // … but a mixed round means the respawn skip set was wrong
+        assert!(a.accept_indices(0, &[3, 4]).is_err());
+    }
+}

@@ -1,0 +1,494 @@
+//! Sharded data-parallel training: S trainer shards, one PJRT client
+//! each, combined by a deterministic tree all-reduce.
+//!
+//! ## Execution model
+//!
+//! [`ShardPool::spawn`] starts S OS threads (`trainer-shard-{rank}`),
+//! each loading its own [`Engine`] (the PJRT client is thread-local, so
+//! every shard owns a device context and a resident param cache of its
+//! own). Per train step, [`ShardPool::train`] slices every host batch
+//! tensor along dim 0 — rank r takes rows `[r·d0/S, (r+1)·d0/S)` — and
+//! ships one [`ShardJob`] per rank. The train artifacts are compiled at
+//! a fixed batch dim, so each shard *tiles* its slice S times to fill
+//! the executable's d0 rows: a mean-reduced loss over the tiled rows
+//! equals the mean over the slice, which is exactly the per-shard term
+//! the all-reduce averages.
+//!
+//! Each shard fetches the current policy from its [`ParamBus`] seat
+//! (seats `[seat0, seat0 + S)`), runs the batch's T optimizer updates
+//! locally, and hands back its updated `(params, m, v)` triple plus
+//! per-update metric rows. The trainer barriers all S replies, indexes
+//! them **by rank** (never completion order), and averages everything
+//! through [`reduce::tree_average`] — a fixed adjacent-pairs summation
+//! tree, so the combined state is a bitwise-deterministic function of
+//! the shard outputs at any S. The averaged triple becomes the next
+//! step's [`TrainState`] on the main engine.
+//!
+//! ## What S = 1 means
+//!
+//! One shard slices `[0, d0)` (the whole batch), tiles ×1 (a no-op) and
+//! [`reduce::tree_average`] at one part is an exact identity — the
+//! sharded path at S = 1 is bitwise-identical to the unsharded trainer
+//! given the same inputs (integration-tested against real executables).
+//!
+//! ## Failure model
+//!
+//! Shard threads run under `catch_unwind`; a panic or per-job error is
+//! reported as an `Err` reply naming the rank, which [`ShardPool::train`]
+//! propagates — the step fails loudly rather than training on a partial
+//! reduce. Teardown ([`ShardPool::finish`], mirrored by `Drop`) closes
+//! the job channels and joins every thread.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::pipeline::ParamBus;
+use super::pool::panic_message;
+use super::trainer::{BatchSlot, TrainBatch};
+use crate::runtime::reduce;
+use crate::runtime::{Engine, HostTensor, TrainState};
+
+/// One rank's share of one train step: its batch slice (already tiled to
+/// the executable geometry) plus the optimizer-state snapshot every
+/// shard starts the step from.
+struct ShardJob {
+    artifact: &'static str,
+    tensors: Vec<HostTensor>,
+    m: Arc<[f32]>,
+    v: Arc<[f32]>,
+    opt_step: u64,
+    /// The policy version this step trains at; the shard cross-checks it
+    /// against its bus seat (the barrier makes them equal — see module
+    /// doc on the staleness fan-out term, which real runs never exhibit).
+    params_version: u64,
+    lr: f32,
+    t_updates: usize,
+}
+
+/// One rank's step result: the locally-updated optimizer triple and the
+/// metric vector of each of the T updates.
+struct ShardOut {
+    params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    metrics: Vec<Vec<f32>>,
+}
+
+struct ShardReply {
+    rank: usize,
+    out: Result<ShardOut>,
+}
+
+/// S supervised trainer-shard threads plus the rank-indexed reduce that
+/// combines their per-step outputs.
+pub struct ShardPool {
+    /// Per-rank job channels (capacity 1: train ships all S jobs before
+    /// blocking on replies, so a full barrier is two passes, no deadlock).
+    jobs: Vec<mpsc::SyncSender<ShardJob>>,
+    replies: mpsc::Receiver<ShardReply>,
+    handles: Vec<JoinHandle<()>>,
+    shards: usize,
+}
+
+impl ShardPool {
+    /// Validate the batch geometry against `artifact`'s manifest and
+    /// start one shard thread per rank, subscribed to bus seats
+    /// `[seat0, seat0 + shards)`.
+    pub fn spawn(
+        artifact_dir: PathBuf,
+        engine: &Engine,
+        artifact: &'static str,
+        shards: usize,
+        bus: Arc<ParamBus>,
+        seat0: usize,
+    ) -> Result<ShardPool> {
+        // S = 1 is legal (slice = whole batch, reduce = identity): the
+        // pipeline never builds it — `--trainer-shards 1` keeps the
+        // in-thread trainer — but the bitwise-equivalence test drives
+        // the sharded machinery at S = 1 against `train_on_batch`
+        assert!(shards >= 1, "a shard pool needs at least one rank");
+        assert!(
+            seat0 + shards <= bus.seats(),
+            "shard seats [{seat0}, {}) exceed the bus ({} seats)",
+            seat0 + shards,
+            bus.seats()
+        );
+        // every loss input after (params, m, v, step, lr) is sliced along
+        // dim 0, so each batch dim must split evenly over the shards
+        let spec = engine.manifest.artifact(artifact)?;
+        for (i, input) in spec.inputs.iter().enumerate().skip(5) {
+            let d0 = input.shape.first().copied().unwrap_or(1);
+            if d0 % shards != 0 {
+                bail!(
+                    "--trainer-shards {shards} does not divide train input \
+                     `{}` (input {i} of `{artifact}`): batch dim {d0} = \
+                     {shards} x {} + {} rows",
+                    input.name,
+                    d0 / shards,
+                    d0 % shards
+                );
+            }
+        }
+
+        let (reply_tx, replies) = mpsc::channel::<ShardReply>();
+        let mut jobs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for rank in 0..shards {
+            let (job_tx, job_rx) = mpsc::sync_channel::<ShardJob>(1);
+            let dir = artifact_dir.clone();
+            let bus = bus.clone();
+            let tx = reply_tx.clone();
+            let seat = seat0 + rank;
+            let handle = std::thread::Builder::new()
+                .name(format!("trainer-shard-{rank}"))
+                .spawn(move || {
+                    let caught = catch_unwind(AssertUnwindSafe(|| {
+                        shard_seat(&dir, rank, seat, &bus, &job_rx, &tx)
+                    }));
+                    if let Err(p) = caught {
+                        let _ = tx.send(ShardReply {
+                            rank,
+                            out: Err(anyhow!(
+                                "trainer-shard-{rank} panicked: {}",
+                                panic_message(&*p)
+                            )),
+                        });
+                    }
+                })
+                .with_context(|| format!("spawning trainer-shard-{rank}"))?;
+            jobs.push(job_tx);
+            handles.push(handle);
+        }
+        Ok(ShardPool { jobs, replies, handles, shards })
+    }
+
+    /// One sharded train step: slice + ship, barrier on all S replies,
+    /// tree-average the shard triples and metric rows, install the
+    /// averaged state on the main engine. Drop-in for `train_on_batch`
+    /// (same metric rows out, same `state.step` advance).
+    pub fn train(
+        &mut self,
+        engine: &Engine,
+        state: &mut TrainState,
+        batch: &TrainBatch,
+        lr: f32,
+        t_updates: usize,
+        version: u64,
+    ) -> Result<Vec<Vec<f32>>> {
+        let opt_step = state.step;
+        let (m, v): (Arc<[f32]>, Arc<[f32]>) = {
+            let (_, m, v) = state.host_mirrors(engine)?;
+            (Arc::from(m), Arc::from(v))
+        };
+        let spec = engine.manifest.artifact(batch.artifact)?;
+
+        for rank in 0..self.shards {
+            let mut tensors = Vec::with_capacity(batch.tensors.len());
+            for (i, slot) in batch.tensors.iter().enumerate() {
+                let t = match slot {
+                    BatchSlot::Host(t) => t,
+                    BatchSlot::Device(_) => bail!(
+                        "sharded training needs host batch slots, but input \
+                         {i} of `{}` is device-resident; the pipeline drops \
+                         round residency when shards are active — this is a \
+                         bug",
+                        batch.artifact
+                    ),
+                };
+                let d0 =
+                    spec.inputs[5 + i].shape.first().copied().unwrap_or(1);
+                tensors.push(slice_tile(t, d0, self.shards, rank)?);
+            }
+            self.jobs[rank]
+                .send(ShardJob {
+                    artifact: batch.artifact,
+                    tensors,
+                    m: m.clone(),
+                    v: v.clone(),
+                    opt_step,
+                    params_version: version,
+                    lr,
+                    t_updates,
+                })
+                .map_err(|_| {
+                    anyhow!(
+                        "trainer-shard-{rank} hung up before its job \
+                         (see its earlier error reply)"
+                    )
+                })?;
+        }
+
+        // barrier: every rank reports before anything is reduced, and
+        // results are indexed by rank so the reduce order is a pure
+        // function of the shard layout, never of thread scheduling
+        let mut outs: Vec<Option<ShardOut>> =
+            (0..self.shards).map(|_| None).collect();
+        for _ in 0..self.shards {
+            let reply = self.replies.recv().map_err(|_| {
+                anyhow!("every trainer shard hung up mid-step — this is a bug")
+            })?;
+            let out = reply
+                .out
+                .with_context(|| format!("trainer-shard-{}", reply.rank))?;
+            if outs[reply.rank].replace(out).is_some() {
+                bail!(
+                    "trainer-shard-{} replied twice in one step — this is a \
+                     bug",
+                    reply.rank
+                );
+            }
+        }
+
+        let mut ps = Vec::with_capacity(self.shards);
+        let mut ms = Vec::with_capacity(self.shards);
+        let mut vs = Vec::with_capacity(self.shards);
+        let mut rows = Vec::with_capacity(self.shards);
+        for out in outs {
+            let out = out.expect("all ranks replied exactly once");
+            ps.push(out.params);
+            ms.push(out.m);
+            vs.push(out.v);
+            rows.push(out.metrics);
+        }
+        let params = reduce::tree_average(ps)?;
+        let m = reduce::tree_average(ms)?;
+        let v = reduce::tree_average(vs)?;
+        let mut metrics = Vec::with_capacity(t_updates);
+        for u in 0..t_updates {
+            let update_rows = rows
+                .iter()
+                .enumerate()
+                .map(|(rank, r)| {
+                    r.get(u).cloned().ok_or_else(|| {
+                        anyhow!(
+                            "trainer-shard-{rank} returned {} metric rows \
+                             for {t_updates} updates",
+                            r.len()
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            metrics.push(reduce::tree_average(update_rows)?);
+        }
+        *state =
+            TrainState::from_host(params, m, v, opt_step + t_updates as u64)?;
+        Ok(metrics)
+    }
+
+    /// Tear the pool down: close the job channels (shard loops exit on
+    /// disconnect) and join every thread. Runs whether or not the train
+    /// loop succeeded, mirroring the round-source teardown.
+    pub fn finish(mut self) -> Result<()> {
+        self.jobs.clear();
+        let mut first_err: Option<anyhow::Error> = None;
+        for (rank, handle) in self.handles.drain(..).enumerate() {
+            if handle.join().is_err() && first_err.is_none() {
+                // the catch_unwind inside the thread already converted
+                // panics into replies; a join error here means the reply
+                // send itself raced teardown
+                first_err =
+                    Some(anyhow!("trainer-shard-{rank} died during teardown"));
+            }
+        }
+        // surface any error reply the step loop never consumed (e.g. an
+        // engine-load failure on a rank the trainer never reached)
+        while let Ok(reply) = self.replies.try_recv() {
+            if let Err(e) = reply.out {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // finish() drains both vectors, making this a no-op after it; on
+        // a panic path it still releases the shard threads
+        self.jobs.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Body of one shard thread: its own engine, then one reply per job.
+/// Per-job errors are replies (the trainer decides to abort), not thread
+/// exits, so a rank never disappears silently mid-barrier.
+fn shard_seat(
+    artifact_dir: &std::path::Path,
+    rank: usize,
+    seat: usize,
+    bus: &ParamBus,
+    jobs: &mpsc::Receiver<ShardJob>,
+    replies: &mpsc::Sender<ShardReply>,
+) {
+    let engine = match Engine::load(artifact_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = replies.send(ShardReply {
+                rank,
+                out: Err(e.context("loading the shard's engine")),
+            });
+            return;
+        }
+    };
+    while let Ok(job) = jobs.recv() {
+        let out = shard_step(&engine, seat, bus, &job);
+        if replies.send(ShardReply { rank, out }).is_err() {
+            return; // trainer gone; teardown in progress
+        }
+    }
+}
+
+/// One rank's step: params from the bus seat, T local updates on the
+/// tiled slice, host mirrors back out.
+fn shard_step(
+    engine: &Engine,
+    seat: usize,
+    bus: &ParamBus,
+    job: &ShardJob,
+) -> Result<ShardOut> {
+    let (version, params) = bus.latest(seat);
+    if version != job.params_version {
+        bail!(
+            "bus seat {seat} holds params version {version} but the job \
+             trains at {} — the pre-publish barrier should make these \
+             equal; this is a bug",
+            job.params_version
+        );
+    }
+    let mut state = TrainState::from_host(
+        params.to_vec(),
+        job.m.to_vec(),
+        job.v.to_vec(),
+        job.opt_step,
+    )?;
+    let mut dev_batch = Vec::with_capacity(job.tensors.len());
+    for (i, t) in job.tensors.iter().enumerate() {
+        // the loss-specific inputs start after (params, m, v, step, lr)
+        dev_batch.push(
+            engine
+                .upload_inputs(job.artifact, 5 + i, std::slice::from_ref(t))?
+                .pop()
+                .expect("one buffer per uploaded tensor"),
+        );
+    }
+    let mut metrics = Vec::with_capacity(job.t_updates);
+    for _ in 0..job.t_updates {
+        metrics.push(state.train_step_uploaded(
+            engine,
+            job.artifact,
+            job.lr,
+            &dev_batch,
+        )?);
+    }
+    let (p, m, v) = state.host_mirrors(engine)?;
+    Ok(ShardOut {
+        params: p.to_vec(),
+        m: m.to_vec(),
+        v: v.to_vec(),
+        metrics,
+    })
+}
+
+/// Rank `rank`'s slice of a `[d0, ...]` host tensor, tiled `shards`
+/// times to refill the executable's fixed batch dim. S = 1 returns the
+/// input verbatim.
+fn slice_tile(
+    t: &HostTensor,
+    d0: usize,
+    shards: usize,
+    rank: usize,
+) -> Result<HostTensor> {
+    Ok(match t {
+        HostTensor::F32(x) => {
+            HostTensor::F32(slice_tile_rows(x, d0, shards, rank)?)
+        }
+        HostTensor::I32(x) => {
+            HostTensor::I32(slice_tile_rows(x, d0, shards, rank)?)
+        }
+    })
+}
+
+fn slice_tile_rows<T: Copy>(
+    x: &[T],
+    d0: usize,
+    shards: usize,
+    rank: usize,
+) -> Result<Vec<T>> {
+    if d0 == 0 || x.len() % d0 != 0 {
+        bail!(
+            "host tensor of {} elements does not factor into {d0} rows",
+            x.len()
+        );
+    }
+    if d0 % shards != 0 {
+        bail!("batch dim {d0} does not split over {shards} shards");
+    }
+    let row = x.len() / d0;
+    let per = d0 / shards;
+    let slice = &x[rank * per * row..(rank + 1) * per * row];
+    let mut out = Vec::with_capacity(x.len());
+    for _ in 0..shards {
+        out.extend_from_slice(slice);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{slice_tile, slice_tile_rows};
+    use crate::runtime::HostTensor;
+
+    #[test]
+    fn shard_slices_are_disjoint_and_cover_the_batch() {
+        // 6 rows of 2 elements over 3 shards: 2 rows each, in rank order
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mut seen = Vec::new();
+        for rank in 0..3 {
+            let part = slice_tile_rows(&x, 6, 3, rank).unwrap();
+            assert_eq!(part.len(), x.len(), "tiled back to full batch dim");
+            let slice = &part[..4];
+            assert_eq!(&part[4..8], slice, "tile 1 repeats the slice");
+            assert_eq!(&part[8..], slice, "tile 2 repeats the slice");
+            seen.extend_from_slice(slice);
+        }
+        assert_eq!(seen, x, "rank order reassembles the original rows");
+    }
+
+    #[test]
+    fn shard_slice_at_one_shard_is_the_identity() {
+        let x = vec![3, 1, 4, 1, 5, 9];
+        assert_eq!(slice_tile_rows(&x, 3, 1, 0).unwrap(), x);
+    }
+
+    #[test]
+    fn shard_slice_preserves_the_tensor_dtype() {
+        let t = slice_tile(&HostTensor::I32(vec![7, 8]), 2, 2, 1).unwrap();
+        match t {
+            HostTensor::I32(v) => assert_eq!(v, vec![8, 8]),
+            HostTensor::F32(_) => panic!("dtype must survive slicing"),
+        }
+    }
+
+    #[test]
+    fn shard_slice_rejects_bad_geometry() {
+        let x = vec![0.0f32; 6];
+        // 4 rows don't factor 6 elements
+        assert!(slice_tile_rows(&x, 4, 2, 0).is_err());
+        // 3 rows don't split over 2 shards
+        assert!(slice_tile_rows(&x, 3, 2, 0).is_err());
+        // 0 rows is degenerate
+        assert!(slice_tile_rows(&x, 0, 1, 0).is_err());
+    }
+}

@@ -12,6 +12,7 @@
 //! Examples:
 //!   async-rlhf train tldr_s --algo dpo --mode async --steps 96
 //!   async-rlhf train tldr_s --mode async --gen-workers 2 --staleness-bound 4
+//!   async-rlhf train tldr_s --trainer-shards 2  # data-parallel trainer
 //!   async-rlhf train tldr_s --gen-engine device   # KV chained on-device
 //!   async-rlhf train tldr_s --mode async --gen-engine continuous \
 //!                           --max-cohorts 4 --admit-min 1  # slot pool

@@ -15,6 +15,7 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod reduce;
 pub mod retry;
 
 pub use engine::{

@@ -1,0 +1,159 @@
+//! Deterministic tree all-reduce for data-parallel trainer shards.
+//!
+//! Floating-point addition is not associative, so the *order* in which
+//! shard contributions are combined decides the final bits. The trainer
+//! needs two reproducibility properties from its reduce:
+//!
+//! 1. **Order-stable across runs**: reducing the same S vectors must
+//!    yield the same bits every time, regardless of which shard thread
+//!    finished first. We get this by collecting contributions into a
+//!    rank-indexed vector and reducing as a pure function of rank order.
+//! 2. **Fixed pairwise shape**: the summation tree is the classic
+//!    adjacent-pairs reduction — layer k pairs element 2i with 2i+1, an
+//!    odd tail carries up unchanged — so the result at a given S is a
+//!    deterministic function of the inputs, bitwise, on every host.
+//!
+//! Note this does NOT promise the same bits at *different* S (a 4-leaf
+//! tree and a 2-leaf tree sum in different orders); the S=1 path is an
+//! exact identity so an unsharded run is never perturbed.
+
+use anyhow::{bail, Result};
+
+/// Sum `parts[0] + parts[1] + ...` with a fixed adjacent-pairs tree.
+///
+/// The input order is the reduction order: callers must index by shard
+/// rank, never by completion order. All parts must share one length.
+pub fn tree_sum(mut parts: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+    if parts.is_empty() {
+        bail!("tree_sum of zero shards");
+    }
+    let n = parts[0].len();
+    if let Some(bad) = parts.iter().find(|p| p.len() != n) {
+        bail!(
+            "tree_sum shard length mismatch: expected {n}, got {}",
+            bad.len()
+        );
+    }
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut a) = it.next() {
+            match it.next() {
+                Some(b) => {
+                    for (x, y) in a.iter_mut().zip(&b) {
+                        *x += *y;
+                    }
+                    next.push(a);
+                }
+                // odd tail carries up to the next layer unchanged
+                None => next.push(a),
+            }
+        }
+        parts = next;
+    }
+    Ok(parts.pop().expect("non-empty by construction"))
+}
+
+/// Tree-sum then divide by the shard count (the data-parallel average).
+///
+/// S=1 is an exact identity — the single part is returned untouched, no
+/// `* 1.0` rounding trip — which is what makes the unsharded and the
+/// `--trainer-shards 1` paths bitwise-comparable.
+pub fn tree_average(parts: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+    let s = parts.len();
+    if s == 1 {
+        return Ok(parts.into_iter().next().expect("s == 1"));
+    }
+    let mut sum = tree_sum(parts)?;
+    let inv = 1.0 / s as f32;
+    for x in &mut sum {
+        *x *= inv;
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_sum_matches_the_adjacent_pairs_shape_not_a_left_fold() {
+        // catastrophic cancellation distinguishes the orders: the tree
+        // computes (1e8 + 1) + (-1e8 + 1) = 2 exactly (1e8 + 1 rounds to
+        // 1e8 in f32, so the tree yields 1.0 + 1.0... walk it):
+        //   layer 0: [1e8, 1, -1e8, 1]
+        //   layer 1: [(1e8 + 1), (-1e8 + 1)] = [1e8, -1e8 + 1]
+        //   layer 2: [1e8 + (-1e8 + 1)]
+        // f32(1e8 + 1) == 1e8 (ulp at 1e8 is 8), f32(-1e8 + 1) == -1e8,
+        // so the tree yields 0.0; a left fold ((1e8+1)-1e8)+1 yields 1.0.
+        let parts =
+            vec![vec![1e8f32], vec![1.0], vec![-1e8], vec![1.0]];
+        let tree = tree_sum(parts.clone()).unwrap();
+        let fold = parts
+            .iter()
+            .fold(0.0f32, |acc, p| acc + p[0]);
+        assert_eq!(tree[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(fold.to_bits(), 1.0f32.to_bits());
+        assert_ne!(tree[0].to_bits(), fold.to_bits());
+    }
+
+    #[test]
+    fn tree_sum_is_a_pure_function_of_rank_order() {
+        let parts: Vec<Vec<f32>> = (0..5)
+            .map(|r| (0..17).map(|i| (r * 31 + i) as f32 * 0.37).collect())
+            .collect();
+        let a = tree_sum(parts.clone()).unwrap();
+        let b = tree_sum(parts).unwrap();
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // permuting ranks changes the tree (cancellation makes the
+        // difference observable) — callers must index by rank
+        let parts =
+            vec![vec![1e8f32], vec![1.0], vec![-1e8], vec![1.0]];
+        let mut perm = parts.clone();
+        perm.swap(1, 2); // pairs become (1e8, -1e8) and (1, 1)
+        let c = tree_sum(parts).unwrap();
+        let d = tree_sum(perm).unwrap();
+        assert_eq!(c[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(d[0].to_bits(), 2.0f32.to_bits());
+    }
+
+    #[test]
+    fn tree_sum_handles_odd_shard_counts() {
+        // 3 shards: layer 1 = [a+b, c], layer 2 = [(a+b)+c]
+        let out = tree_sum(vec![vec![1.0], vec![2.0], vec![4.0]]).unwrap();
+        assert_eq!(out, vec![7.0]);
+        // 1 shard: identity
+        let one = tree_sum(vec![vec![3.5, -1.25]]).unwrap();
+        assert_eq!(one, vec![3.5, -1.25]);
+    }
+
+    #[test]
+    fn tree_average_at_one_shard_is_an_exact_identity() {
+        // a value whose bits would move under * (1.0 / 1.0) rounding is
+        // impossible, but the identity also skips NaN canonicalisation
+        // and denormal flushes — check bits survive verbatim
+        let raw = vec![f32::from_bits(0x0000_0001), -0.0, 3.1415927];
+        let bits: Vec<u32> = raw.iter().map(|x| x.to_bits()).collect();
+        let out = tree_average(vec![raw]).unwrap();
+        assert_eq!(
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            bits
+        );
+    }
+
+    #[test]
+    fn tree_average_divides_by_the_shard_count() {
+        let out =
+            tree_average(vec![vec![1.0, 10.0], vec![3.0, 30.0]]).unwrap();
+        assert_eq!(out, vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn tree_sum_rejects_mismatched_lengths_and_empty_input() {
+        assert!(tree_sum(vec![]).is_err());
+        assert!(tree_sum(vec![vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+}

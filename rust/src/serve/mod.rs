@@ -18,13 +18,13 @@
 //! The training loop closes in `coordinator::pipeline::SessionSource`:
 //! M serving seats (one per `--gen-workers`, sessions partitioned
 //! statically `session % M == w`) each run a mux against the latest
-//! published [`ParamSlot`] params and hand assembled rounds to the one
-//! trainer loop, which extends its exactly-once dedup/hole accounting to
-//! the served turn uids. [`run`] is the mode entry point behind
-//! `--mode serve` / the `serve` subcommand.
+//! params published on their [`ParamBus`] seat and hand assembled rounds
+//! to the one trainer loop, which extends its exactly-once dedup/hole
+//! accounting to the served turn uids. [`run`] is the mode entry point
+//! behind `--mode serve` / the `serve` subcommand.
 //!
 //! [`Pool`]: crate::gen::continuous::Pool
-//! [`ParamSlot`]: crate::coordinator::pipeline::ParamSlot
+//! [`ParamBus`]: crate::coordinator::pipeline::ParamBus
 
 pub mod frontend;
 pub mod session;
@@ -96,9 +96,14 @@ pub fn run(
     pipeline::run(
         &run_cfg,
         prep,
-        |origin, resume: Option<&Checkpoint>| {
-            let src: Box<dyn RoundSource> =
-                Box::new(SessionSource::spawn(&run_cfg, prep, origin, resume)?);
+        |origin, resume: Option<&Checkpoint>, bus| {
+            let src: Box<dyn RoundSource> = Box::new(SessionSource::spawn(
+                &run_cfg,
+                prep,
+                origin,
+                resume,
+                bus.clone(),
+            )?);
             Ok(src)
         },
         verbose,

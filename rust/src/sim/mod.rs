@@ -90,7 +90,7 @@ pub fn simulate_sync(costs: &StepCosts, steps: u64) -> SimResult {
 /// Asynchronous schedule (paper Fig 2 bottom): the generation worker and
 /// the trainer run concurrently; a bound-1 queue enforces one-step
 /// off-policy. Discrete-event simulation of the exact producer/consumer
-/// protocol implemented in coordinator::asynchronous.
+/// protocol implemented by `coordinator::pool::WorkerPool`.
 pub fn simulate_async(costs: &StepCosts, steps: u64) -> SimResult {
     let mut tl = Timeline::new();
     let mut gen_idle = 0.0;

@@ -1,0 +1,210 @@
+//! Small fixed-capacity bitsets for lane ownership.
+//!
+//! The supervisor used to track which generation lanes a seat owns in a
+//! single `AtomicU64`, which silently capped the pipeline at 64 seats.
+//! Sharded runs multiply seat counts (gen workers + serve seats + trainer
+//! shards all subscribe to the param bus), so lane masks are now a small
+//! word-array bitset with the same lock-free operations the supervisor
+//! relied on: per-bit set, whole-mask clear, and an OR-merge used when a
+//! dead worker's lanes are re-strided onto an heir.
+//!
+//! Atomicity contract: each *word* is atomic, the set as a whole is not.
+//! A snapshot taken concurrently with `merge` may observe only part of
+//! the merged mask. That is benign for the supervisor's protocol — the
+//! heir re-reads its mask at the top of every generation sweep, so a
+//! partially-visible merge only delays the extra lanes by one beat; no
+//! lane is ever *lost* because the merge source (`BitSet`) is immutable
+//! and the per-word `fetch_or` is atomic.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const WORD_BITS: usize = 64;
+
+fn words_for(bits: usize) -> usize {
+    bits.div_ceil(WORD_BITS).max(1)
+}
+
+/// Immutable snapshot of a lane mask (plain words, no atomics).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    /// Empty set with capacity for `bits` bits.
+    pub fn new(bits: usize) -> BitSet {
+        BitSet { words: vec![0; words_for(bits)] }
+    }
+
+    /// Set containing exactly `bit`, with capacity for `bits` bits.
+    pub fn single(bit: usize, bits: usize) -> BitSet {
+        let mut s = BitSet::new(bits.max(bit + 1));
+        s.set(bit);
+        s
+    }
+
+    /// Set from a legacy u64 mask (capacity 64). Test/compat helper.
+    pub fn from_mask(mask: u64) -> BitSet {
+        BitSet { words: vec![mask] }
+    }
+
+    pub fn set(&mut self, bit: usize) {
+        let w = bit / WORD_BITS;
+        assert!(w < self.words.len(), "bit {bit} out of bitset capacity");
+        self.words[w] |= 1u64 << (bit % WORD_BITS);
+    }
+
+    pub fn contains(&self, bit: usize) -> bool {
+        let w = bit / WORD_BITS;
+        w < self.words.len() && self.words[w] & (1u64 << (bit % WORD_BITS)) != 0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Indices of set bits, ascending.
+    pub fn ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            (0..WORD_BITS)
+                .filter(move |b| w & (1u64 << b) != 0)
+                .map(move |b| wi * WORD_BITS + b)
+        })
+    }
+}
+
+impl fmt::Display for BitSet {
+    /// `{0, 3, 70}` — lane indices, for supervisor log lines.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, bit) in self.ones().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{bit}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+/// Shared lane mask: one atomic word per 64 bits.
+pub struct AtomicBitSet {
+    words: Box<[AtomicU64]>,
+}
+
+impl AtomicBitSet {
+    /// Empty set with capacity for `bits` bits.
+    pub fn new(bits: usize) -> AtomicBitSet {
+        let words =
+            (0..words_for(bits)).map(|_| AtomicU64::new(0)).collect();
+        AtomicBitSet { words }
+    }
+
+    /// Set containing exactly `bit`, with capacity for `bits` bits.
+    pub fn single(bit: usize, bits: usize) -> AtomicBitSet {
+        let s = AtomicBitSet::new(bits.max(bit + 1));
+        s.set(bit);
+        s
+    }
+
+    pub fn set(&self, bit: usize) {
+        let w = bit / WORD_BITS;
+        assert!(w < self.words.len(), "bit {bit} out of bitset capacity");
+        self.words[w].fetch_or(1u64 << (bit % WORD_BITS), Ordering::SeqCst);
+    }
+
+    /// Clear every bit (used when a dead seat's lanes are taken away).
+    pub fn clear(&self) {
+        for w in &self.words {
+            w.store(0, Ordering::SeqCst);
+        }
+    }
+
+    /// OR another mask in, word by word (lane re-striding onto an heir).
+    /// Capacities must match — masks for one pool share one seat count.
+    pub fn merge(&self, other: &BitSet) {
+        assert_eq!(
+            self.words.len(),
+            other.words.len(),
+            "bitset capacity mismatch in merge"
+        );
+        for (w, o) in self.words.iter().zip(&other.words) {
+            w.fetch_or(*o, Ordering::SeqCst);
+        }
+    }
+
+    /// Point-in-time copy. Word-atomic, not set-atomic (see module doc).
+    pub fn snapshot(&self) -> BitSet {
+        BitSet {
+            words: self.words.iter().map(|w| w.load(Ordering::SeqCst)).collect(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|w| w.load(Ordering::SeqCst) == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitset_set_contains_and_ones_round_trip() {
+        let mut s = BitSet::new(10);
+        assert!(s.is_empty());
+        s.set(0);
+        s.set(3);
+        s.set(9);
+        assert!(s.contains(0) && s.contains(3) && s.contains(9));
+        assert!(!s.contains(1) && !s.contains(8));
+        assert_eq!(s.ones().collect::<Vec<_>>(), vec![0, 3, 9]);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.to_string(), "{0, 3, 9}");
+    }
+
+    #[test]
+    fn bitset_from_mask_matches_the_legacy_u64_layout() {
+        let s = BitSet::from_mask(0b101);
+        assert_eq!(s.ones().collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(BitSet::single(2, 64), {
+            let mut t = BitSet::new(64);
+            t.set(2);
+            t
+        });
+    }
+
+    #[test]
+    fn bitset_lanes_past_64_cross_the_word_boundary() {
+        // regression for the lifted 64-seat cap: bits above 63 must land
+        // in the second word and survive set/snapshot/merge/iterate
+        let a = AtomicBitSet::single(70, 80);
+        assert!(!a.is_empty());
+        let snap = a.snapshot();
+        assert!(snap.contains(70));
+        assert!(!snap.contains(6)); // not aliased into word 0
+        assert_eq!(snap.ones().collect::<Vec<_>>(), vec![70]);
+
+        // merge a word-0 mask and a word-1 mask onto one heir
+        let heir = AtomicBitSet::single(1, 80);
+        heir.merge(&BitSet::single(70, 80));
+        heir.merge(&BitSet::single(79, 80));
+        let m = heir.snapshot();
+        assert_eq!(m.ones().collect::<Vec<_>>(), vec![1, 70, 79]);
+        assert_eq!(m.to_string(), "{1, 70, 79}");
+
+        heir.clear();
+        assert!(heir.is_empty());
+        assert!(heir.snapshot().is_empty());
+    }
+
+    #[test]
+    fn bitset_display_of_empty_mask_is_braces() {
+        assert_eq!(BitSet::new(128).to_string(), "{}");
+    }
+}

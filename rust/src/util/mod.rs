@@ -3,6 +3,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod bitset;
 pub mod json;
 pub mod npy;
 pub mod prop;

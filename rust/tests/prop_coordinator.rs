@@ -5,8 +5,10 @@
 //! logic (prompt duplication, pair selection, episode accounting, schedule
 //! partitioning, queue staleness in the clock simulator).
 
+use std::sync::Arc;
+
 use async_rlhf::coordinator::pipeline::{
-    cursor_stride, staleness_bound_updates,
+    cursor_stride, staleness_bound_sharded, staleness_bound_updates, ParamBus,
 };
 use async_rlhf::coordinator::trainer::{
     best_worst, round_prompts, rounds_per_batch,
@@ -634,6 +636,94 @@ fn episode_accounting_partitions_stream() {
             "episodes {} != {}",
             seen.len(),
             rounds * gen_batch / k
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn param_bus_subscribers_observe_monotone_untorn_publications() {
+    // The publish fan-out invariant every subscriber relies on: whatever
+    // the interleaving of a publisher's pointer swaps with concurrent
+    // reads, a seat never sees versions go backwards and never sees a
+    // torn (version, params) pair. Tearing is made detectable by
+    // encoding the version into the payload — params[0] must always
+    // equal the version it was published under.
+    prop_check("param bus monotone/untorn", 20, |rng| {
+        let seats = 1 + rng.gen_usize(4);
+        let publishes = 10 + rng.gen_usize(40) as u64;
+        let bus = Arc::new(ParamBus::new(seats, 0, Arc::from(vec![0.0f32])));
+        let readers: Vec<_> = (0..seats)
+            .map(|seat| {
+                let bus = bus.clone();
+                std::thread::spawn(move || -> Result<(), String> {
+                    let mut have = 0u64;
+                    while have < publishes {
+                        // alternate both read paths under contention
+                        let (v, p) = if have % 2 == 0 {
+                            bus.latest(seat)
+                        } else {
+                            match bus.fetch(seat, have) {
+                                Some(vp) => vp,
+                                None => continue,
+                            }
+                        };
+                        if v < have {
+                            return Err(format!(
+                                "seat {seat} went backwards: {have} -> {v}"
+                            ));
+                        }
+                        if p[0] != v as f32 {
+                            return Err(format!(
+                                "seat {seat} torn pair: version {v}, \
+                                 payload {}",
+                                p[0]
+                            ));
+                        }
+                        have = v;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for v in 1..=publishes {
+            bus.publish(v, Arc::from(vec![v as f32]));
+        }
+        for (seat, r) in readers.into_iter().enumerate() {
+            match r.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => prop_assert!(false, "{e}"),
+                Err(_) => prop_assert!(false, "reader {seat} panicked"),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_staleness_bound_is_base_plus_fan_out_and_monotone() {
+    // `staleness_bound_sharded` must reduce exactly to the single-trainer
+    // bound at S=1, add exactly the (S-1) fan-out term above it, and be
+    // monotone in every knob (the base bound's monotonicity is checked
+    // separately above).
+    prop_check("sharded bound = base + (s-1)", 200, |rng| {
+        let k = rng.gen_usize(8);
+        let m = 1 + rng.gen_usize(4);
+        let t = 1 + rng.gen_usize(4);
+        let s = 1 + rng.gen_usize(6);
+        let base = staleness_bound_updates(k, m, t);
+        prop_assert!(
+            staleness_bound_sharded(k, m, t, 1) == base,
+            "S=1 must be the unsharded bound"
+        );
+        prop_assert!(
+            staleness_bound_sharded(k, m, t, s) == base + (s as u64 - 1),
+            "fan-out term is not (s-1) at s={s}"
+        );
+        prop_assert!(
+            staleness_bound_sharded(k, m, t, s + 1)
+                > staleness_bound_sharded(k, m, t, s),
+            "not S-monotone"
         );
         Ok(())
     });
