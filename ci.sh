@@ -6,9 +6,10 @@
 #
 # Runs from the repo root; the crate lives under rust/. Benches emit
 # machine-readable perf snapshots (BENCH_hot_path.json, BENCH_gen_speed.json,
-# BENCH_staleness.json, BENCH_serving.json, BENCH_shard_scale.json) when
-# artifacts are present — build them first with `python -m compile.aot`
-# if you want the perf trajectory recorded.
+# BENCH_staleness.json, BENCH_bound_analysis.json, BENCH_step_overlap.json,
+# BENCH_serving.json, BENCH_shard_scale.json) when artifacts are present —
+# build them first with `python -m compile.aot` if you want the perf
+# trajectory recorded.
 
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -37,16 +38,17 @@ if [[ "${1:-}" != "--fast" ]]; then
 fi
 cargo test -q
 
-echo "== invariant gates (staleness, pair gather, continuous, faults, serving, shard) =="
+echo "== invariant gates (staleness, pair gather, continuous, faults, serving, shard, failover) =="
 # the pipeline's staleness-bound tests, the pair-gather equivalence /
 # byte-counter tests, the continuous-pool slot-lifecycle tests, the
 # fault-injection / checkpoint-resume tests, the serving front-end
-# tests, and the sharded-trainer equivalence/bound tests are
+# tests, the sharded-trainer equivalence/bound tests, and the
+# failover tests (lane takeover + session migration) are
 # release-gating and already ran in the full `cargo test -q`
 # above; here just assert they still EXIST (cargo exits 0 on a
 # zero-match filter, so a rename/module move would otherwise drop the
 # gate silently) — --list doesn't re-run anything
-for filter in staleness bounded_queue pair_gather continuous fault resume serving shard; do
+for filter in staleness bounded_queue pair_gather continuous fault resume serving shard takeover migrate; do
   # capture first: grep -q on the pipe would EPIPE cargo under pipefail
   listing=$(cargo test -q "$filter" -- --list 2>/dev/null)
   echo "$listing" | grep -q ": test" || {

@@ -13,6 +13,13 @@
 //!   the replay columns this tier reports the served-params staleness
 //!   distribution: per-completion lag = publish version at retirement −
 //!   oldest version any of its tokens sampled under (p50/p99/max).
+//! - **failover**: serve the trace to roughly half its turns, then kill
+//!   the seat — abandon the pool with its in-flight KV, rebuild a board
+//!   from the delivered-turn set on a fresh pool (exactly the
+//!   supervisor's session-migration move) and drain the remainder.
+//!   Reports what a migration costs: sessions migrated, in-flight tokens
+//!   abandoned, and the end-to-end sweep count against the unkilled
+//!   trained tier.
 //!
 //! The summary also prices the fixed-round counterfactual: serving the
 //! same turns in fixed gen_batch rounds would hold every slot for the
@@ -29,7 +36,7 @@ use async_rlhf::gen::SampleOpts;
 use async_rlhf::runtime::{Engine, ParamView};
 use async_rlhf::serve::frontend::{run_replay, ServeMux};
 use async_rlhf::serve::session::SessionBoard;
-use async_rlhf::serve::traffic::{TrafficCfg, TrafficGen};
+use async_rlhf::serve::traffic::{turn_uid, TrafficCfg, TrafficGen};
 use async_rlhf::util::bench::{artifact_dir_or_skip, bench, pct};
 use async_rlhf::util::json::Json;
 use async_rlhf::util::rng::Pcg32;
@@ -120,6 +127,99 @@ fn run_trained(
     let st = mux.stats();
     acc.tokens += st.tokens;
     acc.slot_steps += slots * st.sweeps;
+}
+
+/// Per-iteration migration cost from the failover tier.
+#[derive(Default)]
+struct FailoverCost {
+    sessions_migrated: u64,
+    inflight_tokens_abandoned: u64,
+    sweeps: u64,
+}
+
+/// One failover-tier trace: serve at fixed params until roughly half the
+/// trace's turns have completed, then kill the seat — drop the mux (and
+/// every in-flight token with it), rebuild a board over the same residue
+/// from the delivered-turn set on a fresh pool, and drain the remainder.
+/// This is the supervisor's migration move at the unit seam, priced.
+#[allow(clippy::too_many_arguments)]
+fn run_failover(
+    engine: &Engine,
+    params: &[f32],
+    taskgen: &TaskGen,
+    pool: PoolCfg,
+    opts: SampleOpts,
+    seed: u64,
+    acc: &mut Acc,
+    cost: &mut FailoverCost,
+) {
+    let slots = pool.slots as u64;
+    let pv = ParamView::cached("bench_serve", 0, params);
+    let tr = traffic(seed);
+    let mut delivered: HashSet<u64> = HashSet::new();
+
+    // phase 1: the doomed seat serves the front half of the trace
+    let mut backend = DeviceBackend::new(engine).expect("device backend");
+    let board = SessionBoard::new(&tr, K, 0, 1, &HashSet::new())
+        .expect("session board");
+    let mut mux = ServeMux::new(pool, board);
+    let mut rng = Pcg32::new(seed, 0xfa11);
+    let half = SESSIONS * TURNS / 2;
+    while (delivered.len() as u64) < half && !mux.is_done() {
+        assert!(
+            mux.sweep() < MAX_SWEEPS,
+            "failover tier stalled pre-kill: sessions {:?} incomplete",
+            mux.board().incomplete()
+        );
+        let events = mux
+            .step(&mut backend, taskgen, pv, 0, opts, &mut rng)
+            .expect("mux sweep");
+        for (_, ev) in events {
+            acc.ttft.push(ev.ttft);
+            acc.retire.push(ev.retire);
+            if ev.turn_done {
+                acc.requests += 1;
+                delivered.insert(turn_uid(ev.session, ev.turn, TURNS));
+            }
+        }
+    }
+    // the kill: everything still decoding is lost with the seat
+    cost.inflight_tokens_abandoned += mux.inflight_tokens();
+    cost.sessions_migrated += mux.board().incomplete().len() as u64;
+    let st = mux.stats();
+    acc.tokens += st.tokens;
+    acc.slot_steps += slots * st.sweeps;
+    cost.sweeps += st.sweeps;
+    drop(mux);
+
+    // phase 2: the survivor rebuilds its schedule from the delivered set
+    // and serves what is left (incl. re-serving the abandoned turns)
+    let mut backend = DeviceBackend::new(engine).expect("device backend");
+    let board = SessionBoard::for_lanes(&tr, K, &[0], 1, &delivered)
+        .expect("migrated board");
+    let mut mux = ServeMux::new(pool, board);
+    let mut rng = Pcg32::new(seed, 0xfa12);
+    while !mux.is_done() {
+        assert!(
+            mux.sweep() < MAX_SWEEPS,
+            "failover tier stalled post-kill: sessions {:?} incomplete",
+            mux.board().incomplete()
+        );
+        let events = mux
+            .step(&mut backend, taskgen, pv, 0, opts, &mut rng)
+            .expect("mux sweep");
+        for (_, ev) in events {
+            acc.ttft.push(ev.ttft);
+            acc.retire.push(ev.retire);
+            if ev.turn_done {
+                acc.requests += 1;
+            }
+        }
+    }
+    let st = mux.stats();
+    acc.tokens += st.tokens;
+    acc.slot_steps += slots * st.sweeps;
+    cost.sweeps += st.sweeps;
 }
 
 fn tier_result(tier: &'static str, mean_secs: f64, iters: usize, acc: &mut Acc) -> TierResult {
@@ -221,6 +321,30 @@ fn main() {
         let trained_reqs = acc.requests;
         results.push(tier_result("trained", r.mean() as f64, r.iters, &mut acc));
 
+        // --- failover tier: mid-trace seat kill + session migration ---
+        let mut acc = Acc::default();
+        let mut cost = FailoverCost::default();
+        let mut seed = 200u64;
+        let r = bench(&format!("{model}/failover"), 0, 5, || {
+            seed += 1;
+            run_failover(
+                &engine, &params, &taskgen, pool, opts, seed, &mut acc,
+                &mut cost,
+            );
+        });
+        let fail_iters = (r.iters as u64).max(1) as f64;
+        let fail = (
+            cost.sessions_migrated as f64 / fail_iters,
+            cost.inflight_tokens_abandoned as f64 / fail_iters,
+            cost.sweeps as f64 / fail_iters,
+        );
+        results.push(tier_result(
+            "failover",
+            r.mean() as f64,
+            r.iters,
+            &mut acc,
+        ));
+
         println!("\n{model} ({} params):", engine.manifest.param_count);
         println!(
             "  {:<8} {:>9}  {:>7}  {:>8}  {:>6}  {:>10}  {:>12}  {:>14}",
@@ -260,7 +384,18 @@ fn main() {
             occ_fixed,
             if occ_cont >= occ_fixed { "OK" } else { "REGRESSION" }
         );
-        models.push((model, engine.manifest.param_count, results, occ_fixed));
+        println!(
+            "  failover cost/iter: {:.1} sessions migrated, {:.0} in-flight \
+             tokens abandoned, {:.0} sweeps end-to-end",
+            fail.0, fail.1, fail.2
+        );
+        models.push((
+            model,
+            engine.manifest.param_count,
+            results,
+            occ_fixed,
+            fail,
+        ));
     }
 
     // --- machine-readable dump for the perf trajectory ---
@@ -269,12 +404,23 @@ fn main() {
         Json::Obj(
             models
                 .iter()
-                .map(|(model, params, results, occ_fixed)| {
+                .map(|(model, params, results, occ_fixed, fail)| {
                     (
                         model.to_string(),
                         Json::obj(vec![
                             ("param_count", Json::num(*params as f64)),
                             ("occupancy_fixed_round", Json::num(*occ_fixed)),
+                            (
+                                "failover",
+                                Json::obj(vec![
+                                    ("sessions_migrated", Json::num(fail.0)),
+                                    (
+                                        "inflight_tokens_abandoned",
+                                        Json::num(fail.1),
+                                    ),
+                                    ("sweeps", Json::num(fail.2)),
+                                ]),
+                            ),
                             (
                                 "tiers",
                                 Json::Obj(

@@ -332,7 +332,10 @@ pub struct ExpConfig {
     /// Async mode (`--max-worker-restarts`): how many times a crashed
     /// generation worker may be respawned on a fresh engine. The
     /// replacement resumes the dead worker's exact prompt-partition
-    /// position, so the strided stream stays no-drop/no-dup.
+    /// position, so the strided stream stays no-drop/no-dup. Past the
+    /// budget the seat's work moves to a survivor instead (lane
+    /// re-stride / session migration); only a pool with no survivors
+    /// fails the run.
     pub max_worker_restarts: usize,
     /// Async mode (`--engine-retries`): transparent re-attempts of a
     /// worker's generation call on engine errors, with deterministic
@@ -355,8 +358,9 @@ pub struct ExpConfig {
     /// (`--inject-fault worker=W,round=R,kind=panic|stall|engine_err`).
     pub inject_fault: Option<FaultPlan>,
     /// Serve mode (`--serve-sessions`): sessions in the traffic trace.
-    /// Must divide evenly over `gen_workers` — sessions partition
-    /// statically across serving seats and never migrate.
+    /// Must divide evenly over `gen_workers` — seats serve the residues
+    /// of `session % M`, one residue each at spawn; a takeover merges a
+    /// dead seat's residues onto a survivor.
     pub serve_sessions: u64,
     /// Serve mode (`--serve-turns`): turns per session. Every session
     /// runs the same count so the round geometry stays exact.
@@ -586,16 +590,11 @@ impl ExpConfig {
                      slot pool (use --gen-engine continuous)"
                 );
             }
-            if self.checkpoint_every != 0 || self.resume {
-                bail!(
-                    "serve mode is not checkpointable: sessions in flight \
-                     cannot be snapshotted (drop --checkpoint-every/--resume)"
-                );
-            }
             if self.serve_sessions % self.gen_workers as u64 != 0 {
                 bail!(
                     "--serve-sessions {} must divide evenly over {} workers \
-                     (sessions partition statically; they never migrate)",
+                     (the residue partition `session % M` must spread the \
+                     trace evenly at spawn)",
                     self.serve_sessions,
                     self.gen_workers
                 );
@@ -935,12 +934,13 @@ mod tests {
             "--gen-workers", "2",
         ])
         .is_ok());
-        // in-flight sessions cannot be snapshotted
+        // serve runs checkpoint like every other mode: the delivered-turn
+        // set is the whole resumable source state
         assert!(parse(&[
             "t", "--mode", "serve", "--gen-engine", "continuous",
             "--checkpoint-every", "4",
         ])
-        .is_err());
+        .is_ok());
         // streaming modes are N=1 (same contract as async)
         assert!(parse(&[
             "t", "--mode", "serve", "--gen-engine", "continuous", "--n", "2",

@@ -19,7 +19,11 @@
 //! exactly-once but not bitwise — worker RNG streams are re-derived under
 //! a fresh epoch (live worker threads cannot be snapshotted mid-call) and
 //! the trainer's lane accounts make regenerated rounds dedupe instead of
-//! double-train.
+//! double-train. Serve-mode resume rides the same shape: the session
+//! boards recompute their whole schedule from `(trace, delivered-turn
+//! set)`, so the checkpoint carries just the sorted delivered uids (one
+//! skip list, no cursors) and a resumed run re-serves only the
+//! undelivered remainder of the trace, exactly once.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -41,14 +45,16 @@ pub struct StalenessAccum {
     pub tok_max: u64,
 }
 
-/// A round source's resumable position. One shape serves both sources:
+/// A round source's resumable position. One shape serves every source:
 /// the inline source is a single lane with a bitwise RNG cursor; a worker
 /// pool is M lanes with per-lane prompt cursors (the trainer-side
 /// *accepted* frontier, not the workers' run-ahead ledger — queued rounds
-/// lost in the crash regenerate and dedupe).
+/// lost in the crash regenerate and dedupe); the serve source is zero
+/// cursors and one skip list holding the delivered turn uids.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SourceState {
-    /// `"inline"` or `"pool"`; resume refuses a mode mismatch.
+    /// `"inline"`, `"pool"`, or `"serve"`; resume refuses a mode
+    /// mismatch.
     pub kind: String,
     /// Generation RNG cursor ([`crate::util::rng::Pcg32::state`]) —
     /// inline source only (worker threads own their streams).

@@ -81,11 +81,19 @@
 //! via the shared **lane ledger** (advanced only *after* a round is
 //! handed over, so a crash re-generates at-least-once and the trainer's
 //! lane accounts drop the duplicates: exactly-once into the
-//! optimizer). When restarts are exhausted, surviving workers inherit the
-//! orphaned lanes (cursor re-striding) — a pool degrades gracefully down
-//! to one worker before the run fails loudly. Transient engine faults
-//! retry with deterministic jittered backoff
-//! ([`crate::runtime::RetryPolicy`]); a seat silent past
+//! optimizer). When restarts are exhausted, surviving seats inherit the
+//! orphaned work in every mode: round-synchronous lanes re-stride onto a
+//! live heir mid-flight; continuous lanes force the heir through a clean
+//! retire-and-respawn over the merged lane mask (in-flight KV is
+//! engine-local and abandoned — `inflight_tokens_abandoned` prices it —
+//! and the heir re-admits each lane from the trainer-accepted frontier +
+//! skip set, so migration is respawn-on-a-different-seat); serve-mode
+//! session residues migrate the same way, with `SessionAccounts` keeping
+//! turn uids exactly-once across the move. A pool degrades gracefully
+//! down to one seat (`lanes_reassigned` / `sessions_migrated` /
+//! `degraded_capacity_steps` in the run metas) before the run fails
+//! loudly. Transient engine faults retry with deterministic jittered
+//! backoff ([`crate::runtime::RetryPolicy`]); a seat silent past
 //! `--stall-timeout-secs` is flagged by the watchdog and surfaced in the
 //! run metas. `--inject-fault worker=W,round=R,kind=panic|stall|engine_err`
 //! scripts each failure deterministically for the integration tests.
@@ -101,8 +109,9 @@ use anyhow::{anyhow, bail, Result};
 
 use super::checkpoint::{self, Checkpoint, SourceState, StalenessAccum};
 use super::pool::{
-    beat, maybe_inject, panic_message, round_from_groups, Accept, GenMsg,
-    SeatShared, SlotCtl, SpawnCtx, WorkerExit,
+    beat, maybe_inject, panic_message, round_from_groups, supervisor_log,
+    Accept, GenMsg, Recovery, SeatShared, SlotCtl, SpawnCtx, Supervision,
+    WorkerExit,
 };
 use super::pretrain::RLHF_RANGE;
 use super::shard::ShardPool;
@@ -120,10 +129,10 @@ use crate::gen::{Generator, SampleOpts};
 use crate::metrics::{Phase, RunLog, Timeline};
 use crate::runtime::{Engine, ParamView, RetryPolicy, TrainState, RETRY_STREAM};
 use crate::serve::frontend::ServeMux;
-use crate::serve::session::SessionBoard;
+use crate::serve::session::{SessionBoard, TurnRecord};
 use crate::serve::traffic::{turn_uid, uid_session_turn, TrafficCfg, TrafficGen};
 use crate::util::bench::pct;
-use crate::util::bitset::AtomicBitSet;
+use crate::util::bitset::{AtomicBitSet, BitSet};
 use crate::util::rng::Pcg32;
 
 /// Prompts consumed by one generation round: the cursor stride. The
@@ -785,6 +794,12 @@ struct ServeTelemetry {
     slot_sweeps: u64,
     /// Mux sweeps elapsed (includes idle arrival gaps).
     mux_sweeps: u64,
+    /// Every served turn across all seats and incarnations — rendered
+    /// into the `serve_transcript` meta at finish. Seats flush records
+    /// sweep-by-sweep (not at exit), so a turn a dying seat already
+    /// served is never lost with its thread; the union is the whole
+    /// trace no matter how residues moved between seats.
+    records: Vec<TurnRecord>,
 }
 
 /// Seat-side flush of one mux's pool accounting into the shared
@@ -839,6 +854,13 @@ impl SessionAccounts {
         SessionAccounts { turns, delivered: HashSet::new(), duplicates: 0 }
     }
 
+    /// Rebuild the accounts from a checkpoint's delivered-turn set. The
+    /// delivered set IS the whole serve-source state: boards recompute
+    /// their schedules from it, so resume needs no cursors beyond it.
+    fn resume(turns: u64, delivered: HashSet<u64>) -> SessionAccounts {
+        SessionAccounts { turns, delivered, duplicates: 0 }
+    }
+
     fn accept(&mut self, msg: &GenMsg) -> Result<Accept> {
         let Some(uids) = &msg.indices else {
             bail!("served round carries no session uids — this is a bug");
@@ -878,10 +900,10 @@ impl SessionAccounts {
     }
 }
 
-/// Serve-while-training: M serving seats, each multiplexing its static
-/// partition of the traffic trace (`session % M == w`) onto its own
-/// continuous slot pool, with completed turns assembled into training
-/// rounds — live traffic IS the prompt stream.
+/// Serve-while-training: M serving seats, each multiplexing its slice
+/// of the traffic trace (the residues `session % M` it currently owns)
+/// onto its own continuous slot pool, with completed turns assembled
+/// into training rounds — live traffic IS the prompt stream.
 ///
 /// Structure mirrors [`WorkerPool`] (supervised seats, bounded round
 /// queue, a latest-wins [`ParamBus`] seat each, heartbeat watchdog,
@@ -891,12 +913,16 @@ impl SessionAccounts {
 ///   [`SessionAccounts`] extends the trainer's dedup/hole checks to them
 ///   (a respawned seat rebuilds its schedule from the delivered set, so
 ///   every post-respawn round is all-fresh);
-/// - seats **retire themselves** when their partition is fully served —
-///   the run's length is the traffic's, not a step budget;
-/// - sessions never migrate between seats: when a seat exhausts its
-///   restarts the run fails loudly **naming the sessions** that can no
-///   longer complete (silently dropping a turn is the one forbidden
-///   outcome).
+/// - seats **retire themselves** when their slice is fully served — the
+///   run's length is the traffic's, not a step budget;
+/// - when a seat exhausts its restarts, its sessions **migrate**: the
+///   session board is a pure function of `(trace, delivered-set)`, so a
+///   survivor rebuilt over the merged residues resumes every stranded
+///   session at its first undelivered turn ([`SessionBoard::for_lanes`]),
+///   and [`SessionAccounts`] keeps turn-uid exactly-once across the
+///   move. Only when *no* seat survives does the run fail loudly,
+///   naming the sessions that cannot complete (silently dropping a turn
+///   is the one forbidden outcome).
 pub struct SessionSource {
     rx: mpsc::Receiver<GenMsg>,
     tx: Option<mpsc::SyncSender<GenMsg>>,
@@ -907,6 +933,9 @@ pub struct SessionSource {
     /// Unused by serving seats (sessions, not lanes) but part of the
     /// shared seat handle; kept empty.
     ledger: Arc<Vec<AtomicU64>>,
+    /// Per-seat control block. The lane mask holds the traffic residues
+    /// (`session % workers`) the seat serves; clearing it forces a live
+    /// seat to retire so it can respawn over a merged mask (takeover).
     ctl: Arc<Vec<SlotCtl>>,
     fault_fired: Arc<AtomicBool>,
     retry_count: Arc<AtomicU64>,
@@ -914,15 +943,13 @@ pub struct SessionSource {
     done: Arc<Vec<AtomicBool>>,
     ctx: ServeCtx,
     seats: Vec<Option<JoinHandle<()>>>,
-    incarnations: Vec<u64>,
-    restarts_used: Vec<usize>,
+    sup: Supervision,
+    /// Session migration in flight: the merged residue mask a forcibly
+    /// retired heir respawns over once its clean exit is reaped.
+    pending_respawn: Vec<Option<BitSet>>,
     accounts: SessionAccounts,
     pending: VecDeque<GenMsg>,
     totals: Vec<(f64, u64)>,
-    worker_errors: Vec<String>,
-    worker_restarts: u64,
-    stalled_now: Vec<bool>,
-    ever_stalled: Vec<bool>,
     gen_bs: u64,
     received: u64,
     /// Round-tier counterfactual occupancy accounting: had each
@@ -941,12 +968,6 @@ impl SessionSource {
         resume: Option<&Checkpoint>,
         bus: Arc<ParamBus>,
     ) -> Result<SessionSource> {
-        if resume.is_some() {
-            bail!(
-                "serve mode is not checkpointable (sessions in flight \
-                 cannot be snapshotted); run without --resume"
-            );
-        }
         if cfg.gen_engine != GenEngine::Continuous {
             bail!(
                 "serve mode needs the continuous engine (got {:?})",
@@ -957,10 +978,35 @@ impl SessionSource {
         if cfg.serve_sessions % m as u64 != 0 {
             bail!(
                 "--serve-sessions {} must divide evenly over {m} workers \
-                 (sessions partition statically; they never migrate)",
+                 (the residue partition `session % M` must spread the \
+                 trace evenly at spawn)",
                 cfg.serve_sessions
             );
         }
+        // the delivered-turn set is the whole resumable serve state:
+        // every board rebuilds its schedule from (trace, delivered), the
+        // traffic clock restarts per incarnation, and the epoch shifts
+        // worker RNG streams past every stream the prior run consumed
+        let (accounts, epoch0, received) = match resume {
+            Some(c) => {
+                let s = &c.source;
+                if s.kind != "serve" {
+                    bail!(
+                        "--resume: checkpoint was written by a '{}' round \
+                         source but this run is serve mode",
+                        s.kind
+                    );
+                }
+                let delivered: HashSet<u64> =
+                    s.skip.first().cloned().unwrap_or_default().into_iter().collect();
+                (
+                    SessionAccounts::resume(cfg.serve_turns, delivered),
+                    s.epoch + 1,
+                    s.generated,
+                )
+            }
+            None => (SessionAccounts::new(cfg.serve_turns), 0, 0),
+        };
         let gen_bs = prep.engine.manifest.config.gen_batch as u64;
         let stride = cursor_stride(gen_bs, cfg.k_samples);
         let ctx = ServeCtx {
@@ -981,7 +1027,6 @@ impl SessionSource {
                 stall_timeout: cfg.stall_timeout_secs,
                 fault: cfg.inject_fault,
                 origin,
-                max_restarts: cfg.max_worker_restarts,
                 continuous: true,
             },
             sessions: cfg.serve_sessions,
@@ -1002,10 +1047,7 @@ impl SessionSource {
             ledger: Arc::new(Vec::new()),
             ctl: Arc::new(
                 (0..m)
-                    .map(|w| SlotCtl {
-                        lanes: AtomicBitSet::single(w, m),
-                        beat_ms: AtomicU64::new(now_ms),
-                    })
+                    .map(|w| SlotCtl::new(AtomicBitSet::single(w, m), now_ms))
                     .collect(),
             ),
             fault_fired: Arc::new(AtomicBool::new(false)),
@@ -1014,17 +1056,13 @@ impl SessionSource {
             done: Arc::new((0..m).map(|_| AtomicBool::new(false)).collect()),
             ctx,
             seats: (0..m).map(|_| None).collect(),
-            incarnations: vec![0; m],
-            restarts_used: vec![0; m],
-            accounts: SessionAccounts::new(cfg.serve_turns),
+            sup: Supervision::new(m, epoch0, cfg.max_worker_restarts),
+            pending_respawn: (0..m).map(|_| None).collect(),
+            accounts,
             pending: VecDeque::new(),
             totals: vec![(0.0, 0); m],
-            worker_errors: Vec::new(),
-            worker_restarts: 0,
-            stalled_now: vec![false; m],
-            ever_stalled: vec![false; m],
             gen_bs,
-            received: 0,
+            received,
             fixed_tokens: 0,
             fixed_slot_sweeps: 0,
             poll: Duration::from_secs_f64(
@@ -1059,21 +1097,25 @@ impl SessionSource {
         })
     }
 
-    /// (Re)spawn serving seat `w`. A replacement rebuilds its session
-    /// schedule from the trainer-accepted delivered set: already-trained
-    /// turns are skipped, lost in-flight turns regenerate.
+    /// (Re)spawn serving seat `w` over the residues its control mask
+    /// currently holds. A replacement rebuilds its session schedule from
+    /// the trainer-accepted delivered set: already-trained turns are
+    /// skipped, lost in-flight turns regenerate.
     fn spawn_seat(&mut self, w: usize) -> Result<()> {
         let ctx = self.ctx.clone();
         let sh = self.shared()?;
         let exit_tx = self.exit_tx.clone();
-        let incarnation = self.incarnations[w];
+        let incarnation = self.sup.incarnations[w];
+        let lanes: Vec<u64> =
+            self.ctl[w].lanes.snapshot().ones().map(|l| l as u64).collect();
         let skip = self.accounts.delivered.clone();
+        self.done[w].store(false, Ordering::SeqCst);
         beat(&self.ctl[w], self.ctx.base.origin);
         let handle = std::thread::Builder::new()
             .name(format!("gen-worker-{w}"))
             .spawn(move || {
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
-                    seat_serve(&ctx, &sh, w, incarnation, skip)
+                    seat_serve(&ctx, &sh, w, incarnation, &lanes, skip)
                 }))
                 .unwrap_or_else(|p| {
                     Err(anyhow!("panicked: {}", panic_message(p.as_ref())))
@@ -1086,7 +1128,9 @@ impl SessionSource {
     }
 
     /// Reap exits and heartbeat the watchdog — the [`WorkerPool`] loop
-    /// with "partition served" as the legitimate clean-exit reason.
+    /// with two legitimate clean-exit reasons: "slice served" (the seat
+    /// set its done flag) and "forcibly retired" (the supervisor cleared
+    /// its residue mask so it could respawn over a merged one).
     fn supervise(&mut self) -> Result<()> {
         while let Ok(exit) = self.exit_rx.try_recv() {
             let w = exit.slot;
@@ -1098,39 +1142,33 @@ impl SessionSource {
                     self.totals[w].0 += secs;
                     self.totals[w].1 += rounds;
                     let served = self.done[w].load(Ordering::SeqCst);
-                    if !self.stop.load(Ordering::SeqCst) && !served {
-                        self.handle_death(
-                            w,
-                            anyhow!("exited cleanly mid-serve (queue closed?)"),
-                        )?;
+                    let retired = self.ctl[w].lanes.is_empty();
+                    if !self.stop.load(Ordering::SeqCst) {
+                        if !served && !retired {
+                            self.handle_death(
+                                w,
+                                anyhow!(
+                                    "exited cleanly mid-serve (queue closed?)"
+                                ),
+                            )?;
+                        } else if let Some(mask) =
+                            self.pending_respawn[w].take()
+                        {
+                            self.respawn_with_lanes(w, mask)?;
+                        }
                     }
                 }
                 Err(e) => self.handle_death(w, e)?,
             }
         }
-        let now_ms = self.ctx.base.origin.elapsed().as_millis() as u64;
-        for w in 0..self.seats.len() {
-            if self.seats[w].is_none() || self.done[w].load(Ordering::SeqCst) {
-                self.stalled_now[w] = false;
-                continue;
-            }
-            let age = now_ms
-                .saturating_sub(self.ctl[w].beat_ms.load(Ordering::SeqCst));
-            let stalled = age as f64 / 1000.0 > self.ctx.base.stall_timeout;
-            if stalled && !self.stalled_now[w] {
-                self.stalled_now[w] = true;
-                self.ever_stalled[w] = true;
-                eprintln!(
-                    "[supervisor] gen-worker-{w} silent for {:.1}s \
-                     (--stall-timeout-secs {:.1}) — flagged as stalled",
-                    age as f64 / 1000.0,
-                    self.ctx.base.stall_timeout
-                );
-            } else if !stalled && self.stalled_now[w] {
-                self.stalled_now[w] = false;
-                eprintln!("[supervisor] gen-worker-{w} resumed heartbeats");
-            }
-        }
+        let seats = &self.seats;
+        let done = &self.done;
+        self.sup.watchdog(
+            &self.ctl,
+            |w| seats[w].is_some() && !done[w].load(Ordering::SeqCst),
+            self.ctx.base.origin,
+            self.ctx.base.stall_timeout,
+        );
         Ok(())
     }
 
@@ -1147,11 +1185,12 @@ impl SessionSource {
         Ok(())
     }
 
-    /// Sessions in `w`'s partition with undelivered turns — the loud
-    /// failure payload.
-    fn incomplete_sessions(&self, w: usize) -> Vec<u64> {
-        (w as u64..self.ctx.sessions)
-            .step_by(self.ctx.workers as usize)
+    /// Sessions whose residue is in `lanes` and which still have
+    /// undelivered turns — the migration payload (and, when no seat
+    /// survives, the loud-failure payload).
+    fn incomplete_sessions(&self, lanes: &BitSet) -> Vec<u64> {
+        (0..self.ctx.sessions)
+            .filter(|s| lanes.contains((s % self.ctx.workers) as usize))
             .filter(|&s| {
                 (0..self.ctx.turns).any(|t| {
                     !self
@@ -1165,28 +1204,88 @@ impl SessionSource {
 
     fn handle_death(&mut self, w: usize, err: anyhow::Error) -> Result<()> {
         self.drain_queue()?;
-        self.worker_errors.push(format!("gen-worker-{w}: {err:#}"));
-        if self.restarts_used[w] < self.ctx.base.max_restarts {
-            self.restarts_used[w] += 1;
-            self.worker_restarts += 1;
-            self.incarnations[w] += 1;
-            eprintln!(
-                "[supervisor] gen-worker-{w} died: {err:#}; respawning on a \
-                 fresh engine (restart {}/{}) — resuming its sessions past \
-                 the delivered turns",
-                self.restarts_used[w], self.ctx.base.max_restarts
-            );
-            return self.spawn_seat(w);
+        // a heir that died while its takeover was queued takes its
+        // pending merged mask back so those residues are not lost
+        if let Some(mask) = self.pending_respawn[w].take() {
+            self.ctl[w].lanes.merge(&mask);
         }
-        // sessions never migrate: their turn chains live in the dead
-        // seat's traffic partition, so the run fails naming them rather
-        // than silently dropping their remaining turns
-        bail!(
-            "gen-worker-{w} is unrecoverable after {} restarts: {err:#}; \
-             serving sessions {:?} cannot complete their turns",
-            self.ctx.base.max_restarts,
-            self.incomplete_sessions(w)
+        let lanes = self.ctl[w].lanes.snapshot();
+        // its in-flight decode work died with the engine-local KV
+        self.sup.inflight_tokens_abandoned +=
+            self.ctl[w].inflight_tok.swap(0, Ordering::SeqCst);
+        // any non-lost seat can inherit: a live one is forced to retire
+        // first, an already-exited one (slice served) respawns directly
+        let heir = (0..self.seats.len()).find(|&h| h != w && !self.sup.lost[h]);
+        let stranded = format!(
+            "; serving sessions {:?} cannot complete their turns",
+            self.incomplete_sessions(&lanes)
         );
+        match self.sup.on_death(w, &err, heir, &stranded)? {
+            Recovery::Respawn => self.spawn_seat(w),
+            Recovery::Takeover { heir: h } => {
+                self.ctl[w].lanes.clear();
+                let moved = self.incomplete_sessions(&lanes);
+                self.sup.sessions_migrated += moved.len() as u64;
+                supervisor_log(
+                    w,
+                    "migrate",
+                    &format!(
+                        "died with no restarts left: {err:#}; residues \
+                         {lanes} ({} unfinished sessions) migrating onto \
+                         gen-worker-{h}",
+                        moved.len()
+                    ),
+                );
+                if let Some(pmask) = &mut self.pending_respawn[h] {
+                    // heir already queued for takeover: widen its mask
+                    for l in lanes.ones() {
+                        pmask.set(l);
+                    }
+                    Ok(())
+                } else {
+                    let mut merged = self.ctl[h].lanes.snapshot();
+                    for l in lanes.ones() {
+                        merged.set(l);
+                    }
+                    self.ctl[h].lanes.clear();
+                    if self.seats[h].is_some()
+                        && !self.done[h].load(Ordering::SeqCst)
+                    {
+                        // live heir: the cleared mask forces it to retire
+                        // at its next sweep; supervise() reaps the clean
+                        // exit and respawns it over the merged residues
+                        self.pending_respawn[h] = Some(merged);
+                        Ok(())
+                    } else {
+                        // heir already exited (slice served): nothing to
+                        // retire, respawn it over the merged mask now
+                        self.respawn_with_lanes(h, merged)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Respawn takeover heir `h` over the merged residue mask: its new
+    /// board is rebuilt from `(trace, delivered)`, so every migrated
+    /// session resumes at its first undelivered turn.
+    fn respawn_with_lanes(&mut self, h: usize, mask: BitSet) -> Result<()> {
+        self.drain_queue()?;
+        // the forced retire abandoned the heir's own in-flight KV too
+        self.sup.inflight_tokens_abandoned +=
+            self.ctl[h].inflight_tok.swap(0, Ordering::SeqCst);
+        // the mask was cleared to force the retire, so merge == assign
+        self.ctl[h].lanes.merge(&mask);
+        self.sup.on_takeover_respawn(h);
+        supervisor_log(
+            h,
+            "takeover",
+            &format!(
+                "serving merged residues {mask}; schedule rebuilt from the \
+                 delivered-turn set"
+            ),
+        );
+        self.spawn_seat(h)
     }
 
     fn deliver(
@@ -1203,6 +1302,11 @@ impl SessionSource {
             msg.round.gen_span.1,
         );
         self.received += 1;
+        // rounds delivered while a seat is permanently lost: the price
+        // of running the trace on fewer serving seats
+        if self.sup.degraded() {
+            self.sup.degraded_capacity_steps += 1;
+        }
         // round-tier counterfactual: a fixed round holds every slot for
         // its slowest row's sweeps
         self.fixed_tokens += msg
@@ -1251,10 +1355,27 @@ impl RoundSource for SessionSource {
     }
 
     fn snapshot(&self) -> Option<SourceState> {
-        // serve runs are bounded by their traffic trace, not resumable
-        // from a mid-trace cursor; config validation rejects
-        // --checkpoint-every in serve mode
-        None
+        // rescued-but-untrained rounds would be lost: they are already in
+        // the delivered set, so a resume would skip them without their
+        // turns ever reaching the trainer. Skip this boundary; the run
+        // loop retries at the next step.
+        if !self.pending.is_empty() {
+            return None;
+        }
+        // the delivered-turn set is the whole serve state: every board
+        // is a pure function of (trace, delivered), so no cursors beyond
+        // it need persisting
+        let mut delivered: Vec<u64> =
+            self.accounts.delivered.iter().copied().collect();
+        delivered.sort_unstable();
+        Some(SourceState {
+            kind: "serve".to_string(),
+            rng: None,
+            generated: self.received,
+            cursors: Vec::new(),
+            skip: vec![delivered],
+            epoch: self.sup.incarnations.iter().copied().max().unwrap_or(0),
+        })
     }
 
     fn finish(self: Box<Self>, log: &mut RunLog) -> Result<()> {
@@ -1274,6 +1395,7 @@ impl RoundSource for SessionSource {
                     src.totals[exit.slot].1 += rounds;
                 }
                 Err(e) => src
+                    .sup
                     .worker_errors
                     .push(format!("gen-worker-{}: {e:#}", exit.slot)),
             }
@@ -1288,16 +1410,9 @@ impl RoundSource for SessionSource {
         }
         log.set_meta("gen_total_secs", format!("{gen_total:.3}"));
         log.set_meta("gen_rounds", rounds_total);
-        log.set_meta("worker_restarts", src.worker_restarts);
-        log.set_meta(
-            "stalled_workers",
-            src.ever_stalled.iter().filter(|&&b| b).count(),
-        );
+        src.sup.meta(log);
         log.set_meta("engine_retries", src.retry_count.load(Ordering::SeqCst));
         log.set_meta("dropped_duplicate_rounds", src.accounts.duplicates);
-        if !src.worker_errors.is_empty() {
-            log.set_meta("worker_errors", src.worker_errors.join(" | "));
-        }
         // serving telemetry: latency percentiles, staleness lags,
         // occupancy vs the fixed-round counterfactual
         let mut t = std::mem::take(
@@ -1344,6 +1459,27 @@ impl RoundSource for SessionSource {
                 src.fixed_tokens as f64 / src.fixed_slot_sweeps.max(1) as f64
             ),
         );
+        // the union of every seat's served records, rendered in the
+        // [`SessionBoard::transcript`] line format and (session, turn)
+        // order — deterministic at fixed params regardless of which seat
+        // (or incarnation) served each turn, so migration and resume
+        // tests compare it byte-for-byte
+        t.records.sort_by_key(|r| (r.session, r.turn));
+        // a forcibly retired seat may have recorded a completed turn
+        // whose round never delivered; its heir re-serves (and re-records)
+        // that turn, so the transcript keeps one line per uid
+        t.records.dedup_by_key(|r| r.uid);
+        let transcript: String = t
+            .records
+            .iter()
+            .map(|r| {
+                format!(
+                    "session {} turn {} uid {} term {} reply {:?}\n",
+                    r.session, r.turn, r.uid, r.terminated, r.reply
+                )
+            })
+            .collect();
+        log.set_meta("serve_transcript", transcript);
         Ok(())
     }
 }
@@ -1353,12 +1489,18 @@ impl RoundSource for SessionSource {
 /// the published policy slot between sweeps (the inflight weight swap,
 /// exactly as [`seat_continuous`]), pushing latency/lag samples into the
 /// shared telemetry, assembling completed turns into training rounds,
-/// and retiring itself once its session partition is fully served.
+/// and retiring itself once its session slice is fully served. `lanes`
+/// holds the traffic residues (`session % workers`) this incarnation
+/// serves — one residue at first spawn, several after inheriting a dead
+/// seat's sessions; an empty control mask mid-run means the supervisor
+/// wants this seat's residues back for a takeover merge, and the seat
+/// retires without setting its done flag.
 fn seat_serve(
     ctx: &ServeCtx,
     sh: &ServeShared,
     w: usize,
     incarnation: u64,
+    lanes: &[u64],
     skip: HashSet<u64>,
 ) -> Result<(f64, u64)> {
     let base = &ctx.base;
@@ -1379,7 +1521,7 @@ fn seat_serve(
         seed: base.seed,
     });
     let board =
-        SessionBoard::new(&traffic, base.k, w as u64, ctx.workers, &skip)?;
+        SessionBoard::for_lanes(&traffic, base.k, lanes, ctx.workers, &skip)?;
     let mut mux = ServeMux::new(
         PoolCfg {
             slots: mcfg.gen_batch,
@@ -1396,14 +1538,22 @@ fn seat_serve(
     let mut gen_total = 0.0f64;
     let mut rounds_done = 0u64;
     let mut inject_err = false;
+    let mut flushed_records = 0usize;
     let mut t_round = base.origin.elapsed().as_secs_f64();
     loop {
         beat(&sb.ctl[w], base.origin);
         if sb.stop.load(Ordering::SeqCst) {
             break;
         }
+        if sb.ctl[w].lanes.is_empty() {
+            // forcibly retired: the supervisor reclaimed this seat's
+            // residues for a takeover merge — abandon in-flight work
+            // (the accounts dedup anything re-served) and exit WITHOUT
+            // the done flag so supervision respawns over the merged mask
+            break;
+        }
         if mux.is_done() && assembler.buffered() == 0 {
-            // partition fully served and every round handed over
+            // slice fully served and every round handed over
             sh.done[w].store(true, Ordering::SeqCst);
             break;
         }
@@ -1436,6 +1586,10 @@ fn seat_serve(
             },
         )?;
         inject_err = false;
+        // what a death right now would abandon with the engine-local KV
+        sb.ctl[w]
+            .inflight_tok
+            .store(mux.inflight_tokens(), Ordering::SeqCst);
         if !events.is_empty() {
             let mut t =
                 sh.telemetry.lock().unwrap_or_else(PoisonError::into_inner);
@@ -1446,6 +1600,14 @@ fn seat_serve(
                 if ev.turn_done {
                     t.requests += 1;
                 }
+            }
+            // flush served-turn records as they land, not at exit — a
+            // seat that dies mid-serve must not take its transcript with
+            // it (records only grow when a sweep completes turns)
+            let recs = mux.board().records();
+            if recs.len() > flushed_records {
+                t.records.extend_from_slice(&recs[flushed_records..]);
+                flushed_records = recs.len();
             }
         }
         for (c, _) in events {
@@ -1474,7 +1636,12 @@ fn seat_serve(
             t_round = base.origin.elapsed().as_secs_f64();
         }
     }
-    flush_serve_stats(&sh.telemetry, mux.stats(), mcfg.gen_batch, mux.sweep());
+    flush_serve_stats(
+        &sh.telemetry,
+        mux.stats(),
+        mcfg.gen_batch,
+        mux.sweep(),
+    );
     Ok((gen_total, rounds_done))
 }
 

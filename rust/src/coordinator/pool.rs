@@ -5,10 +5,11 @@
 //! Split out of `pipeline.rs` as a pure code move: the trainer loop and
 //! the [`ParamBus`] publication cell live there; this module owns the
 //! worker seats, their supervision (respawn / lane re-striding /
-//! heartbeat watchdog), and the lane ledger that makes crash recovery
-//! exactly-once. The serve-while-training [`SessionSource`] in
-//! `pipeline.rs` reuses the seat plumbing defined here ([`SpawnCtx`],
-//! [`SeatShared`], fault injection, exit reports).
+//! restart-exhausted takeover / heartbeat watchdog), and the lane ledger
+//! that makes crash recovery exactly-once. The serve-while-training
+//! [`SessionSource`] in `pipeline.rs` reuses the seat plumbing defined
+//! here ([`SpawnCtx`], [`SeatShared`], [`Supervision`], fault injection,
+//! exit reports).
 //!
 //! [`SessionSource`]: super::pipeline::SessionSource
 
@@ -65,6 +66,22 @@ pub(crate) struct WorkerExit {
 pub(crate) struct SlotCtl {
     pub(crate) lanes: AtomicBitSet,
     pub(crate) beat_ms: AtomicU64,
+    /// Response tokens currently in flight inside the seat's slot pool
+    /// (continuous engines; stays 0 on round-synchronous seats). The
+    /// supervisor `swap(0)`s it when the seat's work is abandoned, so
+    /// `inflight_tokens_abandoned` prices the decode work a takeover
+    /// throws away with the engine-local KV.
+    pub(crate) inflight_tok: AtomicU64,
+}
+
+impl SlotCtl {
+    pub(crate) fn new(lanes: AtomicBitSet, now_ms: u64) -> SlotCtl {
+        SlotCtl {
+            lanes,
+            beat_ms: AtomicU64::new(now_ms),
+            inflight_tok: AtomicU64::new(0),
+        }
+    }
 }
 
 pub(crate) fn beat(ctl: &SlotCtl, origin: Instant) {
@@ -107,6 +124,178 @@ pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
         s.clone()
     } else {
         "non-string panic payload".to_string()
+    }
+}
+
+/// The one format every supervision event is rendered through:
+/// `[supervisor] gen-worker-<seat> <event>: <detail>`. Events are short
+/// stable verbs (`respawn`, `takeover`, `restride`, `migrate`, `stalled`,
+/// `heartbeat-resumed`); the detail is free-form. Log scraping matches the
+/// prefix, never the prose.
+pub(crate) fn supervisor_line(seat: usize, event: &str, detail: &str) -> String {
+    format!("[supervisor] gen-worker-{seat} {event}: {detail}")
+}
+
+pub(crate) fn supervisor_log(seat: usize, event: &str, detail: &str) {
+    eprintln!("{}", supervisor_line(seat, event, detail));
+}
+
+/// What the shared supervision decided for a dead seat.
+pub(crate) enum Recovery {
+    /// Restart budget remains: respawn the seat in place.
+    Respawn,
+    /// Budget exhausted but a survivor exists: the dead seat's work moves
+    /// to `heir` (lane re-stride / session migration).
+    Takeover { heir: usize },
+}
+
+/// Restart, incarnation and degradation bookkeeping shared by both
+/// supervisors ([`WorkerPool`] and the serve-mode `SessionSource`): the
+/// respawn-or-takeover decision, the heartbeat watchdog transitions and
+/// the failover telemetry land here once instead of twice.
+pub(crate) struct Supervision {
+    /// Per-slot incarnation: respawns (and resume epochs) shift the
+    /// replacement's RNG streams so a replayed prompt block still samples
+    /// fresh tokens instead of re-walking the dead worker's stream.
+    pub(crate) incarnations: Vec<u64>,
+    restarts_used: Vec<usize>,
+    max_restarts: usize,
+    pub(crate) worker_restarts: u64,
+    pub(crate) worker_errors: Vec<String>,
+    stalled_now: Vec<bool>,
+    ever_stalled: Vec<bool>,
+    /// Seats permanently retired by a takeover; while any is set the pool
+    /// runs at degraded capacity.
+    pub(crate) lost: Vec<bool>,
+    pub(crate) lanes_reassigned: u64,
+    pub(crate) sessions_migrated: u64,
+    pub(crate) inflight_tokens_abandoned: u64,
+    pub(crate) degraded_capacity_steps: u64,
+}
+
+impl Supervision {
+    pub(crate) fn new(m: usize, epoch0: u64, max_restarts: usize) -> Supervision {
+        Supervision {
+            incarnations: vec![epoch0; m],
+            restarts_used: vec![0; m],
+            max_restarts,
+            worker_restarts: 0,
+            worker_errors: Vec::new(),
+            stalled_now: vec![false; m],
+            ever_stalled: vec![false; m],
+            lost: vec![false; m],
+            lanes_reassigned: 0,
+            sessions_migrated: 0,
+            inflight_tokens_abandoned: 0,
+            degraded_capacity_steps: 0,
+        }
+    }
+
+    pub(crate) fn degraded(&self) -> bool {
+        self.lost.iter().any(|&b| b)
+    }
+
+    /// Record a seat death and decide its recovery. `heir` is the caller's
+    /// takeover target (`None` when no survivor remains); `stranded` is
+    /// appended to the no-survivor error so callers can name what a failed
+    /// pool leaves behind (serve mode names its sessions).
+    pub(crate) fn on_death(
+        &mut self,
+        w: usize,
+        err: &anyhow::Error,
+        heir: Option<usize>,
+        stranded: &str,
+    ) -> Result<Recovery> {
+        self.worker_errors.push(format!("gen-worker-{w}: {err:#}"));
+        if self.restarts_used[w] < self.max_restarts {
+            self.restarts_used[w] += 1;
+            self.worker_restarts += 1;
+            self.incarnations[w] += 1;
+            supervisor_log(
+                w,
+                "respawn",
+                &format!(
+                    "died: {err:#}; restarting on a fresh engine \
+                     (restart {}/{})",
+                    self.restarts_used[w], self.max_restarts
+                ),
+            );
+            return Ok(Recovery::Respawn);
+        }
+        match heir {
+            Some(h) => {
+                self.lost[w] = true;
+                Ok(Recovery::Takeover { heir: h })
+            }
+            None => bail!(
+                "gen-worker-{w} died with no restarts left and no surviving \
+                 workers: {err:#}{stranded}"
+            ),
+        }
+    }
+
+    /// Bump a takeover heir's incarnation before its respawn over the
+    /// merged lanes. NOT charged to any restart budget: the heir did
+    /// nothing wrong — it retired cleanly so its admission schedule could
+    /// be rebuilt.
+    pub(crate) fn on_takeover_respawn(&mut self, h: usize) {
+        self.incarnations[h] += 1;
+    }
+
+    /// Heartbeat watchdog pass: flag seats silent past `stall_timeout`,
+    /// log stall/resume transitions. `live(w)` tells the watchdog which
+    /// seats are expected to beat (dead / retired seats are skipped).
+    pub(crate) fn watchdog(
+        &mut self,
+        ctl: &[SlotCtl],
+        live: impl Fn(usize) -> bool,
+        origin: Instant,
+        stall_timeout: f64,
+    ) {
+        let now_ms = origin.elapsed().as_millis() as u64;
+        for (w, c) in ctl.iter().enumerate() {
+            if !live(w) {
+                self.stalled_now[w] = false;
+                continue;
+            }
+            let age = now_ms.saturating_sub(c.beat_ms.load(Ordering::SeqCst));
+            let stalled = age as f64 / 1000.0 > stall_timeout;
+            if stalled && !self.stalled_now[w] {
+                self.stalled_now[w] = true;
+                self.ever_stalled[w] = true;
+                supervisor_log(
+                    w,
+                    "stalled",
+                    &format!(
+                        "silent for {:.1}s (--stall-timeout-secs {:.1})",
+                        age as f64 / 1000.0,
+                        stall_timeout
+                    ),
+                );
+            } else if !stalled && self.stalled_now[w] {
+                self.stalled_now[w] = false;
+                supervisor_log(w, "heartbeat-resumed", "beats flowing again");
+            }
+        }
+    }
+
+    /// Fold the shared supervision counters into the run metas.
+    pub(crate) fn meta(&self, log: &mut RunLog) {
+        log.set_meta("worker_restarts", self.worker_restarts);
+        log.set_meta(
+            "stalled_workers",
+            self.ever_stalled.iter().filter(|&&b| b).count(),
+        );
+        log.set_meta("lanes_reassigned", self.lanes_reassigned);
+        log.set_meta("sessions_migrated", self.sessions_migrated);
+        log.set_meta(
+            "inflight_tokens_abandoned",
+            self.inflight_tokens_abandoned,
+        );
+        log.set_meta("degraded_capacity_steps", self.degraded_capacity_steps);
+        if !self.worker_errors.is_empty() {
+            log.set_meta("worker_errors", self.worker_errors.join(" | "));
+        }
     }
 }
 
@@ -242,7 +431,6 @@ pub(crate) struct SpawnCtx {
     pub(crate) stall_timeout: f64,
     pub(crate) fault: Option<FaultPlan>,
     pub(crate) origin: Instant,
-    pub(crate) max_restarts: usize,
     pub(crate) continuous: bool,
 }
 
@@ -301,21 +489,18 @@ pub struct WorkerPool {
     ctx: SpawnCtx,
     /// One seat per worker slot; `None` = dead (reaped or re-strided).
     seats: Vec<Option<JoinHandle<()>>>,
-    /// Per-slot incarnation: respawns (and resume epochs) shift the
-    /// replacement's RNG streams so a replayed prompt block still samples
-    /// fresh tokens instead of re-walking the dead worker's stream.
-    incarnations: Vec<u64>,
-    restarts_used: Vec<usize>,
+    sup: Supervision,
+    /// Takeover in flight: the merged lane mask a forcibly-retired heir
+    /// respawns over once its clean exit is reaped. Continuous admission
+    /// is built at spawn, so a live heir cannot absorb lanes mid-flight —
+    /// migration is respawn-on-a-different-seat.
+    pending_respawn: Vec<Option<BitSet>>,
     accounts: LaneAccounts,
     /// Rounds accepted while draining a dead worker's queue, served
     /// before new receives.
     pending: VecDeque<GenMsg>,
     /// Per-slot accumulated (gen_secs, rounds) across incarnations.
     totals: Vec<(f64, u64)>,
-    worker_errors: Vec<String>,
-    worker_restarts: u64,
-    stalled_now: Vec<bool>,
-    ever_stalled: Vec<bool>,
     gen_bs: u64,
     received: u64,
     /// Receive slice between supervision passes.
@@ -400,10 +585,7 @@ impl WorkerPool {
         let now_ms = origin.elapsed().as_millis() as u64;
         let ctl: Arc<Vec<SlotCtl>> = Arc::new(
             (0..m)
-                .map(|w| SlotCtl {
-                    lanes: AtomicBitSet::single(w, m),
-                    beat_ms: AtomicU64::new(now_ms),
-                })
+                .map(|w| SlotCtl::new(AtomicBitSet::single(w, m), now_ms))
                 .collect(),
         );
         let ctx = SpawnCtx {
@@ -423,7 +605,6 @@ impl WorkerPool {
             stall_timeout: cfg.stall_timeout_secs,
             fault: cfg.inject_fault,
             origin,
-            max_restarts: cfg.max_worker_restarts,
             continuous,
         };
         let poll = Duration::from_secs_f64(
@@ -442,15 +623,11 @@ impl WorkerPool {
             retry_count: Arc::new(AtomicU64::new(0)),
             ctx,
             seats: (0..m).map(|_| None).collect(),
-            incarnations: vec![epoch0; m],
-            restarts_used: vec![0; m],
+            sup: Supervision::new(m, epoch0, cfg.max_worker_restarts),
+            pending_respawn: (0..m).map(|_| None).collect(),
             accounts,
             pending: VecDeque::new(),
             totals: vec![(0.0, 0); m],
-            worker_errors: Vec::new(),
-            worker_restarts: 0,
-            stalled_now: vec![false; m],
-            ever_stalled: vec![false; m],
             gen_bs,
             received,
             poll,
@@ -486,21 +663,26 @@ impl WorkerPool {
         let ctx = self.ctx.clone();
         let sh = self.shared()?;
         let exit_tx = self.exit_tx.clone();
-        let incarnation = self.incarnations[w];
-        // continuous lanes resume from the trainer-accepted frontier,
-        // skipping out-of-order deliveries above it
-        let resume = (
-            self.accounts.expected[w],
-            self.accounts.delivered[w].clone(),
-        );
+        let incarnation = self.sup.incarnations[w];
+        // every owned continuous lane resumes from the trainer-accepted
+        // frontier, skipping out-of-order deliveries above it — one
+        // (lane, frontier, skip) triple per lane, so a takeover heir
+        // re-admits its inherited lanes from their exact accepted state
+        let resume: Vec<(usize, u64, HashSet<u64>)> = self.ctl[w]
+            .lanes
+            .snapshot()
+            .ones()
+            .map(|l| {
+                (l, self.accounts.expected[l], self.accounts.delivered[l].clone())
+            })
+            .collect();
         beat(&self.ctl[w], self.ctx.origin);
         let handle = std::thread::Builder::new()
             .name(format!("gen-worker-{w}"))
             .spawn(move || {
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
                     if ctx.continuous {
-                        let (frontier, skip) = resume;
-                        seat_continuous(&ctx, &sh, w, incarnation, frontier, skip)
+                        seat_continuous(&ctx, &sh, w, incarnation, resume)
                     } else {
                         seat_rounds(&ctx, &sh, w, incarnation)
                     }
@@ -528,42 +710,33 @@ impl WorkerPool {
                 Ok((secs, rounds)) => {
                     self.totals[w].0 += secs;
                     self.totals[w].1 += rounds;
-                    // a clean exit is only legitimate at teardown or after
-                    // its lanes were re-strided away
+                    // a clean exit is legitimate at teardown, after its
+                    // lanes were re-strided away, or as the forced
+                    // retirement of a takeover heir (whose pending mask
+                    // respawns it here)
                     let retired = self.ctl[w].lanes.is_empty();
-                    if !self.stop.load(Ordering::SeqCst) && !retired {
-                        self.handle_death(
-                            w,
-                            anyhow!("exited cleanly mid-run (queue closed?)"),
-                        )?;
+                    if !self.stop.load(Ordering::SeqCst) {
+                        if !retired {
+                            self.handle_death(
+                                w,
+                                anyhow!("exited cleanly mid-run (queue closed?)"),
+                            )?;
+                        } else if let Some(mask) = self.pending_respawn[w].take()
+                        {
+                            self.respawn_with_lanes(w, mask)?;
+                        }
                     }
                 }
                 Err(e) => self.handle_death(w, e)?,
             }
         }
-        let now_ms = self.ctx.origin.elapsed().as_millis() as u64;
-        for w in 0..self.seats.len() {
-            if self.seats[w].is_none() {
-                self.stalled_now[w] = false;
-                continue;
-            }
-            let age =
-                now_ms.saturating_sub(self.ctl[w].beat_ms.load(Ordering::SeqCst));
-            let stalled = age as f64 / 1000.0 > self.ctx.stall_timeout;
-            if stalled && !self.stalled_now[w] {
-                self.stalled_now[w] = true;
-                self.ever_stalled[w] = true;
-                eprintln!(
-                    "[supervisor] gen-worker-{w} silent for {:.1}s \
-                     (--stall-timeout-secs {:.1}) — flagged as stalled",
-                    age as f64 / 1000.0,
-                    self.ctx.stall_timeout
-                );
-            } else if !stalled && self.stalled_now[w] {
-                self.stalled_now[w] = false;
-                eprintln!("[supervisor] gen-worker-{w} resumed heartbeats");
-            }
-        }
+        let seats = &self.seats;
+        self.sup.watchdog(
+            &self.ctl,
+            |w| seats[w].is_some(),
+            self.ctx.origin,
+            self.ctx.stall_timeout,
+        );
         Ok(())
     }
 
@@ -583,50 +756,102 @@ impl WorkerPool {
 
     fn handle_death(&mut self, w: usize, err: anyhow::Error) -> Result<()> {
         self.drain_queue()?;
-        self.worker_errors.push(format!("gen-worker-{w}: {err:#}"));
+        // an heir that died while its takeover respawn was pending still
+        // owns the merged mask — restore it before deciding recovery
+        if let Some(mask) = self.pending_respawn[w].take() {
+            self.ctl[w].lanes.merge(&mask);
+        }
         let lanes = self.ctl[w].lanes.snapshot();
         // the dead worker may have generated without completing the
         // handover: rewind-proof the ledger to the accepted frontier
         for l in lanes.ones() {
             self.ledger[l].fetch_max(self.accounts.expected[l], Ordering::SeqCst);
         }
-        if self.restarts_used[w] < self.ctx.max_restarts {
-            self.restarts_used[w] += 1;
-            self.worker_restarts += 1;
-            self.incarnations[w] += 1;
-            eprintln!(
-                "[supervisor] gen-worker-{w} died: {err:#}; respawning on a \
-                 fresh engine (restart {}/{})",
-                self.restarts_used[w], self.ctx.max_restarts
-            );
-            return self.spawn_seat(w);
-        }
-        if self.ctx.continuous {
-            bail!(
-                "gen-worker-{w} is unrecoverable after {} restarts: {err:#}; \
-                 a continuous lane's in-flight sequences cannot be \
-                 re-strided onto a survivor",
-                self.ctx.max_restarts
-            );
-        }
-        let heir =
-            (0..self.seats.len()).find(|&h| h != w && self.seats[h].is_some());
-        match heir {
-            Some(h) => {
+        // its in-flight decode work died with the engine-local KV
+        self.sup.inflight_tokens_abandoned +=
+            self.ctl[w].inflight_tok.swap(0, Ordering::SeqCst);
+        let heir = (0..self.seats.len()).find(|&h| {
+            h != w && (self.seats[h].is_some() || self.pending_respawn[h].is_some())
+        });
+        match self.sup.on_death(w, &err, heir, "")? {
+            Recovery::Respawn => self.spawn_seat(w),
+            Recovery::Takeover { heir: h } => {
                 self.ctl[w].lanes.clear();
-                self.ctl[h].lanes.merge(&lanes);
-                eprintln!(
-                    "[supervisor] gen-worker-{w} died with no restarts left: \
-                     {err:#}; re-striding its lanes {lanes} onto \
-                     gen-worker-{h}"
+                self.sup.lanes_reassigned += lanes.count() as u64;
+                if !self.ctx.continuous {
+                    // round-synchronous seats re-read their mask every
+                    // round: a live heir absorbs the lanes mid-flight
+                    self.ctl[h].lanes.merge(&lanes);
+                    supervisor_log(
+                        w,
+                        "restride",
+                        &format!(
+                            "died with no restarts left: {err:#}; lanes \
+                             {lanes} re-strided onto gen-worker-{h}"
+                        ),
+                    );
+                    return Ok(());
+                }
+                // continuous admission is built at spawn, so the heir is
+                // forced through a clean retire-and-respawn: clearing its
+                // mask breaks its sweep loop; its clean exit then respawns
+                // it over the merged mask from the accepted frontier
+                supervisor_log(
+                    w,
+                    "takeover",
+                    &format!(
+                        "died with no restarts left: {err:#}; lanes {lanes} \
+                         queued for takeover by gen-worker-{h} \
+                         (retire-and-respawn)"
+                    ),
                 );
+                match self.pending_respawn[h].as_mut() {
+                    // heir already retiring for another takeover: widen it
+                    Some(pending) => {
+                        for l in lanes.ones() {
+                            pending.set(l);
+                        }
+                    }
+                    None => {
+                        let mut merged = self.ctl[h].lanes.snapshot();
+                        for l in lanes.ones() {
+                            merged.set(l);
+                        }
+                        self.ctl[h].lanes.clear();
+                        self.pending_respawn[h] = Some(merged);
+                    }
+                }
                 Ok(())
             }
-            None => bail!(
-                "gen-worker-{w} died with no restarts left and no surviving \
-                 workers: {err:#}"
-            ),
         }
+    }
+
+    /// Complete a continuous takeover: the heir retired cleanly (its mask
+    /// was cleared under it), so drain its queue backlog, repair the
+    /// ledger across every merged lane, price its own abandoned in-flight
+    /// work, and respawn it — at a bumped incarnation, over the merged
+    /// mask, re-admitting each lane from the trainer-accepted frontier +
+    /// skip set. Exactly the state a same-seat respawn replays from:
+    /// migration is respawn-on-a-different-seat.
+    fn respawn_with_lanes(&mut self, h: usize, mask: BitSet) -> Result<()> {
+        self.drain_queue()?;
+        for l in mask.ones() {
+            self.ledger[l].fetch_max(self.accounts.expected[l], Ordering::SeqCst);
+        }
+        self.sup.inflight_tokens_abandoned +=
+            self.ctl[h].inflight_tok.swap(0, Ordering::SeqCst);
+        // the mask was cleared to force the retire, so merge == assign
+        self.ctl[h].lanes.merge(&mask);
+        self.sup.on_takeover_respawn(h);
+        supervisor_log(
+            h,
+            "takeover",
+            &format!(
+                "inheriting lanes {mask}; re-admitting from the \
+                 trainer-accepted frontier"
+            ),
+        );
+        self.spawn_seat(h)
     }
 
     fn deliver(
@@ -643,6 +868,11 @@ impl WorkerPool {
             msg.round.gen_span.1,
         );
         self.received += 1;
+        if self.sup.degraded() {
+            // rounds delivered while a seat is permanently lost: the
+            // takeover's throughput cost, measured per delivery
+            self.sup.degraded_capacity_steps += 1;
+        }
         // worker rounds crossed the thread boundary as host data: the
         // trainer re-stages them (the async mode's one upload per round)
         SourcedRound { round: msg.round, staged: None }
@@ -688,9 +918,16 @@ impl RoundSource for WorkerPool {
     }
 
     fn snapshot(&self) -> Option<SourceState> {
-        // always at a clean boundary: cursors are the trainer-accepted
-        // frontier, and rounds in flight (or queued) simply regenerate
-        // after resume, where the accounts would dedupe them
+        // rounds rescued from a dead worker's queue are already accepted
+        // into the accounts but not yet trained: a snapshot here would
+        // mark them delivered and lose them on resume — defer until the
+        // trainer drains them (the run loop retries next step)
+        if !self.pending.is_empty() {
+            return None;
+        }
+        // otherwise always a clean boundary: cursors are the
+        // trainer-accepted frontier, and rounds in flight (or queued)
+        // simply regenerate after resume, where the accounts dedupe them
         let skip = if self.ctx.continuous {
             self.accounts
                 .delivered
@@ -710,7 +947,7 @@ impl RoundSource for WorkerPool {
             generated: self.received,
             cursors: self.accounts.expected.clone(),
             skip,
-            epoch: self.incarnations.iter().copied().max().unwrap_or(0),
+            epoch: self.sup.incarnations.iter().copied().max().unwrap_or(0),
         })
     }
 
@@ -738,6 +975,7 @@ impl RoundSource for WorkerPool {
                     pool.totals[exit.slot].1 += rounds;
                 }
                 Err(e) => pool
+                    .sup
                     .worker_errors
                     .push(format!("gen-worker-{}: {e:#}", exit.slot)),
             }
@@ -752,16 +990,9 @@ impl RoundSource for WorkerPool {
         }
         log.set_meta("gen_total_secs", format!("{gen_total:.3}"));
         log.set_meta("gen_rounds", rounds_total);
-        log.set_meta("worker_restarts", pool.worker_restarts);
-        log.set_meta(
-            "stalled_workers",
-            pool.ever_stalled.iter().filter(|&&b| b).count(),
-        );
+        pool.sup.meta(log);
         log.set_meta("engine_retries", pool.retry_count.load(Ordering::SeqCst));
         log.set_meta("dropped_duplicate_rounds", pool.accounts.duplicates);
-        if !pool.worker_errors.is_empty() {
-            log.set_meta("worker_errors", pool.worker_errors.join(" | "));
-        }
         Ok(())
     }
 }
@@ -884,26 +1115,109 @@ fn seat_rounds(
     Ok((gen_total, rounds_done))
 }
 
+/// One lane's admission position inside an [`Interleave`]: the next
+/// (index, dup) to admit, walking the lane's strided sequence from the
+/// trainer-accepted frontier and skipping out-of-order deliveries.
+struct LanePos {
+    lane: usize,
+    start: u64,
+    idx: u64,
+    dup: usize,
+    skip: HashSet<u64>,
+}
+
+/// Round-robin interleave of the per-lane admission streams a continuous
+/// seat owns (a takeover heir owns several). Each lane yields whole
+/// prompt groups (`k` duplicates of one index, exactly
+/// `TaskGen::admission` order) before the cursor rotates, so an inherited
+/// lane is neither starved behind the native one nor allowed to split a
+/// sibling group across rotations. With a single lane this degenerates to
+/// the plain admission sequence — the bitwise seed contract holds.
+struct Interleave<'a> {
+    gen: &'a TaskGen,
+    stride: u64,
+    hop: u64,
+    k: usize,
+    lanes: Vec<LanePos>,
+    cur: usize,
+}
+
+impl<'a> Interleave<'a> {
+    fn new(
+        gen: &'a TaskGen,
+        stride: u64,
+        hop: u64,
+        k: usize,
+        resume: Vec<(usize, u64, HashSet<u64>)>,
+    ) -> Interleave<'a> {
+        let lanes = resume
+            .into_iter()
+            .map(|(lane, frontier, skip)| LanePos {
+                lane,
+                start: RLHF_RANGE + lane as u64 * stride,
+                idx: frontier,
+                dup: 0,
+                skip,
+            })
+            .collect();
+        Interleave { gen, stride, hop, k, lanes, cur: 0 }
+    }
+
+    fn lane_ids(&self) -> Vec<usize> {
+        self.lanes.iter().map(|p| p.lane).collect()
+    }
+}
+
+impl Iterator for Interleave<'_> {
+    type Item = AdmitSeq;
+
+    fn next(&mut self) -> Option<AdmitSeq> {
+        if self.lanes.is_empty() {
+            return None;
+        }
+        let n = self.lanes.len();
+        let (stride, hop) = (self.stride, self.hop);
+        let p = &mut self.lanes[self.cur];
+        // already-delivered indices (the respawn skip set) admit nothing
+        while p.skip.contains(&p.idx) {
+            p.idx = lane_next(p.idx, p.start, stride, hop);
+        }
+        let item = AdmitSeq {
+            index: p.idx,
+            dup: p.dup,
+            prompt: self.gen.example(p.idx).prompt,
+        };
+        p.dup += 1;
+        if p.dup == self.k {
+            p.dup = 0;
+            p.idx = lane_next(p.idx, p.start, stride, hop);
+            self.cur = (self.cur + 1) % n;
+        }
+        Some(item)
+    }
+}
+
 /// Streaming body of a continuous-engine worker seat: drive the slot
 /// pool one sweep at a time, re-reading the published policy slot
 /// *between decode steps* (PipelineRL's inflight weight swap — in-flight
 /// sequences keep their KV cache and finish under the new weights,
 /// stamping their remaining tokens with the new version), feeding retired
-/// sequences through a [`RoundAssembler`] and handing assembled rounds
-/// over the same bounded queue as the round-synchronous workers — the
-/// staleness back-pressure simply pauses the pool mid-flight while `send`
-/// blocks.
+/// sequences through per-lane [`RoundAssembler`]s and handing assembled
+/// rounds over the same bounded queue as the round-synchronous workers —
+/// the staleness back-pressure simply pauses the pool mid-flight while
+/// `send` blocks.
 ///
-/// A respawned incarnation re-enters the lane at the trainer-accepted
-/// `frontier`, skipping the out-of-order indices already delivered above
-/// it — the admission filter makes every post-respawn round all-fresh.
+/// `resume` holds one (lane, frontier, skip) triple per owned lane: a
+/// respawned incarnation — or a takeover heir inheriting a dead seat's
+/// lanes — re-enters each lane at the trainer-accepted frontier, skipping
+/// the out-of-order indices already delivered above it, so every
+/// post-respawn round is all-fresh.
 fn seat_continuous(
     ctx: &SpawnCtx,
     sh: &SeatShared,
     w: usize,
     incarnation: u64,
-    frontier: u64,
-    skip: HashSet<u64>,
+    resume: Vec<(usize, u64, HashSet<u64>)>,
 ) -> Result<(f64, u64)> {
     let engine = Engine::load(&ctx.artifact_dir)?;
     let taskgen = TaskGen::new(ctx.task, ctx.prompt_len, ctx.resp_len, ctx.seed);
@@ -922,16 +1236,16 @@ fn seat_continuous(
         admit_min: ctx.admit_min,
     });
     // the same strided prompt partition the round-based workers walk
-    // (worker w: blocks of `stride` indices, hopping M·stride, each
-    // index k times), consumed one prompt per freed slot — re-entered at
-    // the block holding the frontier, minus what was already delivered
-    let start = RLHF_RANGE + w as u64 * ctx.stride;
-    let base = start + ((frontier - start) / ctx.hop) * ctx.hop;
-    let mut admission = taskgen
-        .admission(base, ctx.stride, ctx.hop, ctx.k)
-        .filter(move |a| a.index >= frontier && !skip.contains(&a.index))
-        .map(|a| AdmitSeq { index: a.index, dup: a.dup, prompt: a.prompt });
-    let mut assembler = RoundAssembler::new(mcfg.gen_batch, ctx.k);
+    // (lane l: blocks of `stride` indices, hopping M·stride, each index
+    // k times), consumed one prompt per freed slot — one stream per
+    // owned lane, interleaved by prompt group
+    let mut admission =
+        Interleave::new(&taskgen, ctx.stride, ctx.hop, ctx.k, resume);
+    let lane_ids = admission.lane_ids();
+    let mut assemblers: Vec<RoundAssembler> = lane_ids
+        .iter()
+        .map(|_| RoundAssembler::new(mcfg.gen_batch, ctx.k))
+        .collect();
     let (mut version, mut params) = sh.bus.latest(w);
     let mut gen_total = 0.0f64;
     let mut rounds_done = 0u64;
@@ -940,6 +1254,9 @@ fn seat_continuous(
     loop {
         beat(&sh.ctl[w], ctx.origin);
         if sh.stop.load(Ordering::SeqCst) || sh.ctl[w].lanes.is_empty() {
+            // stop, lanes re-strided away, or a forced takeover retire:
+            // exit cleanly; the supervisor respawns the heir over the
+            // merged mask (buffered partials regenerate there and dedupe)
             break;
         }
         if let Some((v, p)) = sh.bus.fetch(w, version) {
@@ -971,27 +1288,49 @@ fn seat_continuous(
             },
         )?;
         inject_err = false;
+        // what a death right now would abandon with the engine-local KV
+        sh.ctl[w].inflight_tok.store(pool.inflight_tokens(), Ordering::SeqCst);
         for c in pool.drain_completed() {
-            assembler.push(c);
+            // route each retirement to its lane's own assembler: rounds
+            // stay single-lane, so the per-lane accounts partition holds
+            // even when this seat owns inherited lanes
+            let lane = ((c.index - RLHF_RANGE) % ctx.hop) / ctx.stride;
+            let pos = lane_ids
+                .iter()
+                .position(|&l| l as u64 == lane)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "retired index {} belongs to lane {lane}, which \
+                         gen-worker-{w} does not own",
+                        c.index
+                    )
+                })?;
+            assemblers[pos].push(c);
         }
-        while let Some(groups) = assembler.pop_round() {
-            let indices: Vec<u64> = groups.iter().map(|(i, _)| *i).collect();
-            let t_now = ctx.origin.elapsed().as_secs_f64();
-            let round = round_from_groups(groups, &taskgen, (t_round, t_now));
-            gen_total += t_now - t_round;
-            rounds_done += 1;
-            beat(&sh.ctl[w], ctx.origin);
-            // blocks while K rounds are queued — the staleness bound's
-            // back-pressure; in-flight sequences wait between sweeps
-            if sh
-                .tx
-                .send(GenMsg { round, lane: w, indices: Some(indices) })
-                .is_err()
-            {
-                return Ok((gen_total, rounds_done));
+        for (pos, assembler) in assemblers.iter_mut().enumerate() {
+            while let Some(groups) = assembler.pop_round() {
+                let indices: Vec<u64> = groups.iter().map(|(i, _)| *i).collect();
+                let t_now = ctx.origin.elapsed().as_secs_f64();
+                let round = round_from_groups(groups, &taskgen, (t_round, t_now));
+                gen_total += t_now - t_round;
+                rounds_done += 1;
+                beat(&sh.ctl[w], ctx.origin);
+                // blocks while K rounds are queued — the staleness bound's
+                // back-pressure; in-flight sequences wait between sweeps
+                if sh
+                    .tx
+                    .send(GenMsg {
+                        round,
+                        lane: lane_ids[pos],
+                        indices: Some(indices),
+                    })
+                    .is_err()
+                {
+                    return Ok((gen_total, rounds_done));
+                }
+                // blocked-send time belongs to the queue, not generation
+                t_round = ctx.origin.elapsed().as_secs_f64();
             }
-            // blocked-send time belongs to the queue, not generation
-            t_round = ctx.origin.elapsed().as_secs_f64();
         }
     }
     Ok((gen_total, rounds_done))
@@ -1053,12 +1392,110 @@ pub(crate) fn round_from_groups(
 
 #[cfg(test)]
 mod tests {
+    use std::collections::HashSet;
     use std::sync::atomic::AtomicU64;
 
-    use super::{lane_next, pick_lane, round_from_groups, Accept, LaneAccounts};
+    use anyhow::anyhow;
+
+    use super::{
+        lane_next, pick_lane, round_from_groups, supervisor_line, Accept,
+        Interleave, LaneAccounts, Recovery, Supervision, RLHF_RANGE,
+    };
     use crate::data::{Task, TaskGen};
     use crate::gen::continuous::Completed;
     use crate::util::bitset::BitSet;
+
+    #[test]
+    fn supervisor_lines_have_one_stable_scrapable_format() {
+        assert_eq!(
+            supervisor_line(3, "respawn", "restart 1/2"),
+            "[supervisor] gen-worker-3 respawn: restart 1/2"
+        );
+        // every event renders through the same prefix + colon shape, so
+        // log scrapers match structure, never prose
+        for ev in
+            ["respawn", "takeover", "restride", "migrate", "stalled", "heartbeat-resumed"]
+        {
+            let line = supervisor_line(7, ev, "some detail");
+            assert!(line.starts_with("[supervisor] gen-worker-7 "), "{line}");
+            assert!(line.ends_with(": some detail"), "{line}");
+            assert!(line.contains(&format!(" {ev}: ")), "{line}");
+        }
+    }
+
+    #[test]
+    fn supervision_spends_the_budget_then_takes_over_then_fails_loudly() {
+        let mut sup = Supervision::new(2, 0, 1);
+        // first death of seat 1: budget remains, respawn at a fresh
+        // incarnation
+        let r = sup.on_death(1, &anyhow!("boom"), Some(0), "").unwrap();
+        assert!(matches!(r, Recovery::Respawn));
+        assert_eq!(sup.incarnations, vec![0, 1]);
+        assert_eq!(sup.worker_restarts, 1);
+        assert!(!sup.degraded());
+        // second death: budget spent, a survivor exists — takeover
+        let r = sup.on_death(1, &anyhow!("boom"), Some(0), "").unwrap();
+        assert!(matches!(r, Recovery::Takeover { heir: 0 }));
+        assert!(sup.lost[1] && sup.degraded());
+        // heir respawn bumps the incarnation without charging the budget
+        sup.on_takeover_respawn(0);
+        assert_eq!(sup.incarnations, vec![1, 2]);
+        assert_eq!(sup.worker_restarts, 1);
+        // last seat dies with no survivor: loud, naming seat and stranded
+        // work (serve mode passes its session list here)
+        let e = sup
+            .on_death(0, &anyhow!("boom"), None, "; serving sessions [3]")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("gen-worker-0"), "{e}");
+        assert!(e.contains("no surviving workers"), "{e}");
+        assert!(e.ends_with("; serving sessions [3]"), "{e}");
+        // every death was recorded in the worker_errors meta format
+        assert_eq!(sup.worker_errors.len(), 3);
+        assert!(sup.worker_errors.iter().all(|s| s.contains(": boom")));
+    }
+
+    #[test]
+    fn interleaved_admission_matches_single_lane_order_bitwise() {
+        // one lane, no skip: exactly TaskGen::admission from the frontier
+        let tg = TaskGen::new(Task::Tldr, 8, 4, 3);
+        let r = RLHF_RANGE;
+        let resume = vec![(0usize, r, HashSet::new())];
+        let got: Vec<(u64, usize)> = Interleave::new(&tg, 2, 4, 2, resume)
+            .take(8)
+            .map(|a| (a.index, a.dup))
+            .collect();
+        let want: Vec<(u64, usize)> = tg
+            .admission(r, 2, 4, 2)
+            .take(8)
+            .map(|a| (a.index, a.dup))
+            .collect();
+        assert_eq!(got, want, "single-lane interleave must stay bitwise");
+        // and the prompts are the pure example stream's
+        let a = Interleave::new(&tg, 2, 4, 2, vec![(0, r, HashSet::new())])
+            .next()
+            .unwrap();
+        assert_eq!(a.prompt, tg.example(r).prompt);
+    }
+
+    #[test]
+    fn interleaved_admission_takeover_round_robins_and_skips_delivered() {
+        let tg = TaskGen::new(Task::Tldr, 8, 4, 3);
+        let r = RLHF_RANGE;
+        // heir owns lane 0 (frontier r, delivered {r+1} above it) and
+        // inherited lane 1 (start r+2, frontier r+3: mid-block), stride 2,
+        // hop 4, k 1 — groups alternate lanes, skip drops r+1 entirely
+        let resume = vec![
+            (0usize, r, [r + 1].into_iter().collect::<HashSet<u64>>()),
+            (1usize, r + 3, HashSet::new()),
+        ];
+        let got: Vec<u64> = Interleave::new(&tg, 2, 4, 1, resume)
+            .take(6)
+            .map(|a| a.index)
+            .collect();
+        // lane 0: r, (r+1 skipped) r+4, r+5 …  lane 1: r+3, r+6, r+7 …
+        assert_eq!(got, vec![r, r + 3, r + 4, r + 6, r + 5, r + 7]);
+    }
 
     #[test]
     fn continuous_round_aggregates_token_version_provenance() {

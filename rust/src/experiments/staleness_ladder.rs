@@ -43,6 +43,13 @@ pub struct LadderPoint {
     /// Workers the heartbeat watchdog ever flagged (run meta) — the
     /// observable behind the M>1 fair-scheduling caveat.
     pub stalled_workers: u64,
+    /// Lanes re-strided onto a survivor after a restart-exhausted
+    /// continuous seat died (run meta) — nonzero only under faults.
+    pub lanes_reassigned: u64,
+    /// Optimizer steps delivered while at least one seat was lost for
+    /// good (run meta) — how much of the measured wall clock ran at
+    /// degraded generation capacity.
+    pub degraded_capacity_steps: u64,
 }
 
 /// Parse a numeric run meta, defaulting to 0 when absent (e.g. logs
@@ -115,6 +122,11 @@ pub fn sweep(
                 wall_secs: r.out.timeline.wall(),
                 worker_restarts: meta_u64(&r, "worker_restarts"),
                 stalled_workers,
+                lanes_reassigned: meta_u64(&r, "lanes_reassigned"),
+                degraded_capacity_steps: meta_u64(
+                    &r,
+                    "degraded_capacity_steps",
+                ),
             });
         }
     }
@@ -137,6 +149,8 @@ fn rows(points: &[LadderPoint]) -> Vec<Vec<String>> {
                 format!("{:.1}", p.wall_secs),
                 format!("{}", p.worker_restarts),
                 format!("{}", p.stalled_workers),
+                format!("{}", p.lanes_reassigned),
+                format!("{}", p.degraded_capacity_steps),
             ]
         })
         .collect()
@@ -153,6 +167,8 @@ const HEADERS: &[&str] = &[
     "wall_s",
     "restarts",
     "stalled",
+    "reassigned",
+    "degraded",
 ];
 
 /// Machine-readable dump for `BENCH_staleness.json`.
@@ -176,6 +192,11 @@ pub fn bench_json(model: &str, steps: u64, points: &[LadderPoint]) -> Json {
                 ("wall_secs", Json::num(p.wall_secs)),
                 ("worker_restarts", Json::num(p.worker_restarts as f64)),
                 ("stalled_workers", Json::num(p.stalled_workers as f64)),
+                ("lanes_reassigned", Json::num(p.lanes_reassigned as f64)),
+                (
+                    "degraded_capacity_steps",
+                    Json::num(p.degraded_capacity_steps as f64),
+                ),
             ])
         })
         .collect();

@@ -305,6 +305,13 @@ impl Pool {
         self.cohorts.iter().map(|c| c.live).sum()
     }
 
+    /// Response tokens held by the in-flight sequences — the decode work
+    /// that dies with the engine-local KV if this pool is abandoned
+    /// (supervision's `inflight_tokens_abandoned` accounting).
+    pub fn inflight_tokens(&self) -> u64 {
+        self.slots.iter().flatten().map(|s| s.steps as u64).sum()
+    }
+
     /// Nothing in flight — only admission can make the next step do work.
     pub fn is_drained(&self) -> bool {
         self.cohorts.is_empty()

@@ -61,6 +61,12 @@ impl ServeMux {
         self.pool.stats()
     }
 
+    /// Response tokens in flight inside the slot pool — what a seat death
+    /// right now would abandon with its KV.
+    pub fn inflight_tokens(&self) -> u64 {
+        self.pool.inflight_tokens()
+    }
+
     /// Every owned session served and nothing left in flight.
     pub fn is_done(&self) -> bool {
         self.board.all_done() && self.pool.is_drained()

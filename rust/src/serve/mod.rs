@@ -16,12 +16,17 @@
 //!   a time, plus [`frontend::run_replay`] for training-off replay runs.
 //!
 //! The training loop closes in `coordinator::pipeline::SessionSource`:
-//! M serving seats (one per `--gen-workers`, sessions partitioned
-//! statically `session % M == w`) each run a mux against the latest
-//! params published on their [`ParamBus`] seat and hand assembled rounds
-//! to the one trainer loop, which extends its exactly-once dedup/hole
-//! accounting to the served turn uids. [`run`] is the mode entry point
-//! behind `--mode serve` / the `serve` subcommand.
+//! M serving seats (one per `--gen-workers`, each owning the traffic
+//! residues `session % M` in its control mask — one residue at spawn,
+//! more after inheriting a dead seat's sessions) each run a mux against
+//! the latest params published on their [`ParamBus`] seat and hand
+//! assembled rounds to the one trainer loop, which extends its
+//! exactly-once dedup/hole accounting to the served turn uids. Because
+//! a board's schedule is a pure function of `(trace, delivered-turn
+//! set)`, both session migration and `--resume` are the same move:
+//! rebuild a board over some residues from the delivered set and serve
+//! the remainder. [`run`] is the mode entry point behind `--mode serve`
+//! / the `serve` subcommand.
 //!
 //! [`Pool`]: crate::gen::continuous::Pool
 //! [`ParamBus`]: crate::coordinator::pipeline::ParamBus

@@ -108,11 +108,29 @@ impl SessionBoard {
         stride: u64,
         delivered: &HashSet<u64>,
     ) -> Result<SessionBoard> {
+        SessionBoard::for_lanes(traffic, k, &[lane], stride, delivered)
+    }
+
+    /// Board over every session whose partition residue `session % stride`
+    /// is in `lanes` — the migration form of [`SessionBoard::new`]: a
+    /// takeover heir serves its own residue plus the dead seats'. The
+    /// whole schedule is still a pure function of `(trace, delivered)`,
+    /// so a migrated session resumes exactly where the accounts say it
+    /// stopped, on whichever seat now owns its residue.
+    pub fn for_lanes(
+        traffic: &TrafficGen,
+        k: usize,
+        lanes: &[u64],
+        stride: u64,
+        delivered: &HashSet<u64>,
+    ) -> Result<SessionBoard> {
         assert!(k >= 1);
-        assert!(stride >= 1 && lane < stride);
+        assert!(stride >= 1 && lanes.iter().all(|&l| l < stride));
         let cfg = traffic.cfg();
         let mut sessions = Vec::new();
-        for s in (lane..cfg.sessions).step_by(stride as usize) {
+        // ascending session id regardless of how many residues are owned:
+        // single-lane boards keep their historical (bitwise) ordering
+        for s in (0..cfg.sessions).filter(|s| lanes.contains(&(s % stride))) {
             let resumed = (0..cfg.turns)
                 .take_while(|&t| delivered.contains(&traffic.uid(s, t)))
                 .count() as u64;
@@ -412,6 +430,28 @@ mod tests {
         let b1 = SessionBoard::new(&t, 2, 1, 2, &HashSet::new()).unwrap();
         assert_eq!(b0.incomplete(), vec![0, 2, 4]);
         assert_eq!(b1.incomplete(), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn serving_board_migrates_merged_residues_from_the_delivered_set() {
+        // a takeover heir's board: both residues of a 2-seat partition,
+        // rebuilt mid-trace from (trace, delivered) alone
+        let t = traffic(4, 2);
+        // lane-0 sessions fully current; session 1 (dead seat's) already
+        // delivered turn 0, session 3 nothing
+        let delivered: HashSet<u64> = [t.uid(1, 0)].into();
+        let b = SessionBoard::for_lanes(&t, 1, &[0, 1], 2, &delivered).unwrap();
+        assert_eq!(b.incomplete(), vec![0, 1, 2, 3], "all sessions owned");
+        let mut b = b;
+        b.on_sweep(u64::MAX);
+        let gen = TaskGen::new(Task::Tldr, 24, 12, 42);
+        let uids: Vec<u64> = b.admission(&gen).map(|a| a.index).collect();
+        assert!(uids.contains(&t.uid(0, 0)), "own residue starts fresh");
+        assert!(uids.contains(&t.uid(1, 1)), "migrated session resumes");
+        assert!(!uids.contains(&t.uid(1, 0)), "delivered turn not replayed");
+        // the single-lane constructor is the one-residue special case
+        let single = SessionBoard::new(&t, 1, 0, 2, &HashSet::new()).unwrap();
+        assert_eq!(single.incomplete(), vec![0, 2]);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use std::path::PathBuf;
 
-use async_rlhf::config::{ExpConfig, FaultKind, FaultPlan, Mode};
+use async_rlhf::config::{ExpConfig, FaultKind, FaultPlan, GenEngine, Mode};
 use async_rlhf::coordinator;
 use async_rlhf::coordinator::pipeline::staleness_bound_updates;
 use async_rlhf::coordinator::trainer::rounds_per_batch;
@@ -168,6 +168,50 @@ fn fault_m2_dead_worker_lane_takeover() {
     assert_eq!(meta_u64(&out, "worker_restarts"), 0);
     assert_eq!(out.log.rows.len(), cfg.steps as usize);
     assert_eq!(out.episodes, expect_episodes(&cfg, &prep));
+    let errs = out.log.meta.get("worker_errors").expect("death unrecorded");
+    assert!(
+        errs.contains("gen-worker-1"),
+        "worker_errors does not name the dead worker: {errs}"
+    );
+}
+
+#[test]
+fn fault_continuous_m2_restart_exhausted_takeover_completes() {
+    // The continuous engine's takeover: two streaming seats, zero
+    // restarts, one dies mid-decode. Its in-flight KV is abandoned, its
+    // lane is merged onto the survivor (which is forcibly retired and
+    // respawned over both lanes, re-admitting from the trainer-accepted
+    // frontier + skip set), and the run completes with exactly-once
+    // prompt accounting at degraded capacity.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = test_cfg("fault_cont_takeover");
+    cfg.mode = Mode::Async;
+    cfg.gen_engine = GenEngine::Continuous;
+    cfg.gen_workers = 2;
+    cfg.max_worker_restarts = 0;
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 1,
+        round: 1,
+        kind: FaultKind::Panic,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+
+    assert_eq!(meta_u64(&out, "worker_restarts"), 0);
+    assert_eq!(out.log.rows.len(), cfg.steps as usize);
+    assert_eq!(
+        out.episodes,
+        expect_episodes(&cfg, &prep),
+        "takeover dropped or duplicated prompts"
+    );
+    assert!(
+        meta_u64(&out, "lanes_reassigned") >= 1,
+        "no lane recorded as reassigned"
+    );
+    assert!(
+        meta_u64(&out, "degraded_capacity_steps") >= 1,
+        "no step recorded at degraded capacity"
+    );
     let errs = out.log.meta.get("worker_errors").expect("death unrecorded");
     assert!(
         errs.contains("gen-worker-1"),

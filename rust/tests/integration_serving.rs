@@ -7,8 +7,10 @@
 //! matches or beats the fixed-round counterfactual under a saturating
 //! trace; (c) the exactly-once prompt/session partition survives an
 //! injected worker death — respawn completes every turn exactly once,
-//! and an unrecoverable seat fails loudly naming the sessions that can
-//! no longer complete.
+//! a restart-exhausted seat migrates its sessions onto a survivor, a
+//! killed run restarts mid-trace from its checkpoint with `--resume`,
+//! and only a pool with no survivors fails loudly naming the sessions
+//! that can no longer complete.
 //!
 //! Requires `make artifacts` (skips, loudly, when artifacts/dev is
 //! absent — CI always builds artifacts first).
@@ -222,8 +224,8 @@ fn serving_fault_injected_seat_panic_completes_exactly_once() {
 
 #[test]
 fn serving_unrecoverable_seat_fails_naming_its_sessions() {
-    // Zero restarts: the dead seat's session partition can never
-    // complete (sessions do not migrate), so the run must fail loudly
+    // Zero restarts AND no survivor: with M=1 there is no seat left to
+    // migrate the dead seat's sessions onto, so the run must fail loudly
     // naming the seat and its stranded sessions — never hang waiting on
     // turns that will not come, never return a truncated log as success.
     let Some(_dir) = dev_dir() else { return };
@@ -244,6 +246,124 @@ fn serving_unrecoverable_seat_fails_naming_its_sessions() {
     assert!(
         msg.contains("serving sessions"),
         "error does not name the stranded sessions: {msg}"
+    );
+}
+
+#[test]
+fn serving_seat_death_migrates_sessions_to_survivor() {
+    // Two serving seats, zero restarts: seat 1 panics with its budget
+    // already spent. Instead of failing the run, the supervisor must
+    // migrate seat 1's session residue onto seat 0 — which retires,
+    // respawns over the merged residues with the delivered-turn skip
+    // set, and serves the remainder. Exactly-once accounting holds
+    // across the migration and the final transcript covers the whole
+    // trace.
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = serve_cfg("serve_migrate");
+    cfg.gen_workers = 2;
+    cfg.max_worker_restarts = 0;
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 1,
+        round: 1,
+        kind: FaultKind::Panic,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    let out = coordinator::run(&cfg, &prep, false).unwrap();
+
+    assert_eq!(out.log.rows.len(), 4, "the run must complete every step");
+    assert_eq!(out.episodes, 4 * 8, "a turn was dropped or double-trained");
+    assert_eq!(meta_u64(&out, "worker_restarts"), 0, "budget was zero");
+    assert!(
+        meta_u64(&out, "sessions_migrated") >= 1,
+        "no session migration recorded for the dead seat"
+    );
+    assert!(
+        meta_u64(&out, "degraded_capacity_steps") >= 1,
+        "post-death steps must be flagged as degraded-capacity"
+    );
+    // abandoned-KV telemetry must be present (may be zero if the panic
+    // lands between decodes)
+    let _ = meta_u64(&out, "inflight_tokens_abandoned");
+    let errs = out.log.meta.get("worker_errors").expect("death unrecorded");
+    assert!(
+        errs.contains("gen-worker-1"),
+        "worker_errors does not name the dead seat: {errs}"
+    );
+    // the survivor's transcript covers the whole trace: every
+    // (session, turn) pair served at least once, dead seat's included
+    let transcript =
+        out.log.meta.get("serve_transcript").expect("transcript missing");
+    for s in 0..8u64 {
+        for t in 0..2u64 {
+            assert!(
+                transcript.contains(&format!("session {s} turn {t} ")),
+                "turn ({s}, {t}) missing from the migrated transcript"
+            );
+        }
+    }
+}
+
+#[test]
+fn serving_resume_restarts_mid_trace_exactly_once() {
+    // Kill-and-resume for the stateful serve source: an unrecoverable
+    // death at round 3 fails the run after the step-3 checkpoint is on
+    // disk. `--resume` must rebuild the session boards from the
+    // delivered-turn set and serve only the remaining turns — every
+    // turn of the trace trained exactly once across the two runs — and
+    // a second resume from the same checkpoint must replay the same
+    // remainder byte-for-byte (fixed params, fixed seed).
+    let Some(_dir) = dev_dir() else { return };
+    let mut cfg = serve_cfg("serve_resume");
+    cfg.checkpoint_every = 3;
+    cfg.max_worker_restarts = 0;
+    cfg.inject_fault = Some(FaultPlan {
+        worker: 0,
+        round: 3,
+        kind: FaultKind::Panic,
+    });
+    let prep = coordinator::prepare(&cfg, false).unwrap();
+    // steps 1..=3 train and checkpoint; the seat then dies with no
+    // survivor, so the first run fails loudly
+    let err = coordinator::run(&cfg, &prep, false).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("gen-worker-0"),
+        "first run must die on the scripted fault: {err:#}"
+    );
+
+    let mut cfg2 = cfg.clone();
+    cfg2.resume = true;
+    cfg2.inject_fault = None;
+    let resume_once = || {
+        let out = coordinator::run(&cfg2, &prep, false).unwrap();
+        assert_eq!(
+            out.log.meta.get("resumed_from_step").map(String::as_str),
+            Some("3"),
+            "must resume from the step-3 checkpoint"
+        );
+        assert_eq!(out.log.rows.len(), 1, "only step 4 is left to train");
+        assert_eq!(
+            out.episodes,
+            4 * 8,
+            "cumulative episodes must cover the whole trace exactly once"
+        );
+        let transcript = out
+            .log
+            .meta
+            .get("serve_transcript")
+            .expect("transcript missing")
+            .clone();
+        assert_eq!(
+            transcript.lines().count(),
+            4,
+            "resumed run must serve exactly the undelivered remainder"
+        );
+        transcript
+    };
+    let t1 = resume_once();
+    let t2 = resume_once();
+    assert_eq!(
+        t1, t2,
+        "two resumes from one checkpoint must replay byte-identically"
     );
 }
 

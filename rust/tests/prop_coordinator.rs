@@ -582,6 +582,205 @@ fn lane_takeover_restripes_orphans_without_drops_or_dups() {
     });
 }
 
+/// Position of `idx` within one continuous lane's admission sequence
+/// (blocks of `stride` consecutive indices starting at `start`, hopping
+/// `hop` between blocks) — the lane-order comparison the frontier/skip
+/// protocol is defined over.
+fn cont_pos(idx: u64, start: u64, stride: u64, hop: u64) -> u64 {
+    let rel = idx - start;
+    (rel / hop) * stride + rel % hop
+}
+
+/// Successor of `idx` in the same lane sequence.
+fn cont_next(idx: u64, start: u64, stride: u64, hop: u64) -> u64 {
+    let rel = idx - start;
+    if rel % hop + 1 < stride {
+        idx + 1
+    } else {
+        start + (rel / hop + 1) * hop
+    }
+}
+
+/// Trainer-side accept in the continuous frontier/skip model
+/// (`LaneAccounts` in index mode): a delivered index below the frontier
+/// or in the skip set is a dropped duplicate; a fresh one lands in the
+/// skip set and the frontier advances over every contiguously delivered
+/// index. Exactly-once is enforced by the global `seen` set.
+#[allow(clippy::too_many_arguments)]
+fn cont_accept(
+    lane: usize,
+    idx: u64,
+    stride: u64,
+    hop: u64,
+    frontier: &mut [u64],
+    skip: &mut [std::collections::HashSet<u64>],
+    seen: &mut std::collections::HashSet<u64>,
+    dups: &mut u64,
+) -> Result<(), String> {
+    let start = lane as u64 * stride;
+    if cont_pos(idx, start, stride, hop)
+        < cont_pos(frontier[lane], start, stride, hop)
+        || skip[lane].contains(&idx)
+    {
+        *dups += 1;
+        return Ok(());
+    }
+    if !seen.insert(idx) {
+        return Err(format!("prompt {idx} trained twice"));
+    }
+    skip[lane].insert(idx);
+    while skip[lane].remove(&frontier[lane]) {
+        frontier[lane] = cont_next(frontier[lane], start, stride, hop);
+    }
+    Ok(())
+}
+
+#[test]
+fn continuous_lane_takeover_is_exactly_once_under_kill_schedules() {
+    // The continuous engine's takeover invariant: prompts admit one at a
+    // time and retire out of admission order, so the trainer's accounts
+    // are a per-lane frontier plus a skip set of deliveries above it. A
+    // restart-exhausted seat's in-flight KV is abandoned, the queue is
+    // drained into the accounts, and a survivor is forcibly retired and
+    // respawned over the merged lanes with every cursor rebuilt from
+    // (frontier, skip) — re-prefilling abandoned prompts at-least-once
+    // while the accounts dedupe to exactly-once. Whatever the kill
+    // schedule, every lane's delivered partition must end exact: no
+    // hole, no dup.
+    prop_check("continuous takeover exactly-once", 150, |rng| {
+        let m = 2 + rng.gen_usize(3);
+        let stride = 1 + rng.gen_usize(3) as u64;
+        let hop = stride * m as u64;
+        let blocks = 2 + rng.gen_usize(6) as u64;
+        let per_lane = blocks * stride;
+        let mut frontier: Vec<u64> =
+            (0..m as u64).map(|l| l * stride).collect();
+        let mut skip: Vec<std::collections::HashSet<u64>> =
+            (0..m).map(|_| Default::default()).collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut dups = 0u64;
+        // seat state: owned lanes with admit cursors, in-flight prompts
+        let mut lanes: Vec<Vec<usize>> = (0..m).map(|w| vec![w]).collect();
+        let mut cursor: Vec<Vec<u64>> =
+            (0..m as u64).map(|w| vec![w * stride]).collect();
+        let mut inflight: Vec<Vec<(usize, u64)>> =
+            (0..m).map(|_| Vec::new()).collect();
+        let mut alive = vec![true; m];
+        let mut queue: Vec<(usize, u64)> = Vec::new();
+        let mut guard = 0u32;
+        while (0..m).any(|l| {
+            cont_pos(frontier[l], l as u64 * stride, stride, hop) < per_lane
+        }) {
+            guard += 1;
+            if guard > 200_000 {
+                return Err("model stopped making progress".to_string());
+            }
+            let live: Vec<usize> = (0..m).filter(|&w| alive[w]).collect();
+            match rng.gen_usize(10) {
+                // admit: a live seat prefills its next undelivered index
+                // on a random owned lane (skipping delivered ones, as a
+                // respawned seat's rebuilt admission stream does)
+                0..=3 => {
+                    let w = live[rng.gen_usize(live.len())];
+                    if lanes[w].is_empty() {
+                        continue;
+                    }
+                    let j = rng.gen_usize(lanes[w].len());
+                    let l = lanes[w][j];
+                    let start = l as u64 * stride;
+                    let mut idx = cursor[w][j];
+                    while cont_pos(idx, start, stride, hop)
+                        < cont_pos(frontier[l], start, stride, hop)
+                        || skip[l].contains(&idx)
+                    {
+                        idx = cont_next(idx, start, stride, hop);
+                    }
+                    if cont_pos(idx, start, stride, hop) < per_lane {
+                        inflight[w].push((l, idx));
+                        cursor[w][j] = cont_next(idx, start, stride, hop);
+                    }
+                }
+                // retire: an in-flight prompt completes into the queue
+                4..=6 => {
+                    let w = live[rng.gen_usize(live.len())];
+                    if inflight[w].is_empty() {
+                        continue;
+                    }
+                    let i = rng.gen_usize(inflight[w].len());
+                    queue.push(inflight[w].swap_remove(i));
+                }
+                // trainer: accept one queued delivery (any order — the
+                // frontier/skip protocol is order-independent)
+                7..=8 => {
+                    if queue.is_empty() {
+                        continue;
+                    }
+                    let (l, idx) = queue.swap_remove(rng.gen_usize(queue.len()));
+                    cont_accept(
+                        l, idx, stride, hop, &mut frontier, &mut skip,
+                        &mut seen, &mut dups,
+                    )?;
+                }
+                // kill: a restart-exhausted seat dies; drain the queue,
+                // abandon in-flight KV (victim's AND the forcibly retired
+                // heir's), respawn the heir over the merged lanes from
+                // the trainer-accepted frontier + skip set
+                _ => {
+                    if live.len() < 2 || !rng.gen_bool(0.5) {
+                        continue;
+                    }
+                    let d = live[rng.gen_usize(live.len())];
+                    let h = *live.iter().find(|&&w| w != d).unwrap();
+                    for (l, idx) in queue.drain(..) {
+                        cont_accept(
+                            l, idx, stride, hop, &mut frontier, &mut skip,
+                            &mut seen, &mut dups,
+                        )?;
+                    }
+                    alive[d] = false;
+                    inflight[d].clear();
+                    inflight[h].clear();
+                    let orphans = std::mem::take(&mut lanes[d]);
+                    cursor[d].clear();
+                    lanes[h].extend(orphans);
+                    cursor[h] =
+                        lanes[h].iter().map(|&l| frontier[l]).collect();
+                }
+            }
+        }
+        // every lane's frontier sits exactly at its quota with an empty
+        // skip set, and the union of trained prompts is the exact
+        // arithmetic partition — at-least-once re-prefills became
+        // exactly-once deliveries
+        for l in 0..m {
+            let start = l as u64 * stride;
+            prop_assert!(
+                frontier[l] == start + blocks * hop,
+                "lane {l} frontier {} != {}",
+                frontier[l],
+                start + blocks * hop
+            );
+            prop_assert!(
+                skip[l].is_empty(),
+                "lane {l} left {} deliveries above its frontier",
+                skip[l].len()
+            );
+            let mut idx = start;
+            for _ in 0..per_lane {
+                prop_assert!(seen.contains(&idx), "lane {l} hole at {idx}");
+                idx = cont_next(idx, start, stride, hop);
+            }
+        }
+        prop_assert!(
+            seen.len() as u64 == m as u64 * per_lane,
+            "coverage {} != {} (dups dropped: {dups})",
+            seen.len(),
+            m as u64 * per_lane
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn staleness_bound_is_monotone_in_queue_workers_and_epochs() {
     // The bound (K + M + 1)·T − 1 (proven for M=1, fair-scheduling for
